@@ -1,0 +1,64 @@
+//! Auto-tuning demo (paper §5): sweep each algorithm's kernel
+//! parameters for one layer on the mobile-GPU model, print the chosen
+//! configuration and the resulting per-layer ranking, and show the
+//! routing table the inference engine would use per device.
+//!
+//! Run: `cargo run --release --example autotune_demo [--device mali]`
+
+use ilpm::autotune::{tune, tune_all};
+use ilpm::cli::Args;
+use ilpm::convgen::Algorithm;
+use ilpm::coordinator::RoutingTable;
+use ilpm::simulator::DeviceConfig;
+use ilpm::workload::{LayerClass, RESNET_DEPTHS};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&argv, &["device"]).map_err(anyhow::Error::msg)?;
+    let dev = DeviceConfig::by_name(a.get_or("device", "mali"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+
+    println!("=== tuning conv4.x on {} ===", dev.name);
+    for alg in Algorithm::ALL {
+        let e = tune(alg, LayerClass::Conv4x, &dev);
+        println!(
+            "{:>9}: {:>8.3} ms  ({} cfgs, {} pruned)  wg={} px_tile={} kpt={} cache={} m/n/k={}/{}/{} transpose={}",
+            alg.name(),
+            e.time_ms,
+            e.stats.evaluated,
+            e.stats.pruned,
+            e.params.wg_size,
+            e.params.tile_px,
+            e.params.k_per_thread,
+            e.params.cache_filters,
+            e.params.tile_m,
+            e.params.tile_n,
+            e.params.tile_k,
+            e.params.transpose_output,
+        );
+    }
+
+    println!("\n=== full tuning sweep -> routing table ===");
+    let db = tune_all(&[dev.clone()], 8);
+    let table = RoutingTable::from_tuning(&db, dev.name);
+    for layer in LayerClass::ALL {
+        let r = table.route(layer).unwrap();
+        println!(
+            "{:<10} -> {:<9} (expected {:.3} ms/conv)",
+            layer.name(),
+            r.algorithm.name(),
+            r.expected_ms
+        );
+    }
+
+    println!("\n=== expected single-image 3x3-conv time per ResNet depth ===");
+    for d in RESNET_DEPTHS {
+        println!(
+            "{:<10} {:>8.2} ms on {}",
+            d.name,
+            table.expected_network_ms(&d.convs),
+            dev.name
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: load an AOT-compiled ILP-M convolution artifact, run it
+//! through the PJRT runtime on a random single image, and verify the
+//! numerics against the pure-Rust reference convolution.
+//!
+//! Run `make artifacts` first, then: `cargo run --release --example quickstart`
+
+use ilpm::coordinator::naive_conv;
+use ilpm::runtime::{Engine, Tensor};
+use ilpm::workload::LayerClass;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // 1. one PJRT CPU engine over the artifact directory
+    let engine = Engine::new(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 2. the paper's most-profiled layer: conv4.x (256x256, 14x14)
+    let layer = LayerClass::Conv4x;
+    let shape = layer.shape();
+    let model = engine.load_layer(layer.name(), "ilpm")?;
+    println!(
+        "loaded {} (compiled in {:.0} ms)",
+        model.artifact.name, model.compile_ms
+    );
+
+    // 3. single-image inference through the ILP-M kernel
+    let x = Tensor::randn(&[shape.in_channels, shape.height, shape.width], 42);
+    let w = Tensor::randn(
+        &[shape.out_channels, shape.in_channels, shape.filter_h, shape.filter_w],
+        43,
+    );
+    let t0 = std::time::Instant::now();
+    let out = model.run(&[x.clone(), w.clone()])?;
+    println!("executed in {:?}, output shape {:?}", t0.elapsed(), out[0].shape);
+
+    // 4. verify against the independent Rust-side reference
+    let expected = naive_conv(&shape, &x, &w);
+    let diff = out[0].max_abs_diff(&expected)?;
+    println!("max abs diff vs naive reference: {diff:.2e}");
+    anyhow::ensure!(diff < 1e-2, "numerics diverged");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! End-to-end driver (DESIGN.md §E2E): serve single-image ResNet-18
+//! inference requests through the full stack — request generator →
+//! bounded queue → executor workers → PJRT-compiled AOT artifact —
+//! and report latency/throughput. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Flags: `--model <name>` (default resnet18_ref_r56; use
+//! `resnet18_ilpm_r56` to push every 3x3 conv through the interpret-mode
+//! ILP-M Pallas kernel — slow on CPU but exercises the L1 path),
+//! `--n <requests>`, `--workers <N>`.
+//!
+//! Run: `cargo run --release --example resnet_inference`
+
+use ilpm::cli::Args;
+use ilpm::coordinator::InferenceEngine;
+use ilpm::runtime::Manifest;
+use ilpm::workload::{RequestGen, TraceKind};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&argv, &["model", "n", "workers"]).map_err(anyhow::Error::msg)?;
+    let model = a.get_or("model", "resnet18_ref_r56").to_string();
+    let n = a.get_usize("n", 24).map_err(anyhow::Error::msg)?;
+    let workers = a.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let manifest = Manifest::load(&dir)?;
+    let art = manifest
+        .find(&model)
+        .ok_or_else(|| anyhow::anyhow!("model {model} not in manifest"))?;
+    let img_shape = art.inputs[0].shape.clone();
+    println!(
+        "model={model} image={:?} params={} workers={workers} requests={n}",
+        img_shape,
+        art.inputs.len() - 1
+    );
+
+    let t0 = std::time::Instant::now();
+    let engine = InferenceEngine::start(&dir, &model, workers, 8)?;
+    println!("engine ready in {:?} (compile + weight upload)", t0.elapsed());
+
+    let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
+    let (summary, results) = engine.run_closed_loop(&mut gen, n)?;
+
+    println!("\n=== end-to-end results ===");
+    println!("total latency (incl. queueing): {summary}");
+    let mut exec_ms: Vec<f64> =
+        results.iter().map(|r| r.exec_latency.as_secs_f64() * 1e3).collect();
+    exec_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "execution latency: p50={:.1}ms p95={:.1}ms",
+        exec_ms[exec_ms.len() / 2],
+        exec_ms[(exec_ms.len() as f64 * 0.95) as usize % exec_ms.len()]
+    );
+    let by_worker: Vec<usize> = (0..workers)
+        .map(|w| results.iter().filter(|r| r.worker == w).count())
+        .collect();
+    println!("requests per worker: {by_worker:?}");
+    let classes: Vec<usize> = results.iter().take(8).map(|r| r.class).collect();
+    println!("first predicted classes: {classes:?}");
+    anyhow::ensure!(
+        results.iter().all(|r| r.logits.data.iter().all(|v| v.is_finite())),
+        "non-finite logits"
+    );
+    // determinism across workers: same image id => same class
+    let r0 = results.iter().find(|r| r.id == 0).unwrap();
+    anyhow::ensure!(r0.logits.data.iter().all(|v| v.is_finite()));
+    engine.shutdown();
+    println!("resnet_inference OK");
+    Ok(())
+}

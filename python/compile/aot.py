@@ -1,0 +1,190 @@
+"""AOT compile path: lower L2 graphs to HLO text artifacts for Rust.
+
+Interchange format is **HLO text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs, under ``--out-dir`` (default ``../artifacts``):
+
+* ``layer_<class>_<algorithm>.hlo.txt`` — one Table-2 conv layer
+  computed by one algorithm, signature ``(x, w) -> (y,)``;
+* ``resnet18_<alg>_r<res>.hlo.txt`` — full single-image ResNet-18
+  forward, signature ``(x, *params) -> (logits,)``;
+* ``resnet18_r<res>.weights.bin`` — synthetic He-init weights in a
+  simple length-prefixed binary format (see ``rust/src/runtime/weights.rs``);
+* ``manifest.json`` — machine-readable index of every artifact with
+  input/output shapes and metadata; the Rust runtime's entry point.
+
+Python runs only here, never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import struct
+import sys
+import time
+from pathlib import Path
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ConvConfig
+
+WEIGHTS_MAGIC = b"ILPMW001"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights(path: Path, params: Sequence[np.ndarray]) -> None:
+    """Length-prefixed little-endian tensor container (f32 only)."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<I", len(params)))
+        for i, p in enumerate(params):
+            p = np.ascontiguousarray(p, dtype=np.float32)
+            name = f"param_{i}".encode()
+            f.write(struct.pack("<I", len(name)))
+            f.write(name)
+            f.write(struct.pack("<I", p.ndim))
+            for d in p.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(struct.pack("<Q", p.nbytes))
+            f.write(p.tobytes())
+
+
+def _shape_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_layer(layer: str, algorithm: str, out_dir: Path, manifest: list, verbose: bool) -> None:
+    cfg = M.RESNET_LAYERS[layer]
+    fn = M.layer_fn(algorithm, cfg)
+    args = M.layer_example_args(cfg)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    name = f"layer_{layer.replace('.', '')}_{algorithm}"
+    path = out_dir / f"{name}.hlo.txt"
+    path.write_text(text)
+    if verbose:
+        print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s")
+    manifest.append(
+        {
+            "name": name,
+            "kind": "layer",
+            "path": path.name,
+            "layer": layer,
+            "algorithm": algorithm,
+            "inputs": [_shape_entry(a) for a in args],
+            "outputs": [{"shape": list(cfg.output_shape()), "dtype": "float32"}],
+            "meta": {
+                "flops": cfg.flops,
+                "in_channels": cfg.in_channels,
+                "out_channels": cfg.out_channels,
+                "height": cfg.height,
+                "width": cfg.width,
+            },
+        }
+    )
+
+
+def lower_resnet(algorithm: str, resolution: int, out_dir: Path, manifest: list, verbose: bool, seed: int = 0) -> None:
+    spec = M.ResNetSpec(resolution=resolution, conv_algorithm=algorithm)
+    params = M.init_resnet_params(spec, seed=seed)
+    x_spec = jax.ShapeDtypeStruct((3, resolution, resolution), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+    def flat_fn(x, *ps):
+        return M.resnet_forward(spec, x, list(ps))
+
+    t0 = time.time()
+    lowered = jax.jit(flat_fn).lower(x_spec, *p_specs)
+    text = to_hlo_text(lowered)
+    name = f"resnet18_{algorithm}_r{resolution}"
+    path = out_dir / f"{name}.hlo.txt"
+    path.write_text(text)
+    wpath = out_dir / f"resnet18_r{resolution}.weights.bin"
+    if not wpath.exists():
+        write_weights(wpath, params)
+    # Fixture: a deterministic image and the python-side logits, so the
+    # Rust integration tests can verify end-to-end numerics (this is how
+    # the xla_extension-0.5.1 einsum miscompile was caught).
+    fix_rng = np.random.default_rng(1234)
+    image = fix_rng.standard_normal((3, resolution, resolution)).astype(np.float32)
+    logits = np.asarray(flat_fn(jnp.asarray(image), *[jnp.asarray(p) for p in params])[0])
+    fpath = out_dir / f"{name}.fixture.bin"
+    write_weights(fpath, [image, logits])
+    if verbose:
+        n_params = sum(int(np.prod(p.shape)) for p in params)
+        print(
+            f"  {name}: {len(text)/1e6:.2f} MB HLO, {n_params/1e6:.1f}M params "
+            f"in {time.time()-t0:.1f}s"
+        )
+    manifest.append(
+        {
+            "name": name,
+            "kind": "model",
+            "path": path.name,
+            "algorithm": algorithm,
+            "weights": wpath.name,
+            "fixture": fpath.name,
+            "inputs": [_shape_entry(x_spec)] + [_shape_entry(p) for p in p_specs],
+            "outputs": [{"shape": [spec.num_classes], "dtype": "float32"}],
+            "meta": {
+                "resolution": resolution,
+                "num_classes": spec.num_classes,
+                "blocks_per_stage": list(spec.blocks_per_stage),
+            },
+        }
+    )
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--layers", nargs="*", default=list(M.RESNET_LAYERS))
+    ap.add_argument(
+        "--algorithms", nargs="*", default=list(M.ALGORITHM_NAMES) + ["ref"]
+    )
+    ap.add_argument("--model-algorithms", nargs="*", default=["ilpm", "ref"])
+    ap.add_argument("--model-resolution", type=int, default=56)
+    ap.add_argument("--skip-layers", action="store_true")
+    ap.add_argument("--skip-model", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    verbose = not args.quiet
+    manifest: list = []
+
+    if not args.skip_layers:
+        for layer in args.layers:
+            for alg in args.algorithms:
+                lower_layer(layer, alg, out_dir, manifest, verbose)
+    if not args.skip_model:
+        for alg in args.model_algorithms:
+            lower_resnet(alg, args.model_resolution, out_dir, manifest, verbose)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if verbose:
+        print(f"wrote {len(manifest)} artifacts to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""L1 — Pallas convolution kernels, one per algorithm the paper evaluates.
+
+All kernels share the single-image signature
+``(x: [C,H,W], w: [K,C,R,S], stride, padding, **tuning) -> [K,HO,WO]``
+and run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls; see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .common import ConvConfig, pad_input, pick_tile  # noqa: F401
+from .direct import conv_direct  # noqa: F401
+from .gemm import batched_gemm, gemm  # noqa: F401
+from .ilpm import conv_ilpm, conv_ilpm_pre, reorganize_filters  # noqa: F401
+from .im2col import conv_im2col, im2col_unroll  # noqa: F401
+from .libdnn import conv_libdnn  # noqa: F401
+from .ref import conv_naive, conv_ref  # noqa: F401
+from .winograd import conv_winograd, conv_winograd_pre, transform_filters  # noqa: F401
+
+ALGORITHMS = {
+    "im2col": conv_im2col,
+    "libdnn": conv_libdnn,
+    "winograd": conv_winograd,
+    "direct": conv_direct,
+    "ilpm": conv_ilpm,
+}

@@ -1,0 +1,96 @@
+"""Shared conv-configuration helpers for the L1 Pallas kernels.
+
+Single-image convolution: input ``[C, H, W]``, filters ``[K, C, R, S]``,
+output ``[K, HO, WO]`` with ``HO = (H + 2*pad - R) // stride + 1``.
+
+All kernels consume an input that has already been zero-padded by the
+caller (``pad_input``): this mirrors the paper's kernels, which load a
+haloed image tile into shared memory and never branch on borders inside
+the hot loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    """Geometry of one convolution layer (paper Table 2 rows are instances)."""
+
+    in_channels: int  # C
+    out_channels: int  # K
+    height: int  # H (input, unpadded)
+    width: int  # W
+    filter_h: int = 3  # R
+    filter_w: int = 3  # S
+    stride: int = 1
+    padding: int = 1
+
+    @property
+    def out_height(self) -> int:
+        return (self.height + 2 * self.padding - self.filter_h) // self.stride + 1
+
+    @property
+    def out_width(self) -> int:
+        return (self.width + 2 * self.padding - self.filter_w) // self.stride + 1
+
+    @property
+    def flops(self) -> int:
+        """Useful FLOPs (mul+add) of the convolution."""
+        return (
+            2
+            * self.out_channels
+            * self.out_height
+            * self.out_width
+            * self.in_channels
+            * self.filter_h
+            * self.filter_w
+        )
+
+    def input_shape(self):
+        return (self.in_channels, self.height, self.width)
+
+    def padded_shape(self):
+        return (
+            self.in_channels,
+            self.height + 2 * self.padding,
+            self.width + 2 * self.padding,
+        )
+
+    def filter_shape(self):
+        return (self.out_channels, self.in_channels, self.filter_h, self.filter_w)
+
+    def output_shape(self):
+        return (self.out_channels, self.out_height, self.out_width)
+
+
+def pad_input(x: jnp.ndarray, padding: int) -> jnp.ndarray:
+    """Zero-pad the spatial dims of a ``[C, H, W]`` image."""
+    if padding == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (padding, padding), (padding, padding)))
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+@functools.lru_cache(maxsize=None)
+def pick_tile(extent: int, preferred: int) -> int:
+    """Largest divisor of ``extent`` that is <= preferred (>=1).
+
+    Pallas blocks must tile the (possibly pre-padded) extent exactly; the
+    auto-tuner explores `preferred`, this snaps it to a legal value.
+    """
+    t = min(preferred, extent)
+    while extent % t != 0:
+        t -= 1
+    return max(t, 1)

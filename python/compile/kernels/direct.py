@@ -1,0 +1,138 @@
+"""Direct convolution (paper §3.3, Algorithm 1).
+
+The sliding-window definition with the classic GPU schedule: the
+workgroup stages an image tile in shared memory, *threads map to output
+pixels*, and the kernel loops over output channels per thread
+(``OUT_CHANNELS_PER_THREAD``). Both of Algorithm 1's variants are
+implemented:
+
+* ``cache_filters=True``  (CONV_CACHE_FILTER)  — the filter block is
+  staged on-chip too; on a real GPU this inserts the inner-loop memory
+  barrier whose ILP cost the paper dissects. In the Pallas schedule the
+  staging is the ``w_ref`` BlockSpec; the barrier cost is modelled in
+  the L3 simulator (``convgen::direct``).
+* ``cache_filters=False`` (CONV_NOCACHE_FILTER) — every "thread" streams
+  filter taps straight from HBM; duplicated loads, more registers.
+
+Numerically both reduce to the same tap-loop; the *schedule* (loop
+nesting, what is staged per grid step) mirrors each variant, which is
+what carries over to the trace generators.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pad_input, pick_tile
+
+
+def _direct_kernel(
+    x_ref,
+    w_ref,
+    o_ref,
+    *,
+    filter_h: int,
+    filter_w: int,
+    stride: int,
+    rows_blk: int,
+    k_blk: int,
+):
+    """Grid (row_tiles, C): threads<->pixels; output channels looped inside.
+
+    x_ref: [1, HP, WP]      one padded input channel
+    w_ref: [K, 1, R, S]     staged filter slice (cache variant), or
+           [K, C, R, S]     the whole filter tensor (no-cache variant,
+                            taps read at point of use — duplicated traffic)
+    o_ref: [K, RB, WO]      accumulated across the C grid axis
+    """
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ri = pl.program_id(0)
+    # channel index within w_ref: 0 when the filter block is staged
+    # per-input-channel, the live grid channel otherwise
+    wc = 0 if w_ref.shape[1] == 1 else pl.program_id(1)
+    out_w = o_ref.shape[2]
+    halo_rows = rows_blk * stride + filter_h - stride
+    slab = x_ref[0, pl.ds(ri * rows_blk * stride, halo_rows), :]
+
+    n_k = o_ref.shape[0]
+    # OUT_CHANNELS_PER_THREAD loop: one k-block of the output at a time,
+    # each k's tap-loop fully unrolled over (r, s) — the per-pixel thread
+    # does filter_size MACs per output channel (Algorithm 1 line 7/18).
+    for k0 in range(0, n_k, k_blk):
+        acc = jnp.zeros((k_blk, rows_blk, out_w), dtype=jnp.float32)
+        for r in range(filter_h):
+            for s in range(filter_w):
+                win = jax.lax.slice(
+                    slab,
+                    (r, s),
+                    (r + stride * (rows_blk - 1) + 1, s + stride * (out_w - 1) + 1),
+                    (stride, stride),
+                )  # [RB, WO]
+                taps = w_ref[pl.ds(k0, k_blk), wc, r, s]  # [KB]
+                acc = acc + taps[:, None, None] * win[None].astype(jnp.float32)
+        o_ref[pl.ds(k0, k_blk)] += acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "tile_rows", "k_per_thread", "cache_filters"),
+)
+def conv_direct(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 1,
+    tile_rows: int = 4,
+    k_per_thread: int = 4,
+    cache_filters: bool = True,
+) -> jnp.ndarray:
+    """Direct conv. [C,H,W],[K,C,R,S] -> [K,HO,WO].
+
+    ``cache_filters`` switches Algorithm 1's two variants. With caching,
+    the filter block is staged per grid step (BlockSpec over the C axis);
+    without, the whole filter tensor is resident and taps are read
+    per-use (duplicated traffic, as in CONV_NOCACHE_FILTER).
+    """
+    c, h, wd = x.shape
+    k, c2, r, s = w.shape
+    assert c == c2
+    xp = pad_input(x, padding)
+    hp, wp = h + 2 * padding, wd + 2 * padding
+    ho = (h + 2 * padding - r) // stride + 1
+    wo = (wd + 2 * padding - s) // stride + 1
+
+    rb = pick_tile(ho, tile_rows)
+    kb = pick_tile(k, k_per_thread)
+    grid = (ho // rb, c)
+
+    if cache_filters:
+        # CONV_CACHE_FILTER: stage this input channel's filter block
+        w_spec = pl.BlockSpec((k, 1, r, s), lambda ri, ci: (0, ci, 0, 0))
+    else:
+        # CONV_NOCACHE_FILTER: the whole filter tensor stays in "global
+        # memory"; taps are read at point of use
+        w_spec = pl.BlockSpec((k, c, r, s), lambda ri, ci: (0, 0, 0, 0))
+
+    kernel = functools.partial(
+        _direct_kernel, filter_h=r, filter_w=s, stride=stride, rows_blk=rb, k_blk=kb
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp), lambda ri, ci: (ci, 0, 0)),
+            w_spec,
+        ],
+        out_specs=pl.BlockSpec((k, rb, wo), lambda ri, ci: (0, ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, ho, wo), x.dtype),
+        interpret=True,
+    )(xp, w)

@@ -1,0 +1,154 @@
+"""ILP-M convolution — the paper's contribution (§4, Algorithm 2).
+
+Key idea: map *threads to output channels* and iterate over pixels,
+instead of mapping threads to pixels and iterating over output channels.
+Consequences the kernel schedule must embody:
+
+* the filter is reorganised ``[C][R][S][K]`` so that the per-step tap
+  read is **coalesced across output channels** (Algorithm 2 line 14);
+* the filter-tap loop ``(r, s)`` is the *outer* loop, so only **one**
+  weight per output channel is live at a time — one register, minimal
+  register pressure, maximal room for the compiler to pipeline
+  (paper §4 "further reduces the register usage");
+* the live tap is broadcast-FMA'd over the whole staged image tile
+  (lines 15–19) — ``workgroup_size`` arithmetic instructions per global
+  load, no barrier inside the tap loop;
+* optionally the channel-major output tile is transposed on-chip before
+  the write-back so the store is coalesced (§4 last paragraph).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the staged image tile is
+the HBM→VMEM BlockSpec block; the broadcast tap-FMA is a rank-2 VPU
+broadcast multiply-accumulate; "one register" becomes a scalar operand
+per output channel rather than a staged filter tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pad_input, pick_tile
+
+
+def reorganize_filters(w: jnp.ndarray) -> jnp.ndarray:
+    """[K,C,R,S] -> [C,R,S,K]: the paper's coalesced-tap-read layout.
+
+    Filters are constant at inference time, so this runs once at model
+    build (same as the paper computing filter layout offline).
+    """
+    return jnp.transpose(w, (1, 2, 3, 0))
+
+
+def _ilpm_kernel(
+    x_ref,
+    w_ref,
+    o_ref,
+    *,
+    filter_h: int,
+    filter_w: int,
+    stride: int,
+    rows_blk: int,
+):
+    """Grid (k_tiles, row_tiles, C): threads<->output channels.
+
+    x_ref: [1, HP, WP]        one padded input channel (the shared-mem tile)
+    w_ref: [1, R, S, KB]      this channel's taps, K-coalesced layout
+    o_ref: [KB, RB, WO]       accumulated across the C grid axis
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ri = pl.program_id(1)
+    out_w = o_ref.shape[2]
+    halo_rows = rows_blk * stride + filter_h - stride
+    # Algorithm 2 lines 8-10: the workgroup stages the image tile once;
+    # the single barrier of the algorithm lives here (after this load).
+    slab = x_ref[0, pl.ds(ri * rows_blk * stride, halo_rows), :]
+
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    # Algorithm 2 lines 12-21: tap loop OUTER, one live weight per k.
+    for r in range(filter_h):
+        for s in range(filter_w):
+            taps = w_ref[0, r, s, :]  # [KB] — coalesced read, 1 reg/thread
+            win = jax.lax.slice(
+                slab,
+                (r, s),
+                (r + stride * (rows_blk - 1) + 1, s + stride * (out_w - 1) + 1),
+                (stride, stride),
+            )  # [RB, WO]
+            # broadcast-FMA of one scalar weight over the whole image tile:
+            # workgroup_size arithmetic per tap load (the ILP-M ratio)
+            acc = acc + taps[:, None, None] * win[None].astype(jnp.float32)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "tile_k", "tile_rows", "transpose_output"),
+)
+def conv_ilpm_pre(
+    x: jnp.ndarray,
+    w_kcrs: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 1,
+    tile_k: int = 32,
+    tile_rows: int = 4,
+    transpose_output: bool = False,
+) -> jnp.ndarray:
+    """ILP-M conv with pre-reorganised filters ``w_kcrs = [C,R,S,K]``."""
+    c, h, wd = x.shape
+    c2, r, s, k = w_kcrs.shape
+    assert c == c2
+    xp = pad_input(x, padding)
+    hp, wp = h + 2 * padding, wd + 2 * padding
+    ho = (h + 2 * padding - r) // stride + 1
+    wo = (wd + 2 * padding - s) // stride + 1
+
+    kb = pick_tile(k, tile_k)
+    rb = pick_tile(ho, tile_rows)
+    grid = (k // kb, ho // rb, c)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _ilpm_kernel, filter_h=r, filter_w=s, stride=stride, rows_blk=rb
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp), lambda ki, ri, ci: (ci, 0, 0)),
+            pl.BlockSpec((1, r, s, kb), lambda ki, ri, ci: (ci, 0, 0, ki)),
+        ],
+        out_specs=pl.BlockSpec((kb, rb, wo), lambda ki, ri, ci: (ki, ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, ho, wo), x.dtype),
+        interpret=True,
+    )(xp, w_kcrs)
+    if transpose_output:
+        # §4: on-chip transpose so the global write is coalesced; the
+        # consumer receives pixel-major data and restores channel-major.
+        out = jnp.transpose(jnp.transpose(out, (1, 2, 0)), (2, 0, 1))
+    return out
+
+
+def conv_ilpm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 1,
+    tile_k: int = 32,
+    tile_rows: int = 4,
+    transpose_output: bool = False,
+) -> jnp.ndarray:
+    """ILP-M conv from standard ``[K,C,R,S]`` filters. [C,H,W]->[K,HO,WO]."""
+    return conv_ilpm_pre(
+        x,
+        reorganize_filters(w),
+        stride=stride,
+        padding=padding,
+        tile_k=tile_k,
+        tile_rows=tile_rows,
+        transpose_output=transpose_output,
+    )

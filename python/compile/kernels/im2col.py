@@ -1,0 +1,91 @@
+"""im2col convolution (paper §3.1, Figure 3).
+
+Two separate Pallas kernels, exactly as the two separate OpenCL kernels
+the paper profiles (``im2col_im2col`` + ``im2col_gemm``):
+
+1. :func:`im2col_unroll` materialises the unrolled input matrix
+   ``U[C*R*S, HO*WO]`` — on a GPU this is a full round trip through
+   global memory (the bandwidth overhead the paper criticises); here it
+   is a materialised intermediate between two ``pallas_call``s, so the
+   same extra HBM traffic appears in the lowered HLO.
+2. :func:`gemm.gemm` computes ``out[K, HO*WO] = Wmat[K, C*R*S] @ U``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import gemm as _gemm
+from .common import pad_input
+
+
+def _unroll_kernel(x_ref, o_ref, *, filter_h: int, filter_w: int, stride: int, out_h: int, out_w: int):
+    """Grid (C,): emit the R*S unrolled rows of one input channel.
+
+    x_ref:  [1, HP, WP]   padded input channel (VMEM tile)
+    o_ref:  [1, R*S, HO*WO] its slice of the unrolled matrix
+    """
+    x = x_ref[0]
+    for r in range(filter_h):
+        for s in range(filter_w):
+            win = jax.lax.slice(
+                x,
+                (r, s),
+                (r + stride * (out_h - 1) + 1, s + stride * (out_w - 1) + 1),
+                (stride, stride),
+            )
+            o_ref[0, r * filter_w + s] = win.reshape(out_h * out_w)
+
+
+@functools.partial(jax.jit, static_argnames=("filter_h", "filter_w", "stride", "padding"))
+def im2col_unroll(x: jnp.ndarray, filter_h: int = 3, filter_w: int = 3, stride: int = 1, padding: int = 1) -> jnp.ndarray:
+    """[C,H,W] -> unrolled [C*R*S, HO*WO] (materialised in 'global memory')."""
+    c, h, w = x.shape
+    xp = pad_input(x, padding)
+    hp, wp = h + 2 * padding, w + 2 * padding
+    ho = (h + 2 * padding - filter_h) // stride + 1
+    wo = (w + 2 * padding - filter_w) // stride + 1
+    out = pl.pallas_call(
+        functools.partial(
+            _unroll_kernel,
+            filter_h=filter_h,
+            filter_w=filter_w,
+            stride=stride,
+            out_h=ho,
+            out_w=wo,
+        ),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, hp, wp), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, filter_h * filter_w, ho * wo), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, filter_h * filter_w, ho * wo), x.dtype),
+        interpret=True,
+    )(xp)
+    return out.reshape(c * filter_h * filter_w, ho * wo)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "tile_m", "tile_n", "tile_k")
+)
+def conv_im2col(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 1,
+    tile_m: int = 32,
+    tile_n: int = 128,
+    tile_k: int = 32,
+) -> jnp.ndarray:
+    """im2col convolution: unroll kernel + GEMM kernel. [C,H,W],[K,C,R,S]->[K,HO,WO]."""
+    c, h, wd = x.shape
+    k, c2, r, s = w.shape
+    assert c == c2
+    ho = (h + 2 * padding - r) // stride + 1
+    wo = (wd + 2 * padding - s) // stride + 1
+    unrolled = im2col_unroll(x, r, s, stride, padding)  # [C*R*S, HO*WO]
+    wmat = w.reshape(k, c * r * s)  # filter flattened into rows (Fig 3)
+    out = _gemm(wmat, unrolled, tile_m=tile_m, tile_n=tile_n, tile_k=tile_k)
+    return out.reshape(k, ho, wo)

@@ -1,0 +1,108 @@
+"""libdnn-style fused implicit-GEMM convolution (paper §3.1).
+
+One single Pallas kernel: each grid step owns an output tile
+``[Kblk, RowsBlk, WO]`` (output channels x pixel rows) and constructs
+the im2col tile it needs *on the fly* in VMEM from the staged input —
+the unrolled matrix never exists in HBM. This is exactly libdnn's trick
+of fusing im2col into the GEMM so unrolled tiles live only in on-chip
+memory, at the cost of every workgroup redoing the unroll index
+arithmetic (the "most vector instructions" row of paper Table 4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pad_input, pick_tile
+
+
+def _libdnn_kernel(
+    x_ref,
+    w_ref,
+    o_ref,
+    *,
+    filter_h: int,
+    filter_w: int,
+    stride: int,
+    out_w: int,
+    rows_blk: int,
+):
+    """Grid (k_tiles, row_tiles, C): fused unroll + tile-GEMM.
+
+    x_ref: [1, HP, WP]  one padded input channel (staged to VMEM)
+    w_ref: [KB, 1, R, S]
+    o_ref: [KB, RB, WO]  accumulated across the C grid axis
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ri = pl.program_id(1)
+    halo_rows = rows_blk * stride + filter_h - stride
+    # Haloed row slab feeding this tile's RB output rows (dynamic start,
+    # static size — the workgroup's shared-memory image tile).
+    slab = x_ref[0, pl.ds(ri * rows_blk * stride, halo_rows), :]
+    # On-the-fly unroll: build the [R*S, RB*WO] im2col tile in VMEM.
+    cols = []
+    for r in range(filter_h):
+        for s in range(filter_w):
+            win = jax.lax.slice(
+                slab,
+                (r, s),
+                (r + stride * (rows_blk - 1) + 1, s + stride * (out_w - 1) + 1),
+                (stride, stride),
+            )  # [RB, WO]
+            cols.append(win.reshape(rows_blk * out_w))
+    tile = jnp.stack(cols)  # [R*S, RB*WO]
+    wmat = w_ref[...].reshape(w_ref.shape[0], filter_h * filter_w)  # [KB, R*S]
+    acc = jnp.dot(wmat, tile, preferred_element_type=jnp.float32)  # [KB, RB*WO]
+    o_ref[...] += acc.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "tile_k", "tile_rows")
+)
+def conv_libdnn(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 1,
+    tile_k: int = 32,
+    tile_rows: int = 4,
+) -> jnp.ndarray:
+    """Fused implicit-GEMM conv. [C,H,W],[K,C,R,S] -> [K,HO,WO]."""
+    c, h, wd = x.shape
+    k, c2, r, s = w.shape
+    assert c == c2
+    xp = pad_input(x, padding)
+    hp, wp = h + 2 * padding, wd + 2 * padding
+    ho = (h + 2 * padding - r) // stride + 1
+    wo = (wd + 2 * padding - s) // stride + 1
+
+    kb = pick_tile(k, tile_k)
+    rb = pick_tile(ho, tile_rows)
+    grid = (k // kb, ho // rb, c)
+
+    return pl.pallas_call(
+        functools.partial(
+            _libdnn_kernel,
+            filter_h=r,
+            filter_w=s,
+            stride=stride,
+            out_w=wo,
+            rows_blk=rb,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp), lambda ki, ri, ci: (ci, 0, 0)),
+            pl.BlockSpec((kb, 1, r, s), lambda ki, ri, ci: (ki, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((kb, rb, wo), lambda ki, ri, ci: (ki, ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, ho, wo), x.dtype),
+        interpret=True,
+    )(xp, w)

@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the convolution kernels.
+
+Two independent references:
+
+* :func:`conv_ref` — ``jax.lax.conv_general_dilated``, the production
+  XLA convolution.
+* :func:`conv_naive` — a literal sliding-window implementation of the
+  definition of convolution (paper §3.3), used to cross-check the oracle
+  itself on small shapes.
+
+Every Pallas kernel in this package must match :func:`conv_ref` to
+~1e-4 over the hypothesis sweep in ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ConvConfig, pad_input
+
+
+def conv_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: int = 1) -> jnp.ndarray:
+    """XLA reference conv. x: [C,H,W], w: [K,C,R,S] -> [K,HO,WO]."""
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0].astype(x.dtype)
+
+
+def conv_naive(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: int = 1) -> jnp.ndarray:
+    """Sliding-window definition of convolution (cross-correlation, as in CNNs)."""
+    c, h, wd = x.shape
+    k, c2, r, s = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    xp = pad_input(x, padding)
+    ho = (h + 2 * padding - r) // stride + 1
+    wo = (wd + 2 * padding - s) // stride + 1
+    out = jnp.zeros((k, ho, wo), dtype=jnp.float32)
+    for rr in range(r):
+        for ss in range(s):
+            # window of xp starting at (rr, ss), strided
+            win = xp[:, rr : rr + stride * ho : stride, ss : ss + stride * wo : stride]
+            # [K,C] x [C,HO,WO] -> [K,HO,WO]
+            out = out + jnp.einsum(
+                "kc,cyx->kyx",
+                w[:, :, rr, ss].astype(jnp.float32),
+                win.astype(jnp.float32),
+            )
+    return out.astype(x.dtype)
+
+
+def conv_ref_cfg(cfg: ConvConfig, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return conv_ref(x, w, cfg.stride, cfg.padding)

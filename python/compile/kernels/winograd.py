@@ -1,0 +1,224 @@
+"""Winograd F(2x2, 3x3) convolution (paper §3.2, Lavin & Gray 2016).
+
+Exactly the kernel decomposition the paper profiles (§5.2):
+
+* filter transform ``U = G g G^T`` — computed **offline** (filters are
+  constants at inference time; the paper ignores this kernel too);
+* ``winograd_trans_from_image`` — Pallas kernel transforming each 4x4
+  input tile: ``V = B^T d B``;
+* ``winograd_gemm`` x16 — one GEMM per transformed coordinate
+  ``(xi, nu)``: ``M[t] = U[t] @ V[t]`` (a batched Pallas GEMM with the
+  16 coordinates as the leading grid axis);
+* ``winograd_trans_to_output`` — Pallas kernel inverse-transforming each
+  tile: ``Y = A^T m A``.
+
+Each stage materialises its result (on a GPU: a round trip through
+global memory — the "transformation cost" of §3.2), matching the
+paper's memory-profile rows in Table 3.
+
+Only stride 1 is supported (Winograd requirement); filters must be 3x3.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import ceil_div, pad_input
+from .gemm import batched_gemm as _batched_gemm
+
+# F(2x2, 3x3) transform matrices (Lavin & Gray eq. 10-11).
+G = np.array(
+    [[1.0, 0.0, 0.0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0.0, 0.0, 1.0]],
+    dtype=np.float32,
+)  # 4x3
+BT = np.array(
+    [
+        [1.0, 0.0, -1.0, 0.0],
+        [0.0, 1.0, 1.0, 0.0],
+        [0.0, -1.0, 1.0, 0.0],
+        [0.0, 1.0, 0.0, -1.0],
+    ],
+    dtype=np.float32,
+)  # 4x4
+AT = np.array(
+    [[1.0, 1.0, 1.0, 0.0], [0.0, 1.0, -1.0, -1.0]], dtype=np.float32
+)  # 2x4
+
+TILE_IN = 4  # input tile edge (M + R - 1)
+TILE_OUT = 2  # output tile edge (M)
+
+
+def transform_filters(w: jnp.ndarray) -> jnp.ndarray:
+    """[K,C,3,3] -> U[16,K,C]: offline filter transform ``G g G^T``."""
+    k, c, r, s = w.shape
+    assert r == 3 and s == 3, "winograd F(2x2,3x3) needs 3x3 filters"
+    w32 = w.astype(jnp.float32)
+    # Written as explicit adds over the 3x3 taps (G rows are
+    # {g0, (g0+g1+g2)/2, (g0-g1+g2)/2, g2}) rather than an einsum:
+    # xla_extension 0.5.1 miscompiles the dot_general+transpose lowering
+    # of the einsum after the HLO-text round-trip (layout bug); the
+    # unrolled form also matches how production Winograd impls bake the
+    # constant-matrix structure in. See DESIGN.md §Gotchas.
+    def grow(t):  # G @ t along an axis already sliced out: t is tuple of 3
+        t0, t1, t2 = t
+        return (t0, 0.5 * (t0 + t1 + t2), 0.5 * (t0 - t1 + t2), t2)
+
+    rows = grow((w32[:, :, 0, :], w32[:, :, 1, :], w32[:, :, 2, :]))  # 4 x [K,C,3]
+    tiles = []
+    for tr in rows:  # each [K,C,3]
+        cols = grow((tr[:, :, 0], tr[:, :, 1], tr[:, :, 2]))  # 4 x [K,C]
+        tiles.extend(cols)
+    u = jnp.stack(tiles)  # [16,K,C]
+    return u.astype(w.dtype)
+
+
+def _btdb(d):
+    """``B^T d B`` for F(2x2,3x3) via explicit adds (d: [..., 4, 4]).
+
+    Winograd input transform is addition-only — written out tap by tap
+    so the Pallas kernel contains no captured constant matrices.
+    """
+    # rows: B^T d  -> t[i] over axis -2
+    t0 = d[..., 0, :] - d[..., 2, :]
+    t1 = d[..., 1, :] + d[..., 2, :]
+    t2 = d[..., 2, :] - d[..., 1, :]
+    t3 = d[..., 1, :] - d[..., 3, :]
+    rows = [t0, t1, t2, t3]
+    out = []
+    for t in rows:
+        u0 = t[..., 0] - t[..., 2]
+        u1 = t[..., 1] + t[..., 2]
+        u2 = t[..., 2] - t[..., 1]
+        u3 = t[..., 1] - t[..., 3]
+        out.append(jnp.stack([u0, u1, u2, u3], axis=-1))
+    return jnp.stack(out, axis=-2)  # [..., 4, 4]
+
+
+def _atma(m):
+    """``A^T m A`` for F(2x2,3x3) via explicit adds (m: [..., 4, 4])."""
+    t0 = m[..., 0, :] + m[..., 1, :] + m[..., 2, :]
+    t1 = m[..., 1, :] - m[..., 2, :] - m[..., 3, :]
+    rows = [t0, t1]
+    out = []
+    for t in rows:
+        u0 = t[..., 0] + t[..., 1] + t[..., 2]
+        u1 = t[..., 1] - t[..., 2] - t[..., 3]
+        out.append(jnp.stack([u0, u1], axis=-1))
+    return jnp.stack(out, axis=-2)  # [..., 2, 2]
+
+
+def _trans_in_kernel(x_ref, o_ref, *, n_tiles_h: int, n_tiles_w: int):
+    """Grid (C,): transform ALL 4x4 tiles of one channel, vectorised.
+
+    The 16 tap-planes of the strided tiling are plain strided slices of
+    the padded channel, so the whole transform is 16 slices + the
+    addition network over [nTh, nTw]-shaped planes — one grid step per
+    channel (EXPERIMENTS.md §Perf: the per-tile-row grid cost ~1.3 s per
+    conv2.x call on CPU PJRT; this form is ~20x faster).
+
+    x_ref: [1, HP, WP]   padded channel
+    o_ref: [16, 1, nTh*nTw]
+    """
+    x = x_ref[0].astype(jnp.float32)
+    # d[i][j][th, tw] = xp[2*th + i, 2*tw + j]
+    d = [
+        [
+            jax.lax.slice(
+                x,
+                (i, j),
+                (i + 2 * (n_tiles_h - 1) + 1, j + 2 * (n_tiles_w - 1) + 1),
+                (2, 2),
+            )
+            for j in range(TILE_IN)
+        ]
+        for i in range(TILE_IN)
+    ]
+    dd = jnp.stack([jnp.stack(row) for row in d])  # [4,4,nTh,nTw]
+    v = _btdb(jnp.moveaxis(dd, (0, 1), (-2, -1)))  # [..., 4, 4] adds
+    v = jnp.moveaxis(v, (-2, -1), (0, 1))  # [4,4,nTh,nTw]
+    o_ref[...] = (
+        v.reshape(16, n_tiles_h * n_tiles_w)[:, None, :].astype(o_ref.dtype)
+    )
+
+
+def _trans_out_kernel(m_ref, o_ref, *, n_tiles_h: int, n_tiles_w: int):
+    """Grid (K,): inverse-transform all tiles of one channel, vectorised.
+
+    m_ref: [16, 1, nTh*nTw]
+    o_ref: [1, 2*nTh, 2*nTw]
+    """
+    m = m_ref[:, 0, :].reshape(TILE_IN, TILE_IN, n_tiles_h, n_tiles_w).astype(jnp.float32)
+    y = _atma(jnp.moveaxis(m, (0, 1), (-2, -1)))  # [nTh, nTw, 2, 2]
+    # out[2*th + a, 2*tw + b] = y[th, tw, a, b]
+    out = jnp.transpose(y, (0, 2, 1, 3)).reshape(2 * n_tiles_h, 2 * n_tiles_w)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "tile_m", "tile_n"))
+def conv_winograd_pre(
+    x: jnp.ndarray,
+    u: jnp.ndarray,
+    padding: int = 1,
+    tile_m: int = 32,
+    tile_n: int = 128,
+) -> jnp.ndarray:
+    """Winograd conv with pre-transformed filters ``u = [16,K,C]``.
+
+    x: [C,H,W] -> [K,HO,WO] with stride 1, HO=H+2p-2, WO=W+2p-2.
+    """
+    c, h, wd = x.shape
+    _, k, c2 = u.shape
+    assert c == c2
+    ho = h + 2 * padding - 2
+    wo = wd + 2 * padding - 2
+    n_th, n_tw = ceil_div(ho, TILE_OUT), ceil_div(wo, TILE_OUT)
+    # pad right/bottom so the 2-strided 4x4 tiles cover the output exactly
+    xp = pad_input(x, padding)
+    hp_need, wp_need = 2 * n_th + 2, 2 * n_tw + 2
+    xp = jnp.pad(
+        xp, ((0, 0), (0, hp_need - xp.shape[1]), (0, wp_need - xp.shape[2]))
+    )
+
+    # --- winograd_trans_from_image: V[16, C, nT] --------------------
+    v = pl.pallas_call(
+        functools.partial(_trans_in_kernel, n_tiles_h=n_th, n_tiles_w=n_tw),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, hp_need, wp_need), lambda ci: (ci, 0, 0))],
+        out_specs=pl.BlockSpec((16, 1, n_th * n_tw), lambda ci: (0, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, c, n_th * n_tw), x.dtype),
+        interpret=True,
+    )(xp)
+
+    # --- winograd_gemm x16: M[t] = U[t] @ V[t] ----------------------
+    m = _batched_gemm(u, v, tile_m=tile_m, tile_n=tile_n)  # [16, K, nT]
+
+    # --- winograd_trans_to_output: Y[K, 2*nTh, 2*nTw] ---------------
+    y = pl.pallas_call(
+        functools.partial(_trans_out_kernel, n_tiles_h=n_th, n_tiles_w=n_tw),
+        grid=(k,),
+        in_specs=[pl.BlockSpec((16, 1, n_th * n_tw), lambda ki: (0, ki, 0))],
+        out_specs=pl.BlockSpec((1, 2 * n_th, 2 * n_tw), lambda ki: (ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 2 * n_th, 2 * n_tw), x.dtype),
+        interpret=True,
+    )(m)
+    return y[:, :ho, :wo]
+
+
+def conv_winograd(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 1,
+    tile_m: int = 32,
+    tile_n: int = 128,
+) -> jnp.ndarray:
+    """Winograd conv from standard ``[K,C,3,3]`` filters (stride 1 only)."""
+    assert stride == 1, "winograd F(2x2,3x3) supports stride 1 only"
+    return conv_winograd_pre(
+        x, transform_filters(w), padding=padding, tile_m=tile_m, tile_n=tile_n
+    )

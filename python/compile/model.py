@@ -1,0 +1,234 @@
+"""L2 — single-image CNN inference graphs in JAX, calling the L1 kernels.
+
+Two kinds of compute graphs are lowered to HLO artifacts:
+
+* **layer graphs** — one ResNet convolution layer (paper Table 2
+  geometry) computed by one of the five algorithms; used by the Rust
+  engine for per-layer benchmarking and by the examples;
+* **model graph** — a full single-image ResNet-18 forward pass
+  (conv1 7x7/2 → maxpool → 4 stages x 2 basic blocks → avgpool → fc)
+  whose 3x3 convolutions run through the selected L1 kernel. BatchNorm
+  is folded into conv bias at export time (weights are constants at
+  inference, exactly the assumption the paper exploits for its filter
+  reorganisation).
+
+Everything here is build-time only; Rust executes the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    ALGORITHMS,
+    ConvConfig,
+    conv_ref,
+)
+
+# ---------------------------------------------------------------------------
+# Paper Table 2: the ResNet convolution layer classes the paper evaluates.
+# ---------------------------------------------------------------------------
+
+RESNET_LAYERS: Dict[str, ConvConfig] = {
+    "conv2.x": ConvConfig(in_channels=64, out_channels=64, height=56, width=56),
+    "conv3.x": ConvConfig(in_channels=128, out_channels=128, height=28, width=28),
+    "conv4.x": ConvConfig(in_channels=256, out_channels=256, height=14, width=14),
+    "conv5.x": ConvConfig(in_channels=512, out_channels=512, height=7, width=7),
+}
+
+# paper Table 2: number of (blocks x convs) per layer class per ResNet depth
+RESNET_BLOCK_COUNTS: Dict[str, Dict[str, Tuple[int, int]]] = {
+    "resnet18": {"conv2.x": (2, 2), "conv3.x": (2, 2), "conv4.x": (2, 2), "conv5.x": (2, 2)},
+    "resnet34": {"conv2.x": (2, 3), "conv3.x": (2, 4), "conv4.x": (2, 6), "conv5.x": (2, 4)},
+    "resnet50": {"conv2.x": (1, 3), "conv3.x": (1, 4), "conv4.x": (1, 6), "conv5.x": (1, 3)},
+    "resnet101": {"conv2.x": (1, 3), "conv3.x": (1, 4), "conv4.x": (1, 23), "conv5.x": (1, 3)},
+    "resnet152": {"conv2.x": (1, 3), "conv3.x": (1, 8), "conv4.x": (1, 36), "conv5.x": (1, 3)},
+}
+
+ALGORITHM_NAMES: Tuple[str, ...] = ("im2col", "libdnn", "winograd", "direct", "ilpm")
+
+def default_tuning(algorithm: str, cfg: ConvConfig) -> Dict[str, int]:
+    """Artifact tile sizes, scaled to the layer.
+
+    These artifacts execute on the CPU PJRT backend where every Pallas
+    grid step becomes one iteration of an HLO while-loop: large tiles
+    (few grid steps) are the difference between milliseconds and minutes
+    per layer (EXPERIMENTS.md §Perf: conv5.x ILP-M went 257 s -> seconds
+    with whole-extent tiles). On TPU the same choices stay within VMEM
+    (biggest block here: 512x7x7 f32 = 100 KB << 16 MB).
+    """
+    k, ho = cfg.out_channels, cfg.out_height
+    if algorithm == "im2col":
+        crs = cfg.in_channels * cfg.filter_h * cfg.filter_w
+        return dict(tile_m=min(k, 256), tile_n=4096, tile_k=min(crs, 512))
+    if algorithm == "libdnn":
+        return dict(tile_k=min(k, 512), tile_rows=min(ho, 28))
+    if algorithm == "winograd":
+        return dict(tile_m=min(k, 512), tile_n=4096)
+    if algorithm == "direct":
+        return dict(tile_rows=min(ho, 28), k_per_thread=4)
+    if algorithm == "ilpm":
+        return dict(tile_k=min(k, 512), tile_rows=min(ho, 28))
+    return {}
+
+
+def layer_fn(algorithm: str, cfg: ConvConfig, tuning: Dict[str, int] | None = None) -> Callable:
+    """Return ``f(x, w) -> y`` computing one conv layer with ``algorithm``."""
+    if algorithm == "ref":
+        return lambda x, w: (conv_ref(x, w, cfg.stride, cfg.padding),)
+    fn = ALGORITHMS[algorithm]
+    kw = default_tuning(algorithm, cfg)
+    if tuning:
+        kw.update(tuning)
+
+    def f(x, w):
+        return (fn(x, w, cfg.stride, cfg.padding, **kw),)
+
+    return f
+
+
+def layer_example_args(cfg: ConvConfig):
+    return (
+        jax.ShapeDtypeStruct(cfg.input_shape(), jnp.float32),
+        jax.ShapeDtypeStruct(cfg.filter_shape(), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 single-image forward pass
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetSpec:
+    """Geometry of the exported single-image ResNet."""
+
+    resolution: int = 56  # input H=W (56 keeps the CPU demo fast; 224 = full)
+    num_classes: int = 100
+    stem_channels: int = 64
+    stage_channels: Tuple[int, ...] = (64, 128, 256, 512)
+    blocks_per_stage: Tuple[int, ...] = (2, 2, 2, 2)  # ResNet-18
+    conv_algorithm: str = "ilpm"  # which L1 kernel runs the 3x3 convs
+
+
+def _conv3x3(spec: ResNetSpec, x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Route a 3x3 conv through the configured L1 kernel."""
+    c, h, _ = x.shape
+    k = w.shape[0]
+    if spec.conv_algorithm == "ref":
+        return conv_ref(x, w, stride, 1)
+    if spec.conv_algorithm == "winograd" and stride != 1:
+        return conv_ref(x, w, stride, 1)  # winograd is stride-1 only
+    fn = ALGORITHMS[spec.conv_algorithm]
+    cfg = ConvConfig(
+        in_channels=c, out_channels=k, height=h, width=x.shape[2],
+        stride=stride, padding=1,
+    )
+    kw = default_tuning(spec.conv_algorithm, cfg)
+    return fn(x, w, stride, 1, **kw)
+
+
+def _conv1x1(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """1x1 projection (plain jnp — not part of the paper's evaluation).
+
+    Written as reshape+matmul (not einsum): the einsum lowering tickles
+    an xla_extension 0.5.1 layout bug after the HLO-text round trip.
+    """
+    xs = x[:, ::stride, ::stride]
+    c, h, wd = xs.shape
+    out = jnp.matmul(w[:, :, 0, 0], xs.reshape(c, h * wd))
+    return out.reshape(w.shape[0], h, wd)
+
+
+def _basic_block(spec: ResNetSpec, x: jnp.ndarray, params: Dict[str, jnp.ndarray], stride: int) -> jnp.ndarray:
+    out = _conv3x3(spec, x, params["conv1_w"], stride)
+    out = jax.nn.relu(out + params["conv1_b"][:, None, None])
+    out = _conv3x3(spec, out, params["conv2_w"], 1)
+    out = out + params["conv2_b"][:, None, None]
+    if "down_w" in params:
+        shortcut = _conv1x1(x, params["down_w"], stride)
+    else:
+        shortcut = x
+    return jax.nn.relu(out + shortcut)
+
+
+def _max_pool_3x3s2(x: jnp.ndarray) -> jnp.ndarray:
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)), constant_values=-jnp.inf)
+    return jax.lax.reduce_window(
+        xp, -jnp.inf, jax.lax.max, (1, 3, 3), (1, 2, 2), "VALID"
+    )
+
+
+def resnet_forward(spec: ResNetSpec, x: jnp.ndarray, params: List) -> Tuple[jnp.ndarray]:
+    """Single-image forward: x [3,res,res] -> logits [num_classes].
+
+    ``params`` is the flat list produced by :func:`init_resnet_params`
+    (a flat structure keeps the exported HLO parameter list stable and
+    easy to feed from Rust).
+    """
+    it = iter(params)
+
+    def take(n):
+        return [next(it) for _ in range(n)]
+
+    stem_w, stem_b = take(2)
+    out = conv_ref(x, stem_w, stride=2, padding=3)  # 7x7 stem (paper excludes it)
+    out = jax.nn.relu(out + stem_b[:, None, None])
+    out = _max_pool_3x3s2(out)
+
+    for si, (ch, nblocks) in enumerate(zip(spec.stage_channels, spec.blocks_per_stage)):
+        for bi in range(nblocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            p = {"conv1_w": next(it), "conv1_b": next(it), "conv2_w": next(it), "conv2_b": next(it)}
+            needs_down = stride != 1 or out.shape[0] != ch
+            if needs_down:
+                p["down_w"] = next(it)
+            out = _basic_block(spec, out, p, stride)
+
+    pooled = out.mean(axis=(1, 2))  # global average pool
+    fc_w, fc_b = take(2)
+    return (pooled @ fc_w + fc_b,)
+
+
+def init_resnet_params(spec: ResNetSpec, seed: int = 0) -> List[np.ndarray]:
+    """He-initialised synthetic weights, flat list matching resnet_forward."""
+    rng = np.random.default_rng(seed)
+
+    def he(shape, fan_in):
+        return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+    params: List[np.ndarray] = []
+    c_in = 3
+    params.append(he((spec.stem_channels, c_in, 7, 7), c_in * 49))  # stem w
+    params.append(np.zeros((spec.stem_channels,), np.float32))  # stem b
+    c_prev = spec.stem_channels
+    for si, (ch, nblocks) in enumerate(zip(spec.stage_channels, spec.blocks_per_stage)):
+        for bi in range(nblocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            params.append(he((ch, c_prev, 3, 3), c_prev * 9))
+            params.append(np.zeros((ch,), np.float32))
+            params.append(he((ch, ch, 3, 3), ch * 9))
+            params.append(np.zeros((ch,), np.float32))
+            if stride != 1 or c_prev != ch:
+                params.append(he((ch, c_prev, 1, 1), c_prev))
+            c_prev = ch
+    params.append(he((c_prev, spec.num_classes), c_prev))  # fc w
+    params.append(np.zeros((spec.num_classes,), np.float32))  # fc b
+    return params
+
+
+def resnet_example_args(spec: ResNetSpec):
+    params = init_resnet_params(spec)
+    x = jax.ShapeDtypeStruct((3, spec.resolution, spec.resolution), jnp.float32)
+    pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    return (x, pspecs)
+
+
+def resnet_fn(spec: ResNetSpec) -> Callable:
+    return functools.partial(resnet_forward, spec)

@@ -1,0 +1,215 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/paddings/dtypes; fixed cases cover the
+paper's Table-2 geometries (scaled) and known edge cases.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.kernels as kk
+
+ATOL = 2e-3  # f32 accumulation over <= few hundred terms
+ALGS = list(kk.ALGORITHMS.items())
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _check(name, fn, C, K, H, W, stride=1, padding=1, seed=0, **kw):
+    x = _rand((C, H, W), seed)
+    w = _rand((K, C, 3, 3), seed + 1)
+    ref = kk.conv_ref(x, w, stride, padding)
+    out = fn(x, w, stride, padding, **kw)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=ATOL, rtol=1e-3,
+        err_msg=f"{name} C={C} K={K} {H}x{W} s{stride} p{padding}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# oracle self-check
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 6),
+    k=st.integers(1, 6),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from([0, 1]),
+)
+def test_naive_matches_lax(c, k, h, w, stride, padding):
+    x = _rand((c, h, w), 11)
+    wt = _rand((k, c, 3, 3), 12)
+    a = kk.conv_ref(x, wt, stride, padding)
+    b = kk.conv_naive(x, wt, stride, padding)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# per-algorithm hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,fn", ALGS)
+@settings(max_examples=12, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    k=st.integers(1, 8),
+    h=st.integers(4, 14),
+    w=st.integers(4, 14),
+    seed=st.integers(0, 100),
+)
+def test_algorithms_match_ref_stride1(name, fn, c, k, h, w, seed):
+    _check(name, fn, c, k, h, w, 1, 1, seed)
+
+
+@pytest.mark.parametrize(
+    "name,fn", [(n, f) for n, f in ALGS if n != "winograd"]
+)
+@settings(max_examples=8, deadline=None)
+@given(
+    c=st.integers(1, 6),
+    k=st.integers(1, 6),
+    hw=st.integers(5, 12),
+    padding=st.sampled_from([0, 1, 2]),
+)
+def test_algorithms_match_ref_stride2(name, fn, c, k, hw, padding):
+    _check(name, fn, c, k, hw, hw, 2, padding)
+
+
+@pytest.mark.parametrize("name,fn", ALGS)
+@pytest.mark.parametrize("padding", [0, 1, 2])
+def test_paddings(name, fn, padding):
+    _check(name, fn, 4, 4, 8, 8, 1, padding)
+
+
+@pytest.mark.parametrize("name,fn", ALGS)
+def test_rectangular_images(name, fn):
+    _check(name, fn, 3, 5, 9, 13)
+    _check(name, fn, 5, 3, 13, 9)
+
+
+@pytest.mark.parametrize("name,fn", ALGS)
+def test_single_channel_and_pixelish(name, fn):
+    _check(name, fn, 1, 1, 3, 3)
+    _check(name, fn, 1, 8, 4, 4)
+    _check(name, fn, 8, 1, 4, 4)
+
+
+@pytest.mark.parametrize("name,fn", ALGS)
+def test_table2_geometries_scaled(name, fn):
+    # Table 2 layer classes at 1/8 channel scale (interpret-mode speed)
+    for c, k, hw in [(8, 8, 56), (16, 16, 28), (32, 32, 14), (64, 64, 7)]:
+        _check(name, fn, c, k, hw, hw)
+
+
+# ---------------------------------------------------------------------------
+# tuning-parameter sweeps (the knobs the auto-tuner varies)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tile_k", [8, 32, 128])
+@pytest.mark.parametrize("tile_rows", [1, 2, 7])
+def test_ilpm_tile_sweep(tile_k, tile_rows):
+    _check("ilpm", kk.conv_ilpm, 4, 16, 7, 7, tile_k=tile_k, tile_rows=tile_rows)
+
+
+def test_ilpm_transpose_output_matches():
+    x, w = _rand((4, 8, 8), 1), _rand((8, 4, 3, 3), 2)
+    a = kk.conv_ilpm(x, w, transpose_output=False)
+    b = kk.conv_ilpm(x, w, transpose_output=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("cache", [True, False])
+@pytest.mark.parametrize("kpt", [1, 2, 8])
+def test_direct_variants(cache, kpt):
+    _check("direct", kk.conv_direct, 4, 8, 8, 8, cache_filters=cache, k_per_thread=kpt)
+
+
+@pytest.mark.parametrize("tile_rows", [1, 2, 4])
+def test_libdnn_row_tiles(tile_rows):
+    _check("libdnn", kk.conv_libdnn, 4, 8, 8, 8, tile_rows=tile_rows)
+
+
+@pytest.mark.parametrize("tm,tn,tk", [(8, 16, 8), (32, 128, 32), (1, 1, 1)])
+def test_im2col_gemm_tiles(tm, tn, tk):
+    _check("im2col", kk.conv_im2col, 4, 8, 8, 8, tile_m=tm, tile_n=tn, tile_k=tk)
+
+
+# ---------------------------------------------------------------------------
+# dtype sweeps (bf16 inputs must survive every schedule)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,fn", ALGS)
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_dtypes(name, fn, dtype):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(3, 8, 8)).astype(np.float32)).astype(dtype)
+    w = jnp.asarray(rng.normal(size=(4, 3, 3, 3)).astype(np.float32)).astype(dtype)
+    out = fn(x, w, 1, 1)
+    assert out.dtype == dtype
+    ref = kk.conv_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# winograd internals
+# ---------------------------------------------------------------------------
+
+
+def test_winograd_filter_transform_shape_and_values():
+    w = _rand((4, 3, 3, 3), 5)
+    u = kk.transform_filters(w)
+    assert u.shape == (16, 4, 3)
+    # delta filter at the centre tap: U = G e G^T = g_col1 @ g_col1^T
+    e = jnp.zeros((1, 1, 3, 3), jnp.float32).at[0, 0, 1, 1].set(1.0)
+    ue = np.asarray(kk.transform_filters(e)).reshape(4, 4)
+    g = np.array([[1, 0, 0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0, 0, 1]], np.float32)
+    np.testing.assert_allclose(ue, g[:, 1:2] @ g[:, 1:2].T, atol=1e-6)
+
+
+def test_winograd_rejects_stride2():
+    x, w = _rand((2, 8, 8), 1), _rand((2, 2, 3, 3), 2)
+    with pytest.raises(AssertionError):
+        kk.conv_winograd(x, w, stride=2)
+
+
+# ---------------------------------------------------------------------------
+# gemm kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    k=st.integers(1, 40),
+    seed=st.integers(0, 50),
+)
+def test_gemm_matches_jnp(m, n, k, seed):
+    a, b = _rand((m, k), seed), _rand((k, n), seed + 1)
+    out = kk.gemm(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b), atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bsz=st.integers(1, 16), m=st.integers(1, 12), n=st.integers(1, 12), k=st.integers(1, 12))
+def test_batched_gemm_matches_jnp(bsz, m, n, k):
+    a, b = _rand((bsz, m, k), 3), _rand((bsz, k, n), 4)
+    out = kk.batched_gemm(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jnp.matmul(a, b)), atol=1e-3, rtol=1e-3
+    )

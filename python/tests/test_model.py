@@ -1,0 +1,107 @@
+"""L2 tests: layer graphs, the single-image ResNet forward, and the
+AOT path (HLO text emission, weights container, manifest)."""
+
+import json
+import struct
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import compile.model as M
+from compile.aot import to_hlo_text, write_weights, WEIGHTS_MAGIC
+from compile.kernels import ConvConfig, conv_ref
+
+
+def test_resnet_layer_table_matches_paper():
+    # paper Table 2
+    assert M.RESNET_LAYERS["conv2.x"].in_channels == 64
+    assert M.RESNET_LAYERS["conv2.x"].height == 56
+    assert M.RESNET_LAYERS["conv5.x"].out_channels == 512
+    assert M.RESNET_LAYERS["conv5.x"].width == 7
+    for cfg in M.RESNET_LAYERS.values():
+        assert cfg.out_height == cfg.height  # same padding
+        assert cfg.filter_h == cfg.filter_w == 3
+
+
+@pytest.mark.parametrize("alg", list(M.ALGORITHM_NAMES) + ["ref"])
+def test_layer_fn_runs_and_matches_ref(alg):
+    cfg = ConvConfig(in_channels=4, out_channels=8, height=10, width=10)
+    fn = M.layer_fn(alg, cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=cfg.input_shape()).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=cfg.filter_shape()).astype(np.float32))
+    (out,) = fn(x, w)
+    assert out.shape == cfg.output_shape()
+    ref = conv_ref(x, w, cfg.stride, cfg.padding)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+@pytest.mark.parametrize("alg", ["ilpm", "ref"])
+def test_resnet_forward_shapes_and_determinism(alg):
+    spec = M.ResNetSpec(resolution=32, num_classes=10, conv_algorithm=alg,
+                        stage_channels=(8, 16, 32, 64))
+    params = M.init_resnet_params(spec, seed=1)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(3, 32, 32)).astype(np.float32))
+    (logits,) = M.resnet_forward(spec, x, [jnp.asarray(p) for p in params])
+    assert logits.shape == (10,)
+    assert np.isfinite(np.asarray(logits)).all()
+    (logits2,) = M.resnet_forward(spec, x, [jnp.asarray(p) for p in params])
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+
+
+def test_resnet_algorithms_agree():
+    # the routed kernel must not change the network's function
+    spec_kw = dict(resolution=24, num_classes=7, stage_channels=(4, 8, 8, 16))
+    params = M.init_resnet_params(M.ResNetSpec(conv_algorithm="ref", **spec_kw), seed=3)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(3, 24, 24)).astype(np.float32))
+    outs = {}
+    for alg in ["ref", "ilpm", "direct", "libdnn"]:
+        spec = M.ResNetSpec(conv_algorithm=alg, **spec_kw)
+        (logits,) = M.resnet_forward(spec, x, [jnp.asarray(p) for p in params])
+        outs[alg] = np.asarray(logits)
+    for alg, v in outs.items():
+        np.testing.assert_allclose(v, outs["ref"], atol=5e-2, rtol=1e-3, err_msg=alg)
+
+
+def test_param_count_is_resnet18_like():
+    spec = M.ResNetSpec()  # default: 4 stages x 2 blocks
+    params = M.init_resnet_params(spec)
+    n = sum(int(np.prod(p.shape)) for p in params)
+    assert 10e6 < n < 13e6, f"{n/1e6:.1f}M params"  # ResNet-18 ~ 11.2M
+
+
+def test_hlo_text_emission_is_parseable_prefix():
+    cfg = ConvConfig(in_channels=2, out_channels=2, height=6, width=6)
+    fn = M.layer_fn("ilpm", cfg)
+    lowered = jax.jit(fn).lower(*M.layer_example_args(cfg))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+    # must NOT be a serialized proto (the 0.5.1 gotcha)
+    assert "\x00" not in text[:1000]
+
+
+def test_weights_container_round_trip(tmp_path):
+    arrays = [np.arange(6, dtype=np.float32).reshape(2, 3), np.ones(4, np.float32)]
+    path = tmp_path / "w.bin"
+    write_weights(path, arrays)
+    raw = path.read_bytes()
+    assert raw[:8] == WEIGHTS_MAGIC
+    (count,) = struct.unpack("<I", raw[8:12])
+    assert count == 2
+
+
+def test_manifest_artifacts_exist_if_built():
+    root = Path(__file__).resolve().parents[2] / "artifacts"
+    if not (root / "manifest.json").exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads((root / "manifest.json").read_text())
+    assert len(manifest) >= 20
+    for entry in manifest:
+        assert (root / entry["path"]).exists(), entry["name"]
+        if entry["kind"] == "model":
+            assert (root / entry["weights"]).exists()
+            assert (root / entry["fixture"]).exists()

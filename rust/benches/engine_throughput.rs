@@ -1,0 +1,64 @@
+//! Bench: end-to-end engine throughput over the real PJRT runtime —
+//! per-layer artifact execution walltimes and single-image serving
+//! throughput (no paper analogue; this validates the deployable system
+//! and feeds EXPERIMENTS.md §E2E).
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench engine_throughput`
+
+use ilpm::runtime::{Engine, Tensor};
+use ilpm::util::bench::{fmt_ns, Bench};
+use ilpm::workload::LayerClass;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(&dir).expect("engine");
+    println!("platform: {}\n", engine.platform());
+
+    println!("=== per-layer artifact walltime (CPU PJRT, interpret-mode kernels) ===");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "layer", "im2col", "libdnn", "winograd", "direct", "ilpm", "ref"
+    );
+    // interpret-mode Pallas HLO runs seconds per call on CPU: one
+    // sample per cell unless the budget allows more
+    let b = Bench::expensive();
+    for layer in LayerClass::ALL {
+        let shape = layer.shape();
+        let x = Tensor::randn(&[shape.in_channels, shape.height, shape.width], 1);
+        let w = Tensor::randn(
+            &[shape.out_channels, shape.in_channels, shape.filter_h, shape.filter_w],
+            2,
+        );
+        print!("{:<10}", layer.name());
+        for alg in ["im2col", "libdnn", "winograd", "direct", "ilpm", "ref"] {
+            let model = engine.load_layer(layer.name(), alg).expect(alg);
+            let stats = b.run(|| model.run(&[x.clone(), w.clone()]).expect("run"));
+            print!(" {:>12}", fmt_ns(stats.median_ns));
+        }
+        println!();
+    }
+
+    println!("\n=== single-image ResNet-18 serving (ref-conv model) ===");
+    let weights_name = {
+        let art = engine.manifest().find("resnet18_ref_r56").expect("model artifact");
+        art.weights.clone().expect("weights")
+    };
+    let weights: Vec<Tensor> = ilpm::runtime::load_weights(&dir.join(weights_name))
+        .expect("weights")
+        .into_iter()
+        .map(|(_, t)| t)
+        .collect();
+    let session = engine.session("resnet18_ref_r56", &weights).expect("session");
+    let img = Tensor::randn(&[3, 56, 56], 9);
+    let stats = b.run(|| session.run_image(&img).expect("infer"));
+    println!(
+        "resnet18_ref_r56: median {} per image ({:.1} img/s)",
+        fmt_ns(stats.median_ns),
+        1e9 / stats.median_ns
+    );
+}

@@ -1,0 +1,87 @@
+//! Bench: regenerate **Figure 5** — execution time of the five
+//! convolution algorithms on all four ResNet layer classes across the
+//! three device models, each at its auto-tuned configuration.
+//!
+//! Also prints the paper's headline ratios: ILP-M speedup vs im2col
+//! (paper: 14.6x) and vs direct (paper: 2.30x) on the mobile device.
+//!
+//! Run: `cargo bench --bench fig5_exec_time`
+
+use ilpm::autotune::tune;
+use ilpm::convgen::Algorithm;
+use ilpm::metrics::{fig5_table, render_fig5};
+use ilpm::simulator::DeviceConfig;
+use ilpm::util::bench::Bench;
+use ilpm::workload::LayerClass;
+
+fn main() {
+    println!("=== Figure 5: tuned execution time (simulated) ===\n");
+    for dev in DeviceConfig::paper_devices() {
+        println!("--- {} ---", dev.name);
+        let rows = fig5_table(&dev);
+        print!("{}", render_fig5(&rows));
+        for layer in LayerClass::ALL {
+            let best = rows
+                .iter()
+                .filter(|r| r.layer == layer)
+                .min_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap())
+                .unwrap();
+            println!("  {}: fastest = {}", layer.name(), best.algorithm.name());
+        }
+        println!();
+    }
+
+    println!("=== Headline ratios (mobile, Mali-G76) ===");
+    let mali = DeviceConfig::mali_g76_mp10();
+    let mut max_im2col = 0f64;
+    let mut max_direct = 0f64;
+    for layer in LayerClass::ALL {
+        let ilpm = tune(Algorithm::Ilpm, layer, &mali).time_ms;
+        let im2col = tune(Algorithm::Im2col, layer, &mali).time_ms;
+        let direct = tune(Algorithm::Direct, layer, &mali).time_ms;
+        println!(
+            "{:<10} ilpm={:.3}ms  im2col/ilpm={:.1}x (paper up to 14.6x)  direct/ilpm={:.2}x (paper 2.30x)",
+            layer.name(),
+            ilpm,
+            im2col / ilpm,
+            direct / ilpm
+        );
+        max_im2col = max_im2col.max(im2col / ilpm);
+        max_direct = max_direct.max(direct / ilpm);
+    }
+    println!("max speedup vs im2col: {max_im2col:.1}x   max vs direct: {max_direct:.2}x\n");
+
+    // ---- network-level view: Table 2 depth x per-layer times --------
+    println!("=== whole-network 3x3-conv time per ResNet depth (ms) ===");
+    for dev in DeviceConfig::paper_devices() {
+        println!("--- {} ---", dev.name);
+        println!(
+            "{:<10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "depth", "im2col", "libdnn", "winograd", "direct", "ilpm"
+        );
+        let per_layer: Vec<Vec<f64>> = Algorithm::ALL
+            .iter()
+            .map(|alg| {
+                LayerClass::ALL
+                    .iter()
+                    .map(|layer| tune(*alg, *layer, &dev).time_ms)
+                    .collect()
+            })
+            .collect();
+        for depth in ilpm::workload::RESNET_DEPTHS {
+            print!("{:<10}", depth.name);
+            for times in &per_layer {
+                let total: f64 =
+                    times.iter().zip(depth.convs).map(|(t, n)| t * n as f64).sum();
+                print!(" {total:>10.2}");
+            }
+            println!();
+        }
+        println!();
+    }
+
+    // ---- harness timing: how fast is a full Fig-5 regeneration? ----
+    let b = Bench::quick();
+    let stats = b.run(|| fig5_table(&DeviceConfig::mali_g76_mp10()));
+    println!("fig5_table(mali) harness time: {}", stats.human());
+}

@@ -1,0 +1,83 @@
+//! Bench: regenerate **Table 3** — memory profile metrics of every
+//! kernel for conv4.x on the integrated-GPU model (Vega 8), at tuned
+//! configurations, and check the orderings the paper reports.
+//!
+//! Run: `cargo bench --bench table3_memory`
+
+use ilpm::metrics::{profile_rows, table3};
+use ilpm::simulator::DeviceConfig;
+use ilpm::util::bench::Bench;
+use ilpm::workload::LayerClass;
+
+fn main() {
+    let dev = DeviceConfig::vega8();
+    let layer = LayerClass::Conv4x;
+    println!("=== Table 3: memory profile, conv4.x on Vega 8 (simulated) ===\n");
+    print!("{}", table3(&dev, layer));
+    println!();
+
+    // ---- shape checks vs the paper's Table 3 -----------------------
+    let rows = profile_rows(&dev, layer);
+    let find = |name: &str| {
+        rows.iter()
+            .flat_map(|(_, rs)| rs.iter())
+            .find(|r| r.kernel == name)
+            .unwrap_or_else(|| panic!("missing kernel row {name}"))
+            .clone()
+    };
+    let ilpm = find("ILP-M_conv");
+    let direct = find("direct_conv");
+    let im2col_gemm = find("im2col_gemm");
+    let unroll = find("im2col_im2col");
+    let wino_gemm = find("winograd_gemm");
+
+    let mut pass = 0;
+    let mut fail = 0;
+    let mut check = |label: &str, ok: bool| {
+        println!("{} {label}", if ok { "PASS" } else { "FAIL" });
+        if ok {
+            pass += 1;
+        } else {
+            fail += 1;
+        }
+    };
+
+    // paper: im2col_gemm reads the most (9.27 MB)
+    check("im2col_gemm has the largest global read", {
+        rows.iter()
+            .flat_map(|(_, rs)| rs.iter())
+            .all(|r| r.gmem_read_bytes <= im2col_gemm.gmem_read_bytes)
+    });
+    // paper: unroll writes ~9x the input (1.73 MB vs 0.20)
+    check(
+        "im2col_im2col write is ~9x its read",
+        (unroll.gmem_write_bytes / unroll.gmem_read_bytes - 9.0).abs() < 1.5,
+    );
+    // paper: direct and ILP-M have similar post-L2 traffic (2.60 vs 2.46)
+    check(
+        "direct ~ ILP-M in post-L2 read traffic",
+        (direct.gmem_read_bytes / ilpm.gmem_read_bytes - 1.0).abs() < 0.5,
+    );
+    // paper: direct's memory units far busier than ILP-M's (81 vs 15)
+    check(
+        "direct mem-unit busy > 2x ILP-M",
+        direct.mem_unit_busy_pct > 2.0 * ilpm.mem_unit_busy_pct,
+    );
+    // paper: ILP-M has zero bank conflicts; direct > 0
+    check("ILP-M bank conflicts = 0", ilpm.bank_conflict_pct == 0.0);
+    check("direct bank conflicts > 0", direct.bank_conflict_pct > 0.0);
+    // paper: ILP-M smem/WG below the GEMM kernels' (1024 vs 4224)
+    check(
+        "ILP-M smem/WG < GEMM kernels'",
+        ilpm.smem_per_wg < im2col_gemm.smem_per_wg && ilpm.smem_per_wg < wino_gemm.smem_per_wg,
+    );
+
+    println!("\n{pass} checks passed, {fail} failed");
+
+    let b = Bench::quick();
+    let stats = b.run(|| table3(&dev, layer));
+    println!("table3 harness time: {}", stats.human());
+    if fail > 0 {
+        std::process::exit(1);
+    }
+}

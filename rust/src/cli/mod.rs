@@ -1,0 +1,282 @@
+//! `ilpm` CLI — serve, bench, tune, profile, simulate.
+//!
+//! Subcommands:
+//! * `serve`   — run the single-image inference engine on a request stream
+//! * `bench`   — regenerate a paper artifact: `fig5`, `table3`, `table4`
+//! * `tune`    — run the auto-tuner for a device (all layers/algorithms)
+//! * `simulate`— simulate one (algorithm, layer, device) and dump counters
+//! * `layers`  — run each conv-layer artifact once through PJRT
+
+mod args;
+
+pub use args::Args;
+
+use crate::autotune::{tune, tune_all};
+use crate::convgen::Algorithm;
+use crate::coordinator::{InferenceEngine, RoutingTable};
+use crate::metrics::{render_fig5, fig5_table, table3, table4};
+use crate::simulator::DeviceConfig;
+use crate::workload::{LayerClass, RequestGen, TraceKind};
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+ilpm — single-image CNN inference engine + mobile-GPU simulator
+  (reproduction of 'ILP-M Conv', Ji 2019)
+
+USAGE: ilpm <command> [flags]
+
+COMMANDS:
+  serve     --model <name> --n <requests> [--workers N] [--artifacts DIR]
+            run the inference engine end to end
+  bench     <fig5|table3|table4> [--device mali|vega8|radeonvii]
+            regenerate a paper table/figure from tuned simulations
+  tune      [--device ...] [--threads N]
+            auto-tune every (layer, algorithm) for a device
+  simulate  --alg <name> --layer <conv4.x> [--device ...]
+            simulate one algorithm and print its profile counters
+  layers    [--artifacts DIR] [--device-check]
+            execute each conv-layer artifact once via PJRT and verify
+  help      print this message
+";
+
+fn artifact_dir(a: &Args) -> PathBuf {
+    PathBuf::from(a.get_or("artifacts", "artifacts"))
+}
+
+fn device(a: &Args) -> Result<DeviceConfig, String> {
+    let name = a.get_or("device", "mali");
+    DeviceConfig::by_name(name).ok_or_else(|| format!("unknown device '{name}'"))
+}
+
+/// CLI entry point; returns the process exit code.
+pub fn main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Testable core of the CLI.
+pub fn run(argv: &[String]) -> Result<(), String> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "serve" => cmd_serve(rest),
+        "bench" => cmd_bench(rest),
+        "tune" => cmd_tune(rest),
+        "simulate" => cmd_simulate(rest),
+        "layers" => cmd_layers(rest),
+        other => Err(format!("unknown command '{other}' (try `ilpm help`)")),
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["model", "n", "workers", "artifacts", "queue", "rate"])?;
+    let dir = artifact_dir(&a);
+    let model = a.get_or("model", "resnet18_ilpm_r56").to_string();
+    let n = a.get_usize("n", 16)?;
+    let workers = a.get_usize("workers", 1)?;
+    let queue = a.get_usize("queue", 8)?;
+    // image shape from the manifest (first model input)
+    let manifest = crate::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+    let art = manifest
+        .find(&model)
+        .ok_or_else(|| format!("model '{model}' not in manifest"))?;
+    let img_shape = art.inputs[0].shape.clone();
+    eprintln!("starting engine: model={model} workers={workers} (compiling…)");
+    let engine = InferenceEngine::start(&dir, &model, workers, queue)
+        .map_err(|e| format!("engine start: {e:#}"))?;
+    let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
+    let (summary, results) = engine
+        .run_closed_loop(&mut gen, n)
+        .map_err(|e| format!("serving: {e:#}"))?;
+    println!("served {n} single-image requests: {summary}");
+    let classes: Vec<usize> = results.iter().take(8).map(|r| r.class).collect();
+    println!("first predicted classes: {classes:?}");
+    engine.shutdown();
+    Ok(())
+}
+
+fn cmd_bench(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["device", "layer"])?;
+    let dev = device(&a)?;
+    let which = a.positional.first().map(String::as_str).unwrap_or("fig5");
+    let layer = LayerClass::from_name(a.get_or("layer", "conv4.x"))
+        .ok_or_else(|| "unknown layer".to_string())?;
+    match which {
+        "fig5" => {
+            println!("Figure 5 — tuned execution time on {}", dev.name);
+            print!("{}", render_fig5(&fig5_table(&dev)));
+        }
+        "table3" => {
+            println!("Table 3 — memory profile, {} on {}", layer.name(), dev.name);
+            print!("{}", table3(&dev, layer));
+        }
+        "table4" => {
+            println!("Table 4 — arithmetic profile, {} on {}", layer.name(), dev.name);
+            print!("{}", table4(&dev, layer));
+        }
+        other => return Err(format!("unknown bench '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_tune(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["device", "threads", "out"])?;
+    let dev = device(&a)?;
+    let threads = a.get_usize("threads", 8)?;
+    let db = tune_all(&[dev.clone()], threads);
+    if let Some(out) = a.get("out") {
+        db.save(std::path::Path::new(out)).map_err(|e| format!("save {out}: {e}"))?;
+        println!("saved tuning table to {out}");
+    }
+    println!(
+        "{:<10} {:>10} {:>12} {:>24}",
+        "layer", "best", "time(ms)", "params"
+    );
+    for layer in LayerClass::ALL {
+        if let Some(best) = db.best_algorithm(dev.name, layer) {
+            println!(
+                "{:<10} {:>10} {:>12.3}  wg={} tile_px={} kpt={} cache={} tm/tn/tk={}/{}/{}",
+                layer.name(),
+                best.algorithm.name(),
+                best.time_ms,
+                best.params.wg_size,
+                best.params.tile_px,
+                best.params.k_per_thread,
+                best.params.cache_filters,
+                best.params.tile_m,
+                best.params.tile_n,
+                best.params.tile_k,
+            );
+        }
+    }
+    let table = RoutingTable::from_tuning(&db, dev.name);
+    for d in crate::workload::RESNET_DEPTHS {
+        println!(
+            "expected {} 3x3-conv time on {}: {:.2} ms",
+            d.name,
+            dev.name,
+            table.expected_network_ms(&d.convs)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["device", "alg", "layer", "tuned"])?;
+    let dev = device(&a)?;
+    let alg = Algorithm::from_name(a.get_or("alg", "ilpm"))
+        .ok_or_else(|| "unknown algorithm".to_string())?;
+    let layer = LayerClass::from_name(a.get_or("layer", "conv4.x"))
+        .ok_or_else(|| "unknown layer".to_string())?;
+    let e = tune(alg, layer, &dev);
+    println!(
+        "{} / {} / {} — tuned {:.3} ms ({} configs evaluated, {} pruned)",
+        alg.name(),
+        layer.name(),
+        dev.name,
+        e.time_ms,
+        e.stats.evaluated,
+        e.stats.pruned
+    );
+    for r in &e.reports {
+        println!(
+            "  {:<28} {:>9.3} ms bound={:<8} wavefronts={:<6} ILP={:.1} warps/CU={}",
+            r.kernel, r.time_ms, r.bound, r.wavefronts, r.effective_ilp, r.resident_warps_per_cu
+        );
+        println!("    mem: {}", r.memory_row());
+        println!("    alu: {}", r.arith_row());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn no_args_prints_usage_ok() {
+        assert!(run(&[]).is_ok());
+        assert!(run(&sv(&["help"])).is_ok());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        assert!(run(&sv(&["simulate", "--bogus", "1"])).is_err());
+        assert!(run(&sv(&["bench", "--device", "gtx1080"])).is_err());
+    }
+
+    #[test]
+    fn simulate_runs_for_every_algorithm() {
+        for alg in crate::convgen::Algorithm::ALL {
+            run(&sv(&["simulate", "--alg", alg.name(), "--layer", "conv5.x", "--device", "mali"]))
+                .unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+        }
+    }
+
+    #[test]
+    fn bench_rejects_unknown_table() {
+        assert!(run(&sv(&["bench", "table9"])).is_err());
+    }
+}
+
+fn cmd_layers(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["artifacts"])?;
+    let dir = artifact_dir(&a);
+    let engine =
+        crate::runtime::Engine::new(&dir).map_err(|e| format!("engine: {e:#}"))?;
+    println!("platform: {}", engine.platform());
+    for layer in LayerClass::ALL {
+        let shape = layer.shape();
+        let x = crate::runtime::Tensor::randn(
+            &[shape.in_channels, shape.height, shape.width],
+            1,
+        );
+        let w = crate::runtime::Tensor::randn(
+            &[shape.out_channels, shape.in_channels, shape.filter_h, shape.filter_w],
+            2,
+        );
+        let reference = engine
+            .load_layer(layer.name(), "ref")
+            .and_then(|m| m.run(&[x.clone(), w.clone()]))
+            .map_err(|e| format!("{}/ref: {e:#}", layer.name()))?;
+        for alg in ["im2col", "libdnn", "winograd", "direct", "ilpm"] {
+            let t0 = std::time::Instant::now();
+            let out = engine
+                .load_layer(layer.name(), alg)
+                .and_then(|m| m.run(&[x.clone(), w.clone()]))
+                .map_err(|e| format!("{}/{alg}: {e:#}", layer.name()))?;
+            let diff = out[0]
+                .max_abs_diff(&reference[0])
+                .map_err(|e| format!("{e:#}"))?;
+            println!(
+                "{:<10} {:<10} ok (maxdiff {diff:.2e}, wall {:?})",
+                layer.name(),
+                alg,
+                t0.elapsed()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! Direct convolution trace — paper §3.3, Algorithm 1.
+//!
+//! Threads map to *output pixels*: a workgroup owns a pixel tile and a
+//! group of `k_per_thread` output channels; the grid covers the
+//! remaining pixels and channel groups. Per input channel the workgroup
+//! stages the image tile, then loops over its channel group. Both
+//! variants of Algorithm 1:
+//!
+//! * `cache_filters = true` (CONV_CACHE_FILTER): each channel's filter
+//!   is staged in shared memory cooperatively — few global loads, but a
+//!   **memory barrier sits inside the k-loop**, between every stage and
+//!   its dot product. Between two adjacent barriers there are only
+//!   `filter_size` arithmetic instructions and *no* global loads, so
+//!   the compiler cannot fuse memory with compute: ILP dies (§3.3).
+//! * `cache_filters = false` (CONV_NOCACHE_FILTER): every thread loads
+//!   every tap itself straight from DRAM — `filter_size` independent
+//!   loads to pipeline, but each pins its own register and the same
+//!   filter values are fetched by every workgroup (duplicated traffic
+//!   that keeps the memory units busy — Table 3's 81%).
+
+use super::params::TuneParams;
+use crate::simulator::spec::{KernelSpec, Segment, Stream};
+use crate::workload::ConvShape;
+
+/// Generate the direct-convolution kernel trace (one kernel).
+pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
+    let c = shape.in_channels as u64;
+    let k = shape.out_channels as u64;
+    let px = shape.out_pixels() as u64;
+    let fs = shape.filter_len() as u64;
+
+    let kpt = p.k_per_thread.clamp(1, k); // channels per workgroup/thread
+    let tile_px = (p.tile_px * p.tile_px).clamp(1, px); // pixels per wg
+    let wg = tile_px.max(16);
+    let wgs_px = px.div_ceil(tile_px);
+    let k_groups = k.div_ceil(kpt);
+    let workgroups = wgs_px * k_groups;
+
+    // halo factor for the staged image tile
+    let halo = 1.0 + 2.0 * (fs as f64).sqrt() / (tile_px as f64).sqrt();
+    let img_tile_elems = tile_px as f64 * halo;
+
+    let mut segments = Vec::new();
+
+    // ---- per input channel: stage image tile ------------------------
+    let mut stage_img = Segment::new("stage image tile", c);
+    stage_img.gmem_loads_per_thread = img_tile_elems / wg as f64;
+    stage_img.smem_stores_per_thread = img_tile_elems / wg as f64;
+    stage_img.independent_loads = (img_tile_elems / wg as f64).max(1.0);
+    stage_img.regs_per_load = 1.0;
+    stage_img.overlap_compute = false;
+    stage_img.salu_per_warp = 10.0; // 2D address decomposition
+    stage_img.barrier_at_end = true;
+    segments.push(stage_img);
+
+    let filter_bytes = shape.filter_bytes();
+    let input_bytes = shape.input_bytes();
+
+    let (read_streams, base_regs);
+    if p.cache_filters {
+        // ---- CONV_CACHE_FILTER ---------------------------------------
+        // per (input channel x owned output channel): stage 3x3 filter,
+        // barrier, fs-FMA dot — Algorithm 1 lines 4-8
+        let reps = c * kpt;
+        let mut stage_f = Segment::new("stage one filter", reps);
+        stage_f.gmem_loads_per_thread = fs as f64 / wg as f64;
+        stage_f.smem_stores_per_thread = fs as f64 / wg as f64;
+        stage_f.independent_loads = 1.0;
+        stage_f.regs_per_load = 1.0;
+        stage_f.overlap_compute = false;
+        // after the first pixel-tile workgroup, every filter fetch hits L2
+        stage_f.l2_hit_fraction = 1.0 - 1.0 / wgs_px as f64;
+        stage_f.salu_per_warp = 6.0;
+        stage_f.barrier_at_end = true; // the paper's inner-loop barrier
+        segments.push(stage_f);
+
+        // only filter_size arithmetic between two adjacent barriers,
+        // zero global loads to overlap -> the ILP floor of §3.3
+        let mut dot = Segment::new("dot from smem (barrier-locked)", reps);
+        dot.valu_per_thread = fs as f64 + 2.0; // FMAs + address math
+        // filter taps broadcast and pairwise-vectorised (fs/2 LSU ops);
+        // the image window stays in registers across the k-loop and is
+        // re-read from smem once per input channel (fs/kpt per rep) —
+        // but unlike ILP-M each lane wants a *different* neighbour, so
+        // those reads are banked, not broadcast
+        dot.smem_broadcast_per_thread = fs as f64 / 2.0;
+        dot.smem_loads_per_thread = fs as f64 / kpt as f64;
+        dot.bank_conflict_way = 1.1; // slight skew on the image reads
+        dot.salu_per_warp = 8.0;
+        dot.barrier_at_end = true;
+        segments.push(dot);
+
+        // tile rounding: the staged tiles cover >= the image
+        let coverage = (tile_px * wgs_px) as f64 / px as f64;
+        read_streams = vec![
+            Stream {
+                label: "input image",
+                unique_bytes: (input_bytes as f64 * halo) as u64,
+                // re-staged per channel group, padded tiles included
+                touches: k_groups as f64 * coverage,
+                reuse_distance_bytes: input_bytes,
+            },
+            Stream {
+                // every pixel-tile workgroup stages its slice; across the
+                // grid the whole filter set is read wgs_px times and L2
+                // must absorb the duplication
+                label: "filters",
+                unique_bytes: filter_bytes,
+                touches: wgs_px as f64,
+                reuse_distance_bytes: filter_bytes / k_groups.max(1),
+            },
+        ];
+        base_regs = 24;
+    } else {
+        // ---- CONV_NOCACHE_FILTER --------------------------------------
+        let reps = c * kpt;
+        let mut dot = Segment::new("dot with DRAM taps", reps);
+        dot.gmem_loads_per_thread = fs as f64; // every tap, per thread
+        dot.gmem_same_address = true; // all lanes fetch the same tap
+        dot.valu_per_thread = fs as f64 + 2.0;
+        // no filter staging at all: only the image window is re-read
+        // from shared memory, once per input channel
+        dot.smem_loads_per_thread = fs as f64 / kpt as f64;
+        dot.bank_conflict_way = 1.1;
+        // fs independent loads, each pinning a register (§3.3:
+        // "pipelining within a dot-product needs filter_size registers")
+        dot.independent_loads = fs as f64;
+        dot.regs_per_load = 1.0;
+        dot.overlap_compute = true;
+        // taps are re-fetched by every thread of every workgroup: after
+        // the first they all hit L2 — cheap latency, busy memory units
+        dot.l2_hit_fraction = 0.97;
+        dot.salu_per_warp = 12.0;
+        segments.push(dot);
+
+        let coverage = (tile_px * wgs_px) as f64 / px as f64;
+        read_streams = vec![
+            Stream {
+                label: "input image",
+                unique_bytes: (input_bytes as f64 * halo) as u64,
+                touches: k_groups as f64 * coverage,
+                reuse_distance_bytes: input_bytes,
+            },
+            Stream {
+                // per-thread duplicated tap fetches: enormous pre-L2
+                // traffic, almost all absorbed by L2 (tight reuse)
+                label: "filters",
+                unique_bytes: filter_bytes,
+                touches: (wgs_px * wg).max(1) as f64,
+                reuse_distance_bytes: (fs * kpt * 4) as u64,
+            },
+        ];
+        base_regs = (fs as u32 + 20).min(200);
+    }
+
+    // ---- writeback ----------------------------------------------------
+    let mut writeback = Segment::new("store outputs", 1);
+    writeback.gmem_stores_per_thread = kpt as f64;
+    writeback.salu_per_warp = 6.0;
+    segments.push(writeback);
+
+    vec![KernelSpec {
+        name: "direct_conv".into(),
+        workgroups,
+        wg_size: wg,
+        base_regs_per_thread: base_regs,
+        // Table 3: direct needs the least shared memory (image tile
+        // only, plus one 3x3 filter slice when caching)
+        smem_per_wg: (img_tile_elems as u64 + if p.cache_filters { fs } else { 0 }) * 4,
+        segments,
+        read_streams,
+        write_bytes: shape.output_bytes(),
+        launches: 1,
+        library_kernel: false,
+    }]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{simulate, DeviceConfig};
+    use crate::workload::LayerClass;
+
+    fn gen(cache: bool) -> KernelSpec {
+        let shape = LayerClass::Conv4x.shape();
+        let mut p = TuneParams::for_shape(&shape);
+        p.cache_filters = cache;
+        generate(&shape, &p).remove(0)
+    }
+
+    #[test]
+    fn cache_variant_has_inner_barriers() {
+        let s = gen(true);
+        // one barrier per (input channel x owned channel) pair plus the
+        // image stages: the §3.3 pathology
+        assert!(s.barriers_per_wg() > 2 * 256, "{}", s.barriers_per_wg());
+        let dot = s.segments.iter().find(|x| x.label.contains("dot")).unwrap();
+        assert_eq!(dot.gmem_loads_per_thread, 0.0, "no loads to overlap");
+    }
+
+    #[test]
+    fn nocache_variant_pins_registers() {
+        let s = gen(false);
+        let dot = s.segments.iter().find(|x| x.label.contains("dot")).unwrap();
+        assert!(dot.independent_loads >= 9.0);
+        assert!(s.base_regs_per_thread > gen(true).base_regs_per_thread);
+        assert_eq!(s.barriers_per_wg(), 256); // image stages only
+    }
+
+    #[test]
+    fn nocache_generates_more_filter_traffic() {
+        let t_cache = gen(true).read_streams[1].touches;
+        let t_no = gen(false).read_streams[1].touches;
+        assert!(t_no > t_cache);
+    }
+
+    #[test]
+    fn smem_is_smallest_of_all_algorithms() {
+        // Table 3: direct_conv 512 B/wg, far below the GEMM kernels
+        let s = gen(true);
+        assert!(s.smem_per_wg < 2048, "{}", s.smem_per_wg);
+    }
+
+    #[test]
+    fn both_variants_simulate() {
+        for cache in [true, false] {
+            let s = gen(cache);
+            for dev in DeviceConfig::paper_devices() {
+                let r = simulate(&s, &dev);
+                assert!(r.time_ms.is_finite() && r.time_ms > 0.0);
+            }
+        }
+    }
+}

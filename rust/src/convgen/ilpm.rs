@@ -1,0 +1,185 @@
+//! ILP-M convolution trace — the paper's contribution (§4, Algorithm 2).
+//!
+//! Threads map to *output channels*: a workgroup's threads each own one
+//! output channel and compute the **whole image tile** for it. Per
+//! input channel the workgroup stages the image tile once (the
+//! algorithm's only barrier), then iterates the filter taps in the
+//! outer loop: each step loads exactly **one** weight per thread — a
+//! coalesced read across the `[C][R][S][K]`-reorganised filter — and
+//! broadcast-FMAs it over the whole tile from shared memory.
+//!
+//! Consequences encoded below, mirroring §4 and §5.2:
+//! * arithmetic : global-memory instruction ratio = tile size (huge
+//!   overlap budget → `overlap_compute = true`, deep effective ILP);
+//! * one live weight per thread → `regs_per_load = 1`, taps across
+//!   iterations independent → `independent_loads = fs`;
+//! * the broadcast tile read hits one shared-memory bank → served by
+//!   the broadcast path, `bank_conflict_way = 1.0` (Table 3: 0%);
+//! * scalar instructions almost vanish: the tap loop is a pair of
+//!   pointer increments (Table 4: 43.84 x 10^4 vs direct's 990).
+
+use super::params::TuneParams;
+use crate::simulator::spec::{KernelSpec, Segment, Stream};
+use crate::workload::ConvShape;
+
+/// Generate the ILP-M kernel trace (one kernel).
+pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
+    let c = shape.in_channels as u64;
+    let k = shape.out_channels as u64;
+    let px = shape.out_pixels() as u64;
+    let fs = shape.filter_len() as u64;
+
+    // threads <-> output channels; the workgroup covers min(K, wg_size)
+    let wg = p.wg_size.clamp(16, 1024).min(k.max(16));
+    let k_blocks = k.div_ceil(wg);
+    let tile_px = (p.tile_px * p.tile_px).clamp(1, px); // image tile area
+    let n_tiles = px.div_ceil(tile_px);
+    let workgroups = k_blocks * n_tiles;
+
+    let halo = 1.0 + 2.0 * (fs as f64).sqrt() / (tile_px as f64).sqrt();
+    let tile_elems = tile_px as f64 * halo;
+
+    // ---- per input channel: stage image tile, the only barrier ------
+    let mut stage = Segment::new("stage image tile (Alg.2 l.9-10)", c);
+    stage.gmem_loads_per_thread = tile_elems / wg as f64;
+    stage.smem_stores_per_thread = tile_elems / wg as f64;
+    stage.independent_loads = (tile_elems / wg as f64).max(1.0);
+    stage.regs_per_load = 1.0;
+    stage.overlap_compute = false;
+    stage.salu_per_warp = 2.0; // pointer bump, hoisted addressing
+    stage.barrier_at_end = true;
+
+    // ---- tap loop: one coalesced weight load, tile-wide FMA ---------
+    let mut taps = Segment::new("tap loop (Alg.2 l.12-21)", c);
+    taps.gmem_loads_per_thread = fs as f64; // one weight per (r,s)
+    taps.coalesced = true; // [C][R][S][K] layout: lanes read consecutive K
+    taps.valu_per_thread = fs as f64 * tile_px as f64; // FMA whole tile per tap
+    // every lane reads the *same* tile pixel (threads = channels): the
+    // broadcast path serves the warp with one access, and consecutive
+    // pixels vectorise 4-wide — 1 LSU op per 4 FMAs (paper Table 3:
+    // "thanks to the broadcast mechanism, only one access is needed")
+    taps.smem_broadcast_per_thread = fs as f64 * tile_px as f64 / 4.0;
+    taps.bank_conflict_way = 1.0;
+    // next tap's load is independent of this tap's FMAs (only the
+    // accumulators chain); fs taps pipeline with 1 register each
+    taps.independent_loads = fs as f64;
+    taps.regs_per_load = 1.0;
+    taps.overlap_compute = true; // tile_px FMAs hide every load
+    taps.salu_per_warp = 2.0;
+    let segments = vec![stage, taps, {
+        let mut wb = Segment::new("store output tile", 1);
+        // each thread writes its channel's whole tile; §4: without the
+        // on-chip transpose this store is uncoalesced
+        wb.gmem_stores_per_thread = tile_px as f64;
+        wb.coalesced = p.transpose_output;
+        wb.smem_stores_per_thread = if p.transpose_output { tile_px as f64 } else { 0.0 };
+        wb.smem_loads_per_thread = if p.transpose_output { tile_px as f64 } else { 0.0 };
+        wb.salu_per_warp = 2.0;
+        wb
+    }];
+
+    let input_bytes = shape.input_bytes();
+    let filter_bytes = shape.filter_bytes();
+    vec![KernelSpec {
+        name: "ILP-M_conv".into(),
+        workgroups,
+        wg_size: wg,
+        // accumulators for the whole tile live in registers — the
+        // tuning trade-off: bigger tiles = better load amortisation but
+        // more registers (the auto-tuner walks this edge)
+        base_regs_per_thread: (tile_px as u32 + 8).min(220),
+        smem_per_wg: (tile_elems as u64) * 4
+            + if p.transpose_output { tile_px * 4 } else { 0 },
+        segments,
+        read_streams: vec![
+            Stream {
+                label: "input image",
+                unique_bytes: (input_bytes as f64 * halo) as u64,
+                // re-staged per channel block; padded tiles included
+                touches: k_blocks as f64 * (tile_px * n_tiles) as f64 / px as f64,
+                reuse_distance_bytes: input_bytes,
+            },
+            Stream {
+                // each (k-block, tile) wg reads its filter slice once:
+                // the full set crosses DRAM ~n_tiles times pre-L2, with
+                // tight per-channel reuse that L2 absorbs
+                label: "filters [C][R][S][K]",
+                unique_bytes: filter_bytes,
+                touches: n_tiles as f64 * (wg * k_blocks) as f64 / k as f64,
+                reuse_distance_bytes: filter_bytes / c.max(1),
+            },
+        ],
+        write_bytes: shape.output_bytes(),
+        launches: 1,
+        library_kernel: false,
+    }]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{simulate, DeviceConfig};
+    use crate::workload::LayerClass;
+
+    fn gen() -> KernelSpec {
+        let shape = LayerClass::Conv4x.shape();
+        generate(&shape, &TuneParams::for_shape(&shape)).remove(0)
+    }
+
+    #[test]
+    fn one_barrier_per_input_channel() {
+        // Algorithm 2 has exactly one barrier per input channel
+        assert_eq!(gen().barriers_per_wg(), 256);
+    }
+
+    #[test]
+    fn arithmetic_to_memory_ratio_is_tile_size() {
+        let s = gen();
+        let taps = s.segments.iter().find(|x| x.label.contains("tap")).unwrap();
+        let ratio = taps.valu_per_thread / taps.gmem_loads_per_thread;
+        // §4: "the ratio of arithmetic instructions to global memory
+        // instructions is workgroup_size" (= tile area in our tiling)
+        assert!(ratio >= 16.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn no_bank_conflicts() {
+        // Table 3: ILP-M 0% bank conflicts (broadcast mechanism)
+        let dev = DeviceConfig::vega8();
+        let r = simulate(&gen(), &dev);
+        assert_eq!(r.bank_conflict_pct, 0.0);
+    }
+
+    #[test]
+    fn fewest_wavefronts_of_all_algorithms() {
+        // Table 4: ILP-M 32 wavefronts, an order below direct's 256
+        let shape = LayerClass::Conv4x.shape();
+        let p = TuneParams::for_shape(&shape);
+        let dev = DeviceConfig::vega8();
+        let ilpm = simulate(&generate(&shape, &p)[0], &dev).wavefronts;
+        let direct = simulate(&super::super::direct::generate(&shape, &p)[0], &dev).wavefronts;
+        assert!(ilpm < direct, "ilpm {ilpm} direct {direct}");
+    }
+
+    #[test]
+    fn transpose_output_coalesces_store() {
+        let shape = LayerClass::Conv4x.shape();
+        let mut p = TuneParams::for_shape(&shape);
+        p.transpose_output = true;
+        let s = generate(&shape, &p).remove(0);
+        let wb = s.segments.last().unwrap();
+        assert!(wb.coalesced);
+        assert!(wb.smem_stores_per_thread > 0.0);
+    }
+
+    #[test]
+    fn simulates_on_all_devices() {
+        for (_, shape) in crate::workload::layer_classes() {
+            let ks = generate(&shape, &TuneParams::for_shape(&shape));
+            for dev in DeviceConfig::paper_devices() {
+                let r = simulate(&ks[0], &dev);
+                assert!(r.time_ms.is_finite() && r.time_ms > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! im2col convolution trace — paper §3.1, Figure 3.
+//!
+//! Two kernels, exactly as profiled in Tables 3–4:
+//!
+//! * `im2col_im2col` — pure data movement: every thread reads its pixel
+//!   neighbourhood and writes R*S copies into the unrolled matrix in
+//!   DRAM. Cheap instructions, but it *materialises kernel_size x the
+//!   input image* through global memory — the bandwidth overhead the
+//!   paper criticises on LPDDR4/DDR4 devices.
+//! * `im2col_gemm` — clBLAS-style SGEMM over `[K, C*R*S] x [C*R*S, P]`,
+//!   which must read the unrolled matrix back from DRAM.
+
+use super::gemm::gemm_spec;
+use super::params::TuneParams;
+use crate::simulator::spec::{KernelSpec, Segment, Stream};
+use crate::workload::ConvShape;
+
+/// Generate the im2col pipeline (unroll kernel + GEMM kernel).
+pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
+    let c = shape.in_channels as u64;
+    let k = shape.out_channels as u64;
+    let px = shape.out_pixels() as u64;
+    let fs = shape.filter_len() as u64; // R*S
+    let input_bytes = shape.input_bytes();
+    let unrolled_bytes = c * fs * px * 4;
+
+    // ---- kernel 1: the unroll --------------------------------------
+    let wg = p.wg_size.max(64);
+    let threads = c * px; // one thread per (channel, output pixel)
+    let workgroups = threads.div_ceil(wg);
+    let mut body = Segment::new("gather neighbourhood + scatter rows", 1);
+    body.gmem_loads_per_thread = fs as f64;
+    body.gmem_stores_per_thread = fs as f64;
+    // neighbouring lanes read neighbouring pixels: coalesces well
+    body.coalesced = true;
+    // all R*S gathers are independent addresses -> deep ILP, 1 reg each
+    body.independent_loads = fs as f64;
+    body.regs_per_load = 1.0;
+    body.overlap_compute = true;
+    // the kernel is almost pure index arithmetic (row/col decomposition
+    // per emitted element) — the paper's high scalar count for im2col
+    body.valu_per_thread = 2.0 * fs as f64;
+    body.salu_per_warp = 4.0 * fs as f64;
+    let unroll = KernelSpec {
+        name: "im2col_im2col".into(),
+        workgroups,
+        wg_size: wg,
+        base_regs_per_thread: 16,
+        smem_per_wg: 0, // pure copy kernel: no staging (Table 3 row 1)
+        segments: vec![body],
+        read_streams: vec![Stream {
+            // each input pixel is re-read for each of the R*S positions
+            // it participates in, but neighbouring reads are rows apart:
+            // L2 absorbs nearly all of it
+            label: "input image",
+            unique_bytes: input_bytes,
+            touches: fs as f64,
+            reuse_distance_bytes: (shape.width * 4 * 3) as u64,
+        }],
+        write_bytes: unrolled_bytes,
+        launches: 1,
+        library_kernel: false,
+    };
+
+    // ---- kernel 2: SGEMM over the unrolled matrix -------------------
+    let mut gemm = gemm_spec(
+        "im2col_gemm",
+        k,
+        px,
+        c * fs,
+        p,
+        1,
+        "filters",
+        "unrolled matrix",
+    );
+    // the B stream (unrolled matrix) was just written by kernel 1; it
+    // is kernel_size x the image and badly exceeds L2 on these layers,
+    // so the re-reads go to DRAM (the paper's criticism)
+    gemm.read_streams[1].reuse_distance_bytes = unrolled_bytes.max(1);
+
+    vec![unroll, gemm]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{simulate, DeviceConfig};
+    use crate::workload::LayerClass;
+
+    #[test]
+    fn unroll_writes_kernel_size_times_input() {
+        let shape = LayerClass::Conv4x.shape();
+        let ks = generate(&shape, &TuneParams::for_shape(&shape));
+        // Table 3: im2col_im2col reads 0.20 MB, writes 1.73 MB (9x)
+        assert_eq!(ks[0].read_streams[0].unique_bytes, 200_704);
+        assert_eq!(ks[0].write_bytes, 9 * 200_704);
+    }
+
+    #[test]
+    fn gemm_reads_back_the_unrolled_matrix() {
+        let shape = LayerClass::Conv4x.shape();
+        let ks = generate(&shape, &TuneParams::for_shape(&shape));
+        assert_eq!(ks[1].read_streams[1].unique_bytes, 9 * 200_704);
+    }
+
+    #[test]
+    fn two_kernels_and_no_smem_in_unroll() {
+        let shape = LayerClass::Conv2x.shape();
+        let ks = generate(&shape, &TuneParams::for_shape(&shape));
+        assert_eq!(ks.len(), 2);
+        assert_eq!(ks[0].smem_per_wg, 0);
+        assert_eq!(ks[0].barriers_per_wg(), 0);
+    }
+
+    #[test]
+    fn simulates_everywhere() {
+        for (_, shape) in crate::workload::layer_classes() {
+            let ks = generate(&shape, &TuneParams::for_shape(&shape));
+            for dev in DeviceConfig::paper_devices() {
+                for s in &ks {
+                    let r = simulate(s, &dev);
+                    assert!(r.time_ms.is_finite() && r.time_ms > 0.0);
+                }
+            }
+        }
+    }
+}

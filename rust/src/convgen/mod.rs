@@ -1,0 +1,139 @@
+//! convgen — lowers each convolution algorithm into the simulator's
+//! abstract-kernel IR.
+//!
+//! One generator per algorithm the paper evaluates (§3–4): im2col,
+//! libdnn, Winograd, direct (both Algorithm-1 variants) and ILP-M. A
+//! generator maps `(ConvShape, TuneParams)` to the kernel launch
+//! sequence the OpenCL implementation would issue, with instruction
+//! counts, barrier structure, register pressure and memory streams —
+//! everything [`crate::simulator`] needs to reproduce Tables 3–4 and
+//! Figure 5.
+
+pub mod direct;
+pub mod gemm;
+pub mod ilpm;
+pub mod im2col;
+pub mod libdnn;
+pub mod params;
+pub mod winograd;
+
+pub use params::TuneParams;
+
+use crate::simulator::spec::KernelSpec;
+use crate::workload::ConvShape;
+
+/// The five algorithms of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Im2col,
+    Libdnn,
+    Winograd,
+    Direct,
+    Ilpm,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 5] = [
+        Algorithm::Im2col,
+        Algorithm::Libdnn,
+        Algorithm::Winograd,
+        Algorithm::Direct,
+        Algorithm::Ilpm,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Im2col => "im2col",
+            Algorithm::Libdnn => "libdnn",
+            Algorithm::Winograd => "winograd",
+            Algorithm::Direct => "direct",
+            Algorithm::Ilpm => "ilpm",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Algorithm> {
+        Algorithm::ALL.into_iter().find(|a| a.name() == name.to_ascii_lowercase())
+    }
+
+    /// Can this algorithm run the given layer at all?
+    pub fn supports(self, shape: &ConvShape) -> bool {
+        match self {
+            Algorithm::Winograd => shape.stride == 1 && shape.filter_h == 3 && shape.filter_w == 3,
+            _ => true,
+        }
+    }
+}
+
+/// Lower `(algorithm, layer, tuning)` to its kernel launch sequence.
+pub fn generate(alg: Algorithm, shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
+    let p = p.clamped(shape);
+    match alg {
+        Algorithm::Im2col => im2col::generate(shape, &p),
+        Algorithm::Libdnn => libdnn::generate(shape, &p),
+        Algorithm::Winograd => winograd::generate(shape, &p),
+        Algorithm::Direct => direct::generate(shape, &p),
+        Algorithm::Ilpm => ilpm::generate(shape, &p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::LayerClass;
+
+    #[test]
+    fn every_algorithm_generates_every_layer() {
+        for alg in Algorithm::ALL {
+            for (_, shape) in crate::workload::layer_classes() {
+                if !alg.supports(&shape) {
+                    continue;
+                }
+                let ks = generate(alg, &shape, &TuneParams::for_shape(&shape));
+                assert!(!ks.is_empty(), "{alg:?}");
+                for k in &ks {
+                    assert!(k.workgroups > 0);
+                    assert!(k.wg_size > 0);
+                    assert!(!k.segments.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_write_the_same_output_bytes() {
+        // every algorithm's final kernel writes exactly the output image
+        let shape = LayerClass::Conv3x.shape();
+        let p = TuneParams::for_shape(&shape);
+        for alg in Algorithm::ALL {
+            let ks = generate(alg, &shape, &p);
+            assert_eq!(
+                ks.last().unwrap().write_bytes,
+                shape.output_bytes(),
+                "{alg:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn byte_conservation_across_generators() {
+        for alg in Algorithm::ALL {
+            for (_, shape) in crate::workload::layer_classes() {
+                if !alg.supports(&shape) {
+                    continue;
+                }
+                for k in generate(alg, &shape, &TuneParams::for_shape(&shape)) {
+                    let err = k.byte_conservation_error(64);
+                    assert!(err < 0.35, "{alg:?}/{}: {err}", k.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for alg in Algorithm::ALL {
+            assert_eq!(Algorithm::from_name(alg.name()), Some(alg));
+        }
+        assert_eq!(Algorithm::from_name("fft"), None);
+    }
+}

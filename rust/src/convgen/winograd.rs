@@ -1,0 +1,154 @@
+//! Winograd F(2x2,3x3) trace — paper §3.2 and §5.2.
+//!
+//! Three profile rows, as in Tables 3–4: `winograd_trans_from_image`,
+//! `winograd_gemm (16 times)`, `winograd_trans_to_output`. The filter
+//! transform happens offline (filters are inference-time constants).
+//! Winograd trades a 2.25x multiplication reduction for two extra
+//! global-memory round trips (V and M matrices) — a good deal on HBM2,
+//! a poor one on LPDDR4 (§5.1).
+
+use super::gemm::gemm_spec;
+use super::params::TuneParams;
+use crate::simulator::spec::{KernelSpec, Segment, Stream};
+use crate::workload::ConvShape;
+
+/// Generate the Winograd pipeline (input transform, 16 GEMMs, output
+/// transform).
+pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
+    assert_eq!(shape.stride, 1, "winograd F(2x2,3x3) is stride-1 only");
+    let c = shape.in_channels as u64;
+    let k = shape.out_channels as u64;
+    let n_th = (shape.out_height() as u64).div_ceil(2);
+    let n_tw = (shape.out_width() as u64).div_ceil(2);
+    let n_tiles = n_th * n_tw;
+    let v_bytes = 16 * c * n_tiles * 4; // transformed input
+    let m_bytes = 16 * k * n_tiles * 4; // transformed product
+
+    // ---- trans_from_image -------------------------------------------
+    let wg = p.wg_size.max(64);
+    let threads = c * n_tiles; // one thread per (channel, tile)
+    let mut body = Segment::new("B^T d B per 4x4 tile", 1);
+    body.gmem_loads_per_thread = 16.0; // the 4x4 input tile
+    body.coalesced = false; // 2D gathers with stride-2 overlap
+    body.independent_loads = 16.0;
+    body.regs_per_load = 1.0;
+    body.overlap_compute = true;
+    body.valu_per_thread = 32.0; // 2x (4x4 matrix of 2-add rows)
+    body.gmem_stores_per_thread = 16.0;
+    body.salu_per_warp = 8.0;
+    let trans_in = KernelSpec {
+        name: "winograd_trans_from_image".into(),
+        workgroups: threads.div_ceil(wg),
+        wg_size: wg,
+        base_regs_per_thread: 24, // a 4x4 tile lives in registers
+        smem_per_wg: 1408, // halo exchange buffer (Table 3)
+        segments: vec![body],
+        read_streams: vec![Stream {
+            label: "input image",
+            unique_bytes: shape.input_bytes(),
+            // each pixel lands in ~4 overlapping 4x4 tiles (16 reads
+            // per tile over ~4 output pixels), padded tiles included
+            touches: 16.0 * n_tiles as f64 / shape.out_pixels() as f64,
+            reuse_distance_bytes: (shape.width * 4 * 4) as u64,
+        }],
+        write_bytes: v_bytes,
+        launches: 1,
+        library_kernel: false,
+    };
+
+    // ---- the 16 GEMMs: M[t] = U[t][K,C] @ V[t][C,nT] ------------------
+    let mut g = gemm_spec(
+        "winograd_gemm",
+        k,
+        n_tiles,
+        c,
+        p,
+        16,
+        "U (transformed filters)",
+        "V (transformed input)",
+    );
+    // V was just produced and is 4x the image: spills L2 on big layers
+    g.read_streams[1].unique_bytes = v_bytes / 16; // per launch slice
+    g.read_streams[1].reuse_distance_bytes = v_bytes.max(1);
+    g.read_streams[0].unique_bytes = k * c * 4; // U slice per launch
+
+    // ---- trans_to_output ----------------------------------------------
+    let threads_out = k * n_tiles;
+    let mut outb = Segment::new("A^T m A per tile", 1);
+    outb.gmem_loads_per_thread = 16.0;
+    outb.coalesced = false; // strided across the 16 M matrices
+    outb.independent_loads = 16.0;
+    outb.regs_per_load = 1.0;
+    outb.overlap_compute = true;
+    outb.valu_per_thread = 24.0;
+    outb.gmem_stores_per_thread = 4.0; // the 2x2 output tile
+    outb.salu_per_warp = 4.0;
+    let trans_out = KernelSpec {
+        name: "winograd_trans_to_output".into(),
+        workgroups: threads_out.div_ceil(wg),
+        wg_size: wg,
+        base_regs_per_thread: 24,
+        smem_per_wg: 0, // Table 3: no shared memory in trans_to_output
+        segments: vec![outb],
+        read_streams: vec![Stream {
+            label: "M (gemm product)",
+            unique_bytes: m_bytes,
+            touches: 1.0,
+            reuse_distance_bytes: 0,
+        }],
+        write_bytes: shape.output_bytes(),
+        launches: 1,
+        library_kernel: false,
+    };
+
+    vec![trans_in, g, trans_out]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{simulate, DeviceConfig};
+    use crate::workload::LayerClass;
+
+    #[test]
+    fn three_rows_with_16_gemm_launches() {
+        let shape = LayerClass::Conv4x.shape();
+        let ks = generate(&shape, &TuneParams::for_shape(&shape));
+        assert_eq!(ks.len(), 3);
+        assert_eq!(ks[1].launches, 16);
+    }
+
+    #[test]
+    fn v_matrix_is_4x_input() {
+        // conv4.x: V = 16*C*49 tiles * 4B = 0.80 MB (paper: 0.77)
+        let shape = LayerClass::Conv4x.shape();
+        let ks = generate(&shape, &TuneParams::for_shape(&shape));
+        let v = ks[0].write_bytes as f64 / 1e6;
+        assert!((0.7..0.9).contains(&v), "V = {v} MB");
+    }
+
+    #[test]
+    fn multiplication_reduction_vs_direct() {
+        // FLOP count through the GEMMs is (16/36)x the direct conv FLOPs
+        let shape = LayerClass::Conv4x.shape();
+        let ks = generate(&shape, &TuneParams::for_shape(&shape));
+        let dev = DeviceConfig::radeon_vii();
+        let gemm_flops = 2.0
+            * shape.out_channels as f64
+            * shape.in_channels as f64
+            * (ks[1].write_bytes as f64 / 4.0 / shape.out_channels as f64)
+            * 16.0;
+        let _ = simulate(&ks[1], &dev);
+        let direct_flops = shape.flops() as f64;
+        let ratio = gemm_flops / direct_flops;
+        assert!((0.40..0.52).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn rejects_strided_layers() {
+        let mut s = LayerClass::Conv4x.shape();
+        s.stride = 2;
+        let r = std::panic::catch_unwind(|| generate(&s, &TuneParams::default()));
+        assert!(r.is_err());
+    }
+}

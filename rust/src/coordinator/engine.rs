@@ -1,0 +1,225 @@
+//! The serving engine: bounded request queue → executor threads → PJRT.
+//!
+//! The `xla` crate's client types are `Rc`-based (not `Send`), so each
+//! executor thread builds its *own* PJRT client and compiles the model
+//! once at startup; requests are distributed over executors through a
+//! bounded channel (backpressure: `submit` blocks when the queue is
+//! full). Single-image inference has no batch dimension to exploit —
+//! parallelism across requests comes from executor threads, parallelism
+//! within a request from XLA's intra-op thread pool.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::{LatencyRecorder, LatencySummary};
+use crate::runtime::{load_weights, Engine, Tensor};
+use crate::workload::Request;
+
+/// Outcome of one inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub id: u64,
+    /// Predicted class (argmax of the logits).
+    pub class: usize,
+    pub logits: Tensor,
+    /// Time from dequeue to completed execution.
+    pub exec_latency: Duration,
+    /// Time from submission to completion (includes queueing).
+    pub total_latency: Duration,
+    pub worker: usize,
+}
+
+/// Aggregate engine counters.
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+enum Job {
+    Run { req: Request, submitted: Instant },
+    Shutdown,
+}
+
+/// Single-image CNN inference engine over AOT artifacts.
+pub struct InferenceEngine {
+    tx: SyncSender<Job>,
+    results: Receiver<Result<InferenceResult>>,
+    workers: Vec<JoinHandle<()>>,
+    pub stats: Arc<EngineStats>,
+}
+
+impl InferenceEngine {
+    /// Start `workers` executor threads serving `model_name` from
+    /// `artifact_dir`. Blocks until every executor has compiled the
+    /// model and is ready (or reports a startup error).
+    pub fn start(
+        artifact_dir: &Path,
+        model_name: &str,
+        workers: usize,
+        queue_depth: usize,
+    ) -> Result<InferenceEngine> {
+        assert!(workers >= 1);
+        let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let (res_tx, results) = sync_channel::<Result<InferenceResult>>(queue_depth.max(1) * 2);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(workers);
+        let stats = Arc::new(EngineStats::default());
+
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let rx = Arc::clone(&rx);
+            let res_tx = res_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let stats = Arc::clone(&stats);
+            let dir: PathBuf = artifact_dir.to_path_buf();
+            let model = model_name.to_string();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ilpm-exec-{wid}"))
+                    .spawn(move || executor_loop(wid, &dir, &model, rx, res_tx, ready_tx, stats))
+                    .expect("spawn executor"),
+            );
+        }
+        for _ in 0..workers {
+            ready_rx
+                .recv()
+                .context("executor died during startup")?
+                .context("executor startup")?;
+        }
+        Ok(InferenceEngine { tx, results, workers: handles, stats })
+    }
+
+    /// Enqueue a request; blocks when the queue is full (backpressure).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Job::Run { req, submitted: Instant::now() })
+            .map_err(|_| anyhow!("engine shut down"))
+    }
+
+    /// Receive the next completed result (blocking).
+    pub fn recv(&self) -> Result<InferenceResult> {
+        self.results.recv().map_err(|_| anyhow!("engine shut down"))?
+    }
+
+    /// Closed-loop driver: submit `n` requests as fast as the queue
+    /// accepts and wait for all results. Returns the latency summary.
+    pub fn run_closed_loop(
+        &self,
+        gen: &mut crate::workload::RequestGen,
+        n: usize,
+    ) -> Result<(LatencySummary, Vec<InferenceResult>)> {
+        let wall = Instant::now();
+        let mut rec = LatencyRecorder::new();
+        let mut results = Vec::with_capacity(n);
+        let mut submitted = 0;
+        let mut received = 0;
+        while received < n {
+            // interleave submit/recv so the bounded queue never deadlocks
+            if submitted < n {
+                self.submit(gen.next_request())?;
+                submitted += 1;
+            }
+            while received < submitted {
+                match if submitted < n { self.try_recv() } else { Some(self.recv()) } {
+                    Some(r) => {
+                        let r = r?;
+                        rec.record(r.total_latency);
+                        results.push(r);
+                        received += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        Ok((rec.summary(wall.elapsed()), results))
+    }
+
+    fn try_recv(&self) -> Option<Result<InferenceResult>> {
+        match self.results.try_recv() {
+            Ok(r) => Some(r),
+            Err(_) => None,
+        }
+    }
+
+    /// Graceful shutdown: drain workers and join.
+    pub fn shutdown(mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn executor_loop(
+    wid: usize,
+    dir: &Path,
+    model_name: &str,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    res_tx: SyncSender<Result<InferenceResult>>,
+    ready_tx: SyncSender<Result<()>>,
+    stats: Arc<EngineStats>,
+) {
+    // Each executor owns its client: xla types are Rc-based (!Send).
+    // Weights are uploaded to device buffers once at startup; the
+    // request path pays only one image upload + execute.
+    let setup = (|| -> Result<(Engine, crate::runtime::Session)> {
+        let engine = Engine::new(dir)?;
+        let model = engine.load(model_name)?;
+        let art = model.artifact.clone();
+        let wpath = dir.join(
+            art.weights
+                .as_ref()
+                .ok_or_else(|| anyhow!("{model_name} has no weights container"))?,
+        );
+        let weights: Vec<Tensor> =
+            load_weights(&wpath)?.into_iter().map(|(_, t)| t).collect();
+        let session = engine.session(model_name, &weights)?;
+        Ok((engine, session))
+    })();
+    let (_engine, session) = match setup {
+        Ok(x) => {
+            let _ = ready_tx.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        let job = { rx.lock().unwrap().recv() };
+        match job {
+            Ok(Job::Run { req, submitted }) => {
+                let t0 = Instant::now();
+                let out = session.run_image(&req.image).map(|logits| InferenceResult {
+                    id: req.id,
+                    class: logits.argmax(),
+                    logits,
+                    exec_latency: t0.elapsed(),
+                    total_latency: submitted.elapsed(),
+                    worker: wid,
+                });
+                match &out {
+                    Ok(_) => stats.completed.fetch_add(1, Ordering::Relaxed),
+                    Err(_) => stats.errors.fetch_add(1, Ordering::Relaxed),
+                };
+                if res_tx.send(out).is_err() {
+                    return; // receiver gone
+                }
+            }
+            Ok(Job::Shutdown) | Err(_) => return,
+        }
+    }
+}

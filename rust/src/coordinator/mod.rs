@@ -1,0 +1,14 @@
+//! Coordinator — the single-image inference engine (L3's serving side).
+//!
+//! Owns the request loop: a bounded queue feeds a worker pool; each
+//! worker executes the compiled model via the PJRT [`crate::runtime`],
+//! the per-layer algorithm choice coming from the routing table the
+//! auto-tuner fills. Python never runs here.
+
+mod engine;
+mod reference;
+mod router;
+
+pub use engine::{EngineStats, InferenceEngine, InferenceResult};
+pub use reference::naive_conv;
+pub use router::{RoutingTable, Route};

@@ -1,0 +1,86 @@
+//! Rust-side reference convolution — a third, fully independent oracle
+//! (besides ref.py and the `ref` XLA artifact) used by integration
+//! tests and the engine's `--verify` mode.
+
+use crate::runtime::Tensor;
+use crate::workload::ConvShape;
+
+/// Sliding-window convolution by definition. x: [C,H,W], w: [K,C,R,S].
+pub fn naive_conv(shape: &ConvShape, x: &Tensor, w: &Tensor) -> Tensor {
+    let (c, h, wd) = (shape.in_channels, shape.height, shape.width);
+    let (k, r, s) = (shape.out_channels, shape.filter_h, shape.filter_w);
+    let (st, pad) = (shape.stride as isize, shape.padding as isize);
+    assert_eq!(x.shape, vec![c, h, wd], "input shape");
+    assert_eq!(w.shape, vec![k, c, r, s], "filter shape");
+    let (ho, wo) = (shape.out_height(), shape.out_width());
+    let mut out = vec![0f32; k * ho * wo];
+    for ko in 0..k {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = 0f32;
+                for ci in 0..c {
+                    for ry in 0..r {
+                        for sx in 0..s {
+                            let iy = oy as isize * st + ry as isize - pad;
+                            let ix = ox as isize * st + sx as isize - pad;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                continue;
+                            }
+                            let xv = x.data[(ci * h + iy as usize) * wd + ix as usize];
+                            let wv = w.data[((ko * c + ci) * r + ry) * s + sx];
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                out[(ko * ho + oy) * wo + ox] = acc;
+            }
+        }
+    }
+    Tensor::new(vec![k, ho, wo], out).expect("shape consistent")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_filter_passes_input_through() {
+        // 1x1 "identity" conv: K=C=1, 1x1 filter of weight 1
+        let shape = ConvShape {
+            in_channels: 1,
+            out_channels: 1,
+            height: 4,
+            width: 4,
+            filter_h: 1,
+            filter_w: 1,
+            stride: 1,
+            padding: 0,
+        };
+        let x = Tensor::randn(&[1, 4, 4], 3);
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![1.0]).unwrap();
+        let y = naive_conv(&shape, &x, &w);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn averaging_filter_on_constant_image() {
+        let shape = ConvShape::square3x3(1, 1, 5);
+        let x = Tensor::new(vec![1, 5, 5], vec![2.0; 25]).unwrap();
+        let w = Tensor::new(vec![1, 1, 3, 3], vec![1.0; 9]).unwrap();
+        let y = naive_conv(&shape, &x, &w);
+        // centre pixels see all 9 taps: 18.0; corners see 4: 8.0
+        assert_eq!(y.shape, vec![1, 5, 5]);
+        assert!((y.data[2 * 5 + 2] - 18.0).abs() < 1e-6);
+        assert!((y.data[0] - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stride_two_halves_output() {
+        let mut shape = ConvShape::square3x3(2, 3, 8);
+        shape.stride = 2;
+        let x = Tensor::randn(&[2, 8, 8], 5);
+        let w = Tensor::randn(&[3, 2, 3, 3], 6);
+        let y = naive_conv(&shape, &x, &w);
+        assert_eq!(y.shape, vec![3, 4, 4]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Per-layer algorithm routing — the inference-time embodiment of the
+//! paper's §2.3 engineering argument: the network is frozen, so each
+//! layer runs the algorithm the tuner found fastest *for this device*.
+
+use std::collections::HashMap;
+
+use crate::autotune::TuningDatabase;
+use crate::convgen::Algorithm;
+use crate::workload::LayerClass;
+
+/// The algorithm (and artifact) chosen for one layer class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Route {
+    pub layer: LayerClass,
+    pub algorithm: Algorithm,
+    /// Tuned simulated time that justified the choice (ms).
+    pub expected_ms: f64,
+}
+
+/// Device-specific layer→algorithm map.
+#[derive(Debug, Clone, Default)]
+pub struct RoutingTable {
+    routes: HashMap<LayerClass, Route>,
+}
+
+impl RoutingTable {
+    /// All layers on one algorithm (baseline configurations).
+    pub fn uniform(alg: Algorithm) -> RoutingTable {
+        let mut routes = HashMap::new();
+        for layer in LayerClass::ALL {
+            routes.insert(layer, Route { layer, algorithm: alg, expected_ms: f64::NAN });
+        }
+        RoutingTable { routes }
+    }
+
+    /// Build from tuning results: fastest algorithm per layer.
+    pub fn from_tuning(db: &TuningDatabase, device: &str) -> RoutingTable {
+        let mut routes = HashMap::new();
+        for layer in LayerClass::ALL {
+            if let Some(best) = db.best_algorithm(device, layer) {
+                routes.insert(
+                    layer,
+                    Route { layer, algorithm: best.algorithm, expected_ms: best.time_ms },
+                );
+            }
+        }
+        RoutingTable { routes }
+    }
+
+    pub fn route(&self, layer: LayerClass) -> Option<&Route> {
+        self.routes.get(&layer)
+    }
+
+    pub fn set(&mut self, layer: LayerClass, algorithm: Algorithm, expected_ms: f64) {
+        self.routes.insert(layer, Route { layer, algorithm, expected_ms });
+    }
+
+    pub fn len(&self) -> usize {
+        self.routes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+
+    /// Expected single-pass time over the routed layers for a depth
+    /// (paper Table 2: per-class conv counts), in ms.
+    pub fn expected_network_ms(&self, convs_per_class: &[usize; 4]) -> f64 {
+        LayerClass::ALL
+            .iter()
+            .zip(convs_per_class)
+            .filter_map(|(l, n)| self.route(*l).map(|r| r.expected_ms * *n as f64))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::tune;
+    use crate::simulator::DeviceConfig;
+
+    #[test]
+    fn uniform_covers_all_layers() {
+        let t = RoutingTable::uniform(Algorithm::Ilpm);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.route(LayerClass::Conv3x).unwrap().algorithm, Algorithm::Ilpm);
+    }
+
+    #[test]
+    fn from_tuning_picks_ilpm_on_mobile() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut db = TuningDatabase::default();
+        for alg in Algorithm::ALL {
+            db.insert(tune(alg, LayerClass::Conv4x, &dev));
+        }
+        let table = RoutingTable::from_tuning(&db, dev.name);
+        assert_eq!(table.route(LayerClass::Conv4x).unwrap().algorithm, Algorithm::Ilpm);
+    }
+
+    #[test]
+    fn expected_network_time_scales_with_depth() {
+        let mut t = RoutingTable::uniform(Algorithm::Ilpm);
+        for l in LayerClass::ALL {
+            t.set(l, Algorithm::Ilpm, 1.0);
+        }
+        // resnet18: 4 convs per class -> 16 ms
+        assert!((t.expected_network_ms(&[4, 4, 4, 4]) - 16.0).abs() < 1e-9);
+        // resnet152-ish tail heavy
+        assert!((t.expected_network_ms(&[3, 8, 36, 3]) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,28 @@
+//! ILP-M Conv — single-image CNN inference engine + mobile-GPU simulator.
+//!
+//! Reproduction of Ji, *"ILP-M Conv: Optimize Convolution Algorithm for
+//! Single-Image Convolution Neural Network Inference on Mobile GPUs"*
+//! (2019). Three-layer architecture:
+//!
+//! * **L1/L2** (build time, Python): Pallas convolution kernels for the
+//!   five algorithms the paper evaluates + JAX ResNet graphs, AOT-lowered
+//!   to HLO text under `artifacts/`.
+//! * **L3** (this crate): the deployable system — a PJRT [`runtime`], a
+//!   single-image inference [`coordinator`], the mobile-GPU
+//!   microarchitecture [`simulator`] that reproduces the paper's
+//!   evaluation (Figure 5, Tables 3–4), per-algorithm abstract-kernel
+//!   trace generators in [`convgen`], and the [`autotune`] search the
+//!   paper's §5 describes.
+//!
+//! See DESIGN.md for the paper→module map and EXPERIMENTS.md for
+//! reproduced results.
+
+pub mod autotune;
+pub mod cli;
+pub mod convgen;
+pub mod coordinator;
+pub mod metrics;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+pub mod workload;

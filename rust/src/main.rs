@@ -1,0 +1,6 @@
+//! `ilpm` — CLI entry point for the inference engine and the paper harness.
+
+fn main() {
+    let code = ilpm::cli::main();
+    std::process::exit(code);
+}

@@ -1,0 +1,97 @@
+//! Request latency aggregation for the inference engine.
+
+use std::time::Duration;
+
+/// Collects per-request latencies and summarises them.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+/// Percentile summary of recorded latencies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// Requests per second implied by total busy time.
+    pub throughput_rps: f64,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// Summarise; `wall` is the wall-clock spanned by the run (for
+    /// throughput — distinct from the sum of latencies under overlap).
+    pub fn summary(&self, wall: Duration) -> LatencySummary {
+        assert!(!self.samples_us.is_empty(), "no samples");
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)] / 1e3;
+        LatencySummary {
+            count: s.len(),
+            mean_ms: s.iter().sum::<f64>() / s.len() as f64 / 1e3,
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            max_ms: s[s.len() - 1] / 1e3,
+            throughput_rps: s.len() as f64 / wall.as_secs_f64().max(1e-9),
+        }
+    }
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms tput={:.1} req/s",
+            self.count,
+            self.mean_ms,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms,
+            self.throughput_rps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(Duration::from_millis(i));
+        }
+        let s = r.summary(Duration::from_secs(1));
+        assert_eq!(s.count, 100);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms && s.p99_ms <= s.max_ms);
+        assert!((s.throughput_rps - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn empty_summary_panics() {
+        LatencyRecorder::new().summary(Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics — latency/throughput aggregation for the engine, plus the
+//! paper-table formatters the bench harnesses print.
+
+mod latency;
+mod tables;
+
+pub use latency::{LatencyRecorder, LatencySummary};
+pub use tables::{fig5_table, profile_rows, render_fig5, table3, table4, Fig5Row};

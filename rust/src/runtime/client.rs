@@ -1,0 +1,224 @@
+//! PJRT execution engine: compile-once, execute-many over HLO artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `client.compile` → `execute`. Executables are
+//! cached by artifact name; the request path only pays literal
+//! conversion + execution.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::manifest::{Artifact, Manifest};
+use super::tensor::Tensor;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModel {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling the HLO (for EXPERIMENTS.md).
+    pub compile_ms: f64,
+}
+
+impl LoadedModel {
+    /// Execute with f32 tensors; returns the tuple elements as tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.artifact.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.artifact.name,
+                self.artifact.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            let want = &self.artifact.inputs[i].shape;
+            if &t.shape != want {
+                bail!(
+                    "{}: input {} shape {:?} != manifest {:?}",
+                    self.artifact.name,
+                    i,
+                    t.shape,
+                    want
+                );
+            }
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&t.dims_i64())
+                .with_context(|| format!("reshape input {i}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.artifact.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = out.to_tuple().context("decompose result tuple")?;
+        let mut tensors = Vec::with_capacity(elems.len());
+        for (i, lit) in elems.into_iter().enumerate() {
+            let data: Vec<f32> = lit.to_vec().with_context(|| format!("output {i} to_vec"))?;
+            let shape = self
+                .artifact
+                .outputs
+                .get(i)
+                .map(|s| s.shape.clone())
+                .unwrap_or_else(|| vec![data.len()]);
+            tensors.push(Tensor::new(shape, data)?);
+        }
+        Ok(tensors)
+    }
+}
+
+/// A serving session: the model plus its weights pre-uploaded as device
+/// buffers, so the per-request cost is one image upload + execute
+/// (DESIGN.md §Perf: the naive path re-converts ~45 MB of weights to
+/// literals on every call).
+pub struct Session {
+    model: std::sync::Arc<LoadedModel>,
+    client: xla::PjRtClient,
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    image_shape: Vec<usize>,
+}
+
+impl Session {
+    /// Execute on one image; returns the first output tensor.
+    pub fn run_image(&self, image: &Tensor) -> Result<Tensor> {
+        if image.shape != self.image_shape {
+            bail!("image shape {:?} != expected {:?}", image.shape, self.image_shape);
+        }
+        let img_buf = self
+            .client
+            .buffer_from_host_buffer(&image.data, &image.shape, None)
+            .map_err(|e| anyhow!("upload image: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_buffers.len());
+        args.push(&img_buf);
+        args.extend(self.weight_buffers.iter());
+        let result = self
+            .model
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.model.artifact.name))?;
+        let out = result[0][0].to_literal_sync().context("fetch result")?;
+        let elems = out.to_tuple().context("decompose result tuple")?;
+        let first = elems.into_iter().next().ok_or_else(|| anyhow!("empty tuple"))?;
+        let data: Vec<f32> = first.to_vec().context("to_vec")?;
+        let shape = self
+            .model
+            .artifact
+            .outputs
+            .first()
+            .map(|s| s.shape.clone())
+            .unwrap_or_else(|| vec![data.len()]);
+        Tensor::new(shape, data)
+    }
+
+    pub fn model(&self) -> &LoadedModel {
+        &self.model
+    }
+}
+
+/// The engine: one PJRT client + a cache of compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedModel>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedModel>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(m));
+        }
+        let artifact = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        let hlo_path = self.manifest.hlo_path(&artifact);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", name))?;
+        let model = std::sync::Arc::new(LoadedModel {
+            artifact,
+            exe,
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&model));
+        Ok(model)
+    }
+
+    /// Build a serving session: compile (or reuse) the model and upload
+    /// its weights to device buffers once.
+    pub fn session(&self, name: &str, weights: &[Tensor]) -> Result<Session> {
+        let model = self.load(name)?;
+        let expect = model.artifact.inputs.len();
+        if weights.len() + 1 != expect {
+            bail!("{name}: expected {} weights, got {}", expect - 1, weights.len());
+        }
+        let mut weight_buffers = Vec::with_capacity(weights.len());
+        for (i, w) in weights.iter().enumerate() {
+            let want = &model.artifact.inputs[i + 1].shape;
+            if &w.shape != want {
+                bail!("{name}: weight {i} shape {:?} != manifest {:?}", w.shape, want);
+            }
+            weight_buffers.push(
+                self.client
+                    .buffer_from_host_buffer(&w.data, &w.shape, None)
+                    .map_err(|e| anyhow!("upload weight {i}: {e:?}"))?,
+            );
+        }
+        Ok(Session {
+            image_shape: model.artifact.inputs[0].shape.clone(),
+            model,
+            client: self.client.clone(),
+            weight_buffers,
+        })
+    }
+
+    /// Convenience: load the layer artifact for (layer class, algorithm).
+    pub fn load_layer(&self, layer: &str, algorithm: &str) -> Result<std::sync::Arc<LoadedModel>> {
+        let name = self
+            .manifest
+            .layer(layer, algorithm)
+            .ok_or_else(|| anyhow!("no artifact for {layer}/{algorithm}"))?
+            .name
+            .clone();
+        self.load(&name)
+    }
+
+    /// Names of currently cached executables.
+    pub fn cached(&self) -> Vec<String> {
+        self.cache.lock().unwrap().keys().cloned().collect()
+    }
+}

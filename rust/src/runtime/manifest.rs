@@ -1,0 +1,179 @@
+//! Typed view over `artifacts/manifest.json` (written by `aot.py`).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// What a given artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// One conv layer: `(x, w) -> (y,)`.
+    Layer,
+    /// Full model forward: `(x, *params) -> (logits,)`.
+    Model,
+}
+
+/// One tensor signature entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeEntry {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ShapeEntry {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled-graph artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// HLO text file, relative to the manifest's directory.
+    pub path: PathBuf,
+    pub algorithm: String,
+    /// Layer class (`conv2.x`..`conv5.x`) for layer artifacts.
+    pub layer: Option<String>,
+    /// Weights container for model artifacts.
+    pub weights: Option<PathBuf>,
+    /// Numerics fixture (image + expected logits) for model artifacts.
+    pub fixture: Option<PathBuf>,
+    pub inputs: Vec<ShapeEntry>,
+    pub outputs: Vec<ShapeEntry>,
+    /// Useful FLOPs for layer artifacts (from ConvConfig).
+    pub flops: Option<u64>,
+}
+
+/// The artifact index. Entry point for the runtime.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let root = Json::parse(&text).context("parse manifest.json")?;
+        let arr = root.as_arr().ok_or_else(|| anyhow!("manifest root must be an array"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for (i, entry) in arr.iter().enumerate() {
+            artifacts.push(
+                parse_artifact(entry).with_context(|| format!("manifest entry {i}"))?,
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The layer artifact for (layer class, algorithm), if present.
+    pub fn layer(&self, layer: &str, algorithm: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.kind == ArtifactKind::Layer
+                && a.algorithm == algorithm
+                && a.layer.as_deref() == Some(layer)
+        })
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = &Artifact> {
+        self.artifacts.iter().filter(|a| a.kind == ArtifactKind::Model)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.path)
+    }
+}
+
+fn parse_shape_entry(j: &Json) -> Result<ShapeEntry> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .unwrap_or("float32")
+        .to_string();
+    Ok(ShapeEntry { shape, dtype })
+}
+
+fn parse_artifact(j: &Json) -> Result<Artifact> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing name"))?
+        .to_string();
+    let kind = match j.get("kind").and_then(Json::as_str) {
+        Some("layer") => ArtifactKind::Layer,
+        Some("model") => ArtifactKind::Model,
+        other => bail!("unknown kind {:?}", other),
+    };
+    let path = PathBuf::from(
+        j.get("path").and_then(Json::as_str).ok_or_else(|| anyhow!("missing path"))?,
+    );
+    let algorithm = j
+        .get("algorithm")
+        .and_then(Json::as_str)
+        .unwrap_or("unknown")
+        .to_string();
+    let layer = j.get("layer").and_then(Json::as_str).map(str::to_string);
+    let weights = j.get("weights").and_then(Json::as_str).map(PathBuf::from);
+    let fixture = j.get("fixture").and_then(Json::as_str).map(PathBuf::from);
+    let inputs = j
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing inputs"))?
+        .iter()
+        .map(parse_shape_entry)
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = j
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing outputs"))?
+        .iter()
+        .map(parse_shape_entry)
+        .collect::<Result<Vec<_>>>()?;
+    let flops = j.get("meta").and_then(|m| m.get("flops")).and_then(Json::as_u64);
+    Ok(Artifact { name, kind, path, algorithm, layer, weights, fixture, inputs, outputs, flops })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+      {"name": "layer_conv4x_ilpm", "kind": "layer", "path": "layer_conv4x_ilpm.hlo.txt",
+       "layer": "conv4.x", "algorithm": "ilpm",
+       "inputs": [{"shape": [256, 14, 14], "dtype": "float32"},
+                   {"shape": [256, 256, 3, 3], "dtype": "float32"}],
+       "outputs": [{"shape": [256, 14, 14], "dtype": "float32"}],
+       "meta": {"flops": 231211008}}
+    ]"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join(format!("ilpm_m_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.layer("conv4.x", "ilpm").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![256, 14, 14]);
+        assert_eq!(a.flops, Some(231_211_008));
+        assert!(m.layer("conv4.x", "direct").is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

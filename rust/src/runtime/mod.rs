@@ -1,0 +1,17 @@
+//! Runtime — loads AOT-compiled HLO artifacts and executes them via PJRT.
+//!
+//! The compile path (`python/compile/aot.py`) lowers JAX/Pallas graphs to
+//! HLO *text*; this module owns the PJRT CPU client, compiles each
+//! artifact once, caches the loaded executable, and exposes typed
+//! `f32`-tensor execution for the coordinator's hot path. Python never
+//! runs here.
+
+mod client;
+mod manifest;
+mod tensor;
+mod weights;
+
+pub use client::{Engine, LoadedModel, Session};
+pub use manifest::{Artifact, ArtifactKind, Manifest, ShapeEntry};
+pub use tensor::Tensor;
+pub use weights::load_weights;

@@ -1,0 +1,111 @@
+//! A minimal dense f32 tensor used across the engine boundary.
+//!
+//! Row-major, owned storage. This is the type the coordinator moves
+//! through channels and converts to/from PJRT literals at the runtime
+//! boundary.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Filled with a seeded standard-normal sample (synthetic images/weights).
+    pub fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Max absolute difference vs another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    /// Index of the maximum element (argmax over the flattened data).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, v) in self.data.iter().enumerate() {
+            if *v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Shape as i64 (what the xla crate's reshape wants).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = Tensor::randn(&[4, 4], 9);
+        let b = Tensor::randn(&[4, 4], 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 2.5, 2.0]).unwrap();
+        assert!((a.max_abs_diff(&b).unwrap() - 1.0).abs() < 1e-9);
+        let c = Tensor::zeros(&[4]);
+        assert!(a.max_abs_diff(&c).is_err());
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        let t = Tensor::new(vec![4], vec![0.0, 5.0, 5.0, 1.0]).unwrap();
+        assert_eq!(t.argmax(), 1);
+    }
+}

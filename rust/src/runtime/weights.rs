@@ -1,0 +1,123 @@
+//! Reader for the `*.weights.bin` container emitted by `aot.py`.
+//!
+//! Format (little-endian): magic `ILPMW001`, `u32` tensor count, then per
+//! tensor: `u32` name length + name bytes, `u32` ndim, `u64` dims...,
+//! `u64` byte length, raw f32 data.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+use super::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"ILPMW001";
+
+/// Load every tensor in a weights container, in file order.
+pub fn load_weights(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open weights {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("read magic")?;
+    if &magic != MAGIC {
+        bail!("bad weights magic {:?}", magic);
+    }
+    let count = read_u32(&mut f)? as usize;
+    if count > 1_000_000 {
+        bail!("implausible tensor count {count}");
+    }
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 4096 {
+            bail!("implausible name length {name_len} for tensor {i}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name).context("read name")?;
+        let name = String::from_utf8(name).context("name utf8")?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 16 {
+            bail!("implausible rank {ndim} for {name}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u64(&mut f)? as usize);
+        }
+        let nbytes = read_u64(&mut f)? as usize;
+        let expect: usize = shape.iter().product::<usize>() * 4;
+        if nbytes != expect {
+            bail!("{name}: byte length {nbytes} != shape {shape:?} * 4");
+        }
+        let mut raw = vec![0u8; nbytes];
+        f.read_exact(&mut raw).with_context(|| format!("read data of {name}"))?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        out.push((name, Tensor::new(shape, data)?));
+    }
+    Ok(out)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_container(tensors: &[(&str, Vec<usize>, Vec<f32>)]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "ilpm_w_test_{}_{}.bin",
+            std::process::id(),
+            tensors.len()
+        ));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, shape, data) in tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            f.write_all(&(shape.len() as u32).to_le_bytes()).unwrap();
+            for d in shape {
+                f.write_all(&(*d as u64).to_le_bytes()).unwrap();
+            }
+            f.write_all(&((data.len() * 4) as u64).to_le_bytes()).unwrap();
+            for v in data {
+                f.write_all(&v.to_le_bytes()).unwrap();
+            }
+        }
+        path
+    }
+
+    #[test]
+    fn round_trips() {
+        let path = write_container(&[
+            ("a", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            ("b", vec![3], vec![5.0, 6.0, 7.0]),
+        ]);
+        let ws = load_weights(&path).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].0, "a");
+        assert_eq!(ws[0].1.shape, vec![2, 2]);
+        assert_eq!(ws[1].1.data, vec![5.0, 6.0, 7.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join(format!("ilpm_w_bad_{}.bin", std::process::id()));
+        std::fs::write(&path, b"NOTMAGIC\x00\x00\x00\x00").unwrap();
+        assert!(load_weights(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

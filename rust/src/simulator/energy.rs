@@ -1,0 +1,179 @@
+//! Energy model — paper §2.2: "the off-chip memory access consumes tens
+//! of times the energy compared with on-chip cache access and hundreds
+//! of times the energy compared with floating-point arithmetic ...
+//! edge computing platforms are usually battery-powered."
+//!
+//! The paper motivates energy but reports no numbers; this module
+//! quantifies the §2.2 argument with standard per-access energy costs
+//! (Horowitz, ISSCC'14 scaled to LPDDR4-class systems) applied to the
+//! simulator's traffic counters — an *extension* experiment
+//! (EXPERIMENTS.md §Ablations).
+
+use super::device::DeviceConfig;
+use super::report::SimReport;
+
+/// Per-event energy costs, picojoules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModel {
+    /// One f32 FMA on the vector ALU.
+    pub pj_per_flop: f64,
+    /// One byte moved from/to DRAM.
+    pub pj_per_dram_byte: f64,
+    /// One byte served by the L2.
+    pub pj_per_l2_byte: f64,
+    /// One byte through shared memory / LDS.
+    pub pj_per_smem_byte: f64,
+    /// Static/leakage power burned per cycle per CU (pJ).
+    pub pj_static_per_cu_cycle: f64,
+}
+
+impl EnergyModel {
+    /// LPDDR4-class mobile SoC (the paper's battery-powered target).
+    pub fn mobile() -> EnergyModel {
+        EnergyModel {
+            pj_per_flop: 1.0,
+            pj_per_dram_byte: 40.0, // "tens of times" cache, "hundreds" of flops
+            pj_per_l2_byte: 4.0,
+            pj_per_smem_byte: 1.5,
+            pj_static_per_cu_cycle: 20.0,
+        }
+    }
+
+    /// GDDR/HBM dedicated card (mains-powered; DRAM relatively cheaper,
+    /// static power far higher).
+    pub fn dedicated() -> EnergyModel {
+        EnergyModel {
+            pj_per_flop: 1.2,
+            pj_per_dram_byte: 25.0,
+            pj_per_l2_byte: 4.0,
+            pj_per_smem_byte: 1.5,
+            pj_static_per_cu_cycle: 60.0,
+        }
+    }
+
+    pub fn for_device(dev: &DeviceConfig) -> EnergyModel {
+        if dev.dram_bw_bytes_per_s > 100e9 {
+            Self::dedicated()
+        } else {
+            Self::mobile()
+        }
+    }
+}
+
+/// Energy breakdown for one kernel launch, millijoules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyReport {
+    pub kernel: String,
+    pub compute_mj: f64,
+    pub dram_mj: f64,
+    pub l2_mj: f64,
+    pub smem_mj: f64,
+    pub static_mj: f64,
+}
+
+impl EnergyReport {
+    pub fn total_mj(&self) -> f64 {
+        self.compute_mj + self.dram_mj + self.l2_mj + self.smem_mj + self.static_mj
+    }
+
+    /// Fraction of dynamic energy spent on off-chip traffic — the
+    /// paper's §2.2 argument quantified.
+    pub fn dram_fraction(&self) -> f64 {
+        let dynamic = self.compute_mj + self.dram_mj + self.l2_mj + self.smem_mj;
+        if dynamic == 0.0 {
+            0.0
+        } else {
+            self.dram_mj / dynamic
+        }
+    }
+}
+
+/// Estimate energy from a simulation report plus the kernel's useful
+/// FLOPs (the conv's arithmetic; vector_inst would double-count address
+/// math as FMA-class work).
+pub fn energy(
+    report: &SimReport,
+    useful_flops: f64,
+    dev: &DeviceConfig,
+    model: &EnergyModel,
+) -> EnergyReport {
+    let dram_bytes = report.gmem_read_bytes + report.gmem_write_bytes;
+    // pre-L2 traffic that did not go to DRAM was served by L2
+    let l2_bytes = (report.mem_unit_busy_pct / 100.0
+        * report.cycles
+        * dev.coalesce_bytes as f64
+        * (report.wavefronts.min(dev.compute_units as u64 * 4) as f64
+            / dev.compute_units as f64)
+            .max(1.0))
+    .max(dram_bytes)
+        - dram_bytes;
+    // shared traffic approximated from the staged footprint per wg
+    let smem_bytes = report.smem_per_wg as f64 * report.wavefronts as f64;
+    EnergyReport {
+        kernel: report.kernel.clone(),
+        compute_mj: useful_flops * model.pj_per_flop / 1e9,
+        dram_mj: dram_bytes * model.pj_per_dram_byte / 1e9,
+        l2_mj: l2_bytes * model.pj_per_l2_byte / 1e9,
+        smem_mj: smem_bytes * model.pj_per_smem_byte / 1e9,
+        static_mj: report.cycles * dev.compute_units as f64 * model.pj_static_per_cu_cycle
+            / 1e9,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convgen::{generate, Algorithm, TuneParams};
+    use crate::simulator::simulate;
+    use crate::workload::LayerClass;
+
+    fn report_for(alg: Algorithm) -> (SimReport, f64) {
+        let shape = LayerClass::Conv4x.shape();
+        let p = TuneParams::paper_profile(alg);
+        let specs = generate(alg, &shape, &p);
+        let dev = DeviceConfig::mali_g76_mp10();
+        // use the main conv kernel (last spec writes the output)
+        let spec = specs.last().unwrap();
+        (simulate(spec, &dev), shape.flops() as f64)
+    }
+
+    #[test]
+    fn energy_components_positive() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let (r, flops) = report_for(Algorithm::Ilpm);
+        let e = energy(&r, flops, &dev, &EnergyModel::mobile());
+        assert!(e.total_mj() > 0.0);
+        assert!(e.compute_mj > 0.0 && e.dram_mj > 0.0);
+        assert!((0.0..=1.0).contains(&e.dram_fraction()));
+    }
+
+    #[test]
+    fn im2col_burns_more_dram_energy_than_ilpm() {
+        // §2.2 quantified: materialising the unrolled matrix costs
+        // off-chip energy the fused algorithms never spend
+        let dev = DeviceConfig::mali_g76_mp10();
+        let shape = LayerClass::Conv4x.shape();
+        let m = EnergyModel::mobile();
+        let total = |alg: Algorithm| -> f64 {
+            generate(alg, &shape, &TuneParams::paper_profile(alg))
+                .iter()
+                .map(|s| {
+                    energy(&simulate(s, &dev), 0.0, &dev, &m).dram_mj
+                })
+                .sum()
+        };
+        assert!(total(Algorithm::Im2col) > 2.0 * total(Algorithm::Ilpm));
+    }
+
+    #[test]
+    fn device_model_selection() {
+        assert_eq!(
+            EnergyModel::for_device(&DeviceConfig::mali_g76_mp10()),
+            EnergyModel::mobile()
+        );
+        assert_eq!(
+            EnergyModel::for_device(&DeviceConfig::radeon_vii()),
+            EnergyModel::dedicated()
+        );
+    }
+}

@@ -1,0 +1,367 @@
+//! The execution model: occupancy → ILP → per-warp critical path →
+//! device-level bounds.
+//!
+//! The model is the paper's §2 mechanism set, made quantitative:
+//!
+//! 1. **TLP** — how many warps a CU can hold (occupancy limited by warp
+//!    slots, shared memory and the register file). With a single input
+//!    image the grid is small, so whole CUs sit idle and the resident
+//!    warps per CU are few: latency must be hidden *within* a warp.
+//! 2. **ILP** — within a warp, a segment's independent loads can be in
+//!    flight simultaneously, but each pinned load costs registers
+//!    (§2.1); the effective window is
+//!    `min(independent_loads, reg_headroom / regs_per_load)`.
+//! 3. **Barriers** — a barrier flushes the window: loads cannot be
+//!    scheduled across it, and when a segment's producer loads are
+//!    separated from consumers by a barrier (`overlap_compute=false`)
+//!    arithmetic cannot fill the latency either (§3.3's
+//!    CONV_CACHE_FILTER pathology).
+//! 4. **Bandwidth** — DRAM traffic (post-L2, see [`super::l2`]) is a
+//!    device-wide floor; on LPDDR4/DDR4 devices it often wins (§2.2).
+//!
+//! The kernel's simulated time is the max of the latency-critical path,
+//! the issue throughput, the memory-unit throughput, and the DRAM
+//! floor — a bound hierarchy, not a cycle-accurate pipeline; DESIGN.md
+//! discusses the fidelity trade-off.
+
+use super::device::DeviceConfig;
+use super::l2;
+use super::report::SimReport;
+use super::spec::KernelSpec;
+
+/// Cycles a workgroup barrier costs (arrival + release).
+const BARRIER_CYCLES: f64 = 20.0;
+
+/// Fixed per-kernel launch overhead in cycles (driver + dispatch).
+const LAUNCH_CYCLES: f64 = 600.0;
+
+/// Occupancy result.
+#[derive(Debug, Clone, Copy)]
+pub struct Occupancy {
+    pub resident_wgs: u64,
+    pub resident_warps: u64,
+    /// Register headroom per thread after the base allocation, given
+    /// the resident workgroups (used for the ILP cap).
+    pub reg_headroom: f64,
+}
+
+/// Compute how many workgroups a CU can hold (§2.1: registers are the
+/// resource ILP competes with TLP for).
+pub fn occupancy(spec: &KernelSpec, dev: &DeviceConfig) -> Occupancy {
+    let warps_per_wg = spec.wg_size.div_ceil(dev.warp_width as u64).max(1);
+    let by_warps = (dev.max_warps_per_cu as u64 / warps_per_wg).max(1);
+    let by_smem = if spec.smem_per_wg > 0 {
+        (dev.shared_mem_per_cu as u64 / spec.smem_per_wg).max(1)
+    } else {
+        u64::MAX
+    };
+    let base_bytes_per_wg = spec.base_regs_per_thread as u64 * 4 * spec.wg_size;
+    let by_regs = if base_bytes_per_wg > 0 {
+        (dev.regfile_bytes_per_cu as u64 / base_bytes_per_wg).max(1)
+    } else {
+        u64::MAX
+    };
+    // never more residents than the launch provides per CU
+    let grid_limit = spec.workgroups.div_ceil(dev.compute_units as u64).max(1);
+    let resident = by_warps.min(by_smem).min(by_regs).min(grid_limit);
+    // registers actually available per thread at this occupancy
+    let regs_per_thread =
+        dev.regfile_bytes_per_cu as f64 / (resident * spec.wg_size) as f64 / 4.0;
+    let reg_headroom = (regs_per_thread.min(dev.max_regs_per_thread as f64)
+        - spec.base_regs_per_thread as f64)
+        .max(0.0);
+    Occupancy {
+        resident_wgs: resident,
+        resident_warps: resident * warps_per_wg,
+        reg_headroom,
+    }
+}
+
+/// Simulate one kernel launch (or `spec.launches` identical launches).
+pub fn simulate(spec: &KernelSpec, dev: &DeviceConfig) -> SimReport {
+    debug_assert!(
+        spec.byte_conservation_error(dev.warp_width) < 0.35,
+        "{}: segments and streams disagree on read bytes by {:.1}%",
+        spec.name,
+        spec.byte_conservation_error(dev.warp_width) * 100.0
+    );
+    let occ = occupancy(spec, dev);
+    let warps_per_wg = spec.wg_size.div_ceil(dev.warp_width as u64).max(1);
+    // `launches` identical kernels (the 16 Winograd GEMMs) co-schedule:
+    // independent launches pipeline through the queue, so the grid acts
+    // combined; only the fixed dispatch overhead is paid per launch.
+    let eff_workgroups = spec.workgroups * spec.launches;
+    let total_warps = eff_workgroups * warps_per_wg;
+    // a workgroup barrier synchronises all of the group's warps: the
+    // cost grows with participant count — the mechanism that makes
+    // large-workgroup GEMMs a poor fit for Mali's narrow warps (§5.1)
+    let barrier_cost = BARRIER_CYCLES * warps_per_wg as f64;
+
+    // ---- per-warp critical path (latency view) -------------------
+    let mut warp_serial = 0.0; // cycles, one warp, one launch
+    let mut issue_per_warp = 0.0; // issue slots one warp consumes
+    let mut lsu_per_warp = 0.0; // load/store-unit cycles one warp consumes
+    let mut vec_inst_per_warp = 0.0;
+    let mut scal_inst_per_warp = 0.0;
+    let mut smem_accesses = 0.0;
+    let mut smem_conflict_extra = 0.0;
+    let mut gmem_transactions_per_warp = 0.0;
+    let mut ilp_weighted = 0.0;
+    let mut ilp_weight = 0.0;
+
+    for seg in &spec.segments {
+        let reps = seg.repeats as f64;
+        let loads = seg.gmem_loads_per_thread;
+        let stores = seg.gmem_stores_per_thread;
+        let smem_banked = seg.smem_loads_per_thread + seg.smem_stores_per_thread;
+        let smem_bc = seg.smem_broadcast_per_thread;
+        let smem = smem_banked + smem_bc;
+
+        // effective ILP window: algorithmic independence capped by regs
+        let reg_cap = if seg.regs_per_load > 0.0 {
+            (occ.reg_headroom / seg.regs_per_load).max(1.0)
+        } else {
+            f64::INFINITY
+        };
+        let ilp = seg.independent_loads.max(1.0).min(reg_cap);
+        if loads > 0.0 {
+            ilp_weighted += ilp * reps * loads;
+            ilp_weight += reps * loads;
+        }
+
+        // memory latency the warp must expose: L2 hits are much cheaper
+        let lat = dev.l2_latency_cycles
+            + (1.0 - seg.l2_hit_fraction.clamp(0.0, 1.0))
+                * (dev.dram_latency_cycles - dev.l2_latency_cycles);
+        let rounds = if loads > 0.0 { (loads / ilp).ceil() } else { 0.0 };
+        let raw_stall = rounds * lat;
+        // arithmetic available to overlap with the stalls
+        let valu_cycles = seg.valu_per_thread;
+        // bank conflicts only serialise the banked path; broadcast is free
+        let smem_cycles = smem_banked * seg.bank_conflict_way + smem_bc;
+        let overlap = if seg.overlap_compute { valu_cycles + smem_cycles } else { 0.0 };
+        let stall = (raw_stall - overlap).max(0.0);
+        // store latency is fire-and-forget (write buffer) — issue only.
+        // Library kernels (clBLAS) issue at the device's library
+        // efficiency: instruction *counts* are unchanged, each issue
+        // just occupies the pipe longer (poor vector widths/tiling).
+        let lib_factor = if spec.library_kernel {
+            1.0 / dev.gemm_library_efficiency.clamp(0.05, 1.0)
+        } else {
+            1.0
+        };
+        // Pipes: memory instructions ride the LSU (t_lsu below); VALU
+        // issue is its own bound. A *single* warp still serialises its
+        // whole stream (no dual-issue within one warp) — that is the
+        // warp_serial latency view; with dual_issue_mem=false (Mali's
+        // in-order pipeline) memory instructions consume VALU issue
+        // slots as well.
+        let mem_issue = if dev.dual_issue_mem { 0.0 } else { loads + stores };
+        let issue_cycles = (valu_cycles + smem_cycles) * lib_factor + mem_issue;
+        let serial_cycles =
+            (valu_cycles + smem_cycles) * lib_factor + loads + stores;
+        let barrier = if seg.barrier_at_end { barrier_cost } else { 0.0 };
+
+        warp_serial += reps * (serial_cycles + stall + barrier);
+        issue_per_warp += reps * issue_cycles;
+        // every memory instruction crosses the CU's single load/store
+        // unit; banked shared ops pay the device's staging penalty
+        // (full-rate LDS on AMD, L2-backed local memory on Mali), while
+        // broadcast reads are a single fetch on any device
+        lsu_per_warp +=
+            reps * (loads + stores + smem_banked * dev.smem_lsu_penalty + smem_bc);
+        vec_inst_per_warp += reps * (valu_cycles + loads + stores + smem);
+        scal_inst_per_warp += reps * seg.salu_per_warp;
+        smem_accesses += reps * smem * spec.wg_size as f64 / dev.warp_width as f64;
+        smem_conflict_extra += reps
+            * smem_banked
+            * (seg.bank_conflict_way - 1.0)
+            * spec.wg_size as f64
+            / dev.warp_width as f64;
+
+        // memory-unit transactions (pre-L2): coalesced warps compress;
+        // same-address broadcasts collapse to a single transaction
+        let lanes_bytes = dev.warp_width as f64 * seg.gmem_bytes_per_lane;
+        let tx_per_inst = if seg.gmem_same_address {
+            1.0
+        } else if seg.coalesced {
+            (lanes_bytes / dev.coalesce_bytes as f64).ceil().max(1.0)
+        } else {
+            dev.warp_width as f64
+        };
+        gmem_transactions_per_warp += reps * (loads + stores) * tx_per_inst;
+    }
+
+    // ---- device-level bounds --------------------------------------
+    let waves =
+        (eff_workgroups as f64 / (dev.compute_units as f64 * occ.resident_wgs as f64)).ceil();
+    // CUs the grid can actually occupy (a 4-workgroup launch on a
+    // 60-CU part leaves 56 idle — the paper's single-image pathology)
+    let cus_used = (eff_workgroups.min(dev.compute_units as u64)).max(1) as f64;
+    // (a) latency bound: each wave's critical path is one warp's chain
+    let t_latency = waves * warp_serial;
+    // (b) issue bound: every warp's instructions through the occupied
+    //     CUs' issue slots
+    let t_issue =
+        total_warps as f64 * issue_per_warp / (dev.issue_width() as f64 * cus_used);
+    // (c) memory-unit bound: per-CU transaction pipe, 1 tx/cycle
+    let total_tx = gmem_transactions_per_warp * total_warps as f64;
+    let t_memunit = total_tx / cus_used;
+    // (c') load/store-unit bound: one LSU per CU serves every vector
+    //     memory instruction (the constraint that sinks smem-staging
+    //     kernels on Mali, whose "local memory" is L2-backed)
+    let t_lsu = total_warps as f64 * lsu_per_warp / cus_used;
+    // (c'') L2 bandwidth: pre-DRAM traffic queues at the L2 even when
+    //     it hits — duplicated filter fetches are not free
+    let t_l2bw = total_tx * dev.coalesce_bytes as f64 / dev.l2_bw_bytes_per_cycle;
+    // (d) DRAM bound (post-L2 read traffic + write traffic; streams
+    //     describe one launch, so scale by the launch count)
+    let read_bytes =
+        l2::total_dram_bytes(&spec.read_streams, dev.l2_bytes) * spec.launches as f64;
+    let write_bytes = (spec.write_bytes * spec.launches) as f64;
+    let t_dram = (read_bytes + write_bytes) / dev.dram_bytes_per_cycle();
+
+    let bounds = [
+        ("latency", t_latency),
+        ("issue", t_issue),
+        ("memunit", t_memunit),
+        ("lsu", t_lsu),
+        ("l2bw", t_l2bw),
+    ];
+    let (mut bound, core_cycles) = bounds
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .copied()
+        .unwrap();
+    let mut cycles = core_cycles + LAUNCH_CYCLES * spec.launches as f64;
+    if t_dram > cycles {
+        cycles = t_dram;
+        bound = "dram";
+    }
+
+    let time_ms = cycles / dev.clock_hz * 1e3;
+
+    // ---- counters ---------------------------------------------------
+    let vector_inst = vec_inst_per_warp * total_warps as f64;
+    let scalar_inst = scal_inst_per_warp * total_warps as f64;
+    let issue_capacity = cycles * dev.issue_width() as f64 * cus_used;
+    let valu_busy_pct = (issue_per_warp * total_warps as f64 / issue_capacity * 100.0).min(100.0);
+    let mem_busy_pct = (total_tx / (cycles * cus_used) * 100.0).min(100.0);
+    let total_smem = smem_accesses * total_warps as f64;
+    let bank_conflict_pct = if total_smem > 0.0 {
+        (smem_conflict_extra * total_warps as f64) / total_smem * 100.0
+    } else {
+        0.0
+    };
+
+    SimReport {
+        kernel: spec.name.clone(),
+        device: dev.name.to_string(),
+        cycles,
+        time_ms,
+        bound,
+        wavefronts: spec.wavefronts(dev.warp_width),
+        resident_wgs_per_cu: occ.resident_wgs,
+        resident_warps_per_cu: occ.resident_warps,
+        effective_ilp: if ilp_weight > 0.0 { ilp_weighted / ilp_weight } else { 1.0 },
+        vector_inst,
+        scalar_inst,
+        valu_busy_pct,
+        gmem_read_bytes: read_bytes,
+        gmem_write_bytes: write_bytes,
+        mem_unit_busy_pct: mem_busy_pct,
+        smem_per_wg: spec.smem_per_wg,
+        bank_conflict_pct,
+        barriers_per_wg: spec.barriers_per_wg(),
+    }
+}
+
+/// Simulate a sequence of kernels (one algorithm's full pipeline).
+pub fn simulate_pipeline(specs: &[KernelSpec], dev: &DeviceConfig) -> Vec<SimReport> {
+    specs.iter().map(|s| simulate(s, dev)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::spec::{Segment, Stream};
+
+    fn spec_with(loads: f64, indep: f64, overlap: bool, valu: f64) -> KernelSpec {
+        let mut seg = Segment::new("body", 64);
+        seg.gmem_loads_per_thread = loads;
+        seg.independent_loads = indep;
+        seg.overlap_compute = overlap;
+        seg.valu_per_thread = valu;
+        let bytes = (64.0 * loads * 64.0 * 4.0 * 16.0) as u64;
+        KernelSpec {
+            name: "t".into(),
+            workgroups: 16,
+            wg_size: 64,
+            base_regs_per_thread: 32,
+            smem_per_wg: 2048,
+            segments: vec![seg],
+            read_streams: vec![Stream {
+                label: "d",
+                unique_bytes: bytes,
+                touches: 1.0,
+                reuse_distance_bytes: 0,
+            }],
+            write_bytes: 4096,
+            launches: 1,
+            library_kernel: false,
+        }
+    }
+
+    #[test]
+    fn more_ilp_is_never_slower() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let lo = simulate(&spec_with(8.0, 1.0, true, 32.0), &dev);
+        let hi = simulate(&spec_with(8.0, 8.0, true, 32.0), &dev);
+        assert!(hi.cycles <= lo.cycles, "ILP 8 {} vs ILP 1 {}", hi.cycles, lo.cycles);
+    }
+
+    #[test]
+    fn overlap_helps_latency_bound_kernels() {
+        // single workgroup: TLP cannot hide anything, only overlap can
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut no_spec = spec_with(4.0, 2.0, false, 200.0);
+        no_spec.workgroups = 1;
+        no_spec.read_streams[0].unique_bytes /= 16;
+        let mut yes_spec = spec_with(4.0, 2.0, true, 200.0);
+        yes_spec.workgroups = 1;
+        yes_spec.read_streams[0].unique_bytes /= 16;
+        let no = simulate(&no_spec, &dev);
+        let yes = simulate(&yes_spec, &dev);
+        assert!(yes.cycles < no.cycles);
+    }
+
+    #[test]
+    fn more_bandwidth_never_slower() {
+        // heavy per-thread load counts put the kernel near the DRAM roof
+        let spec = spec_with(256.0, 4.0, true, 8.0);
+        let mali = DeviceConfig::mali_g76_mp10();
+        let mut fat = mali.clone();
+        fat.dram_bw_bytes_per_s *= 10.0;
+        let slow = simulate(&spec, &mali);
+        let fast = simulate(&spec, &fat);
+        assert!(fast.time_ms <= slow.time_ms);
+    }
+
+    #[test]
+    fn occupancy_respects_smem() {
+        let dev = DeviceConfig::vega8(); // 64 KiB LDS
+        let mut spec = spec_with(1.0, 1.0, true, 1.0);
+        spec.smem_per_wg = 32 * 1024;
+        assert_eq!(occupancy(&spec, &dev).resident_wgs, 2);
+        spec.smem_per_wg = 64 * 1024;
+        assert_eq!(occupancy(&spec, &dev).resident_wgs, 1);
+    }
+
+    #[test]
+    fn busy_percentages_bounded() {
+        let dev = DeviceConfig::vega8();
+        let r = simulate(&spec_with(4.0, 2.0, true, 64.0), &dev);
+        assert!(r.valu_busy_pct >= 0.0 && r.valu_busy_pct <= 100.0);
+        assert!(r.mem_unit_busy_pct >= 0.0 && r.mem_unit_busy_pct <= 100.0);
+    }
+}

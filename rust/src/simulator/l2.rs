@@ -1,0 +1,72 @@
+//! L2 reuse model — turns gross (pre-cache) stream touches into DRAM
+//! traffic.
+//!
+//! The paper's Table 3 reports *post-L2* global memory traffic ("with
+//! the help of L2 cache, direct convolution has similar global memory
+//! access numbers with ILP-M"). We model each read stream with its
+//! unique footprint, touch count, and reuse distance: a repeat touch
+//! hits in L2 iff the working set traversed between touches fits.
+
+use super::spec::Stream;
+
+/// Fraction of repeat touches that hit in an L2 of `l2_bytes`.
+pub fn hit_fraction(stream: &Stream, l2_bytes: usize) -> f64 {
+    if stream.touches <= 1.0 {
+        return 0.0; // nothing to reuse
+    }
+    if stream.reuse_distance_bytes == 0 {
+        return 1.0; // immediate reuse (same workgroup, back to back)
+    }
+    let ratio = l2_bytes as f64 / stream.reuse_distance_bytes as f64;
+    ratio.clamp(0.0, 1.0)
+}
+
+/// DRAM bytes a stream actually moves, after L2 filtering.
+pub fn dram_bytes(stream: &Stream, l2_bytes: usize) -> f64 {
+    let unique = stream.unique_bytes as f64;
+    if stream.touches <= 1.0 {
+        return unique * stream.touches.max(0.0).min(1.0);
+    }
+    let h = hit_fraction(stream, l2_bytes);
+    unique + (stream.touches - 1.0) * unique * (1.0 - h)
+}
+
+/// Total DRAM read bytes over a set of streams.
+pub fn total_dram_bytes(streams: &[Stream], l2_bytes: usize) -> f64 {
+    streams.iter().map(|s| dram_bytes(s, l2_bytes)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(unique: u64, touches: f64, reuse: u64) -> Stream {
+        Stream { label: "t", unique_bytes: unique, touches, reuse_distance_bytes: reuse }
+    }
+
+    #[test]
+    fn single_touch_streams_once() {
+        assert_eq!(dram_bytes(&stream(1000, 1.0, 0), 1 << 20), 1000.0);
+    }
+
+    #[test]
+    fn tight_reuse_fully_cached() {
+        // 10 touches, reuse distance well under L2: DRAM sees it once
+        assert_eq!(dram_bytes(&stream(1000, 10.0, 512), 1 << 20), 1000.0);
+    }
+
+    #[test]
+    fn distant_reuse_misses() {
+        // reuse distance 4x the L2: 75% of repeat touches miss
+        let b = dram_bytes(&stream(1000, 5.0, 4 << 20), 1 << 20);
+        assert!((b - (1000.0 + 4.0 * 1000.0 * 0.75)).abs() < 1e-6, "{b}");
+    }
+
+    #[test]
+    fn monotone_in_l2_size() {
+        let s = stream(1_000_000, 8.0, 2 << 20);
+        let small = dram_bytes(&s, 1 << 20);
+        let big = dram_bytes(&s, 8 << 20);
+        assert!(big <= small);
+    }
+}

@@ -1,0 +1,23 @@
+//! Mobile-GPU microarchitecture simulator — the performance substrate.
+//!
+//! The paper's evaluation ran on three physical GPUs with OpenCL and
+//! codeXL; none of that is available here (repro band 0/5), so this
+//! module reproduces the *mechanisms* the paper measures: thread-level
+//! parallelism from occupancy, instruction-level parallelism bounded by
+//! registers and barriers, shared-memory bank behaviour, L2 reuse, and
+//! DRAM bandwidth. `convgen` lowers each convolution algorithm into the
+//! abstract-kernel IR ([`spec::KernelSpec`]) and [`engine::simulate`]
+//! produces the counters of Tables 3–4 and the times of Figure 5.
+
+pub mod device;
+pub mod energy;
+pub mod engine;
+pub mod l2;
+pub mod report;
+pub mod spec;
+
+pub use device::DeviceConfig;
+pub use energy::{energy, EnergyModel, EnergyReport};
+pub use engine::{occupancy, simulate, simulate_pipeline, Occupancy};
+pub use report::{total_time_ms, SimReport};
+pub use spec::{KernelSpec, Segment, Space, Stream};

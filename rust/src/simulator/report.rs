@@ -1,0 +1,131 @@
+//! Simulation output: the profile counters of the paper's Tables 3–4
+//! plus timing.
+
+/// Everything the simulator measures for one kernel launch (or a row of
+/// identical launches, e.g. the 16 Winograd GEMMs).
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub kernel: String,
+    pub device: String,
+
+    // ---- timing --------------------------------------------------
+    /// Simulated execution cycles (whole kernel, all launches).
+    pub cycles: f64,
+    /// Simulated wall time, milliseconds.
+    pub time_ms: f64,
+    /// Which bound won: "latency", "issue", "dram", "memunit".
+    pub bound: &'static str,
+
+    // ---- occupancy ------------------------------------------------
+    /// Wavefronts launched (Table 4 col 1).
+    pub wavefronts: u64,
+    /// Resident workgroups per CU the occupancy calc admitted.
+    pub resident_wgs_per_cu: u64,
+    /// Resident warps per CU (the TLP available for latency hiding).
+    pub resident_warps_per_cu: u64,
+    /// Effective ILP (independent in-flight loads) averaged over segments.
+    pub effective_ilp: f64,
+
+    // ---- instructions (Table 4) -----------------------------------
+    /// Total vector instructions (VALU + vector memory), all wavefronts.
+    pub vector_inst: f64,
+    /// Total scalar instructions.
+    pub scalar_inst: f64,
+    /// Vector-ALU busy percentage.
+    pub valu_busy_pct: f64,
+
+    // ---- memory (Table 3) -----------------------------------------
+    /// DRAM read traffic, bytes (post-L2).
+    pub gmem_read_bytes: f64,
+    /// DRAM write traffic, bytes.
+    pub gmem_write_bytes: f64,
+    /// Memory-unit busy percentage (pre-L2 transaction pressure).
+    pub mem_unit_busy_pct: f64,
+    /// Shared memory per workgroup, bytes.
+    pub smem_per_wg: u64,
+    /// Shared-memory bank conflict rate, percent of accesses serialised.
+    pub bank_conflict_pct: f64,
+    /// Barriers executed per workgroup.
+    pub barriers_per_wg: u64,
+}
+
+impl SimReport {
+    pub fn gmem_read_mb(&self) -> f64 {
+        self.gmem_read_bytes / 1e6
+    }
+
+    pub fn gmem_write_mb(&self) -> f64 {
+        self.gmem_write_bytes / 1e6
+    }
+
+    /// Table-3-shaped row.
+    pub fn memory_row(&self) -> String {
+        format!(
+            "{:<28} {:>8.2} {:>8.2} {:>12.2} {:>10} {:>10.2}",
+            self.kernel,
+            self.gmem_read_mb(),
+            self.gmem_write_mb(),
+            self.mem_unit_busy_pct,
+            self.smem_per_wg,
+            self.bank_conflict_pct
+        )
+    }
+
+    /// Table-4-shaped row.
+    pub fn arith_row(&self) -> String {
+        format!(
+            "{:<28} {:>10} {:>14.2} {:>14.2} {:>10.2}",
+            self.kernel,
+            self.wavefronts,
+            self.vector_inst / 1e4,
+            self.scalar_inst / 1e4,
+            self.valu_busy_pct
+        )
+    }
+}
+
+/// Sum a pipeline of kernels into an end-to-end time (Fig 5 bars are
+/// per-layer sums over the algorithm's kernel sequence).
+pub fn total_time_ms(reports: &[SimReport]) -> f64 {
+    reports.iter().map(|r| r.time_ms).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(t: f64) -> SimReport {
+        SimReport {
+            kernel: "k".into(),
+            device: "d".into(),
+            cycles: t * 1e6,
+            time_ms: t,
+            bound: "latency",
+            wavefronts: 1,
+            resident_wgs_per_cu: 1,
+            resident_warps_per_cu: 1,
+            effective_ilp: 1.0,
+            vector_inst: 0.0,
+            scalar_inst: 0.0,
+            valu_busy_pct: 0.0,
+            gmem_read_bytes: 0.0,
+            gmem_write_bytes: 0.0,
+            mem_unit_busy_pct: 0.0,
+            smem_per_wg: 0,
+            bank_conflict_pct: 0.0,
+            barriers_per_wg: 0,
+        }
+    }
+
+    #[test]
+    fn pipeline_time_sums() {
+        assert!((total_time_ms(&[dummy(1.5), dummy(2.5)]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_format() {
+        let r = dummy(1.0);
+        assert!(r.memory_row().contains('k'));
+        assert!(r.arith_row().contains('k'));
+    }
+}

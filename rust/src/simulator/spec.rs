@@ -1,0 +1,249 @@
+//! Abstract-kernel IR — what `convgen` emits and the simulator executes.
+//!
+//! A [`KernelSpec`] describes one GPU kernel launch the way a profiler
+//! sees it: grid dimensions, per-workgroup resources, and a sequence of
+//! barrier-delimited [`Segment`]s giving per-thread instruction counts
+//! and the *independence structure* of the memory instructions — the
+//! property the paper's whole argument turns on (§2.1). Loop counts are
+//! kept symbolic (`repeats`), so a spec is O(1) memory regardless of
+//! layer size.
+
+/// Where a memory instruction stream points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Space {
+    Global,
+    Shared,
+}
+
+/// One barrier-delimited stretch of the per-workgroup instruction stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    /// Human-readable role, e.g. "stage image tile", "tap-loop".
+    pub label: &'static str,
+    /// Times this segment executes per workgroup (symbolic loop count).
+    pub repeats: u64,
+    /// Vector-ALU instructions per thread per execution.
+    pub valu_per_thread: f64,
+    /// Scalar-unit instructions per *warp* per execution (address math,
+    /// loop bookkeeping — AMD SALU / Mali control).
+    pub salu_per_warp: f64,
+    /// Global-memory load instructions per thread per execution.
+    pub gmem_loads_per_thread: f64,
+    /// Global-memory store instructions per thread per execution.
+    pub gmem_stores_per_thread: f64,
+    /// Average bytes per lane per global access (4 = full f32 lane).
+    pub gmem_bytes_per_lane: f64,
+    /// Whether lanes of a warp access consecutive addresses.
+    pub coalesced: bool,
+    /// All lanes read the *same* global address (a broadcast tap
+    /// fetch): the memory system serves it as a single transaction.
+    pub gmem_same_address: bool,
+    /// Shared-memory load instructions per thread per execution where
+    /// lanes read *different* addresses (banked path; pays the device's
+    /// staging penalty on L2-backed local memory).
+    pub smem_loads_per_thread: f64,
+    /// Shared-memory store instructions per thread per execution.
+    pub smem_stores_per_thread: f64,
+    /// Shared-memory reads where every lane reads the *same* address —
+    /// served by the broadcast/uniform path at one fetch per op on any
+    /// device, conflict-free (paper §5.2.1: ILP-M's tile reads).
+    pub smem_broadcast_per_thread: f64,
+    /// Average bank-serialisation factor for the shared accesses
+    /// (1.0 = conflict-free or broadcast; 2.0 = 2-way conflict...).
+    pub bank_conflict_way: f64,
+    /// How many of the segment's global loads are mutually independent
+    /// (schedulable before the first use blocks). This is the
+    /// *algorithmic* ILP; the engine caps it by register pressure.
+    pub independent_loads: f64,
+    /// Registers each in-flight load pins (paper §2.1: pipelined loads
+    /// need distinct destination registers).
+    pub regs_per_load: f64,
+    /// Can the compiler overlap this segment's loads with its arithmetic
+    /// (false when a barrier separates producer loads from consumers —
+    /// the CONV_CACHE_FILTER pathology of §3.3).
+    pub overlap_compute: bool,
+    /// Fraction of this segment's global loads that hit in L2 (set by
+    /// the generator from the stream's reuse structure; e.g. duplicated
+    /// filter fetches after the first workgroup are L2 hits).
+    pub l2_hit_fraction: f64,
+    /// Segment ends with a workgroup memory barrier.
+    pub barrier_at_end: bool,
+}
+
+impl Segment {
+    /// A quiet default: zero everything, fully coalesced, overlapping.
+    pub fn new(label: &'static str, repeats: u64) -> Segment {
+        Segment {
+            label,
+            repeats,
+            valu_per_thread: 0.0,
+            salu_per_warp: 0.0,
+            gmem_loads_per_thread: 0.0,
+            gmem_stores_per_thread: 0.0,
+            gmem_bytes_per_lane: 4.0,
+            coalesced: true,
+            gmem_same_address: false,
+            smem_loads_per_thread: 0.0,
+            smem_stores_per_thread: 0.0,
+            smem_broadcast_per_thread: 0.0,
+            bank_conflict_way: 1.0,
+            independent_loads: 1.0,
+            regs_per_load: 1.0,
+            overlap_compute: true,
+            l2_hit_fraction: 0.0,
+            barrier_at_end: false,
+        }
+    }
+
+    /// Total memory instructions per thread per execution.
+    pub fn mem_insts_per_thread(&self) -> f64 {
+        self.gmem_loads_per_thread
+            + self.gmem_stores_per_thread
+            + self.smem_loads_per_thread
+            + self.smem_stores_per_thread
+            + self.smem_broadcast_per_thread
+    }
+}
+
+/// A global-memory data stream with reuse structure, for the L2 model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stream {
+    /// e.g. "filters", "input", "unrolled"
+    pub label: &'static str,
+    /// Distinct bytes in the stream.
+    pub unique_bytes: u64,
+    /// Total times the stream is read (1 = streamed once).
+    pub touches: f64,
+    /// Working-set span between successive touches of the same datum;
+    /// reuse hits in L2 only if this fits (bytes).
+    pub reuse_distance_bytes: u64,
+}
+
+/// One kernel launch, as the simulator and the profiler tables see it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelSpec {
+    /// Profile-row name, e.g. `ILP-M_conv`, `im2col_gemm`.
+    pub name: String,
+    /// Workgroups launched.
+    pub workgroups: u64,
+    /// Threads per workgroup.
+    pub wg_size: u64,
+    /// Architectural registers per thread the kernel's base body needs
+    /// (before ILP pipelining adds more).
+    pub base_regs_per_thread: u32,
+    /// Shared memory bytes per workgroup.
+    pub smem_per_wg: u64,
+    /// Barrier-delimited segments, executed in order per workgroup.
+    pub segments: Vec<Segment>,
+    /// Global read streams (for DRAM traffic via the L2 reuse model).
+    pub read_streams: Vec<Stream>,
+    /// Unique bytes written to global memory.
+    pub write_bytes: u64,
+    /// If >1, this row stands for `launches` identical launches (the
+    /// paper's "winograd_gemm (16 times)" row).
+    pub launches: u64,
+    /// True for kernels that come from a vendor library (clBLAS GEMM)
+    /// rather than hand-written OpenCL: they run at the device's
+    /// [`library efficiency`](crate::simulator::DeviceConfig::gemm_library_efficiency).
+    pub library_kernel: bool,
+}
+
+impl KernelSpec {
+    pub fn total_threads(&self) -> u64 {
+        self.workgroups * self.wg_size
+    }
+
+    /// Wavefront count on a device with the given warp width.
+    pub fn wavefronts(&self, warp_width: usize) -> u64 {
+        self.workgroups * self.wg_size.div_ceil(warp_width as u64) * self.launches
+    }
+
+    /// Total barriers executed per workgroup over its lifetime.
+    pub fn barriers_per_wg(&self) -> u64 {
+        self.segments.iter().map(|s| if s.barrier_at_end { s.repeats } else { 0 }).sum()
+    }
+
+    /// Pre-L2 global read bytes implied by the read streams.
+    pub fn gross_read_bytes(&self) -> f64 {
+        self.read_streams
+            .iter()
+            .map(|s| s.unique_bytes as f64 * s.touches)
+            .sum::<f64>()
+            * self.launches as f64
+    }
+
+    /// Sanity check used by tests and debug assertions: the segments'
+    /// global-load bytes must equal the streams' gross bytes (within a
+    /// tolerance — segments count instructions, streams count bytes).
+    pub fn byte_conservation_error(&self, warp_width: usize) -> f64 {
+        let _ = warp_width;
+        let seg_bytes: f64 = self
+            .segments
+            .iter()
+            .map(|s| {
+                s.repeats as f64
+                    * s.gmem_loads_per_thread
+                    * self.wg_size as f64
+                    * s.gmem_bytes_per_lane
+            })
+            .sum::<f64>()
+            * self.workgroups as f64
+            * self.launches as f64;
+        let stream_bytes = self.gross_read_bytes();
+        if stream_bytes == 0.0 {
+            return seg_bytes;
+        }
+        (seg_bytes - stream_bytes).abs() / stream_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_spec() -> KernelSpec {
+        let mut load = Segment::new("load", 4);
+        load.gmem_loads_per_thread = 2.0;
+        load.barrier_at_end = true;
+        let mut compute = Segment::new("fma", 4);
+        compute.valu_per_thread = 16.0;
+        KernelSpec {
+            name: "toy".into(),
+            workgroups: 8,
+            wg_size: 64,
+            base_regs_per_thread: 16,
+            smem_per_wg: 1024,
+            segments: vec![load, compute],
+            read_streams: vec![Stream {
+                label: "data",
+                unique_bytes: 8 * 64 * 2 * 4 * 4,
+                touches: 1.0,
+                reuse_distance_bytes: 0,
+            }],
+            write_bytes: 1024,
+            launches: 1,
+            library_kernel: false,
+        }
+    }
+
+    #[test]
+    fn wavefront_math() {
+        let s = toy_spec();
+        assert_eq!(s.wavefronts(64), 8);
+        assert_eq!(s.wavefronts(8), 64);
+        // wg_size not a multiple of warp: rounds up
+        let mut odd = toy_spec();
+        odd.wg_size = 65;
+        assert_eq!(odd.wavefronts(64), 16);
+    }
+
+    #[test]
+    fn barrier_counting() {
+        assert_eq!(toy_spec().barriers_per_wg(), 4);
+    }
+
+    #[test]
+    fn bytes_conserved_in_toy() {
+        assert!(toy_spec().byte_conservation_error(64) < 1e-9);
+    }
+}

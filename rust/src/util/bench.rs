@@ -1,0 +1,164 @@
+//! Benchmark timing harness (no criterion offline).
+//!
+//! `Bench::run` warms up, then takes timed samples until a time budget
+//! or sample cap is hit, and reports mean/median/p95/stddev. The bench
+//! binaries in `rust/benches/` use it with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over timed samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            samples: n,
+            mean_ns: mean,
+            median_ns: ns[n / 2],
+            p95_ns: ns[((n as f64 * 0.95) as usize).min(n - 1)],
+            stddev_ns: var.sqrt(),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn human(&self) -> String {
+        format!(
+            "mean {} median {} p95 {} (±{}, n={})",
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.stddev_ns),
+            self.samples
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// A named benchmark runner with warmup and budgets.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub time_budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            min_samples: 3,
+            max_samples: 50,
+            time_budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup_iters: 1,
+            min_samples: 3,
+            max_samples: 15,
+            time_budget: Duration::from_secs(2),
+        }
+    }
+
+    /// For expensive workloads (seconds per iteration): one sample
+    /// unless the budget allows more.
+    pub fn expensive() -> Self {
+        Bench {
+            warmup_iters: 0,
+            min_samples: 1,
+            max_samples: 3,
+            time_budget: Duration::from_secs(8),
+        }
+    }
+
+    /// Time `f` repeatedly; returns stats. `f`'s return is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.max_samples);
+        let start = Instant::now();
+        while samples.len() < self.max_samples
+            && (samples.len() < self.min_samples.max(1)
+                || start.elapsed() < self.time_budget)
+        {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        Stats::from_samples(samples)
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.max_ns);
+        assert!(s.p95_ns <= s.max_ns);
+        assert_eq!(s.samples, 5);
+    }
+
+    #[test]
+    fn bench_runs_at_least_three_samples() {
+        let b = Bench {
+            warmup_iters: 0,
+            min_samples: 3,
+            max_samples: 10,
+            time_budget: Duration::from_millis(1),
+        };
+        let s = b.run(|| std::thread::sleep(Duration::from_micros(50)));
+        assert!(s.samples >= 3);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert!(fmt_ns(1500.0).ends_with("µs"));
+        assert!(fmt_ns(2.5e6).ends_with("ms"));
+        assert!(fmt_ns(3.0e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates the offline build denies us crates for:
+//! JSON parsing, a seedable PRNG, a thread pool, a property-testing
+//! mini-framework, and a benchmark timer.
+
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod prop;

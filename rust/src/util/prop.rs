@@ -1,0 +1,185 @@
+//! Property-testing mini-framework (no proptest offline).
+//!
+//! `forall(cases, seed, gen, check)` draws `cases` random inputs from
+//! `gen`, runs `check`, and on failure performs greedy shrinking via the
+//! input's `Shrink` implementation before reporting the minimal
+//! counterexample. Deterministic for a fixed seed.
+
+use super::prng::Rng;
+
+/// Types that can propose strictly-smaller variants of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate smaller values; empty when fully shrunk.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1].into_iter().filter(|v| v < self).collect()
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1].into_iter().filter(|v| v < self).collect()
+        }
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b));
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone(), self.2.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b, self.2.clone()));
+        }
+        for c in self.2.shrink() {
+            out.push((self.0.clone(), self.1.clone(), c));
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // drop halves, drop one element, shrink one element
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        for i in 0..self.len().min(8) {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..self.len().min(8) {
+            for s in self[i].shrink().into_iter().take(3) {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Outcome of a property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `check` on `cases` inputs drawn by `gen`; panic with the shrunk
+/// counterexample on failure.
+pub fn forall<T, G, F>(cases: usize, seed: u64, gen: G, check: F)
+where
+    T: Shrink,
+    G: Fn(&mut Rng) -> T,
+    F: Fn(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            let (min, min_msg, steps) = shrink_loop(input, msg, &check);
+            panic!(
+                "property failed (case {case}/{cases}, shrunk {steps} steps)\n\
+                 counterexample: {min:?}\nfailure: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, F: Fn(&T) -> PropResult>(
+    mut cur: T,
+    mut msg: String,
+    check: &F,
+) -> (T, String, usize) {
+    let mut steps = 0;
+    'outer: loop {
+        if steps > 500 {
+            break;
+        }
+        for cand in cur.shrink() {
+            if let Err(m) = check(&cand) {
+                cur = cand;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, msg, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(200, 7, |r| r.below(100) as usize, |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample: 10")]
+    fn shrinks_to_minimal() {
+        // fails for x >= 10; minimal counterexample is exactly 10
+        forall(500, 7, |r| r.below(1000) as usize, |&x| {
+            if x < 10 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn tuple_shrink_reduces_both() {
+        let t = (8usize, 4usize);
+        let cands = t.shrink();
+        assert!(cands.iter().any(|&(a, _)| a < 8));
+        assert!(cands.iter().any(|&(_, b)| b < 4));
+    }
+
+    #[test]
+    fn vec_shrink_terminates() {
+        let v: Vec<usize> = (0..20).collect();
+        let mut cur = v;
+        for _ in 0..1000 {
+            match cur.shrink().into_iter().next() {
+                Some(c) => cur = c,
+                None => break,
+            }
+        }
+        assert!(cur.is_empty());
+    }
+}

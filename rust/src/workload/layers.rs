@@ -1,0 +1,177 @@
+//! Paper Table 2: the convolution layers of ResNet on ImageNet.
+//!
+//! All non-1x1 convolutions of ResNet share four geometry classes
+//! (`conv2.x`…`conv5.x`); the depth variants only change how many times
+//! each class executes. The paper evaluates exactly these four classes
+//! with 3x3 filters, stride 1, padding 1.
+
+/// Geometry of a convolution layer (mirrors `python/compile/kernels/common.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvShape {
+    pub in_channels: usize,  // C
+    pub out_channels: usize, // K
+    pub height: usize,       // H
+    pub width: usize,        // W
+    pub filter_h: usize,     // R
+    pub filter_w: usize,     // S
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl ConvShape {
+    pub const fn square3x3(c: usize, k: usize, hw: usize) -> ConvShape {
+        ConvShape {
+            in_channels: c,
+            out_channels: k,
+            height: hw,
+            width: hw,
+            filter_h: 3,
+            filter_w: 3,
+            stride: 1,
+            padding: 1,
+        }
+    }
+
+    pub fn out_height(&self) -> usize {
+        (self.height + 2 * self.padding - self.filter_h) / self.stride + 1
+    }
+
+    pub fn out_width(&self) -> usize {
+        (self.width + 2 * self.padding - self.filter_w) / self.stride + 1
+    }
+
+    /// Output pixels per channel.
+    pub fn out_pixels(&self) -> usize {
+        self.out_height() * self.out_width()
+    }
+
+    /// Useful FLOPs (mul+add).
+    pub fn flops(&self) -> u64 {
+        2 * self.out_channels as u64
+            * self.out_pixels() as u64
+            * self.in_channels as u64
+            * (self.filter_h * self.filter_w) as u64
+    }
+
+    pub fn filter_len(&self) -> usize {
+        self.filter_h * self.filter_w
+    }
+
+    /// Bytes of the input image (f32).
+    pub fn input_bytes(&self) -> u64 {
+        (self.in_channels * self.height * self.width * 4) as u64
+    }
+
+    /// Bytes of all filters (f32).
+    pub fn filter_bytes(&self) -> u64 {
+        (self.out_channels * self.in_channels * self.filter_len() * 4) as u64
+    }
+
+    /// Bytes of the output image (f32).
+    pub fn output_bytes(&self) -> u64 {
+        (self.out_channels * self.out_pixels() * 4) as u64
+    }
+}
+
+/// One of the paper's four evaluated layer classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    Conv2x,
+    Conv3x,
+    Conv4x,
+    Conv5x,
+}
+
+impl LayerClass {
+    pub const ALL: [LayerClass; 4] =
+        [LayerClass::Conv2x, LayerClass::Conv3x, LayerClass::Conv4x, LayerClass::Conv5x];
+
+    /// Table 2 geometry.
+    pub fn shape(self) -> ConvShape {
+        match self {
+            LayerClass::Conv2x => ConvShape::square3x3(64, 64, 56),
+            LayerClass::Conv3x => ConvShape::square3x3(128, 128, 28),
+            LayerClass::Conv4x => ConvShape::square3x3(256, 256, 14),
+            LayerClass::Conv5x => ConvShape::square3x3(512, 512, 7),
+        }
+    }
+
+    /// Paper's name, e.g. `conv4.x`.
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerClass::Conv2x => "conv2.x",
+            LayerClass::Conv3x => "conv3.x",
+            LayerClass::Conv4x => "conv4.x",
+            LayerClass::Conv5x => "conv5.x",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<LayerClass> {
+        LayerClass::ALL.into_iter().find(|l| l.name() == name)
+    }
+}
+
+/// How many 3x3 convs of each class a given ResNet depth executes
+/// (Table 2 "blocks x convs" entries, multiplied out).
+#[derive(Debug, Clone, Copy)]
+pub struct ResNetDepth {
+    pub name: &'static str,
+    /// convs per class, in LayerClass::ALL order
+    pub convs: [usize; 4],
+}
+
+/// Table 2 columns. `blocks x convs` per class, multiplied out.
+pub const RESNET_DEPTHS: [ResNetDepth; 5] = [
+    ResNetDepth { name: "resnet18", convs: [4, 4, 4, 4] },
+    ResNetDepth { name: "resnet34", convs: [6, 8, 12, 8] },
+    ResNetDepth { name: "resnet50", convs: [3, 4, 6, 3] },
+    ResNetDepth { name: "resnet101", convs: [3, 4, 23, 3] },
+    ResNetDepth { name: "resnet152", convs: [3, 8, 36, 3] },
+];
+
+/// All four evaluated classes with their shapes.
+pub fn layer_classes() -> Vec<(LayerClass, ConvShape)> {
+    LayerClass::ALL.into_iter().map(|l| (l, l.shape())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_geometry() {
+        assert_eq!(LayerClass::Conv2x.shape().in_channels, 64);
+        assert_eq!(LayerClass::Conv2x.shape().height, 56);
+        assert_eq!(LayerClass::Conv5x.shape().out_channels, 512);
+        assert_eq!(LayerClass::Conv5x.shape().height, 7);
+    }
+
+    #[test]
+    fn same_padding_preserves_hw() {
+        for (_, s) in layer_classes() {
+            assert_eq!(s.out_height(), s.height);
+            assert_eq!(s.out_width(), s.width);
+        }
+    }
+
+    #[test]
+    fn flops_match_python_configs() {
+        // conv4.x: 2*256*14*14*256*9 = 231,211,008 (matches aot.py manifest)
+        assert_eq!(LayerClass::Conv4x.shape().flops(), 231_211_008);
+    }
+
+    #[test]
+    fn all_classes_equal_flops() {
+        // the four classes are iso-FLOP by ResNet design
+        let f: Vec<u64> = layer_classes().iter().map(|(_, s)| s.flops()).collect();
+        assert!(f.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn from_name_round_trips() {
+        for l in LayerClass::ALL {
+            assert_eq!(LayerClass::from_name(l.name()), Some(l));
+        }
+        assert_eq!(LayerClass::from_name("conv9.x"), None);
+    }
+}

@@ -1,0 +1,7 @@
+//! Workloads — paper Table 2 ResNet layer geometry and request generators.
+
+mod layers;
+mod requests;
+
+pub use layers::{layer_classes, ConvShape, LayerClass, ResNetDepth, RESNET_DEPTHS};
+pub use requests::{Request, RequestGen, TraceKind};

@@ -1,0 +1,117 @@
+//! Integration: the serving engine end to end over real PJRT artifacts
+//! (skips loudly when `make artifacts` has not run), plus routing-table
+//! invariants that don't need artifacts.
+
+use ilpm::autotune::tune_all;
+use ilpm::convgen::Algorithm;
+use ilpm::coordinator::{naive_conv, InferenceEngine, RoutingTable};
+use ilpm::simulator::DeviceConfig;
+use ilpm::workload::{LayerClass, RequestGen, TraceKind};
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn engine_serves_closed_loop_and_is_deterministic() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = InferenceEngine::start(&dir, "resnet18_ref_r56", 1, 4).expect("start");
+    let mut gen = RequestGen::new(&[3, 56, 56], TraceKind::ClosedLoop, 7);
+    let (summary, results) = engine.run_closed_loop(&mut gen, 5).expect("serve");
+    assert_eq!(summary.count, 5);
+    assert_eq!(results.len(), 5);
+    // image for id N is a pure function of N: rerunning id 0's image
+    // must reproduce its logits exactly
+    let mut gen2 = RequestGen::new(&[3, 56, 56], TraceKind::ClosedLoop, 99);
+    let (_, results2) = engine.run_closed_loop(&mut gen2, 1).expect("serve 2");
+    let r0 = results.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(r0.logits.data, results2[0].logits.data, "deterministic per image");
+    assert_eq!(engine.stats.completed.load(std::sync::atomic::Ordering::Relaxed), 6);
+    assert_eq!(engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_parallel_workers_agree() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = InferenceEngine::start(&dir, "resnet18_ref_r56", 2, 4).expect("start");
+    let mut gen = RequestGen::new(&[3, 56, 56], TraceKind::ClosedLoop, 7);
+    let (_, results) = engine.run_closed_loop(&mut gen, 8).expect("serve");
+    // both workers must produce identical logits for identical images:
+    // find two results from different workers... every id maps to a
+    // unique image, so instead re-serve the same ids and compare
+    let mut gen2 = RequestGen::new(&[3, 56, 56], TraceKind::ClosedLoop, 7);
+    let (_, results2) = engine.run_closed_loop(&mut gen2, 8).expect("serve again");
+    let workers_used: std::collections::BTreeSet<usize> =
+        results.iter().chain(&results2).map(|r| r.worker).collect();
+    for r in &results {
+        let r2 = results2.iter().find(|x| x.id == r.id).unwrap();
+        assert_eq!(r.logits.data, r2.logits.data, "id {} diverged", r.id);
+    }
+    assert!(!workers_used.is_empty());
+    engine.shutdown();
+}
+
+#[test]
+fn engine_rejects_unknown_model() {
+    let Some(dir) = artifact_dir() else { return };
+    assert!(InferenceEngine::start(&dir, "no_such_model", 1, 2).is_err());
+}
+
+#[test]
+fn session_layer_numerics_vs_naive_conv() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = ilpm::runtime::Engine::new(&dir).expect("engine");
+    let layer = LayerClass::Conv5x; // smallest -> fast under interpret HLO
+    let shape = layer.shape();
+    let x = ilpm::runtime::Tensor::randn(&[shape.in_channels, shape.height, shape.width], 5);
+    let w = ilpm::runtime::Tensor::randn(
+        &[shape.out_channels, shape.in_channels, shape.filter_h, shape.filter_w],
+        6,
+    );
+    let expected = naive_conv(&shape, &x, &w);
+    let model = engine.load_layer(layer.name(), "ilpm").expect("load");
+    let out = model.run(&[x, w]).expect("run");
+    let diff = out[0].max_abs_diff(&expected).unwrap();
+    assert!(diff < 1e-2, "diff {diff}");
+}
+
+#[test]
+fn routing_table_from_full_tuning_prefers_ilpm_on_mobile_and_integrated() {
+    for dev in [DeviceConfig::mali_g76_mp10(), DeviceConfig::vega8()] {
+        let db = tune_all(&[dev.clone()], 8);
+        let table = RoutingTable::from_tuning(&db, dev.name);
+        assert_eq!(table.len(), 4);
+        // the paper's headline: ILP-M dominates the small-image layers
+        // on mobile and integrated GPUs
+        let ilpm_wins = LayerClass::ALL
+            .iter()
+            .filter(|l| table.route(**l).unwrap().algorithm == Algorithm::Ilpm)
+            .count();
+        assert!(ilpm_wins >= 3, "{}: ilpm won only {ilpm_wins}/4", dev.name);
+    }
+}
+
+#[test]
+fn routing_table_network_estimate_positive_and_ordered() {
+    let dev = DeviceConfig::mali_g76_mp10();
+    let db = tune_all(&[dev.clone()], 8);
+    let table = RoutingTable::from_tuning(&db, dev.name);
+    let t = |name: &str| {
+        let d = ilpm::workload::RESNET_DEPTHS.iter().find(|d| d.name == name).unwrap();
+        table.expected_network_ms(&d.convs)
+    };
+    // strictly deeper variants take longer; resnet34 vs resnet101 have
+    // near-equal 3x3-conv totals by design, so only compare true supersets
+    assert!(t("resnet18") > 0.0);
+    assert!(t("resnet18") < t("resnet34"));
+    assert!(t("resnet50") < t("resnet101"));
+    assert!(t("resnet101") < t("resnet152"));
+}

@@ -1,0 +1,105 @@
+//! Integration: AOT HLO artifacts → PJRT compile → execute → numerics.
+//!
+//! Requires `make artifacts` to have run (skips, loudly, otherwise).
+//! Cross-checks every algorithm's artifact against the `ref` artifact
+//! (pure-XLA conv) on the same random inputs — the Rust-side half of
+//! the correctness story; the Python side checks kernels vs ref.py.
+
+use ilpm::runtime::{Engine, Tensor};
+use std::path::Path;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn conv4x_all_algorithms_match_ref() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let shape = ilpm::workload::LayerClass::Conv4x.shape();
+    let x = Tensor::randn(&[shape.in_channels, shape.height, shape.width], 11);
+    let w = Tensor::randn(
+        &[shape.out_channels, shape.in_channels, shape.filter_h, shape.filter_w],
+        22,
+    );
+    let reference = engine
+        .load_layer("conv4.x", "ref")
+        .expect("load ref")
+        .run(&[x.clone(), w.clone()])
+        .expect("run ref");
+    for alg in ["im2col", "libdnn", "winograd", "direct", "ilpm"] {
+        let model = engine.load_layer("conv4.x", alg).expect(alg);
+        let out = model.run(&[x.clone(), w.clone()]).expect(alg);
+        assert_eq!(out.len(), 1, "{alg}: one output expected");
+        let diff = out[0].max_abs_diff(&reference[0]).unwrap();
+        assert!(diff < 1e-2, "{alg}: max abs diff vs ref = {diff}");
+        println!("{alg}: OK (maxdiff {diff:.2e}, compile {:.0}ms)", model.compile_ms);
+    }
+}
+
+#[test]
+fn engine_caches_executables() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let a = engine.load("layer_conv5x_ilpm").expect("load");
+    let b = engine.load("layer_conv5x_ilpm").expect("load again");
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "second load must hit the cache");
+    assert_eq!(engine.cached().len(), 1);
+}
+
+#[test]
+fn resnet_model_runs_and_is_deterministic() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let model = engine.load("resnet18_ilpm_r56").expect("load model");
+    let art = model.artifact.clone();
+    let wpath = dir.join(art.weights.as_ref().expect("weights listed"));
+    let weights = ilpm::runtime::load_weights(&wpath).expect("load weights");
+    assert_eq!(weights.len() + 1, art.inputs.len(), "params + image");
+
+    let img = Tensor::randn(&art.inputs[0].shape, 7);
+    let mut inputs = vec![img];
+    inputs.extend(weights.iter().map(|(_, t)| t.clone()));
+    let out1 = model.run(&inputs).expect("run 1");
+    let out2 = model.run(&inputs).expect("run 2");
+    assert_eq!(out1[0].shape, vec![100]);
+    assert_eq!(out1[0].data, out2[0].data, "deterministic");
+    assert!(out1[0].data.iter().all(|v| v.is_finite()), "finite logits");
+}
+
+#[test]
+fn resnet_models_match_python_fixture() {
+    // End-to-end numerics: rust(PJRT-executed HLO) == python(jax) logits
+    // for the fixture image — catches HLO round-trip miscompiles.
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let names: Vec<String> = engine.manifest().models().map(|a| a.name.clone()).collect();
+    assert!(!names.is_empty(), "no model artifacts");
+    for name in names {
+        let model = engine.load(&name).expect("load");
+        let art = model.artifact.clone();
+        let fixture = ilpm::runtime::load_weights(
+            &dir.join(art.fixture.as_ref().expect("fixture listed")),
+        )
+        .expect("load fixture");
+        let (image, expected) = (&fixture[0].1, &fixture[1].1);
+        let weights =
+            ilpm::runtime::load_weights(&dir.join(art.weights.as_ref().unwrap())).unwrap();
+        let mut inputs = vec![image.clone()];
+        inputs.extend(weights.into_iter().map(|(_, t)| t));
+        let out = model.run(&inputs).expect("run");
+        let diff = out[0].max_abs_diff(expected).unwrap();
+        let scale = expected.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(
+            diff <= 1e-3 * scale.max(1.0),
+            "{name}: rust logits diverge from python fixture: maxdiff {diff}, scale {scale}"
+        );
+        println!("{name}: fixture OK (maxdiff {diff:.2e})");
+    }
+}

@@ -1,0 +1,244 @@
+//! Property tests over the simulator + convgen invariants, using the
+//! in-tree `util::prop` mini-framework (no proptest crate offline).
+
+use ilpm::convgen::{generate, Algorithm, TuneParams};
+use ilpm::simulator::{occupancy, simulate, simulate_pipeline, total_time_ms, DeviceConfig};
+use ilpm::util::prng::Rng;
+use ilpm::util::prop::{forall, Shrink};
+use ilpm::workload::LayerClass;
+
+/// Random-but-legal tuning parameters, as a shrinkable tuple of knob
+/// indices (shrinking walks towards the smallest knobs).
+#[derive(Debug, Clone)]
+struct Knobs {
+    wg: usize,
+    tm: usize,
+    tn: usize,
+    tk: usize,
+    px: usize,
+    kpt: usize,
+    cache: bool,
+}
+
+impl Knobs {
+    const WG: [u64; 5] = [16, 32, 64, 128, 256];
+    const T: [u64; 4] = [4, 8, 32, 128];
+    const PX: [u64; 4] = [2, 4, 8, 12];
+    const KPT: [u64; 4] = [1, 2, 8, 16];
+
+    fn gen(r: &mut Rng) -> Knobs {
+        Knobs {
+            wg: r.below(5) as usize,
+            tm: r.below(4) as usize,
+            tn: r.below(4) as usize,
+            tk: r.below(4) as usize,
+            px: r.below(4) as usize,
+            kpt: r.below(4) as usize,
+            cache: r.below(2) == 0,
+        }
+    }
+
+    fn params(&self) -> TuneParams {
+        TuneParams {
+            wg_size: Self::WG[self.wg],
+            tile_m: Self::T[self.tm],
+            tile_n: Self::T[self.tn],
+            tile_k: Self::T[self.tk],
+            tile_px: Self::PX[self.px],
+            k_per_thread: Self::KPT[self.kpt],
+            cache_filters: self.cache,
+            transpose_output: false,
+        }
+    }
+}
+
+impl Shrink for Knobs {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let fields: [&dyn Fn(&mut Knobs, usize); 6] = [
+            &|k, v| k.wg = v,
+            &|k, v| k.tm = v,
+            &|k, v| k.tn = v,
+            &|k, v| k.tk = v,
+            &|k, v| k.px = v,
+            &|k, v| k.kpt = v,
+        ];
+        let vals = [self.wg, self.tm, self.tn, self.tk, self.px, self.kpt];
+        for (i, set) in fields.iter().enumerate() {
+            if vals[i] > 0 {
+                let mut c = self.clone();
+                set(&mut c, vals[i] - 1);
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+fn all_cases() -> Vec<(Algorithm, LayerClass, DeviceConfig)> {
+    let mut v = Vec::new();
+    for alg in Algorithm::ALL {
+        for layer in [LayerClass::Conv2x, LayerClass::Conv4x, LayerClass::Conv5x] {
+            for dev in DeviceConfig::paper_devices() {
+                v.push((alg, layer, dev));
+            }
+        }
+    }
+    v
+}
+
+#[test]
+fn prop_simulated_time_finite_positive_for_random_tunings() {
+    forall(150, 0xFEED, Knobs::gen, |k| {
+        let p = k.params();
+        for (alg, layer, dev) in all_cases() {
+            if !alg.supports(&layer.shape()) {
+                continue;
+            }
+            for spec in generate(alg, &layer.shape(), &p) {
+                let r = simulate(&spec, &dev);
+                if !(r.time_ms.is_finite() && r.time_ms > 0.0) {
+                    return Err(format!("{alg:?}/{layer:?}/{}: t={}", dev.name, r.time_ms));
+                }
+                if !(0.0..=100.0).contains(&r.valu_busy_pct)
+                    || !(0.0..=100.0).contains(&r.mem_unit_busy_pct)
+                {
+                    return Err(format!("{alg:?}: busy% out of range"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_byte_conservation_for_random_tunings() {
+    forall(150, 0xBEEF, Knobs::gen, |k| {
+        let p = k.params();
+        for alg in Algorithm::ALL {
+            for layer in [LayerClass::Conv3x, LayerClass::Conv5x] {
+                if !alg.supports(&layer.shape()) {
+                    continue;
+                }
+                for spec in generate(alg, &layer.shape(), &p) {
+                    let err = spec.byte_conservation_error(64);
+                    if err > 0.35 {
+                        return Err(format!("{alg:?}/{layer:?}/{}: {err:.2}", spec.name));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_occupancy_within_device_limits() {
+    forall(200, 0xACC, Knobs::gen, |k| {
+        let p = k.params();
+        for (alg, layer, dev) in all_cases() {
+            if !alg.supports(&layer.shape()) {
+                continue;
+            }
+            for spec in generate(alg, &layer.shape(), &p) {
+                let occ = occupancy(&spec, &dev);
+                if occ.resident_wgs == 0 || occ.resident_warps == 0 {
+                    return Err("zero residency".into());
+                }
+                let warps_per_wg = spec.wg_size.div_ceil(dev.warp_width as u64);
+                // residency may exceed the warp cap only via the max(1) floor
+                if occ.resident_warps > dev.max_warps_per_cu as u64
+                    && occ.resident_wgs > 1
+                {
+                    return Err(format!(
+                        "{}: {} warps resident (cap {}), wpw={warps_per_wg}",
+                        spec.name, occ.resident_warps, dev.max_warps_per_cu
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_bandwidth_never_slower() {
+    forall(60, 0xB0, Knobs::gen, |k| {
+        let p = k.params();
+        let shape = LayerClass::Conv4x.shape();
+        for alg in Algorithm::ALL {
+            let specs = generate(alg, &shape, &p);
+            let base = DeviceConfig::mali_g76_mp10();
+            let mut fat = base.clone();
+            fat.dram_bw_bytes_per_s *= 4.0;
+            let t0 = total_time_ms(&simulate_pipeline(&specs, &base));
+            let t1 = total_time_ms(&simulate_pipeline(&specs, &fat));
+            if t1 > t0 + 1e-12 {
+                return Err(format!("{alg:?}: 4x bandwidth got slower {t0} -> {t1}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_l2_never_increases_dram_traffic() {
+    forall(60, 0x12, Knobs::gen, |k| {
+        let p = k.params();
+        let shape = LayerClass::Conv4x.shape();
+        for alg in Algorithm::ALL {
+            for spec in generate(alg, &shape, &p) {
+                let small = DeviceConfig::vega8();
+                let mut big = small.clone();
+                big.l2_bytes *= 8;
+                let a = simulate(&spec, &small).gmem_read_bytes;
+                let b = simulate(&spec, &big).gmem_read_bytes;
+                if b > a + 1.0 {
+                    return Err(format!("{}: bigger L2 raised DRAM {a} -> {b}", spec.name));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ilpm_always_fewest_barriers() {
+    // Algorithm 2's structural invariant: one barrier per input channel,
+    // independent of tuning — direct (cache) always has more.
+    forall(100, 0x3A, Knobs::gen, |k| {
+        let mut p = k.params();
+        p.cache_filters = true;
+        let shape = LayerClass::Conv4x.shape();
+        let ilpm = &generate(Algorithm::Ilpm, &shape, &p)[0];
+        let direct = &generate(Algorithm::Direct, &shape, &p)[0];
+        if ilpm.barriers_per_wg() > shape.in_channels as u64 {
+            return Err(format!("ilpm barriers {}", ilpm.barriers_per_wg()));
+        }
+        if direct.barriers_per_wg() <= ilpm.barriers_per_wg() {
+            return Err(format!(
+                "direct {} <= ilpm {}",
+                direct.barriers_per_wg(),
+                ilpm.barriers_per_wg()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wavefronts_scale_with_launches() {
+    forall(50, 0x77, Knobs::gen, |k| {
+        let p = k.params();
+        let shape = LayerClass::Conv4x.shape();
+        let specs = generate(Algorithm::Winograd, &shape, &p);
+        let gemm = specs.iter().find(|s| s.name == "winograd_gemm").unwrap();
+        if gemm.launches != 16 {
+            return Err(format!("launches {}", gemm.launches));
+        }
+        if gemm.wavefronts(64) % 16 != 0 {
+            return Err("wavefronts not multiple of launches".into());
+        }
+        Ok(())
+    });
+}
