@@ -11,6 +11,10 @@ use ilpm::workload::LayerClass;
 use std::path::Path;
 
 fn main() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — no xla runtime available");
+        return;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: run `make artifacts` first");

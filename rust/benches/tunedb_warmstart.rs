@@ -1,0 +1,60 @@
+//! Bench: what the persistent tunedb store buys at startup — cold
+//! exhaustive tuning vs warm-start over a populated store vs loading
+//! routes straight from disk (the serve path). No paper analogue; this
+//! quantifies the §2.3 "tune once per device, reuse forever" claim.
+//!
+//! Run: `cargo bench --bench tunedb_warmstart`
+
+use ilpm::autotune::tune_all_warm;
+use ilpm::coordinator::RoutingTable;
+use ilpm::simulator::DeviceConfig;
+use ilpm::tunedb::TuneStore;
+use ilpm::util::bench::{fmt_ns, Bench};
+
+fn main() {
+    let dev = DeviceConfig::mali_g76_mp10();
+    let threads = 8;
+    let b = Bench::quick();
+
+    println!("=== tunedb warm-start ({} / {threads} threads) ===", dev.name);
+
+    let cold = b.run(|| {
+        let mut s = TuneStore::new();
+        tunedb_len(tune_all_warm(&[dev.clone()], threads, &mut s).0.len())
+    });
+    println!("cold exhaustive sweep:  median {}  ({})", fmt_ns(cold.median_ns), cold.human());
+
+    let mut populated = TuneStore::new();
+    let (_, stats) = tune_all_warm(&[dev.clone()], threads, &mut populated);
+    println!(
+        "  (store populated: {} entries, {} candidates evaluated, {} pruned)",
+        populated.len(),
+        stats.evaluated,
+        stats.pruned
+    );
+
+    let warm = b.run(|| {
+        let mut s = populated.clone();
+        tunedb_len(tune_all_warm(&[dev.clone()], threads, &mut s).0.len())
+    });
+    println!("warm-start (all hits):  median {}  ({})", fmt_ns(warm.median_ns), warm.human());
+
+    let path = std::env::temp_dir().join(format!("ilpm_bench_tunedb_{}.json", std::process::id()));
+    populated.save(&path).expect("save store");
+    let load = b.run(|| {
+        let s = TuneStore::load(&path).expect("load store");
+        tunedb_len(RoutingTable::from_store(&s, &dev).expect("routes").len())
+    });
+    println!("disk -> routing table:  median {}  ({})", fmt_ns(load.median_ns), load.human());
+    std::fs::remove_file(&path).ok();
+
+    println!(
+        "\nwarm-start speedup over cold: {:.0}x; serve-path load: {:.0}x",
+        cold.median_ns / warm.median_ns,
+        cold.median_ns / load.median_ns
+    );
+}
+
+fn tunedb_len(n: usize) -> usize {
+    ilpm::util::bench::black_box(n)
+}

@@ -11,5 +11,5 @@
 mod search;
 mod space;
 
-pub use search::{tune, tune_all, TunedEntry, TuningDatabase};
+pub use search::{tune, tune_all, tune_all_warm, TunedEntry, TuningDatabase, WarmStats};
 pub use space::{candidates, SearchStats};

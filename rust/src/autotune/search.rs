@@ -1,11 +1,12 @@
-//! Exhaustive search over the candidate space against the simulator.
+//! Exhaustive search over the candidate space against the simulator,
+//! with warm-start from the persistent tunedb store.
 
 use std::collections::HashMap;
-use std::sync::Arc;
 
 use super::space::{candidates, SearchStats};
 use crate::convgen::{generate, Algorithm, TuneParams};
 use crate::simulator::{simulate_pipeline, total_time_ms, DeviceConfig, SimReport};
+use crate::tunedb::TuneStore;
 use crate::util::pool::{pool_map, ThreadPool};
 use crate::workload::LayerClass;
 
@@ -55,75 +56,75 @@ pub fn tune(alg: Algorithm, layer: LayerClass, dev: &DeviceConfig) -> TunedEntry
     }
 }
 
-/// Database of tuned configurations, keyed by (device, layer, algorithm).
+/// Database of tuned configurations, keyed by device name and then
+/// `(layer, algorithm)`.
+///
+/// The nested map keeps the hot routing-path lookup allocation-free:
+/// [`Self::get`] probes the outer map with the borrowed `&str` it was
+/// handed instead of building an owned `(String, _, _)` tuple key per
+/// call, and [`Self::best_algorithm`] scans only one device's entries.
 #[derive(Default)]
 pub struct TuningDatabase {
-    entries: HashMap<(String, LayerClass, Algorithm), TunedEntry>,
+    entries: HashMap<String, HashMap<(LayerClass, Algorithm), TunedEntry>>,
 }
 
 impl TuningDatabase {
+    /// Zero-allocation lookup (borrowed-key probe on the device map).
     pub fn get(&self, dev: &str, layer: LayerClass, alg: Algorithm) -> Option<&TunedEntry> {
-        self.entries.get(&(dev.to_string(), layer, alg))
+        self.entries.get(dev)?.get(&(layer, alg))
     }
 
     pub fn insert(&mut self, e: TunedEntry) {
-        self.entries.insert((e.device.clone(), e.layer, e.algorithm), e);
+        self.entries
+            .entry(e.device.clone())
+            .or_default()
+            .insert((e.layer, e.algorithm), e);
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries.values().map(HashMap::len).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.values().all(HashMap::is_empty)
     }
 
     /// Fastest algorithm for a (device, layer) among tuned entries.
     pub fn best_algorithm(&self, dev: &str, layer: LayerClass) -> Option<&TunedEntry> {
         self.entries
+            .get(dev)?
             .values()
-            .filter(|e| e.device == dev && e.layer == layer)
+            .filter(|e| e.layer == layer)
             .min_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap())
     }
 
     pub fn entries(&self) -> impl Iterator<Item = &TunedEntry> {
-        self.entries.values()
+        self.entries.values().flat_map(HashMap::values)
     }
 
-    /// Persist the tuned configurations (the paper's per-network tuning
-    /// artefact: tune once offline, deploy the table with the engine).
+    /// Persist the tuned configurations as a flat legacy table (kept
+    /// for `save`/`load` round-trip compatibility; the fingerprinted,
+    /// versioned format lives in [`crate::tunedb`]).
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         use crate::util::json::Json;
         use std::collections::BTreeMap;
-        let arr: Vec<Json> = {
-            let mut sorted: Vec<&TunedEntry> = self.entries.values().collect();
-            sorted.sort_by(|a, b| {
-                (&a.device, a.layer.name(), a.algorithm.name())
-                    .cmp(&(&b.device, b.layer.name(), b.algorithm.name()))
-            });
-            sorted
-                .into_iter()
-                .map(|e| {
-                    let mut m = BTreeMap::new();
-                    m.insert("device".into(), Json::Str(e.device.clone()));
-                    m.insert("layer".into(), Json::Str(e.layer.name().into()));
-                    m.insert("algorithm".into(), Json::Str(e.algorithm.name().into()));
-                    m.insert("time_ms".into(), Json::Num(e.time_ms));
-                    let p = &e.params;
-                    let mut pm = BTreeMap::new();
-                    pm.insert("wg_size".into(), Json::Num(p.wg_size as f64));
-                    pm.insert("tile_m".into(), Json::Num(p.tile_m as f64));
-                    pm.insert("tile_n".into(), Json::Num(p.tile_n as f64));
-                    pm.insert("tile_k".into(), Json::Num(p.tile_k as f64));
-                    pm.insert("tile_px".into(), Json::Num(p.tile_px as f64));
-                    pm.insert("k_per_thread".into(), Json::Num(p.k_per_thread as f64));
-                    pm.insert("cache_filters".into(), Json::Bool(p.cache_filters));
-                    pm.insert("transpose_output".into(), Json::Bool(p.transpose_output));
-                    m.insert("params".into(), Json::Obj(pm));
-                    Json::Obj(m)
-                })
-                .collect()
-        };
+        let mut sorted: Vec<&TunedEntry> = self.entries().collect();
+        sorted.sort_by(|a, b| {
+            (&a.device, a.layer.name(), a.algorithm.name())
+                .cmp(&(&b.device, b.layer.name(), b.algorithm.name()))
+        });
+        let arr: Vec<Json> = sorted
+            .into_iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("device".into(), Json::Str(e.device.clone()));
+                m.insert("layer".into(), Json::Str(e.layer.name().into()));
+                m.insert("algorithm".into(), Json::Str(e.algorithm.name().into()));
+                m.insert("time_ms".into(), Json::Num(e.time_ms));
+                m.insert("params".into(), e.params.to_json());
+                Json::Obj(m)
+            })
+            .collect();
         std::fs::write(path, Json::Arr(arr).to_json_string())
     }
 
@@ -143,22 +144,9 @@ impl TuningDatabase {
                 .ok_or_else(|| anyhow!("bad layer"))?;
             let algorithm = Algorithm::from_name(get_str("algorithm")?)
                 .ok_or_else(|| anyhow!("bad algorithm"))?;
-            let p = e.get("params").ok_or_else(|| anyhow!("missing params"))?;
-            let num =
-                |k: &str| p.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("missing {k}"));
-            let params = TuneParams {
-                wg_size: num("wg_size")?,
-                tile_m: num("tile_m")?,
-                tile_n: num("tile_n")?,
-                tile_k: num("tile_k")?,
-                tile_px: num("tile_px")?,
-                k_per_thread: num("k_per_thread")?,
-                cache_filters: p.get("cache_filters").and_then(Json::as_bool).unwrap_or(true),
-                transpose_output: p
-                    .get("transpose_output")
-                    .and_then(Json::as_bool)
-                    .unwrap_or(false),
-            };
+            let params = TuneParams::from_json(
+                e.get("params").ok_or_else(|| anyhow!("missing params"))?,
+            )?;
             db.insert(TunedEntry {
                 device: get_str("device")?.to_string(),
                 layer,
@@ -173,32 +161,84 @@ impl TuningDatabase {
     }
 }
 
+/// What a warm-started sweep did: how many keys were served from the
+/// store vs. freshly tuned, and how much simulator work the fresh part
+/// cost. A fully warm run has `misses == 0` and `evaluated == 0`.
+#[derive(Debug, Clone, Default)]
+pub struct WarmStats {
+    /// Keys answered from the store (no candidates evaluated).
+    pub hits: usize,
+    /// Keys that had to be tuned from scratch.
+    pub misses: usize,
+    /// Simulator candidates evaluated for the missed keys.
+    pub evaluated: usize,
+    /// Candidates pruned (over-budget shared memory) for missed keys.
+    pub pruned: usize,
+}
+
 /// Tune every (algorithm, layer) pair on the given devices, in parallel.
 pub fn tune_all(devices: &[DeviceConfig], threads: usize) -> TuningDatabase {
-    let pool = ThreadPool::new(threads.max(1));
+    tune_all_warm(devices, threads, &mut TuneStore::new()).0
+}
+
+/// [`tune_all`] warm-started from a persistent store: keys already in
+/// the store (under the device's *fingerprint* — an edited spec misses)
+/// are rehydrated without evaluating a single candidate; the rest are
+/// tuned and merged back into the store for the next run. A second run
+/// against the same store therefore evaluates zero candidates.
+pub fn tune_all_warm(
+    devices: &[DeviceConfig],
+    threads: usize,
+    store: &mut TuneStore,
+) -> (TuningDatabase, WarmStats) {
+    let mut db = TuningDatabase::default();
+    let mut stats = WarmStats::default();
     let mut jobs = Vec::new();
     for dev in devices {
+        let fp = dev.fingerprint();
         for layer in LayerClass::ALL {
             for alg in Algorithm::ALL {
-                if alg.supports(&layer.shape()) {
-                    jobs.push((dev.clone(), layer, alg));
+                if !alg.supports(&layer.shape()) {
+                    continue;
+                }
+                match store.get(fp, layer, alg) {
+                    Some(hit) => {
+                        stats.hits += 1;
+                        db.insert(hit.to_entry(dev.name));
+                    }
+                    None => {
+                        stats.misses += 1;
+                        jobs.push((dev.clone(), layer, alg));
+                    }
                 }
             }
         }
     }
-    let results = pool_map(&pool, jobs, move |(dev, layer, alg): (DeviceConfig, LayerClass, Algorithm)| {
-        tune(alg, layer, Arc::new(&dev).as_ref())
-    });
-    let mut db = TuningDatabase::default();
-    for e in results {
-        db.insert(e);
+    if !jobs.is_empty() {
+        let pool = ThreadPool::new(threads.max(1));
+        let results = pool_map(
+            &pool,
+            jobs,
+            |(dev, layer, alg): (DeviceConfig, LayerClass, Algorithm)| tune(alg, layer, &dev),
+        );
+        let by_name: HashMap<&str, &DeviceConfig> =
+            devices.iter().map(|d| (d.name, d)).collect();
+        for e in results {
+            stats.evaluated += e.stats.evaluated;
+            stats.pruned += e.stats.pruned;
+            if let Some(dev) = by_name.get(e.device.as_str()) {
+                store.merge_entry(dev, &e);
+            }
+            db.insert(e);
+        }
     }
-    db
+    (db, stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tunedb::StoredTuning;
 
     #[test]
     fn tuned_never_worse_than_default() {
@@ -244,6 +284,42 @@ mod tests {
         let db = tune_all(&[DeviceConfig::vega8()], 4);
         // 4 layers x 5 algorithms (winograd supports all: stride 1)
         assert_eq!(db.len(), 20);
+    }
+
+    #[test]
+    fn warm_start_serves_prefilled_store_without_evaluating() {
+        // A store that already holds every key must satisfy the whole
+        // sweep with zero simulator evaluations — no `tune` calls at
+        // all, which is why this test is fast.
+        let dev = DeviceConfig::mali_g76_mp10();
+        let fp = dev.fingerprint();
+        let mut store = TuneStore::new();
+        for layer in LayerClass::ALL {
+            for alg in Algorithm::ALL {
+                if !alg.supports(&layer.shape()) {
+                    continue;
+                }
+                store.insert(
+                    fp,
+                    dev.name,
+                    StoredTuning {
+                        layer,
+                        algorithm: alg,
+                        params: TuneParams::for_shape(&layer.shape()),
+                        time_ms: 1.0,
+                        evaluated: 7,
+                        pruned: 0,
+                    },
+                );
+            }
+        }
+        let before = store.len();
+        let (db, warm) = tune_all_warm(&[dev.clone()], 2, &mut store);
+        assert_eq!(warm.evaluated, 0, "warm run must evaluate zero candidates");
+        assert_eq!(warm.misses, 0);
+        assert_eq!(warm.hits, before);
+        assert_eq!(db.len(), before);
+        assert!(db.get(dev.name, LayerClass::Conv4x, Algorithm::Ilpm).is_some());
     }
 
     #[test]

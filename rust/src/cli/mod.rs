@@ -1,9 +1,10 @@
-//! `ilpm` CLI — serve, bench, tune, profile, simulate.
+//! `ilpm` CLI — serve, bench, tune, routes, profile, simulate.
 //!
 //! Subcommands:
 //! * `serve`   — run the single-image inference engine on a request stream
 //! * `bench`   — regenerate a paper artifact: `fig5`, `table3`, `table4`
-//! * `tune`    — run the auto-tuner for a device (all layers/algorithms)
+//! * `tune`    — run the auto-tuner, warm-started from a tunedb store
+//! * `routes`  — print stored per-layer winners from a tunedb store
 //! * `simulate`— simulate one (algorithm, layer, device) and dump counters
 //! * `layers`  — run each conv-layer artifact once through PJRT
 
@@ -11,13 +12,14 @@ mod args;
 
 pub use args::Args;
 
-use crate::autotune::{tune, tune_all};
+use crate::autotune::{tune, tune_all_warm};
 use crate::convgen::Algorithm;
 use crate::coordinator::{InferenceEngine, RoutingTable};
 use crate::metrics::{render_fig5, fig5_table, table3, table4};
 use crate::simulator::DeviceConfig;
+use crate::tunedb::TuneStore;
 use crate::workload::{LayerClass, RequestGen, TraceKind};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
 ilpm — single-image CNN inference engine + mobile-GPU simulator
@@ -27,11 +29,16 @@ USAGE: ilpm <command> [flags]
 
 COMMANDS:
   serve     --model <name> --n <requests> [--workers N] [--artifacts DIR]
-            run the inference engine end to end
+            [--routes PATH [--device ...]]
+            run the inference engine end to end; with --routes, load the
+            per-layer algorithm table from a tunedb store (no simulation)
   bench     <fig5|table3|table4> [--device mali|vega8|radeonvii]
             regenerate a paper table/figure from tuned simulations
-  tune      [--device ...] [--threads N]
-            auto-tune every (layer, algorithm) for a device
+  tune      [--device mali|vega8|radeonvii|all] [--threads N] [--out PATH]
+            auto-tune every (layer, algorithm); with --out, warm-start
+            from the store at PATH and merge new results back into it
+  routes    [--store PATH] [--device ...|all]
+            print the stored per-layer winners for a device fleet
   simulate  --alg <name> --layer <conv4.x> [--device ...]
             simulate one algorithm and print its profile counters
   layers    [--artifacts DIR] [--device-check]
@@ -46,6 +53,15 @@ fn artifact_dir(a: &Args) -> PathBuf {
 fn device(a: &Args) -> Result<DeviceConfig, String> {
     let name = a.get_or("device", "mali");
     DeviceConfig::by_name(name).ok_or_else(|| format!("unknown device '{name}'"))
+}
+
+/// `--device all` → the whole paper fleet; otherwise one device.
+fn device_fleet(a: &Args) -> Result<Vec<DeviceConfig>, String> {
+    if a.get_or("device", "mali") == "all" {
+        Ok(DeviceConfig::paper_devices())
+    } else {
+        Ok(vec![device(a)?])
+    }
 }
 
 /// CLI entry point; returns the process exit code.
@@ -75,6 +91,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "serve" => cmd_serve(rest),
         "bench" => cmd_bench(rest),
         "tune" => cmd_tune(rest),
+        "routes" => cmd_routes(rest),
         "simulate" => cmd_simulate(rest),
         "layers" => cmd_layers(rest),
         other => Err(format!("unknown command '{other}' (try `ilpm help`)")),
@@ -82,12 +99,59 @@ pub fn run(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<(), String> {
-    let a = Args::parse(argv, &["model", "n", "workers", "artifacts", "queue", "rate"])?;
+    let a = Args::parse(
+        argv,
+        &["model", "n", "workers", "artifacts", "queue", "rate", "routes", "device"],
+    )?;
     let dir = artifact_dir(&a);
-    let model = a.get_or("model", "resnet18_ilpm_r56").to_string();
+    let mut model = a.get_or("model", "resnet18_ilpm_r56").to_string();
     let n = a.get_usize("n", 16)?;
     let workers = a.get_usize("workers", 1)?;
     let queue = a.get_usize("queue", 8)?;
+    // Per-layer routing from the persistent store — the paper's §2.3
+    // deployment story: tuning happened once, offline; serving pays
+    // zero simulator evaluations. Unless --model overrides it, the
+    // routes pick which AOT model variant executes.
+    if let Some(path) = a.get("routes") {
+        let dev = device(&a)?;
+        let store = TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?;
+        let table = RoutingTable::from_store(&store, &dev).ok_or_else(|| {
+            format!(
+                "device '{}' (fingerprint {:016x}) has no entries in {path} — \
+                 untuned device or stale fingerprint after a spec edit; \
+                 re-run `ilpm tune --device {} --out {path}`",
+                dev.name,
+                dev.fingerprint(),
+                a.get_or("device", "mali"),
+            )
+        })?;
+        println!("routes for {} (from {path}, no simulation):", dev.name);
+        print_route_table(&table, &dev);
+        if a.get("model").is_none() {
+            // The AOT artifacts are whole-network variants (one
+            // algorithm throughout), so serve the variant the routes
+            // favour: the algorithm winning the most layer classes,
+            // ties broken by name for determinism.
+            let mut counts: Vec<(Algorithm, usize)> = Vec::new();
+            for layer in LayerClass::ALL {
+                if let Some(r) = table.route(layer) {
+                    match counts.iter_mut().find(|(alg, _)| *alg == r.algorithm) {
+                        Some((_, c)) => *c += 1,
+                        None => counts.push((r.algorithm, 1)),
+                    }
+                }
+            }
+            counts.sort_by_key(|(alg, c)| (std::cmp::Reverse(*c), alg.name()));
+            if let Some((alg, won)) = counts.first() {
+                model = format!("resnet18_{}_r56", alg.name());
+                println!(
+                    "model '{model}' selected by routes ({} wins {won}/{} layer classes)",
+                    alg.name(),
+                    table.len()
+                );
+            }
+        }
+    }
     // image shape from the manifest (first model input)
     let manifest = crate::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
     let art = manifest
@@ -134,42 +198,131 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
 
 fn cmd_tune(argv: &[String]) -> Result<(), String> {
     let a = Args::parse(argv, &["device", "threads", "out"])?;
-    let dev = device(&a)?;
+    let devices = device_fleet(&a)?;
     let threads = a.get_usize("threads", 8)?;
-    let db = tune_all(&[dev.clone()], threads);
-    if let Some(out) = a.get("out") {
-        db.save(std::path::Path::new(out)).map_err(|e| format!("save {out}: {e}"))?;
-        println!("saved tuning table to {out}");
-    }
+    // Warm-start: keys already in the store are served from disk; only
+    // the misses pay the exhaustive simulator sweep. Without --out the
+    // store is an in-memory throwaway (cold, full sweep).
+    let mut store = match a.get("out") {
+        Some(out) => TuneStore::load_or_empty(Path::new(out)).map_err(|e| format!("{e:#}"))?,
+        None => TuneStore::new(),
+    };
+    let (db, warm) = tune_all_warm(&devices, threads, &mut store);
     println!(
-        "{:<10} {:>10} {:>12} {:>24}",
-        "layer", "best", "time(ms)", "params"
+        "tuned {} device(s): {} warm hit(s), {} tuned fresh \
+         ({} candidates evaluated, {} pruned)",
+        devices.len(),
+        warm.hits,
+        warm.misses,
+        warm.evaluated,
+        warm.pruned
     );
-    for layer in LayerClass::ALL {
-        if let Some(best) = db.best_algorithm(dev.name, layer) {
+    if let Some(out) = a.get("out") {
+        store.save(Path::new(out)).map_err(|e| format!("save {out}: {e:#}"))?;
+        println!(
+            "tunedb: {} device(s), {} entries -> {out}",
+            store.device_count(),
+            store.len()
+        );
+    }
+    for dev in &devices {
+        println!(
+            "\n{} (fingerprint {:016x})",
+            dev.name,
+            dev.fingerprint()
+        );
+        println!(
+            "{:<10} {:>10} {:>12} {:>24}",
+            "layer", "best", "time(ms)", "params"
+        );
+        for layer in LayerClass::ALL {
+            if let Some(best) = db.best_algorithm(dev.name, layer) {
+                println!(
+                    "{:<10} {:>10} {:>12.3}  wg={} tile_px={} kpt={} cache={} tm/tn/tk={}/{}/{}",
+                    layer.name(),
+                    best.algorithm.name(),
+                    best.time_ms,
+                    best.params.wg_size,
+                    best.params.tile_px,
+                    best.params.k_per_thread,
+                    best.params.cache_filters,
+                    best.params.tile_m,
+                    best.params.tile_n,
+                    best.params.tile_k,
+                );
+            }
+        }
+        let table = RoutingTable::from_tuning(&db, dev.name);
+        for d in crate::workload::RESNET_DEPTHS {
             println!(
-                "{:<10} {:>10} {:>12.3}  wg={} tile_px={} kpt={} cache={} tm/tn/tk={}/{}/{}",
-                layer.name(),
-                best.algorithm.name(),
-                best.time_ms,
-                best.params.wg_size,
-                best.params.tile_px,
-                best.params.k_per_thread,
-                best.params.cache_filters,
-                best.params.tile_m,
-                best.params.tile_n,
-                best.params.tile_k,
+                "expected {} 3x3-conv time on {}: {:.2} ms",
+                d.name,
+                dev.name,
+                table.expected_network_ms(&d.convs)
             );
         }
     }
-    let table = RoutingTable::from_tuning(&db, dev.name);
+    Ok(())
+}
+
+/// Shared printer for a per-layer routing table.
+fn print_route_table(table: &RoutingTable, dev: &DeviceConfig) {
+    println!("{:<10} {:>10} {:>14}", "layer", "algorithm", "expected(ms)");
+    for layer in LayerClass::ALL {
+        match table.route(layer) {
+            Some(r) => {
+                println!("{:<10} {:>10} {:>14.3}", layer.name(), r.algorithm.name(), r.expected_ms)
+            }
+            None => println!("{:<10} {:>10} {:>14}", layer.name(), "—", "untuned"),
+        }
+    }
     for d in crate::workload::RESNET_DEPTHS {
         println!(
-            "expected {} 3x3-conv time on {}: {:.2} ms",
+            "  expected {} 3x3-conv time on {}: {:.2} ms",
             d.name,
             dev.name,
             table.expected_network_ms(&d.convs)
         );
+    }
+}
+
+/// `ilpm routes` — print stored per-layer winners for a device fleet,
+/// straight from the tunedb store: zero simulator evaluations.
+fn cmd_routes(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["store", "device"])?;
+    let path = a.get_or("store", "tune.json");
+    let store = TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?;
+    let devices = if a.get_or("device", "all") == "all" {
+        DeviceConfig::paper_devices()
+    } else {
+        vec![device(&a)?]
+    };
+    // stale-detection compares against the whole known fleet, not the
+    // --device filter: filtering the printout must not smear valid
+    // entries for unlisted devices as stale
+    let known_fps: Vec<u64> =
+        DeviceConfig::paper_devices().iter().map(DeviceConfig::fingerprint).collect();
+    for dev in &devices {
+        let fp = dev.fingerprint();
+        println!("{} (fingerprint {fp:016x})", dev.name);
+        match RoutingTable::from_store(&store, dev) {
+            Some(table) => print_route_table(&table, dev),
+            None => println!(
+                "  no entries in {path} — untuned device or stale fingerprint \
+                 after a spec edit; re-run `ilpm tune --out {path}`"
+            ),
+        }
+        println!();
+    }
+    // entries tuned against specs this binary no longer has (edited
+    // DeviceConfigs leave their old fingerprints behind in the store)
+    let stale: Vec<String> = store
+        .devices()
+        .filter(|(fp, _)| !known_fps.contains(fp))
+        .map(|(fp, d)| format!("{} ({fp:016x}, {} entries)", d.device, d.len()))
+        .collect();
+    if !stale.is_empty() {
+        println!("stale/unknown fingerprints in {path}: {}", stale.join(", "));
     }
     Ok(())
 }
@@ -238,6 +391,72 @@ mod tests {
     #[test]
     fn bench_rejects_unknown_table() {
         assert!(run(&sv(&["bench", "table9"])).is_err());
+    }
+
+    #[test]
+    fn routes_requires_a_readable_store() {
+        let missing = std::env::temp_dir().join("ilpm_cli_missing_store.json");
+        let missing = missing.to_str().unwrap();
+        assert!(run(&sv(&["routes", "--store", missing])).is_err());
+        // serve --routes must fail the same way, before engine startup
+        assert!(run(&sv(&["serve", "--routes", missing])).is_err());
+    }
+
+    #[test]
+    fn routes_prints_prefilled_store_without_tuning() {
+        use crate::convgen::TuneParams;
+        use crate::tunedb::{StoredTuning, TuneStore};
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut store = TuneStore::new();
+        for layer in LayerClass::ALL {
+            store.insert(
+                dev.fingerprint(),
+                dev.name,
+                StoredTuning {
+                    layer,
+                    algorithm: Algorithm::Ilpm,
+                    params: TuneParams::for_shape(&layer.shape()),
+                    time_ms: 1.5,
+                    evaluated: 9,
+                    pruned: 0,
+                },
+            );
+        }
+        let path =
+            std::env::temp_dir().join(format!("ilpm_cli_routes_{}.json", std::process::id()));
+        store.save(&path).unwrap();
+        let p = path.to_str().unwrap().to_string();
+        run(&sv(&["routes", "--store", &p])).expect("routes over saved store");
+        run(&sv(&["routes", "--store", &p, "--device", "mali"])).expect("single device");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_routes_rejects_unfingerprinted_device() {
+        // store holds vega8 only; serving mali from it must fail with a
+        // fingerprint message, not silently simulate
+        use crate::tunedb::{StoredTuning, TuneStore};
+        let dev = DeviceConfig::vega8();
+        let mut store = TuneStore::new();
+        store.insert(
+            dev.fingerprint(),
+            dev.name,
+            StoredTuning {
+                layer: LayerClass::Conv2x,
+                algorithm: Algorithm::Ilpm,
+                params: crate::convgen::TuneParams::default(),
+                time_ms: 1.0,
+                evaluated: 1,
+                pruned: 0,
+            },
+        );
+        let path =
+            std::env::temp_dir().join(format!("ilpm_cli_serve_{}.json", std::process::id()));
+        store.save(&path).unwrap();
+        let p = path.to_str().unwrap().to_string();
+        let err = run(&sv(&["serve", "--routes", &p, "--device", "mali"])).unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 }
 

@@ -81,6 +81,40 @@ impl TuneParams {
         }
     }
 
+    /// Serialise to the JSON object shape shared by the legacy tuning
+    /// table and the tunedb store (see DESIGN.md §tunedb).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("wg_size".into(), Json::Num(self.wg_size as f64));
+        m.insert("tile_m".into(), Json::Num(self.tile_m as f64));
+        m.insert("tile_n".into(), Json::Num(self.tile_n as f64));
+        m.insert("tile_k".into(), Json::Num(self.tile_k as f64));
+        m.insert("tile_px".into(), Json::Num(self.tile_px as f64));
+        m.insert("k_per_thread".into(), Json::Num(self.k_per_thread as f64));
+        m.insert("cache_filters".into(), Json::Bool(self.cache_filters));
+        m.insert("transpose_output".into(), Json::Bool(self.transpose_output));
+        Json::Obj(m)
+    }
+
+    /// Parse the object written by [`Self::to_json`].
+    pub fn from_json(p: &crate::util::json::Json) -> anyhow::Result<TuneParams> {
+        use crate::util::json::Json;
+        use anyhow::anyhow;
+        let num = |k: &str| p.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("missing {k}"));
+        Ok(TuneParams {
+            wg_size: num("wg_size")?,
+            tile_m: num("tile_m")?,
+            tile_n: num("tile_n")?,
+            tile_k: num("tile_k")?,
+            tile_px: num("tile_px")?,
+            k_per_thread: num("k_per_thread")?,
+            cache_filters: p.get("cache_filters").and_then(Json::as_bool).unwrap_or(true),
+            transpose_output: p.get("transpose_output").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+
     /// Clamp every knob into a legal range for the given layer.
     pub fn clamped(mut self, shape: &ConvShape) -> TuneParams {
         let k = shape.out_channels as u64;
@@ -126,5 +160,30 @@ mod tests {
         assert!(wild.tile_m <= 256);
         assert!(wild.tile_n >= 1);
         assert!(wild.k_per_thread <= 16);
+    }
+
+    #[test]
+    fn json_codec_round_trips() {
+        let p = TuneParams {
+            wg_size: 256,
+            tile_m: 8,
+            tile_n: 128,
+            tile_k: 4,
+            tile_px: 6,
+            k_per_thread: 2,
+            cache_filters: false,
+            transpose_output: true,
+        };
+        let back = TuneParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_knob() {
+        let mut j = TuneParams::default().to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("tile_m");
+        }
+        assert!(TuneParams::from_json(&j).is_err());
     }
 }

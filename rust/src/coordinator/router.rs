@@ -47,6 +47,32 @@ impl RoutingTable {
         RoutingTable { routes }
     }
 
+    /// Build from the persistent tunedb store — the serve-time path:
+    /// zero simulator evaluations, just disk → routes. Lookup is by the
+    /// device's *fingerprint*, so a store tuned against an edited spec
+    /// returns `None` (stale entries never route silently) while other
+    /// devices in the same file stay loadable.
+    pub fn from_store(
+        store: &crate::tunedb::TuneStore,
+        dev: &crate::simulator::DeviceConfig,
+    ) -> Option<RoutingTable> {
+        let tunings = store.device(dev.fingerprint())?;
+        let mut routes = HashMap::new();
+        for layer in LayerClass::ALL {
+            if let Some(best) = tunings.best_algorithm(layer) {
+                routes.insert(
+                    layer,
+                    Route { layer, algorithm: best.algorithm, expected_ms: best.time_ms },
+                );
+            }
+        }
+        if routes.is_empty() {
+            None
+        } else {
+            Some(RoutingTable { routes })
+        }
+    }
+
     pub fn route(&self, layer: LayerClass) -> Option<&Route> {
         self.routes.get(&layer)
     }
@@ -96,6 +122,40 @@ mod tests {
         }
         let table = RoutingTable::from_tuning(&db, dev.name);
         assert_eq!(table.route(LayerClass::Conv4x).unwrap().algorithm, Algorithm::Ilpm);
+    }
+
+    #[test]
+    fn from_store_matches_from_tuning_and_respects_fingerprint() {
+        use crate::convgen::TuneParams;
+        use crate::tunedb::{StoredTuning, TuneStore};
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut store = TuneStore::new();
+        // ilpm fastest on every layer, direct as the also-ran
+        for layer in LayerClass::ALL {
+            for (alg, t) in [(Algorithm::Ilpm, 1.0), (Algorithm::Direct, 2.0)] {
+                store.insert(
+                    dev.fingerprint(),
+                    dev.name,
+                    StoredTuning {
+                        layer,
+                        algorithm: alg,
+                        params: TuneParams::for_shape(&layer.shape()),
+                        time_ms: t,
+                        evaluated: 1,
+                        pruned: 0,
+                    },
+                );
+            }
+        }
+        let table = RoutingTable::from_store(&store, &dev).expect("routes");
+        assert_eq!(table.len(), 4);
+        for layer in LayerClass::ALL {
+            assert_eq!(table.route(layer).unwrap().algorithm, Algorithm::Ilpm);
+        }
+        // an edited spec (same name!) must not see the stale routes
+        let mut edited = dev.clone();
+        edited.shared_mem_per_cu *= 2;
+        assert!(RoutingTable::from_store(&store, &edited).is_none());
     }
 
     #[test]

@@ -11,11 +11,13 @@
 //!   single-image inference [`coordinator`], the mobile-GPU
 //!   microarchitecture [`simulator`] that reproduces the paper's
 //!   evaluation (Figure 5, Tables 3–4), per-algorithm abstract-kernel
-//!   trace generators in [`convgen`], and the [`autotune`] search the
-//!   paper's §5 describes.
+//!   trace generators in [`convgen`], the [`autotune`] search the
+//!   paper's §5 describes, and the persistent [`tunedb`] store that
+//!   makes tuning results durable across processes (tune once per
+//!   device, serve from disk forever).
 //!
-//! See DESIGN.md for the paper→module map and EXPERIMENTS.md for
-//! reproduced results.
+//! See DESIGN.md for the paper→module map and the tunedb on-disk
+//! format and invalidation rules.
 
 pub mod autotune;
 pub mod cli;
@@ -24,5 +26,6 @@ pub mod coordinator;
 pub mod metrics;
 pub mod runtime;
 pub mod simulator;
+pub mod tunedb;
 pub mod util;
 pub mod workload;

@@ -1,0 +1,100 @@
+//! Stub PJRT engine, compiled when the `pjrt` feature is off.
+//!
+//! Mirrors the public API of `client.rs` so the coordinator, CLI, tests
+//! and benches type-check without the `xla` crate. Construction fails
+//! with an actionable message; the methods below are unreachable because
+//! an [`Engine`], [`LoadedModel`] or [`Session`] can never be built.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::manifest::{Artifact, Manifest};
+use super::tensor::Tensor;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` feature \
+     (the `xla` crate is not vendored offline). The simulator, autotuner, \
+     tunedb and `routes` all work without it; to execute HLO artifacts, \
+     add the `xla` dependency and build with `--features pjrt`";
+
+/// A compiled artifact ready to execute (stub: never constructed).
+pub struct LoadedModel {
+    pub artifact: Artifact,
+    /// Wall time spent compiling the HLO (for EXPERIMENTS notes).
+    pub compile_ms: f64,
+}
+
+impl LoadedModel {
+    /// Execute with f32 tensors; returns the tuple elements as tensors.
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!("{UNAVAILABLE}");
+    }
+}
+
+/// A serving session (stub: never constructed).
+pub struct Session {
+    model: std::sync::Arc<LoadedModel>,
+}
+
+impl Session {
+    /// Execute on one image; returns the first output tensor.
+    pub fn run_image(&self, _image: &Tensor) -> Result<Tensor> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn model(&self) -> &LoadedModel {
+        &self.model
+    }
+}
+
+/// The engine: one PJRT client + a cache of compiled artifacts (stub).
+pub struct Engine {
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over an artifact directory. Always
+    /// fails in a no-`pjrt` build, before touching the filesystem.
+    pub fn new(_artifact_dir: &Path) -> Result<Engine> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&self, _name: &str) -> Result<std::sync::Arc<LoadedModel>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    /// Build a serving session over pre-uploaded weights.
+    pub fn session(&self, _name: &str, _weights: &[Tensor]) -> Result<Session> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    /// Convenience: load the layer artifact for (layer class, algorithm).
+    pub fn load_layer(&self, _layer: &str, _algorithm: &str) -> Result<std::sync::Arc<LoadedModel>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    /// Names of currently cached executables.
+    pub fn cached(&self) -> Vec<String> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let err = Engine::new(Path::new("artifacts")).err().expect("stub must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}

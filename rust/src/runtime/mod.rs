@@ -6,6 +6,15 @@
 //! `f32`-tensor execution for the coordinator's hot path. Python never
 //! runs here.
 
+// The PJRT client needs the `xla` crate, which cannot be vendored in an
+// offline build. Without the `pjrt` feature a stub with the same API
+// compiles instead; it fails at `Engine::new` with a clear message, and
+// everything that does not execute HLO (manifest, tensors, weights,
+// simulator, autotune, tunedb) keeps working.
+#[cfg(feature = "pjrt")]
+mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 mod client;
 mod manifest;
 mod tensor;

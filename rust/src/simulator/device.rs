@@ -163,6 +163,68 @@ impl DeviceConfig {
         vec![Self::mali_g76_mp10(), Self::vega8(), Self::radeon_vii()]
     }
 
+    /// Stable fingerprint of the *full* spec — the tunedb's device key.
+    ///
+    /// Hashing every field (not just the name) means an edited device
+    /// spec invalidates its persisted tuning entries: simulated times
+    /// are a function of all of these numbers, so results tuned against
+    /// an older spec are stale the moment any of them changes. The
+    /// exhaustive destructuring makes adding a `DeviceConfig` field
+    /// without extending the fingerprint a compile error.
+    pub fn fingerprint(&self) -> u64 {
+        let DeviceConfig {
+            name,
+            compute_units,
+            alus_per_cu,
+            warp_width,
+            max_warps_per_cu,
+            regfile_bytes_per_cu,
+            max_regs_per_thread,
+            shared_mem_per_cu,
+            shared_banks,
+            dram_bw_bytes_per_s,
+            dram_latency_cycles,
+            l2_bytes,
+            l2_latency_cycles,
+            coalesce_bytes,
+            clock_hz,
+            dedicated_smem,
+            smem_lsu_penalty,
+            l2_bw_bytes_per_cycle,
+            dual_issue_mem,
+            gemm_library_efficiency,
+        } = self;
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.update_u64(name.len() as u64).update(name.as_bytes());
+        for v in [
+            *compute_units,
+            *alus_per_cu,
+            *warp_width,
+            *max_warps_per_cu,
+            *regfile_bytes_per_cu,
+            *max_regs_per_thread,
+            *shared_mem_per_cu,
+            *shared_banks,
+            *l2_bytes,
+            *coalesce_bytes,
+        ] {
+            h.update_u64(v as u64);
+        }
+        for f in [
+            *dram_bw_bytes_per_s,
+            *dram_latency_cycles,
+            *l2_latency_cycles,
+            *clock_hz,
+            *smem_lsu_penalty,
+            *l2_bw_bytes_per_cycle,
+            *gemm_library_efficiency,
+        ] {
+            h.update_f64(f);
+        }
+        h.update(&[*dedicated_smem as u8, *dual_issue_mem as u8]);
+        h.finish()
+    }
+
     pub fn by_name(name: &str) -> Option<DeviceConfig> {
         let lower = name.to_ascii_lowercase();
         match lower.as_str() {
@@ -201,6 +263,23 @@ mod tests {
     fn issue_width_sane() {
         assert_eq!(DeviceConfig::vega8().issue_width(), 1);
         assert_eq!(DeviceConfig::mali_g76_mp10().issue_width(), 3);
+    }
+
+    #[test]
+    fn fingerprints_distinct_and_field_sensitive() {
+        let devices = DeviceConfig::paper_devices();
+        let fps: std::collections::BTreeSet<u64> =
+            devices.iter().map(DeviceConfig::fingerprint).collect();
+        assert_eq!(fps.len(), devices.len(), "fingerprint collision across paper devices");
+        // stable across calls
+        assert_eq!(DeviceConfig::vega8().fingerprint(), DeviceConfig::vega8().fingerprint());
+        // any field edit must change the fingerprint
+        let mut edited = DeviceConfig::mali_g76_mp10();
+        edited.clock_hz *= 1.1;
+        assert_ne!(edited.fingerprint(), DeviceConfig::mali_g76_mp10().fingerprint());
+        let mut edited = DeviceConfig::mali_g76_mp10();
+        edited.dedicated_smem = true;
+        assert_ne!(edited.fingerprint(), DeviceConfig::mali_g76_mp10().fingerprint());
     }
 
     #[test]

@@ -1,0 +1,31 @@
+//! tunedb — the persistent tuning store.
+//!
+//! The paper's engineering argument (§2.3) is that an inference network
+//! is frozen: per-layer algorithm and parameter choices can be tuned
+//! *once per device* and reused forever. In-memory
+//! [`crate::autotune::TuningDatabase`] results died with the process;
+//! this module makes them durable:
+//!
+//! * [`TuneStore`] — a versioned on-disk store (JSON via
+//!   [`crate::util::json`], no new deps) written atomically
+//!   (write-then-rename), holding entries for a whole device fleet in
+//!   one file.
+//! * Entries are keyed by a **device fingerprint** —
+//!   [`crate::simulator::DeviceConfig::fingerprint`], a stable FNV-1a
+//!   hash of *every* field of the device spec — plus
+//!   `(LayerClass, Algorithm)`. Editing any device parameter changes
+//!   the fingerprint, so stale results for that device silently miss
+//!   and get re-tuned, while other devices' entries stay valid.
+//! * [`crate::autotune::tune_all_warm`] warm-starts the exhaustive
+//!   search from a store: keys already present are loaded instead of
+//!   swept (a second run evaluates zero candidates), fresh results are
+//!   merged back.
+//! * [`crate::coordinator::RoutingTable::from_store`] builds the
+//!   serve-time per-layer routing straight from disk — zero simulator
+//!   evaluations on the serving path.
+//!
+//! File format and invalidation rules are documented in DESIGN.md.
+
+mod store;
+
+pub use store::{DeviceTunings, StoredTuning, TuneStore, SCHEMA_VERSION};

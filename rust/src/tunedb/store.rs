@@ -1,0 +1,434 @@
+//! The on-disk store: versioned JSON, atomic writes, fingerprint keys.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::autotune::{SearchStats, TunedEntry, TuningDatabase};
+use crate::convgen::{Algorithm, TuneParams};
+use crate::simulator::DeviceConfig;
+use crate::util::json::Json;
+use crate::workload::LayerClass;
+
+/// Bump on any incompatible change to the file layout. Readers reject
+/// other versions outright: a tuning table silently misread is worse
+/// than one re-tuned from scratch.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One persisted tuning result for a `(layer, algorithm)` on a device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredTuning {
+    pub layer: LayerClass,
+    pub algorithm: Algorithm,
+    pub params: TuneParams,
+    /// Simulated time at the chosen configuration (ms).
+    pub time_ms: f64,
+    /// Candidates the original search evaluated (provenance; a
+    /// warm-start hit re-evaluates none of them).
+    pub evaluated: usize,
+    /// Candidates the original search pruned for not fitting the device.
+    pub pruned: usize,
+}
+
+impl StoredTuning {
+    pub fn from_entry(e: &TunedEntry) -> StoredTuning {
+        StoredTuning {
+            layer: e.layer,
+            algorithm: e.algorithm,
+            params: e.params,
+            time_ms: e.time_ms,
+            evaluated: e.stats.evaluated,
+            pruned: e.stats.pruned,
+        }
+    }
+
+    /// Rehydrate into an autotune entry. Simulation reports are not
+    /// persisted (they are recomputable), so `reports` is empty.
+    pub fn to_entry(&self, device: &str) -> TunedEntry {
+        TunedEntry {
+            device: device.to_string(),
+            layer: self.layer,
+            algorithm: self.algorithm,
+            params: self.params,
+            time_ms: self.time_ms,
+            reports: Vec::new(),
+            stats: SearchStats { evaluated: self.evaluated, pruned: self.pruned },
+        }
+    }
+}
+
+/// All persisted tunings for one device fingerprint.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceTunings {
+    /// Human-readable device name (display only; the fingerprint is the
+    /// key — two specs sharing a name do not share entries).
+    pub device: String,
+    entries: HashMap<(LayerClass, Algorithm), StoredTuning>,
+}
+
+impl DeviceTunings {
+    pub fn get(&self, layer: LayerClass, alg: Algorithm) -> Option<&StoredTuning> {
+        self.entries.get(&(layer, alg))
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &StoredTuning> {
+        self.entries.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fastest stored algorithm for a layer, if any.
+    pub fn best_algorithm(&self, layer: LayerClass) -> Option<&StoredTuning> {
+        self.entries
+            .values()
+            .filter(|t| t.layer == layer)
+            .min_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap())
+    }
+}
+
+/// The persistent tuning store: a fleet of devices in one file.
+#[derive(Debug, Clone, Default)]
+pub struct TuneStore {
+    devices: HashMap<u64, DeviceTunings>,
+}
+
+impl TuneStore {
+    pub fn new() -> TuneStore {
+        TuneStore::default()
+    }
+
+    /// Look up one `(device fingerprint, layer, algorithm)` key.
+    pub fn get(&self, fp: u64, layer: LayerClass, alg: Algorithm) -> Option<&StoredTuning> {
+        self.devices.get(&fp)?.get(layer, alg)
+    }
+
+    pub fn contains(&self, fp: u64, layer: LayerClass, alg: Algorithm) -> bool {
+        self.get(fp, layer, alg).is_some()
+    }
+
+    /// Insert or overwrite one entry under a device fingerprint.
+    pub fn insert(&mut self, fp: u64, device: &str, t: StoredTuning) {
+        let d = self.devices.entry(fp).or_default();
+        if d.device.is_empty() {
+            d.device = device.to_string();
+        }
+        d.entries.insert((t.layer, t.algorithm), t);
+    }
+
+    /// Merge one freshly-tuned entry for `dev` into the store.
+    pub fn merge_entry(&mut self, dev: &DeviceConfig, e: &TunedEntry) {
+        self.insert(dev.fingerprint(), dev.name, StoredTuning::from_entry(e));
+    }
+
+    /// Merge every entry of an in-memory database. `devices` supplies
+    /// the fingerprints; entries for devices not listed are skipped
+    /// (a name alone cannot be fingerprinted).
+    pub fn merge_database(&mut self, db: &TuningDatabase, devices: &[DeviceConfig]) {
+        for dev in devices {
+            for e in db.entries().filter(|e| e.device == dev.name) {
+                self.merge_entry(dev, e);
+            }
+        }
+    }
+
+    /// Rehydrate the stored entries for one device into an in-memory
+    /// database (empty when the fingerprint has no entries).
+    pub fn to_database(&self, dev: &DeviceConfig) -> TuningDatabase {
+        let mut db = TuningDatabase::default();
+        if let Some(d) = self.devices.get(&dev.fingerprint()) {
+            for t in d.entries() {
+                db.insert(t.to_entry(dev.name));
+            }
+        }
+        db
+    }
+
+    /// The stored tunings for one device fingerprint.
+    pub fn device(&self, fp: u64) -> Option<&DeviceTunings> {
+        self.devices.get(&fp)
+    }
+
+    /// All `(fingerprint, tunings)` pairs, unordered.
+    pub fn devices(&self) -> impl Iterator<Item = (u64, &DeviceTunings)> {
+        self.devices.iter().map(|(fp, d)| (*fp, d))
+    }
+
+    /// Drop every entry for one device fingerprint.
+    pub fn remove_device(&mut self, fp: u64) -> bool {
+        self.devices.remove(&fp).is_some()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total entries across all devices.
+    pub fn len(&self) -> usize {
+        self.devices.values().map(DeviceTunings::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.values().all(DeviceTunings::is_empty)
+    }
+
+    // ---- persistence -------------------------------------------------
+
+    /// Serialise deterministically: devices ordered by fingerprint,
+    /// entries by `(layer, algorithm)` name, so identical stores yield
+    /// byte-identical files (diff-able, content-addressable).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut devices: Vec<(&u64, &DeviceTunings)> = self.devices.iter().collect();
+        devices.sort_by_key(|(fp, _)| **fp);
+        let dev_arr: Vec<Json> = devices
+            .into_iter()
+            .map(|(fp, d)| {
+                let mut entries: Vec<&StoredTuning> = d.entries.values().collect();
+                entries.sort_by_key(|t| (t.layer.name(), t.algorithm.name()));
+                let ent_arr: Vec<Json> = entries
+                    .into_iter()
+                    .map(|t| {
+                        let mut m = BTreeMap::new();
+                        m.insert("layer".into(), Json::Str(t.layer.name().into()));
+                        m.insert("algorithm".into(), Json::Str(t.algorithm.name().into()));
+                        m.insert("time_ms".into(), Json::Num(t.time_ms));
+                        m.insert("evaluated".into(), Json::Num(t.evaluated as f64));
+                        m.insert("pruned".into(), Json::Num(t.pruned as f64));
+                        m.insert("params".into(), t.params.to_json());
+                        Json::Obj(m)
+                    })
+                    .collect();
+                let mut m = BTreeMap::new();
+                m.insert("fingerprint".into(), Json::Str(format!("{fp:016x}")));
+                m.insert("device".into(), Json::Str(d.device.clone()));
+                m.insert("entries".into(), Json::Arr(ent_arr));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Num(SCHEMA_VERSION as f64));
+        root.insert("tool".into(), Json::Str("ilpm-tunedb".into()));
+        root.insert("devices".into(), Json::Arr(dev_arr));
+        Json::Obj(root)
+    }
+
+    /// Parse a store serialised by [`Self::to_json`]. Rejects any other
+    /// schema version with an actionable error.
+    pub fn parse(text: &str) -> Result<TuneStore> {
+        let root = Json::parse(text).context("tunedb is not valid JSON")?;
+        if root.as_arr().is_some() {
+            // the pre-tunedb `TuningDatabase::save` format was a flat
+            // array; give those users a way out instead of a dead end
+            bail!(
+                "this is a legacy flat tuning table, not a tunedb store; \
+                 load it with `TuningDatabase::load` or regenerate it with \
+                 `ilpm tune --out` against a fresh path"
+            );
+        }
+        let schema = root
+            .get("schema")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("missing schema version"))?;
+        if schema != SCHEMA_VERSION {
+            bail!(
+                "unsupported tunedb schema v{schema} (this build reads v{SCHEMA_VERSION}); \
+                 re-tune with `ilpm tune --out`"
+            );
+        }
+        let mut store = TuneStore::new();
+        let devices = root
+            .get("devices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing devices array"))?;
+        for (i, d) in devices.iter().enumerate() {
+            let fp_hex = d
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("device {i}: missing fingerprint"))?;
+            let fp = u64::from_str_radix(fp_hex, 16)
+                .map_err(|_| anyhow!("device {i}: bad fingerprint {fp_hex:?}"))?;
+            let name = d
+                .get("device")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("device {i}: missing name"))?;
+            let entries = d
+                .get("entries")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("device {i}: missing entries"))?;
+            for (j, e) in entries.iter().enumerate() {
+                let t = parse_entry(e).with_context(|| format!("device {name}, entry {j}"))?;
+                store.insert(fp, name, t);
+            }
+            // a tuned-but-empty device is still worth remembering
+            store.devices.entry(fp).or_default().device = name.to_string();
+        }
+        Ok(store)
+    }
+
+    /// Load a store from disk. A missing file is an error; use
+    /// [`Self::load_or_empty`] where absence means "cold start".
+    pub fn load(path: &Path) -> Result<TuneStore> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read tunedb {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse tunedb {}", path.display()))
+    }
+
+    /// Load a store, treating a missing file as an empty store. A file
+    /// that exists but fails to parse is still an error — corrupt state
+    /// should never be silently discarded.
+    pub fn load_or_empty(path: &Path) -> Result<TuneStore> {
+        if path.exists() {
+            Self::load(path)
+        } else {
+            Ok(TuneStore::new())
+        }
+    }
+
+    /// Persist atomically: serialise to a sibling temp file, then
+    /// rename over the target. Readers never observe a half-written
+    /// store, and a crash mid-save leaves the previous version intact.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create dir {}", dir.display()))?;
+        }
+        let stem = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or("tunedb.json");
+        let tmp = path.with_file_name(format!(".{stem}.tmp.{}", std::process::id()));
+        let text = self.to_json().to_json_string();
+        std::fs::write(&tmp, text.as_bytes())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, path).with_context(|| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("rename {} -> {}", tmp.display(), path.display())
+        })?;
+        Ok(())
+    }
+}
+
+fn parse_entry(e: &Json) -> Result<StoredTuning> {
+    let get_str =
+        |k: &str| e.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("missing {k}"));
+    let layer_name = get_str("layer")?;
+    let layer = LayerClass::from_name(layer_name)
+        .ok_or_else(|| anyhow!("unknown layer {layer_name:?}"))?;
+    let alg_name = get_str("algorithm")?;
+    let algorithm = Algorithm::from_name(alg_name)
+        .ok_or_else(|| anyhow!("unknown algorithm {alg_name:?}"))?;
+    let params = TuneParams::from_json(
+        e.get("params").ok_or_else(|| anyhow!("missing params"))?,
+    )?;
+    Ok(StoredTuning {
+        layer,
+        algorithm,
+        params,
+        time_ms: e
+            .get("time_ms")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("missing time_ms"))?,
+        evaluated: e.get("evaluated").and_then(Json::as_usize).unwrap_or(0),
+        pruned: e.get("pruned").and_then(Json::as_usize).unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(layer: LayerClass, alg: Algorithm, t: f64) -> StoredTuning {
+        StoredTuning {
+            layer,
+            algorithm: alg,
+            params: TuneParams::default(),
+            time_ms: t,
+            evaluated: 42,
+            pruned: 3,
+        }
+    }
+
+    #[test]
+    fn insert_get_and_best() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let fp = dev.fingerprint();
+        let mut s = TuneStore::new();
+        s.insert(fp, dev.name, sample(LayerClass::Conv4x, Algorithm::Ilpm, 1.0));
+        s.insert(fp, dev.name, sample(LayerClass::Conv4x, Algorithm::Direct, 2.0));
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(fp, LayerClass::Conv4x, Algorithm::Ilpm));
+        assert!(!s.contains(fp, LayerClass::Conv2x, Algorithm::Ilpm));
+        let best = s.device(fp).unwrap().best_algorithm(LayerClass::Conv4x).unwrap();
+        assert_eq!(best.algorithm, Algorithm::Ilpm);
+    }
+
+    #[test]
+    fn serialisation_is_deterministic() {
+        let mut s = TuneStore::new();
+        for dev in DeviceConfig::paper_devices() {
+            s.insert(dev.fingerprint(), dev.name, sample(LayerClass::Conv2x, Algorithm::Ilpm, 0.5));
+            s.insert(dev.fingerprint(), dev.name, sample(LayerClass::Conv5x, Algorithm::Direct, 0.7));
+        }
+        let a = s.to_json().to_json_string();
+        let b = TuneStore::parse(&a).unwrap().to_json().to_json_string();
+        assert_eq!(a, b, "parse∘serialise must be the identity on the wire format");
+    }
+
+    #[test]
+    fn schema_version_rejected() {
+        let mut j = TuneStore::new().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::Num((SCHEMA_VERSION + 1) as f64));
+        }
+        let err = TuneStore::parse(&j.to_json_string()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("schema"), "{msg}");
+    }
+
+    #[test]
+    fn legacy_flat_table_is_diagnosed() {
+        // the old `TuningDatabase::save` wrote a flat JSON array; the
+        // store must name the problem instead of "missing schema"
+        let err = TuneStore::parse("[]").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("legacy"), "{msg}");
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_temp_files() {
+        let dir = std::env::temp_dir().join(format!("ilpm_tunedb_{}", std::process::id()));
+        let path = dir.join("store.json");
+        let dev = DeviceConfig::vega8();
+        let mut s = TuneStore::new();
+        s.insert(dev.fingerprint(), dev.name, sample(LayerClass::Conv3x, Algorithm::Im2col, 3.0));
+        s.save(&path).unwrap();
+        // overwrite must also succeed (rename over existing file)
+        s.insert(dev.fingerprint(), dev.name, sample(LayerClass::Conv3x, Algorithm::Ilpm, 1.0));
+        s.save(&path).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["store.json".to_string()], "stray files: {names:?}");
+        let back = TuneStore::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_empty_missing_vs_corrupt() {
+        let missing = std::env::temp_dir().join("ilpm_tunedb_definitely_missing.json");
+        assert!(TuneStore::load_or_empty(&missing).unwrap().is_empty());
+        let corrupt = std::env::temp_dir().join(format!("ilpm_tunedb_corrupt_{}.json", std::process::id()));
+        std::fs::write(&corrupt, b"{not json").unwrap();
+        assert!(TuneStore::load_or_empty(&corrupt).is_err());
+        std::fs::remove_file(&corrupt).ok();
+    }
+}

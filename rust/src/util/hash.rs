@@ -1,0 +1,97 @@
+//! FNV-1a 64-bit — a tiny, stable, dependency-free hash.
+//!
+//! The tunedb keys persistent entries by a *fingerprint* of the full
+//! [`crate::simulator::DeviceConfig`]; that hash must be identical
+//! across processes, platforms and compiler versions, which rules out
+//! `std::hash` (SipHash with random keys and no stability guarantee).
+//! FNV-1a over a canonical byte encoding is deterministic forever.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a 64-bit hasher.
+#[derive(Debug, Clone)]
+pub struct Fnv1a {
+    state: u64,
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a { state: FNV_OFFSET }
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a::default()
+    }
+
+    /// Absorb bytes. Length-prefix variable-length fields yourself when
+    /// concatenation ambiguity matters (the fingerprint does).
+    pub fn update(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Absorb a u64 as 8 little-endian bytes.
+    pub fn update_u64(&mut self, v: u64) -> &mut Self {
+        self.update(&v.to_le_bytes())
+    }
+
+    /// Absorb an f64 via its bit pattern (total, NaN-sensitive).
+    pub fn update_f64(&mut self, v: f64) -> &mut Self {
+        self.update_u64(v.to_bits())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot FNV-1a of a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let mut h = Fnv1a::new();
+        h.update(b"foo").update(b"bar");
+        assert_eq!(h.finish(), fnv1a(b"foobar"));
+    }
+
+    #[test]
+    fn field_order_matters() {
+        let mut a = Fnv1a::new();
+        a.update_u64(1).update_u64(2);
+        let mut b = Fnv1a::new();
+        b.update_u64(2).update_u64(1);
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn f64_is_bit_exact() {
+        let mut a = Fnv1a::new();
+        a.update_f64(1.0);
+        let mut b = Fnv1a::new();
+        b.update_f64(1.0 + f64::EPSILON);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -1,8 +1,9 @@
 //! Small self-contained substrates the offline build denies us crates for:
-//! JSON parsing, a seedable PRNG, a thread pool, a property-testing
-//! mini-framework, and a benchmark timer.
+//! JSON parsing, a stable hash, a seedable PRNG, a thread pool, a
+//! property-testing mini-framework, and a benchmark timer.
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod prng;

@@ -10,6 +10,10 @@ use ilpm::workload::{LayerClass, RequestGen, TraceKind};
 use std::path::{Path, PathBuf};
 
 fn artifact_dir() -> Option<PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — no xla runtime available");
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)

@@ -9,6 +9,10 @@ use ilpm::runtime::{Engine, Tensor};
 use std::path::Path;
 
 fn artifact_dir() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — no xla runtime available");
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)

@@ -1,0 +1,213 @@
+//! Integration: the persistent tuning store end to end.
+//!
+//! Covers the tunedb acceptance story: random stores round-trip through
+//! disk bit-exactly (property test), wrong schema versions are rejected,
+//! editing a `DeviceConfig` field invalidates exactly that device's
+//! entries, and a `tune → save → load → tune` cycle warm-starts with
+//! zero simulator evaluations while serving routes straight from disk.
+
+use ilpm::autotune::tune_all_warm;
+use ilpm::convgen::{Algorithm, TuneParams};
+use ilpm::coordinator::RoutingTable;
+use ilpm::simulator::DeviceConfig;
+use ilpm::tunedb::{StoredTuning, TuneStore, SCHEMA_VERSION};
+use ilpm::util::prng::Rng;
+use ilpm::util::prop::forall;
+use ilpm::workload::LayerClass;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ilpm_{name}_{}.json", std::process::id()))
+}
+
+fn random_params(r: &mut Rng) -> TuneParams {
+    TuneParams {
+        wg_size: *r.choose(&[16u64, 32, 64, 128, 256, 512]),
+        tile_m: *r.choose(&[8u64, 16, 32, 64]),
+        tile_n: *r.choose(&[16u64, 32, 64, 128, 256]),
+        tile_k: *r.choose(&[4u64, 8, 16, 32]),
+        tile_px: *r.choose(&[2u64, 4, 6, 8, 12]),
+        k_per_thread: *r.choose(&[1u64, 2, 4, 8, 16]),
+        cache_filters: r.below(2) == 0,
+        transpose_output: r.below(2) == 0,
+    }
+}
+
+/// A random store over the paper fleet: some subset of devices, each
+/// with a random subset of (layer, algorithm) keys.
+fn random_store(seed: u64) -> TuneStore {
+    let mut r = Rng::new(seed);
+    let mut store = TuneStore::new();
+    for dev in DeviceConfig::paper_devices() {
+        if r.below(4) == 0 {
+            continue; // leave some devices untuned
+        }
+        for layer in LayerClass::ALL {
+            for alg in Algorithm::ALL {
+                if !alg.supports(&layer.shape()) || r.below(3) == 0 {
+                    continue;
+                }
+                store.insert(
+                    dev.fingerprint(),
+                    dev.name,
+                    StoredTuning {
+                        layer,
+                        algorithm: alg,
+                        params: random_params(&mut r),
+                        // dyadic fractions survive the f64→text→f64 trip
+                        time_ms: r.below(1_000_000) as f64 / 64.0,
+                        evaluated: r.below(500) as usize,
+                        pruned: r.below(50) as usize,
+                    },
+                );
+            }
+        }
+    }
+    store
+}
+
+#[test]
+fn store_round_trip_property() {
+    let path = tmp("tunedb_prop");
+    forall(
+        40,
+        0x7ed6_db5e,
+        |r| r.next_u64(),
+        |&seed| {
+            let store = random_store(seed);
+            store.save(&path).map_err(|e| format!("save: {e:#}"))?;
+            let back = TuneStore::load(&path).map_err(|e| format!("load: {e:#}"))?;
+            if back.len() != store.len() {
+                return Err(format!("len {} != {}", back.len(), store.len()));
+            }
+            for dev in DeviceConfig::paper_devices() {
+                let fp = dev.fingerprint();
+                for layer in LayerClass::ALL {
+                    for alg in Algorithm::ALL {
+                        let (a, b) = (store.get(fp, layer, alg), back.get(fp, layer, alg));
+                        if a != b {
+                            return Err(format!(
+                                "{}/{}/{} diverged: {a:?} vs {b:?}",
+                                dev.name,
+                                layer.name(),
+                                alg.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            // identical routes after the round trip
+            for dev in DeviceConfig::paper_devices() {
+                let before = RoutingTable::from_store(&store, &dev);
+                let after = RoutingTable::from_store(&back, &dev);
+                match (&before, &after) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        for layer in LayerClass::ALL {
+                            if x.route(layer).map(|r| r.algorithm)
+                                != y.route(layer).map(|r| r.algorithm)
+                            {
+                                return Err(format!("{}: route diverged", dev.name));
+                            }
+                        }
+                    }
+                    _ => return Err(format!("{}: routability diverged", dev.name)),
+                }
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn schema_version_mismatch_is_rejected() {
+    let store = random_store(7);
+    let text = store.to_json().to_json_string();
+    // forge a future schema version
+    let forged = text.replacen(
+        &format!("\"schema\":{SCHEMA_VERSION}"),
+        &format!("\"schema\":{}", SCHEMA_VERSION + 41),
+        1,
+    );
+    assert_ne!(text, forged, "test must actually rewrite the version field");
+    let err = TuneStore::parse(&forged).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("schema") && msg.contains("tune"), "unhelpful error: {msg}");
+    // and a file with no schema field at all
+    assert!(TuneStore::parse("{\"devices\":[]}").is_err());
+}
+
+#[test]
+fn editing_a_device_field_invalidates_only_that_device() {
+    let mali = DeviceConfig::mali_g76_mp10();
+    let vega = DeviceConfig::vega8();
+    let mut store = TuneStore::new();
+    for dev in [&mali, &vega] {
+        for layer in LayerClass::ALL {
+            store.insert(
+                dev.fingerprint(),
+                dev.name,
+                StoredTuning {
+                    layer,
+                    algorithm: Algorithm::Ilpm,
+                    params: TuneParams::for_shape(&layer.shape()),
+                    time_ms: 1.0,
+                    evaluated: 5,
+                    pruned: 0,
+                },
+            );
+        }
+    }
+    // edit one microarchitectural field of mali — same name, new spec
+    let mut edited = mali.clone();
+    edited.l2_bytes *= 2;
+    assert_ne!(edited.fingerprint(), mali.fingerprint());
+    // the edited spec misses everywhere; the untouched devices still hit
+    assert!(store.get(edited.fingerprint(), LayerClass::Conv4x, Algorithm::Ilpm).is_none());
+    assert!(RoutingTable::from_store(&store, &edited).is_none());
+    assert!(store.get(mali.fingerprint(), LayerClass::Conv4x, Algorithm::Ilpm).is_some());
+    assert!(RoutingTable::from_store(&store, &vega).is_some());
+    assert_eq!(RoutingTable::from_store(&store, &mali).unwrap().len(), 4);
+}
+
+#[test]
+fn tune_save_load_warm_starts_with_zero_evaluations() {
+    let dev = DeviceConfig::mali_g76_mp10();
+    let path = tmp("tunedb_warm");
+    // cold run: everything is a miss, the sweep pays real evaluations
+    let mut store = TuneStore::load_or_empty(&path).expect("cold store");
+    assert!(store.is_empty());
+    let (db_cold, cold) = tune_all_warm(&[dev.clone()], 8, &mut store);
+    assert_eq!(cold.hits, 0);
+    assert_eq!(cold.misses, 20);
+    assert!(cold.evaluated > 0, "cold run must evaluate candidates");
+    assert_eq!(db_cold.len(), 20);
+    store.save(&path).expect("persist tunedb");
+
+    // warm run in a "new process": load from disk, evaluate nothing
+    let mut store2 = TuneStore::load(&path).expect("reload tunedb");
+    let (db_warm, warm) = tune_all_warm(&[dev.clone()], 8, &mut store2);
+    assert_eq!(warm.evaluated, 0, "second run must evaluate zero candidates");
+    assert_eq!(warm.misses, 0);
+    assert_eq!(warm.hits, 20);
+    assert_eq!(db_warm.len(), db_cold.len());
+
+    // serve-time: routes from disk match what the cold tuning chose
+    let table_disk = RoutingTable::from_store(&store2, &dev).expect("routes from store");
+    let table_cold = RoutingTable::from_tuning(&db_cold, dev.name);
+    assert_eq!(table_disk.len(), 4, "full routing table from disk");
+    for layer in LayerClass::ALL {
+        let cold_r = table_cold.route(layer).expect("cold route");
+        let disk_r = table_disk.route(layer).expect("disk route");
+        assert_eq!(cold_r.algorithm, disk_r.algorithm, "{}", layer.name());
+        assert!(
+            (cold_r.expected_ms - disk_r.expected_ms).abs() < 1e-9,
+            "{}: {} vs {}",
+            layer.name(),
+            cold_r.expected_ms,
+            disk_r.expected_ms
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
