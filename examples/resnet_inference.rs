@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let engine = InferenceEngine::start(&dir, &model, workers, 8)?;
+    let engine = InferenceEngine::start_pjrt(&dir, &model, workers, 8)?;
     println!("engine ready in {:?} (compile + weight upload)", t0.elapsed());
 
     let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);

@@ -63,6 +63,13 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got {v}")),
+        }
+    }
+
     pub fn get_bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
@@ -99,5 +106,14 @@ mod tests {
     fn bad_integer_is_error() {
         let a = Args::parse(&sv(&["--n", "abc"]), &["n"]).unwrap();
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn floats_parse_with_default() {
+        let a = Args::parse(&sv(&["--scale", "0.25"]), &["scale", "other"]).unwrap();
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.25);
+        assert_eq!(a.get_f64("other", 1.0).unwrap(), 1.0);
+        let bad = Args::parse(&sv(&["--scale", "x"]), &["scale"]).unwrap();
+        assert!(bad.get_f64("scale", 1.0).is_err());
     }
 }

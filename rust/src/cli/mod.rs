@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //! * `serve`   — run the single-image inference engine on a request stream
-//! * `bench`   — regenerate a paper artifact: `fig5`, `table3`, `table4`
+//!               (`--backend pjrt` over AOT artifacts, or `--backend sim`
+//!               for the route-aware simulated executor)
+//! * `bench`   — regenerate a paper artifact: `fig5`, `table3`, `table4`,
+//!               or the `serve` trajectory (BENCH_serve.json)
 //! * `tune`    — run the auto-tuner, warm-started from a tunedb store
 //! * `routes`  — print stored per-layer winners from a tunedb store
 //! * `simulate`— simulate one (algorithm, layer, device) and dump counters
@@ -12,13 +15,13 @@ mod args;
 
 pub use args::Args;
 
-use crate::autotune::{tune, tune_all_warm};
+use crate::autotune::{tune, tune_all, tune_all_warm};
 use crate::convgen::Algorithm;
-use crate::coordinator::{InferenceEngine, RoutingTable};
-use crate::metrics::{render_fig5, fig5_table, table3, table4};
+use crate::coordinator::{InferenceEngine, RoutingTable, SimBackend};
+use crate::metrics::{fig5_table, render_fig5, table3, table4, LatencySummary};
 use crate::simulator::DeviceConfig;
 use crate::tunedb::TuneStore;
-use crate::workload::{LayerClass, RequestGen, TraceKind};
+use crate::workload::{LayerClass, RequestGen, ResNetDepth, TraceKind};
 use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
@@ -28,12 +31,18 @@ ilpm — single-image CNN inference engine + mobile-GPU simulator
 USAGE: ilpm <command> [flags]
 
 COMMANDS:
-  serve     --model <name> --n <requests> [--workers N] [--artifacts DIR]
-            [--routes PATH [--device ...]]
-            run the inference engine end to end; with --routes, load the
-            per-layer algorithm table from a tunedb store (no simulation)
-  bench     <fig5|table3|table4> [--device mali|vega8|radeonvii]
-            regenerate a paper table/figure from tuned simulations
+  serve     --n <requests> [--workers N] [--queue N] [--backend pjrt|sim]
+            pjrt: --model <name> [--artifacts DIR] [--routes PATH]
+                  execute AOT artifacts (needs the `pjrt` feature build)
+            sim:  (--routes PATH | --uniform ALG) [--device ...]
+                  [--network resnet18] [--time-scale X]
+                  closed-loop load test on the modeled device: per-layer
+                  algorithms come from the tunedb routes, latency from
+                  the simulator (works in every build)
+  bench     <fig5|table3|table4|serve> [--device mali|vega8|radeonvii|all]
+            regenerate a paper table/figure from tuned simulations;
+            `serve` sweeps device x routing policy through the sim
+            backend and writes BENCH_serve.json
   tune      [--device mali|vega8|radeonvii|all] [--threads N] [--out PATH]
             auto-tune every (layer, algorithm); with --out, warm-start
             from the store at PATH and merge new results back into it
@@ -48,6 +57,38 @@ COMMANDS:
 
 fn artifact_dir(a: &Args) -> PathBuf {
     PathBuf::from(a.get_or("artifacts", "artifacts"))
+}
+
+/// Reject zero for counts that must drive at least one request or
+/// worker (a zero would panic deep inside the engine instead of
+/// erroring usefully).
+fn positive(v: usize, flag: &str) -> Result<usize, String> {
+    if v == 0 {
+        Err(format!("--{flag} must be at least 1"))
+    } else {
+        Ok(v)
+    }
+}
+
+/// Load the per-layer routing table for `dev` from a tunedb store —
+/// the shared serve-time path of both backends. The error names the
+/// fingerprint and the re-tune command (`alias` is the `--device`
+/// spelling the user passed, echoed back in that command).
+fn load_routes_from_store(
+    path: &str,
+    dev: &DeviceConfig,
+    alias: &str,
+) -> Result<RoutingTable, String> {
+    let store = TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?;
+    RoutingTable::from_store(&store, dev).ok_or_else(|| {
+        format!(
+            "device '{}' (fingerprint {:016x}) has no entries in {path} — \
+             untuned device or stale fingerprint after a spec edit; \
+             re-run `ilpm tune --device {alias} --out {path}`",
+            dev.name,
+            dev.fingerprint(),
+        )
+    })
 }
 
 fn device(a: &Args) -> Result<DeviceConfig, String> {
@@ -101,30 +142,148 @@ pub fn run(argv: &[String]) -> Result<(), String> {
 fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let a = Args::parse(
         argv,
-        &["model", "n", "workers", "artifacts", "queue", "rate", "routes", "device"],
+        &[
+            "model", "n", "workers", "artifacts", "queue", "rate", "routes", "device",
+            "backend", "network", "uniform", "time-scale",
+        ],
     )?;
-    let dir = artifact_dir(&a);
+    // flags that only one backend reads are rejected under the other,
+    // not silently ignored
+    let reject = |flags: &[&str], backend: &str| -> Result<(), String> {
+        for &f in flags {
+            if a.get(f).is_some() {
+                return Err(format!("--{f} has no effect with --backend {backend}"));
+            }
+        }
+        Ok(())
+    };
+    match a.get_or("backend", "pjrt") {
+        "pjrt" => {
+            reject(&["uniform", "network", "time-scale"], "pjrt")?;
+            cmd_serve_pjrt(&a)
+        }
+        "sim" => {
+            reject(&["model", "artifacts"], "sim")?;
+            cmd_serve_sim(&a)
+        }
+        other => Err(format!("unknown backend '{other}' (pjrt|sim)")),
+    }
+}
+
+/// `serve --backend sim` — route-aware simulated serving: per-layer
+/// algorithms from the tunedb store (or a uniform baseline), latencies
+/// from the device model. Works in every build; this is the closed-loop
+/// load test of the whole stack.
+fn cmd_serve_sim(a: &Args) -> Result<(), String> {
+    let dev = device(a)?;
+    let n = positive(a.get_usize("n", 16)?, "n")?;
+    let workers = positive(a.get_usize("workers", 1)?, "workers")?;
+    let queue = a.get_usize("queue", 8)?;
+    let time_scale = a.get_f64("time-scale", 1.0)?;
+    let depth = ResNetDepth::by_name(a.get_or("network", "resnet18"))
+        .ok_or_else(|| "unknown --network (resnet18|34|50|101|152)".to_string())?;
+    let table = match (a.get("routes"), a.get("uniform")) {
+        (Some(_), Some(_)) => {
+            return Err(
+                "--routes and --uniform are contradictory: tuned per-layer routing \
+                 or a uniform baseline, pick one"
+                    .to_string(),
+            )
+        }
+        (Some(path), None) => {
+            let table = load_routes_from_store(path, &dev, a.get_or("device", "mali"))?;
+            println!("routes for {} (from {path}, tuned):", dev.name);
+            table
+        }
+        (None, Some(alg_name)) => {
+            let alg = Algorithm::from_name(alg_name)
+                .ok_or_else(|| format!("unknown algorithm '{alg_name}'"))?;
+            println!("routes for {} (uniform {}):", dev.name, alg.name());
+            RoutingTable::uniform(alg)
+        }
+        (None, None) => {
+            return Err(
+                "serve --backend sim needs --routes <tunedb> (tuned per-layer \
+                 routing) or --uniform <alg> (baseline)"
+                    .to_string(),
+            )
+        }
+    };
+    let backend = SimBackend::new(&dev, &table, depth, time_scale).map_err(|e| format!("{e:#}"))?;
+    println!(
+        "{:<10} {:>10} {:>8} {:>12} {:>6} {:>12}",
+        "layer", "algorithm", "kernels", "ms/conv", "convs", "ms total"
+    );
+    for p in backend.plan() {
+        println!(
+            "{:<10} {:>10} {:>8} {:>12.3} {:>6} {:>12.3}",
+            p.layer.name(),
+            p.algorithm.name(),
+            p.kernels,
+            p.sim_ms_per_conv,
+            p.convs,
+            p.sim_ms_total()
+        );
+    }
+    println!(
+        "simulated {} pass on {}: {:.3} ms (time scale {time_scale})",
+        depth.name,
+        dev.name,
+        backend.network_ms()
+    );
+    let img_shape = backend.input_shape();
+    eprintln!("starting engine: backend={} workers={workers}", backend.label());
+    let engine = InferenceEngine::start(backend, workers, queue)
+        .map_err(|e| format!("engine start: {e:#}"))?;
+    let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
+    let (summary, results) = engine
+        .run_closed_loop(&mut gen, n)
+        .map_err(|e| format!("serving: {e:#}"))?;
+    let verdict = print_serve_summary(n, &summary, engine.stats.as_ref());
+    let classes: Vec<usize> = results.iter().take(8).map(|r| r.class).collect();
+    println!("first predicted classes: {classes:?}");
+    engine.shutdown();
+    verdict
+}
+
+/// Shared tail of both serve paths: the latency line plus the engine's
+/// error counter, so failed requests are visible, not silent. Returns
+/// an error when any request failed — serve must exit nonzero so CI
+/// smoke steps gate on it.
+fn print_serve_summary(
+    n: usize,
+    summary: &LatencySummary,
+    stats: &crate::coordinator::EngineStats,
+) -> Result<(), String> {
+    use std::sync::atomic::Ordering;
+    println!("served {n} single-image requests: {summary}");
+    let errors = stats.errors.load(Ordering::Relaxed);
+    println!(
+        "engine counters: submitted={} completed={} errors={errors}{}",
+        stats.submitted.load(Ordering::Relaxed),
+        stats.completed.load(Ordering::Relaxed),
+        if errors > 0 { "  <-- some requests FAILED" } else { "" }
+    );
+    if errors > 0 {
+        Err(format!("{errors} of {n} requests failed (see engine counters above)"))
+    } else {
+        Ok(())
+    }
+}
+
+fn cmd_serve_pjrt(a: &Args) -> Result<(), String> {
+    let dir = artifact_dir(a);
     let mut model = a.get_or("model", "resnet18_ilpm_r56").to_string();
-    let n = a.get_usize("n", 16)?;
-    let workers = a.get_usize("workers", 1)?;
+    let n = positive(a.get_usize("n", 16)?, "n")?;
+    let workers = positive(a.get_usize("workers", 1)?, "workers")?;
     let queue = a.get_usize("queue", 8)?;
     // Per-layer routing from the persistent store — the paper's §2.3
     // deployment story: tuning happened once, offline; serving pays
     // zero simulator evaluations. Unless --model overrides it, the
     // routes pick which AOT model variant executes.
     if let Some(path) = a.get("routes") {
-        let dev = device(&a)?;
-        let store = TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?;
-        let table = RoutingTable::from_store(&store, &dev).ok_or_else(|| {
-            format!(
-                "device '{}' (fingerprint {:016x}) has no entries in {path} — \
-                 untuned device or stale fingerprint after a spec edit; \
-                 re-run `ilpm tune --device {} --out {path}`",
-                dev.name,
-                dev.fingerprint(),
-                a.get_or("device", "mali"),
-            )
-        })?;
+        let dev = device(a)?;
+        let table = load_routes_from_store(path, &dev, a.get_or("device", "mali"))?;
         println!("routes for {} (from {path}, no simulation):", dev.name);
         print_route_table(&table, &dev);
         if a.get("model").is_none() {
@@ -159,23 +318,29 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .ok_or_else(|| format!("model '{model}' not in manifest"))?;
     let img_shape = art.inputs[0].shape.clone();
     eprintln!("starting engine: model={model} workers={workers} (compiling…)");
-    let engine = InferenceEngine::start(&dir, &model, workers, queue)
+    let engine = InferenceEngine::start_pjrt(&dir, &model, workers, queue)
         .map_err(|e| format!("engine start: {e:#}"))?;
     let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
     let (summary, results) = engine
         .run_closed_loop(&mut gen, n)
         .map_err(|e| format!("serving: {e:#}"))?;
-    println!("served {n} single-image requests: {summary}");
+    let verdict = print_serve_summary(n, &summary, engine.stats.as_ref());
     let classes: Vec<usize> = results.iter().take(8).map(|r| r.class).collect();
     println!("first predicted classes: {classes:?}");
     engine.shutdown();
-    Ok(())
+    verdict
 }
 
 fn cmd_bench(argv: &[String]) -> Result<(), String> {
-    let a = Args::parse(argv, &["device", "layer"])?;
-    let dev = device(&a)?;
+    let a = Args::parse(
+        argv,
+        &["device", "layer", "n", "workers", "routes", "out", "network", "time-scale", "threads"],
+    )?;
     let which = a.positional.first().map(String::as_str).unwrap_or("fig5");
+    if which == "serve" {
+        return bench_serve(&a);
+    }
+    let dev = device(&a)?;
     let layer = LayerClass::from_name(a.get_or("layer", "conv4.x"))
         .ok_or_else(|| "unknown layer".to_string())?;
     match which {
@@ -193,6 +358,147 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
         }
         other => return Err(format!("unknown bench '{other}'")),
     }
+    Ok(())
+}
+
+/// One `bench serve` measurement cell: device × routing policy.
+struct ServeCell {
+    device: String,
+    policy: &'static str,
+    sim_network_ms: f64,
+    summary: LatencySummary,
+    /// Requests that failed (excluded from the latency samples) — a
+    /// nonzero value means the percentiles describe fewer than `n`
+    /// requests and the cell must not be read as a clean measurement.
+    errors: u64,
+}
+
+/// `bench serve` — the serving-level trajectory the paper's §5 numbers
+/// imply: closed-loop throughput and latency percentiles per device ×
+/// routing policy (uniform im2col, uniform direct, tuned routes), all
+/// through the sim backend, written to BENCH_serve.json. The tuned
+/// policy is loaded from `--routes` when the store covers the device,
+/// and cold-tuned in process otherwise.
+fn bench_serve(a: &Args) -> Result<(), String> {
+    let n = positive(a.get_usize("n", 32)?, "n")?;
+    let workers = positive(a.get_usize("workers", 2)?, "workers")?;
+    let threads = a.get_usize("threads", 8)?;
+    let time_scale = a.get_f64("time-scale", 1.0)?;
+    let out = a.get_or("out", "BENCH_serve.json").to_string();
+    let depth = ResNetDepth::by_name(a.get_or("network", "resnet18"))
+        .ok_or_else(|| "unknown --network".to_string())?;
+    let devices = if a.get_or("device", "all") == "all" {
+        DeviceConfig::paper_devices()
+    } else {
+        vec![device(a)?]
+    };
+    let store = match a.get("routes") {
+        Some(path) => Some(TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?),
+        None => None,
+    };
+
+    let run_cell = |backend: SimBackend, policy: &'static str| -> Result<ServeCell, String> {
+        let device = backend.device_name().to_string();
+        let sim_network_ms = backend.network_ms();
+        let img_shape = backend.input_shape();
+        let engine = InferenceEngine::start(backend, workers, 8)
+            .map_err(|e| format!("{device}/{policy}: engine start: {e:#}"))?;
+        let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
+        let (summary, _) = engine
+            .run_closed_loop(&mut gen, n)
+            .map_err(|e| format!("{device}/{policy}: serving: {e:#}"))?;
+        let errors = engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed);
+        engine.shutdown();
+        if errors > 0 {
+            eprintln!(
+                "warning: {device}/{policy}: {errors}/{n} requests failed — \
+                 percentiles cover only the successes"
+            );
+        }
+        Ok(ServeCell { device, policy, sim_network_ms, summary, errors })
+    };
+
+    let mut cells: Vec<ServeCell> = Vec::new();
+    for dev in &devices {
+        let tuned_table = match store.as_ref().and_then(|s| RoutingTable::from_store(s, dev)) {
+            Some(t) => t,
+            None => {
+                eprintln!(
+                    "note: no stored routes for {} — cold-tuning in process \
+                     (pass --routes <tunedb> to skip this sweep)",
+                    dev.name
+                );
+                RoutingTable::from_tuning(&tune_all(&[dev.clone()], threads), dev.name)
+            }
+        };
+        for (policy, table) in [
+            ("uniform-im2col", RoutingTable::uniform(Algorithm::Im2col)),
+            ("uniform-direct", RoutingTable::uniform(Algorithm::Direct)),
+            ("tuned", tuned_table),
+        ] {
+            let backend = SimBackend::new(dev, &table, depth, time_scale)
+                .map_err(|e| format!("{}/{policy}: {e:#}", dev.name))?;
+            cells.push(run_cell(backend, policy)?);
+        }
+    }
+
+    println!(
+        "BENCH serve — {} closed-loop requests x {workers} workers, {} (time scale {time_scale})",
+        n, depth.name
+    );
+    println!(
+        "{:<14} {:<16} {:>12} {:>10} {:>10} {:>10} {:>10} {:>11}",
+        "device", "policy", "sim net(ms)", "p50(ms)", "p95(ms)", "p99(ms)", "req/s", "p50 speedup"
+    );
+    for c in &cells {
+        // serving-level speedup: measured p50 vs the uniform-im2col
+        // baseline on the same device (includes queueing, not just the
+        // route model) — the paper's 14.6x (Mali) / 2.30x (Vega 8)
+        // claim restated at the serving level
+        let base = cells
+            .iter()
+            .find(|b| b.device == c.device && b.policy == "uniform-im2col")
+            .map(|b| b.summary.p50_ms)
+            .unwrap_or(f64::NAN);
+        let speedup = base / c.summary.p50_ms;
+        println!(
+            "{:<14} {:<16} {:>12.3} {:>10.3} {:>10.3} {:>10.3} {:>10.1} {:>10.2}x",
+            c.device,
+            c.policy,
+            c.sim_network_ms,
+            c.summary.p50_ms,
+            c.summary.p95_ms,
+            c.summary.p99_ms,
+            c.summary.throughput_rps,
+            speedup
+        );
+    }
+
+    // machine-readable trajectory
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let mut m = BTreeMap::new();
+            m.insert("device".into(), Json::Str(c.device.clone()));
+            m.insert("policy".into(), Json::Str(c.policy.into()));
+            m.insert("sim_network_ms".into(), Json::Num(c.sim_network_ms));
+            m.insert("errors".into(), Json::Num(c.errors as f64));
+            m.insert("latency".into(), c.summary.to_json());
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("serve".into()));
+    root.insert("network".into(), Json::Str(depth.name.into()));
+    root.insert("n".into(), Json::Num(n as f64));
+    root.insert("workers".into(), Json::Num(workers as f64));
+    root.insert("time_scale".into(), Json::Num(time_scale));
+    root.insert("rows".into(), Json::Arr(rows));
+    std::fs::write(&out, Json::Obj(root).to_json_string())
+        .map_err(|e| format!("write {out}: {e}"))?;
+    println!("wrote {out} ({} rows)", cells.len());
     Ok(())
 }
 
@@ -270,8 +576,12 @@ fn print_route_table(table: &RoutingTable, dev: &DeviceConfig) {
     println!("{:<10} {:>10} {:>14}", "layer", "algorithm", "expected(ms)");
     for layer in LayerClass::ALL {
         match table.route(layer) {
-            Some(r) => {
+            Some(r) if r.expected_ms.is_finite() => {
                 println!("{:<10} {:>10} {:>14.3}", layer.name(), r.algorithm.name(), r.expected_ms)
+            }
+            // uniform baselines carry no measured cost
+            Some(r) => {
+                println!("{:<10} {:>10} {:>14}", layer.name(), r.algorithm.name(), "unknown")
             }
             None => println!("{:<10} {:>10} {:>14}", layer.name(), "—", "untuned"),
         }
@@ -429,6 +739,90 @@ mod tests {
         run(&sv(&["routes", "--store", &p])).expect("routes over saved store");
         run(&sv(&["routes", "--store", &p, "--device", "mali"])).expect("single device");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_sim_uniform_baseline_runs_in_default_build() {
+        run(&sv(&[
+            "serve", "--backend", "sim", "--uniform", "direct", "--device", "mali", "--n", "6",
+            "--workers", "2", "--time-scale", "0",
+        ]))
+        .expect("sim serve must not need pjrt");
+    }
+
+    #[test]
+    fn serve_sim_without_routes_or_uniform_is_an_error() {
+        let err = run(&sv(&["serve", "--backend", "sim", "--n", "2"])).unwrap_err();
+        assert!(err.contains("--routes") && err.contains("--uniform"), "{err}");
+        assert!(run(&sv(&["serve", "--backend", "warp"])).is_err());
+        // contradictory flag combinations are rejected, not silently resolved
+        let err = run(&sv(&[
+            "serve", "--backend", "sim", "--routes", "x.json", "--uniform", "im2col",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("contradictory"), "{err}");
+        // n = 0 must be a usage error, not a latency-summary panic
+        let err = run(&sv(&["serve", "--backend", "sim", "--uniform", "direct", "--n", "0"]))
+            .unwrap_err();
+        assert!(err.contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn serve_sim_routes_from_store_end_to_end() {
+        use crate::convgen::TuneParams;
+        use crate::tunedb::{StoredTuning, TuneStore};
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut store = TuneStore::new();
+        for layer in LayerClass::ALL {
+            store.insert(
+                dev.fingerprint(),
+                dev.name,
+                StoredTuning {
+                    layer,
+                    algorithm: Algorithm::Ilpm,
+                    params: TuneParams::for_shape(&layer.shape()),
+                    time_ms: 1.0,
+                    evaluated: 5,
+                    pruned: 0,
+                },
+            );
+        }
+        let path = std::env::temp_dir()
+            .join(format!("ilpm_cli_sim_serve_{}.json", std::process::id()));
+        store.save(&path).unwrap();
+        let p = path.to_str().unwrap().to_string();
+        run(&sv(&[
+            "serve", "--backend", "sim", "--routes", &p, "--device", "mali", "--n", "4",
+            "--time-scale", "0",
+        ]))
+        .expect("sim serve over stored routes");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_serve_writes_trajectory_json() {
+        let out = std::env::temp_dir()
+            .join(format!("ilpm_bench_serve_{}.json", std::process::id()));
+        let o = out.to_str().unwrap().to_string();
+        run(&sv(&[
+            "bench", "serve", "--device", "mali", "--n", "4", "--workers", "1", "--time-scale",
+            "0", "--out", &o,
+        ]))
+        .expect("bench serve");
+        let text = std::fs::read_to_string(&out).expect("trajectory written");
+        let j = crate::util::json::Json::parse(&text).expect("valid json");
+        let rows = j.get("rows").and_then(crate::util::json::Json::as_arr).expect("rows");
+        assert_eq!(rows.len(), 3, "uniform-im2col, uniform-direct, tuned");
+        // tuned must beat the uniform-im2col baseline on Mali — the
+        // serving-level restatement of the paper's headline
+        let net = |policy: &str| {
+            rows.iter()
+                .find(|r| r.get("policy").and_then(crate::util::json::Json::as_str) == Some(policy))
+                .and_then(|r| r.get("sim_network_ms").and_then(crate::util::json::Json::as_f64))
+                .unwrap()
+        };
+        assert!(net("tuned") < net("uniform-im2col"), "tuned must win on mali");
+        std::fs::remove_file(&out).ok();
     }
 
     #[test]

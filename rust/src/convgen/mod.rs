@@ -52,7 +52,9 @@ impl Algorithm {
     }
 
     pub fn from_name(name: &str) -> Option<Algorithm> {
-        Algorithm::ALL.into_iter().find(|a| a.name() == name.to_ascii_lowercase())
+        // case-insensitive compare in place: no lowercased String
+        // allocated per candidate
+        Algorithm::ALL.into_iter().find(|a| a.name().eq_ignore_ascii_case(name))
     }
 
     /// Can this algorithm run the given layer at all?
@@ -134,6 +136,8 @@ mod tests {
         for alg in Algorithm::ALL {
             assert_eq!(Algorithm::from_name(alg.name()), Some(alg));
         }
+        assert_eq!(Algorithm::from_name("ILPM"), Some(Algorithm::Ilpm));
+        assert_eq!(Algorithm::from_name("Im2Col"), Some(Algorithm::Im2col));
         assert_eq!(Algorithm::from_name("fft"), None);
     }
 }

@@ -1,23 +1,33 @@
-//! The serving engine: bounded request queue → executor threads → PJRT.
+//! The serving engine: bounded request queue → executor threads → a
+//! pluggable [`ExecutionBackend`].
 //!
-//! The `xla` crate's client types are `Rc`-based (not `Send`), so each
-//! executor thread builds its *own* PJRT client and compiles the model
-//! once at startup; requests are distributed over executors through a
-//! bounded channel (backpressure: `submit` blocks when the queue is
-//! full). Single-image inference has no batch dimension to exploit —
-//! parallelism across requests comes from executor threads, parallelism
-//! within a request from XLA's intra-op thread pool.
+//! The engine is generic over *how* logits are produced. The PJRT
+//! backend compiles the model once per executor thread (the `xla`
+//! crate's client types are `Rc`-based, not `Send`, so each thread
+//! builds its own session via [`ExecutionBackend::connect`]); the sim
+//! backend lowers the routed per-layer algorithms through the simulator
+//! and charges modeled device time to each request. Requests are
+//! distributed over executors through a bounded channel (backpressure:
+//! `submit` blocks when the queue is full). Single-image inference has
+//! no batch dimension to exploit — parallelism across requests comes
+//! from executor threads.
+//!
+//! Latency accounting: a backend that returns `charged: Some(d)` runs
+//! on a virtual clock — `d` is the simulated execution time, and the
+//! request's total latency is its (wall-clock) queue wait plus `d`. A
+//! backend returning `charged: None` is measured in wall time end to
+//! end, exactly as before the engine was backend-generic.
 
 use anyhow::{anyhow, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::metrics::{LatencyRecorder, LatencySummary};
-use crate::runtime::{load_weights, Engine, Tensor};
+use crate::runtime::{ExecutionBackend, ExecutorSession, PjrtBackend, Tensor};
 use crate::workload::Request;
 
 /// Outcome of one inference request.
@@ -27,7 +37,8 @@ pub struct InferenceResult {
     /// Predicted class (argmax of the logits).
     pub class: usize,
     pub logits: Tensor,
-    /// Time from dequeue to completed execution.
+    /// Time from dequeue to completed execution (simulated device time
+    /// for virtual-clock backends).
     pub exec_latency: Duration,
     /// Time from submission to completion (includes queueing).
     pub total_latency: Duration,
@@ -47,25 +58,46 @@ enum Job {
     Shutdown,
 }
 
-/// Single-image CNN inference engine over AOT artifacts.
-pub struct InferenceEngine {
+/// What one receive attempt on the results channel yielded.
+enum Pulled {
+    /// A worker finished one request (successfully or not).
+    Result(Result<InferenceResult>),
+    /// Nothing queued right now (non-blocking pull only).
+    Empty,
+    /// The channel is disconnected: every executor has exited.
+    Dead,
+}
+
+/// Single-image CNN inference engine over a pluggable backend.
+pub struct InferenceEngine<B: ExecutionBackend> {
     tx: SyncSender<Job>,
     results: Receiver<Result<InferenceResult>>,
     workers: Vec<JoinHandle<()>>,
+    backend: Arc<B>,
     pub stats: Arc<EngineStats>,
 }
 
-impl InferenceEngine {
+impl InferenceEngine<PjrtBackend> {
     /// Start `workers` executor threads serving `model_name` from
-    /// `artifact_dir`. Blocks until every executor has compiled the
-    /// model and is ready (or reports a startup error).
-    pub fn start(
+    /// `artifact_dir` via PJRT — the original constructor, kept as a
+    /// convenience over [`InferenceEngine::start`].
+    pub fn start_pjrt(
         artifact_dir: &Path,
         model_name: &str,
         workers: usize,
         queue_depth: usize,
-    ) -> Result<InferenceEngine> {
+    ) -> Result<InferenceEngine<PjrtBackend>> {
+        InferenceEngine::start(PjrtBackend::new(artifact_dir, model_name), workers, queue_depth)
+    }
+}
+
+impl<B: ExecutionBackend> InferenceEngine<B> {
+    /// Start `workers` executor threads over `backend`. Blocks until
+    /// every executor has built its session (compilation / route
+    /// lowering happens here) or reports a startup error.
+    pub fn start(backend: B, workers: usize, queue_depth: usize) -> Result<InferenceEngine<B>> {
         assert!(workers >= 1);
+        let backend = Arc::new(backend);
         let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let (res_tx, results) = sync_channel::<Result<InferenceResult>>(queue_depth.max(1) * 2);
@@ -74,16 +106,15 @@ impl InferenceEngine {
 
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
+            let backend = Arc::clone(&backend);
             let rx = Arc::clone(&rx);
             let res_tx = res_tx.clone();
             let ready_tx = ready_tx.clone();
             let stats = Arc::clone(&stats);
-            let dir: PathBuf = artifact_dir.to_path_buf();
-            let model = model_name.to_string();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("ilpm-exec-{wid}"))
-                    .spawn(move || executor_loop(wid, &dir, &model, rx, res_tx, ready_tx, stats))
+                    .spawn(move || executor_loop(wid, backend, rx, res_tx, ready_tx, stats))
                     .expect("spawn executor"),
             );
         }
@@ -93,7 +124,12 @@ impl InferenceEngine {
                 .context("executor died during startup")?
                 .context("executor startup")?;
         }
-        Ok(InferenceEngine { tx, results, workers: handles, stats })
+        Ok(InferenceEngine { tx, results, workers: handles, backend, stats })
+    }
+
+    /// The backend this engine serves from.
+    pub fn backend(&self) -> &B {
+        &self.backend
     }
 
     /// Enqueue a request; blocks when the queue is full (backpressure).
@@ -110,15 +146,23 @@ impl InferenceEngine {
     }
 
     /// Closed-loop driver: submit `n` requests as fast as the queue
-    /// accepts and wait for all results. Returns the latency summary.
+    /// accepts and wait for every result. Per-request failures are
+    /// tolerated: they count in [`EngineStats::errors`] (surfaced by
+    /// the CLI summary) and simply contribute no latency sample; the
+    /// driver only errors when the engine itself dies (every executor
+    /// exited) or when *all* `n` requests failed.
     pub fn run_closed_loop(
         &self,
         gen: &mut crate::workload::RequestGen,
         n: usize,
     ) -> Result<(LatencySummary, Vec<InferenceResult>)> {
+        if n == 0 {
+            return Err(anyhow!("closed loop needs at least one request"));
+        }
         let wall = Instant::now();
         let mut rec = LatencyRecorder::new();
         let mut results = Vec::with_capacity(n);
+        let mut last_err = None;
         let mut submitted = 0;
         let mut received = 0;
         while received < n {
@@ -128,24 +172,49 @@ impl InferenceEngine {
                 submitted += 1;
             }
             while received < submitted {
-                match if submitted < n { self.try_recv() } else { Some(self.recv()) } {
-                    Some(r) => {
-                        let r = r?;
+                match self.pull(submitted >= n) {
+                    Pulled::Result(Ok(r)) => {
                         rec.record(r.total_latency);
                         results.push(r);
                         received += 1;
                     }
-                    None => break,
+                    Pulled::Result(Err(e)) => {
+                        // already counted in stats.errors by the worker
+                        last_err = Some(e);
+                        received += 1;
+                    }
+                    Pulled::Empty => break,
+                    Pulled::Dead => {
+                        return Err(anyhow!("engine shut down: every executor has exited"))
+                    }
                 }
             }
         }
-        Ok((rec.summary(wall.elapsed()), results))
+        match last_err {
+            Some(e) if results.is_empty() => Err(e.context(format!("all {n} requests failed"))),
+            _ => Ok((rec.summary(wall.elapsed()), results)),
+        }
     }
 
-    fn try_recv(&self) -> Option<Result<InferenceResult>> {
-        match self.results.try_recv() {
-            Ok(r) => Some(r),
-            Err(_) => None,
+    /// One receive attempt, separating the three cases the closed-loop
+    /// driver must treat differently: a worker's per-request result
+    /// (which may itself be an error), an empty queue, and a
+    /// disconnected channel — every executor exited, e.g. after the
+    /// backend refused to start. The old code conflated Empty with
+    /// Disconnected, letting `run_closed_loop` spin forever waiting on
+    /// results that could no longer arrive.
+    fn pull(&self, block: bool) -> Pulled {
+        if block {
+            match self.results.recv() {
+                Ok(r) => Pulled::Result(r),
+                Err(_) => Pulled::Dead,
+            }
+        } else {
+            match self.results.try_recv() {
+                Ok(r) => Pulled::Result(r),
+                Err(TryRecvError::Empty) => Pulled::Empty,
+                Err(TryRecvError::Disconnected) => Pulled::Dead,
+            }
         }
     }
 
@@ -160,37 +229,20 @@ impl InferenceEngine {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn executor_loop(
+fn executor_loop<B: ExecutionBackend>(
     wid: usize,
-    dir: &Path,
-    model_name: &str,
+    backend: Arc<B>,
     rx: Arc<Mutex<Receiver<Job>>>,
     res_tx: SyncSender<Result<InferenceResult>>,
     ready_tx: SyncSender<Result<()>>,
     stats: Arc<EngineStats>,
 ) {
-    // Each executor owns its client: xla types are Rc-based (!Send).
-    // Weights are uploaded to device buffers once at startup; the
-    // request path pays only one image upload + execute.
-    let setup = (|| -> Result<(Engine, crate::runtime::Session)> {
-        let engine = Engine::new(dir)?;
-        let model = engine.load(model_name)?;
-        let art = model.artifact.clone();
-        let wpath = dir.join(
-            art.weights
-                .as_ref()
-                .ok_or_else(|| anyhow!("{model_name} has no weights container"))?,
-        );
-        let weights: Vec<Tensor> =
-            load_weights(&wpath)?.into_iter().map(|(_, t)| t).collect();
-        let session = engine.session(model_name, &weights)?;
-        Ok((engine, session))
-    })();
-    let (_engine, session) = match setup {
-        Ok(x) => {
+    // Each executor owns its session: backend session types need not be
+    // `Send` (PJRT's are not), so they are built on this thread.
+    let mut session = match backend.connect(wid) {
+        Ok(s) => {
             let _ = ready_tx.send(Ok(()));
-            x
+            s
         }
         Err(e) => {
             let _ = ready_tx.send(Err(e));
@@ -203,13 +255,30 @@ fn executor_loop(
         match job {
             Ok(Job::Run { req, submitted }) => {
                 let t0 = Instant::now();
-                let out = session.run_image(&req.image).map(|logits| InferenceResult {
-                    id: req.id,
-                    class: logits.argmax(),
-                    logits,
-                    exec_latency: t0.elapsed(),
-                    total_latency: submitted.elapsed(),
-                    worker: wid,
+                let queue_wait = t0.duration_since(submitted);
+                // a panic inside the backend must still produce exactly
+                // one result for this job — otherwise a single dead
+                // worker leaves the closed-loop driver blocked forever
+                // on a result that can no longer arrive
+                let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    session.run_image(&req.image)
+                }))
+                .unwrap_or_else(|p| Err(anyhow!("executor panicked: {}", panic_message(&p))));
+                let out = ran.map(|o| {
+                    // virtual-clock backends charge simulated device
+                    // time; wall-clock backends are measured here
+                    let (exec, total) = match o.charged {
+                        Some(d) => (d, queue_wait + d),
+                        None => (t0.elapsed(), submitted.elapsed()),
+                    };
+                    InferenceResult {
+                        id: req.id,
+                        class: o.logits.argmax(),
+                        logits: o.logits,
+                        exec_latency: exec,
+                        total_latency: total,
+                        worker: wid,
+                    }
                 });
                 match &out {
                     Ok(_) => stats.completed.fetch_add(1, Ordering::Relaxed),
@@ -221,5 +290,172 @@ fn executor_loop(
             }
             Ok(Job::Shutdown) | Err(_) => return,
         }
+    }
+}
+
+/// Best-effort text of a panic payload (what `panic!` carries).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("<non-string panic payload>")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ExecutionOutcome;
+
+    /// A test backend whose sessions echo the image back as logits and
+    /// charge a fixed virtual latency; with `fail_connect` every worker
+    /// refuses to connect, and images whose first element is NaN fail
+    /// to run.
+    struct FakeBackend {
+        charge_ms: f64,
+        fail_connect: bool,
+    }
+
+    struct FakeSession {
+        charge: Option<Duration>,
+    }
+
+    impl ExecutorSession for FakeSession {
+        fn run_image(&mut self, image: &Tensor) -> Result<ExecutionOutcome> {
+            if image.data.first().is_some_and(|v| v.is_nan()) {
+                anyhow::bail!("poison image");
+            }
+            if image.data.first().is_some_and(|v| v.is_infinite()) {
+                panic!("backend blew up");
+            }
+            Ok(ExecutionOutcome { logits: image.clone(), charged: self.charge })
+        }
+    }
+
+    impl ExecutionBackend for FakeBackend {
+        type Session = FakeSession;
+        fn connect(&self, _worker: usize) -> Result<FakeSession> {
+            if self.fail_connect {
+                anyhow::bail!("connect refused");
+            }
+            let charge = (self.charge_ms > 0.0)
+                .then(|| Duration::from_secs_f64(self.charge_ms / 1e3));
+            Ok(FakeSession { charge })
+        }
+        fn label(&self) -> String {
+            "fake".into()
+        }
+    }
+
+    #[test]
+    fn connect_failure_fails_start() {
+        let err = InferenceEngine::start(FakeBackend { charge_ms: 0.0, fail_connect: true }, 2, 4)
+            .err()
+            .expect("must fail");
+        assert!(format!("{err:#}").contains("connect refused"));
+    }
+
+    #[test]
+    fn virtual_charge_dominates_total_latency() {
+        let engine =
+            InferenceEngine::start(FakeBackend { charge_ms: 5.0, fail_connect: false }, 1, 4)
+                .expect("start");
+        let mut gen = crate::workload::RequestGen::new(
+            &[2, 2],
+            crate::workload::TraceKind::ClosedLoop,
+            1,
+        );
+        let (summary, results) = engine.run_closed_loop(&mut gen, 4).expect("serve");
+        assert_eq!(summary.count, 4);
+        for r in &results {
+            assert_eq!(r.exec_latency, Duration::from_secs_f64(5.0 / 1e3));
+            assert!(r.total_latency >= r.exec_latency);
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn backend_panic_becomes_an_error_result_and_worker_survives() {
+        let engine =
+            InferenceEngine::start(FakeBackend { charge_ms: 0.0, fail_connect: false }, 1, 4)
+                .expect("start");
+        let mut img = Tensor::zeros(&[2]);
+        img.data[0] = f32::INFINITY; // FakeSession panics on this
+        engine
+            .submit(crate::workload::Request { id: 0, image: img, arrival: Duration::ZERO })
+            .expect("submit");
+        let err = engine.recv().err().expect("panic must surface as an error");
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+        assert_eq!(engine.stats.errors.load(Ordering::Relaxed), 1);
+        // the worker survived the panic: a healthy request still serves
+        engine
+            .submit(crate::workload::Request {
+                id: 1,
+                image: Tensor::zeros(&[2]),
+                arrival: Duration::ZERO,
+            })
+            .expect("submit 2");
+        assert_eq!(engine.recv().expect("healthy request").id, 1);
+        engine.shutdown();
+    }
+
+    /// Fails every other request (odd calls), for partial-failure runs.
+    struct FlakyBackend;
+    struct FlakySession {
+        calls: u64,
+    }
+    impl ExecutorSession for FlakySession {
+        fn run_image(&mut self, image: &Tensor) -> Result<ExecutionOutcome> {
+            self.calls += 1;
+            if self.calls % 2 == 0 {
+                anyhow::bail!("flaky failure");
+            }
+            Ok(ExecutionOutcome { logits: image.clone(), charged: None })
+        }
+    }
+    impl ExecutionBackend for FlakyBackend {
+        type Session = FlakySession;
+        fn connect(&self, _worker: usize) -> Result<FlakySession> {
+            Ok(FlakySession { calls: 0 })
+        }
+        fn label(&self) -> String {
+            "flaky".into()
+        }
+    }
+
+    #[test]
+    fn closed_loop_survives_partial_failures_and_counts_them() {
+        let engine = InferenceEngine::start(FlakyBackend, 1, 4).expect("start");
+        let mut gen = crate::workload::RequestGen::new(
+            &[2, 2],
+            crate::workload::TraceKind::ClosedLoop,
+            1,
+        );
+        // 6 requests through one worker: calls 2, 4, 6 fail
+        let (summary, results) = engine.run_closed_loop(&mut gen, 6).expect("partial run");
+        assert_eq!(summary.count, 3, "only successes carry latency samples");
+        assert_eq!(results.len(), 3);
+        assert_eq!(engine.stats.completed.load(Ordering::Relaxed), 3);
+        assert_eq!(engine.stats.errors.load(Ordering::Relaxed), 3);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn run_errors_count_and_propagate() {
+        let engine =
+            InferenceEngine::start(FakeBackend { charge_ms: 0.0, fail_connect: false }, 1, 4)
+                .expect("start");
+        let mut img = Tensor::zeros(&[2]);
+        img.data[0] = f32::NAN;
+        engine
+            .submit(crate::workload::Request {
+                id: 0,
+                image: img,
+                arrival: Duration::ZERO,
+            })
+            .expect("submit");
+        assert!(engine.recv().is_err());
+        assert_eq!(engine.stats.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.stats.completed.load(Ordering::Relaxed), 0);
+        engine.shutdown();
     }
 }

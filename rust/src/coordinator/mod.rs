@@ -1,14 +1,19 @@
 //! Coordinator — the single-image inference engine (L3's serving side).
 //!
 //! Owns the request loop: a bounded queue feeds a worker pool; each
-//! worker executes the compiled model via the PJRT [`crate::runtime`],
-//! the per-layer algorithm choice coming from the routing table the
-//! auto-tuner fills. Python never runs here.
+//! worker executes requests through a pluggable
+//! [`crate::runtime::ExecutionBackend`] — PJRT over AOT artifacts, or
+//! the route-aware simulated backend ([`SimBackend`]) that prices each
+//! request on the modeled mobile GPU. The per-layer algorithm choice
+//! comes from the routing table the auto-tuner fills. Python never
+//! runs here.
 
 mod engine;
 mod reference;
 mod router;
+mod sim_backend;
 
 pub use engine::{EngineStats, InferenceEngine, InferenceResult};
 pub use reference::naive_conv;
-pub use router::{RoutingTable, Route};
+pub use router::{Route, RoutingTable};
+pub use sim_backend::{PlannedLayer, SimBackend, SimSession};

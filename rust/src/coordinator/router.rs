@@ -5,15 +5,24 @@
 use std::collections::HashMap;
 
 use crate::autotune::TuningDatabase;
-use crate::convgen::Algorithm;
+use crate::convgen::{Algorithm, TuneParams};
 use crate::workload::LayerClass;
 
-/// The algorithm (and artifact) chosen for one layer class.
+/// The algorithm (and tuned parameters) chosen for one layer class.
+///
+/// Carrying the [`TuneParams`] is what lets routing decisions reach the
+/// executor: a backend lowering this route re-generates the exact
+/// kernel configuration the tuner picked, not a default one.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Route {
     pub layer: LayerClass,
     pub algorithm: Algorithm,
-    /// Tuned simulated time that justified the choice (ms).
+    /// Kernel parameters to run the algorithm with (tuned winners for
+    /// tuned tables; shape-scaled defaults for uniform baselines).
+    pub params: TuneParams,
+    /// Tuned simulated time that justified the choice (ms). NaN for
+    /// uniform baselines, whose cost nobody measured — consumers must
+    /// treat non-finite costs as unknown, never sum them.
     pub expected_ms: f64,
 }
 
@@ -24,11 +33,22 @@ pub struct RoutingTable {
 }
 
 impl RoutingTable {
-    /// All layers on one algorithm (baseline configurations).
+    /// All layers on one algorithm with shape-scaled default parameters
+    /// (the paper's baseline configurations). Costs are unknown (NaN):
+    /// nobody simulated them, and [`Self::expected_network_ms`] must
+    /// not let them poison a sum.
     pub fn uniform(alg: Algorithm) -> RoutingTable {
         let mut routes = HashMap::new();
         for layer in LayerClass::ALL {
-            routes.insert(layer, Route { layer, algorithm: alg, expected_ms: f64::NAN });
+            routes.insert(
+                layer,
+                Route {
+                    layer,
+                    algorithm: alg,
+                    params: TuneParams::for_shape(&layer.shape()),
+                    expected_ms: f64::NAN,
+                },
+            );
         }
         RoutingTable { routes }
     }
@@ -40,7 +60,12 @@ impl RoutingTable {
             if let Some(best) = db.best_algorithm(device, layer) {
                 routes.insert(
                     layer,
-                    Route { layer, algorithm: best.algorithm, expected_ms: best.time_ms },
+                    Route {
+                        layer,
+                        algorithm: best.algorithm,
+                        params: best.params,
+                        expected_ms: best.time_ms,
+                    },
                 );
             }
         }
@@ -62,7 +87,12 @@ impl RoutingTable {
             if let Some(best) = tunings.best_algorithm(layer) {
                 routes.insert(
                     layer,
-                    Route { layer, algorithm: best.algorithm, expected_ms: best.time_ms },
+                    Route {
+                        layer,
+                        algorithm: best.algorithm,
+                        params: best.params,
+                        expected_ms: best.time_ms,
+                    },
                 );
             }
         }
@@ -78,7 +108,17 @@ impl RoutingTable {
     }
 
     pub fn set(&mut self, layer: LayerClass, algorithm: Algorithm, expected_ms: f64) {
-        self.routes.insert(layer, Route { layer, algorithm, expected_ms });
+        self.set_with_params(layer, algorithm, TuneParams::for_shape(&layer.shape()), expected_ms);
+    }
+
+    pub fn set_with_params(
+        &mut self,
+        layer: LayerClass,
+        algorithm: Algorithm,
+        params: TuneParams,
+        expected_ms: f64,
+    ) {
+        self.routes.insert(layer, Route { layer, algorithm, params, expected_ms });
     }
 
     pub fn len(&self) -> usize {
@@ -90,12 +130,16 @@ impl RoutingTable {
     }
 
     /// Expected single-pass time over the routed layers for a depth
-    /// (paper Table 2: per-class conv counts), in ms.
+    /// (paper Table 2: per-class conv counts), in ms. Routes with an
+    /// unknown (non-finite) cost — uniform baselines — contribute zero
+    /// instead of poisoning the whole sum with NaN.
     pub fn expected_network_ms(&self, convs_per_class: &[usize; 4]) -> f64 {
         LayerClass::ALL
             .iter()
             .zip(convs_per_class)
-            .filter_map(|(l, n)| self.route(*l).map(|r| r.expected_ms * *n as f64))
+            .filter_map(|(l, n)| self.route(*l).map(|r| (r.expected_ms, *n)))
+            .filter(|(ms, _)| ms.is_finite())
+            .map(|(ms, n)| ms * n as f64)
             .sum()
     }
 }
@@ -156,6 +200,44 @@ mod tests {
         let mut edited = dev.clone();
         edited.shared_mem_per_cu *= 2;
         assert!(RoutingTable::from_store(&store, &edited).is_none());
+    }
+
+    #[test]
+    fn uniform_table_cost_is_finite_not_nan() {
+        // regression: uniform routes carry expected_ms = NaN (unknown),
+        // which used to propagate through the sum and poison
+        // expected_network_ms; unknown costs must contribute zero
+        let t = RoutingTable::uniform(Algorithm::Im2col);
+        let ms = t.expected_network_ms(&[4, 4, 4, 4]);
+        assert!(ms.is_finite(), "uniform network estimate was {ms}");
+        assert_eq!(ms, 0.0);
+        // a mix of known and unknown costs sums only the known ones
+        let mut t = RoutingTable::uniform(Algorithm::Im2col);
+        t.set(LayerClass::Conv2x, Algorithm::Ilpm, 2.0);
+        assert!((t.expected_network_ms(&[3, 4, 4, 4]) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn routes_carry_tuned_params_to_the_executor() {
+        use crate::convgen::TuneParams;
+        use crate::tunedb::{StoredTuning, TuneStore};
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut store = TuneStore::new();
+        let tuned = TuneParams { wg_size: 512, tile_px: 6, ..TuneParams::default() };
+        store.insert(
+            dev.fingerprint(),
+            dev.name,
+            StoredTuning {
+                layer: LayerClass::Conv4x,
+                algorithm: Algorithm::Ilpm,
+                params: tuned,
+                time_ms: 1.0,
+                evaluated: 1,
+                pruned: 0,
+            },
+        );
+        let table = RoutingTable::from_store(&store, &dev).expect("routes");
+        assert_eq!(table.route(LayerClass::Conv4x).unwrap().params, tuned);
     }
 
     #[test]

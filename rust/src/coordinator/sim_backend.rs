@@ -1,0 +1,287 @@
+//! SimBackend — route-aware simulated execution as a first-class serve
+//! target.
+//!
+//! The tunedb routes select a per-layer algorithm, and with this
+//! backend that decision *shapes execution*: every routed layer is
+//! lowered through [`crate::convgen::generate`] at the route's tuned
+//! [`TuneParams`] and priced by [`crate::simulator`], so a closed-loop
+//! load test exercises the whole stack — routing, lowering, simulation,
+//! latency accounting — in every build, no PJRT required.
+//!
+//! Two clocks:
+//! * **Numerics** run on the host: a miniature proxy network (one small
+//!   3×3 conv per routed layer class, computed by the
+//!   [`crate::coordinator::naive_conv`] reference path) produces real
+//!   logits, deterministic per image, so correctness assertions
+//!   (`class`, per-worker agreement) stay meaningful.
+//! * **Latency** runs on the modeled device: each request is charged
+//!   the *simulated* time of a full network pass (per-conv simulated ms
+//!   × Table-2 conv counts, summed over the four classes). The session
+//!   optionally sleeps `simulated × time_scale` ("pacing") so wall-clock
+//!   throughput also reflects the modeled GPU; with `time_scale = 0`
+//!   the run finishes at host speed and only the charged latencies are
+//!   virtual. Each executor worker models one independent device (a
+//!   fleet of phones, not one phone shared by threads).
+
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::reference::naive_conv;
+use super::router::RoutingTable;
+use crate::convgen::{generate, Algorithm, TuneParams};
+use crate::runtime::{ExecutionBackend, ExecutionOutcome, ExecutorSession, Tensor};
+use crate::simulator::{simulate_pipeline, total_time_ms, DeviceConfig};
+use crate::workload::{ConvShape, LayerClass, ResNetDepth};
+
+/// Proxy-network geometry: one tiny 3×3 conv stands in for each routed
+/// layer class. Kept miniature so the host-side numeric path costs
+/// ~1 MFLOP per request — the *simulated* latency always prices the
+/// full Table-2 geometry.
+const PROXY_CHANNELS: usize = 8;
+const PROXY_HW: usize = 12;
+
+fn proxy_shape() -> ConvShape {
+    ConvShape::square3x3(PROXY_CHANNELS, PROXY_CHANNELS, PROXY_HW)
+}
+
+/// One routed layer class, lowered and priced.
+#[derive(Debug, Clone)]
+pub struct PlannedLayer {
+    pub layer: LayerClass,
+    pub algorithm: Algorithm,
+    pub params: TuneParams,
+    /// Number of kernel launches the lowering produced.
+    pub kernels: usize,
+    /// Simulated time of one conv of this class (ms).
+    pub sim_ms_per_conv: f64,
+    /// How many convs of this class one network pass executes.
+    pub convs: usize,
+}
+
+impl PlannedLayer {
+    /// This class's contribution to one network pass (ms).
+    pub fn sim_ms_total(&self) -> f64 {
+        self.sim_ms_per_conv * self.convs as f64
+    }
+}
+
+/// Simulator-backed execution backend: disk-tuned routes in, modeled
+/// mobile-GPU latencies out.
+pub struct SimBackend {
+    device_name: String,
+    network: &'static str,
+    plan: Vec<PlannedLayer>,
+    network_time: Duration,
+    time_scale: f64,
+    /// Per-class proxy filters, shared by every worker session so all
+    /// workers produce identical logits for identical images.
+    weights: Arc<Vec<Tensor>>,
+}
+
+impl SimBackend {
+    /// Lower and price every routed layer on `dev`. Fails when the
+    /// routing table misses a layer class: a partly-tuned store must
+    /// not silently serve a partly-priced network.
+    pub fn new(
+        dev: &DeviceConfig,
+        routes: &RoutingTable,
+        depth: &ResNetDepth,
+        time_scale: f64,
+    ) -> Result<SimBackend> {
+        if !(time_scale.is_finite() && time_scale >= 0.0) {
+            bail!("time_scale must be finite and >= 0, got {time_scale}");
+        }
+        let mut plan = Vec::with_capacity(LayerClass::ALL.len());
+        for (layer, convs) in LayerClass::ALL.into_iter().zip(depth.convs) {
+            let route = routes.route(layer).ok_or_else(|| {
+                anyhow!(
+                    "routing table has no entry for {} — partly-tuned store? \
+                     re-run `ilpm tune --out` for this device",
+                    layer.name()
+                )
+            })?;
+            let shape = layer.shape();
+            let specs = generate(route.algorithm, &shape, &route.params);
+            let reports = simulate_pipeline(&specs, dev);
+            plan.push(PlannedLayer {
+                layer,
+                algorithm: route.algorithm,
+                params: route.params,
+                kernels: specs.len(),
+                sim_ms_per_conv: total_time_ms(&reports),
+                convs,
+            });
+        }
+        let network_ms: f64 = plan.iter().map(PlannedLayer::sim_ms_total).sum();
+        let weights = (0..plan.len())
+            .map(|i| {
+                Tensor::randn(
+                    &[PROXY_CHANNELS, PROXY_CHANNELS, 3, 3],
+                    0x51AB_0000 ^ i as u64,
+                )
+            })
+            .collect();
+        Ok(SimBackend {
+            device_name: dev.name.to_string(),
+            network: depth.name,
+            plan,
+            network_time: Duration::from_secs_f64(network_ms / 1e3),
+            time_scale,
+            weights: Arc::new(weights),
+        })
+    }
+
+    /// Uniform-algorithm baseline (e.g. the paper's all-im2col and
+    /// all-direct configurations) at shape-scaled default parameters.
+    pub fn uniform(
+        alg: Algorithm,
+        dev: &DeviceConfig,
+        depth: &ResNetDepth,
+        time_scale: f64,
+    ) -> Result<SimBackend> {
+        SimBackend::new(dev, &RoutingTable::uniform(alg), depth, time_scale)
+    }
+
+    /// The image shape requests must carry (the proxy network's input).
+    pub fn input_shape(&self) -> Vec<usize> {
+        vec![PROXY_CHANNELS, PROXY_HW, PROXY_HW]
+    }
+
+    /// Simulated time of one full network pass (ms).
+    pub fn network_ms(&self) -> f64 {
+        self.network_time.as_secs_f64() * 1e3
+    }
+
+    /// Simulated time of one full network pass — the exact `Duration`
+    /// charged to every request.
+    pub fn network_time(&self) -> Duration {
+        self.network_time
+    }
+
+    /// The lowered, priced per-layer plan, in [`LayerClass::ALL`] order.
+    pub fn plan(&self) -> &[PlannedLayer] {
+        &self.plan
+    }
+
+    pub fn device_name(&self) -> &str {
+        &self.device_name
+    }
+
+    pub fn network(&self) -> &'static str {
+        self.network
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    type Session = SimSession;
+
+    fn connect(&self, _worker: usize) -> Result<SimSession> {
+        Ok(SimSession {
+            weights: Arc::clone(&self.weights),
+            network_time: self.network_time,
+            pace: self.network_time.mul_f64(self.time_scale),
+        })
+    }
+
+    fn label(&self) -> String {
+        format!("sim:{}:{}", self.device_name, self.network)
+    }
+}
+
+/// One worker's simulated device. Numerics on the host, time on the
+/// modeled GPU.
+pub struct SimSession {
+    weights: Arc<Vec<Tensor>>,
+    network_time: Duration,
+    pace: Duration,
+}
+
+impl ExecutorSession for SimSession {
+    fn run_image(&mut self, image: &Tensor) -> Result<ExecutionOutcome> {
+        let shape = proxy_shape();
+        let want = [PROXY_CHANNELS, PROXY_HW, PROXY_HW];
+        if image.shape != want {
+            bail!("sim backend wants image shape {:?}, got {:?}", want, image.shape);
+        }
+        // forward pass: one proxy conv per routed class, ReLU between
+        let mut x = image.clone();
+        let last = self.weights.len() - 1;
+        for (i, w) in self.weights.iter().enumerate() {
+            x = naive_conv(&shape, &x, w);
+            if i < last {
+                for v in &mut x.data {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+        // logits: global average pool per channel
+        let px = PROXY_HW * PROXY_HW;
+        let logits: Vec<f32> = (0..PROXY_CHANNELS)
+            .map(|c| x.data[c * px..(c + 1) * px].iter().sum::<f32>() / px as f32)
+            .collect();
+        let logits = Tensor::new(vec![PROXY_CHANNELS], logits)?;
+        // virtual-time pacing: optionally hold the worker for the
+        // (scaled) modeled duration so wall throughput tracks the model
+        if !self.pace.is_zero() {
+            std::thread::sleep(self.pace);
+        }
+        Ok(ExecutionOutcome { logits, charged: Some(self.network_time) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnet18() -> &'static ResNetDepth {
+        ResNetDepth::by_name("resnet18").unwrap()
+    }
+
+    #[test]
+    fn plan_prices_every_layer_and_sums_to_network_time() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let b = SimBackend::uniform(Algorithm::Direct, &dev, resnet18(), 0.0).expect("backend");
+        assert_eq!(b.plan().len(), 4);
+        for p in b.plan() {
+            assert_eq!(p.algorithm, Algorithm::Direct);
+            assert!(p.sim_ms_per_conv > 0.0, "{}: zero simulated time", p.layer.name());
+            assert!(p.kernels >= 1);
+        }
+        let sum: f64 = b.plan().iter().map(PlannedLayer::sim_ms_total).sum();
+        assert!((sum - b.network_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_routing_table_is_rejected() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut table = RoutingTable::default();
+        table.set(LayerClass::Conv2x, Algorithm::Ilpm, 1.0);
+        let err = SimBackend::new(&dev, &table, resnet18(), 0.0).unwrap_err();
+        assert!(format!("{err:#}").contains("no entry"), "{err:#}");
+    }
+
+    #[test]
+    fn sessions_are_deterministic_and_charge_simulated_time() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let b = SimBackend::uniform(Algorithm::Ilpm, &dev, resnet18(), 0.0).expect("backend");
+        let mut s1 = b.connect(0).unwrap();
+        let mut s2 = b.connect(1).unwrap();
+        let img = Tensor::randn(&b.input_shape(), 42);
+        let o1 = s1.run_image(&img).unwrap();
+        let o2 = s2.run_image(&img).unwrap();
+        assert_eq!(o1.logits.data, o2.logits.data, "workers diverged");
+        assert_eq!(o1.charged, Some(b.network_time()));
+        // wrong shape is rejected, not silently reshaped
+        assert!(s1.run_image(&Tensor::zeros(&[3, 4, 4])).is_err());
+    }
+
+    #[test]
+    fn deeper_networks_cost_more_simulated_time() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let d152 = ResNetDepth::by_name("resnet152").unwrap();
+        let b18 = SimBackend::uniform(Algorithm::Direct, &dev, resnet18(), 0.0).unwrap();
+        let b152 = SimBackend::uniform(Algorithm::Direct, &dev, d152, 0.0).unwrap();
+        assert!(b152.network_ms() > b18.network_ms());
+    }
+}

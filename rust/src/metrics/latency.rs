@@ -57,6 +57,23 @@ impl LatencyRecorder {
     }
 }
 
+impl LatencySummary {
+    /// Serialise for machine-readable bench output (BENCH_serve.json).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("count".into(), Json::Num(self.count as f64));
+        m.insert("mean_ms".into(), Json::Num(self.mean_ms));
+        m.insert("p50_ms".into(), Json::Num(self.p50_ms));
+        m.insert("p95_ms".into(), Json::Num(self.p95_ms));
+        m.insert("p99_ms".into(), Json::Num(self.p99_ms));
+        m.insert("max_ms".into(), Json::Num(self.max_ms));
+        m.insert("throughput_rps".into(), Json::Num(self.throughput_rps));
+        Json::Obj(m)
+    }
+}
+
 impl std::fmt::Display for LatencySummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -93,5 +110,21 @@ mod tests {
     #[should_panic(expected = "no samples")]
     fn empty_summary_panics() {
         LatencyRecorder::new().summary(Duration::from_secs(1));
+    }
+
+    #[test]
+    fn summary_json_round_trips_fields() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=10 {
+            r.record(Duration::from_millis(i));
+        }
+        let s = r.summary(Duration::from_secs(1));
+        let j = s.to_json();
+        assert_eq!(j.get("count").and_then(crate::util::json::Json::as_usize), Some(10));
+        assert_eq!(j.get("p50_ms").and_then(crate::util::json::Json::as_f64), Some(s.p50_ms));
+        assert_eq!(
+            j.get("throughput_rps").and_then(crate::util::json::Json::as_f64),
+            Some(s.throughput_rps)
+        );
     }
 }

@@ -1,0 +1,137 @@
+//! The execution-backend abstraction the serving engine is generic over.
+//!
+//! The paper's end product is a *serving* story: a frozen network tuned
+//! once per device, then run at the per-layer optimum (§2.3, §5). The
+//! engine therefore must not care *how* a request's logits are produced
+//! — via PJRT over AOT-compiled HLO, or via the mobile-GPU simulator
+//! with latencies charged in virtual time. A backend is a thread-safe
+//! *factory* ([`ExecutionBackend`]); each executor thread asks it for a
+//! private [`ExecutorSession`] at startup (PJRT's client types are
+//! `Rc`-based and `!Send`, so sessions must be built on the thread that
+//! uses them) and then runs one image at a time through it.
+//!
+//! Implementations:
+//! * [`PjrtBackend`] (here) — the original path: each session owns a
+//!   PJRT client with the model compiled and weights uploaded once.
+//!   Latency is wall-clock; `charged` is `None`.
+//! * [`crate::coordinator::SimBackend`] — routes each layer through the
+//!   tuned algorithm choice, prices a full network pass with the
+//!   simulator, and charges that *simulated device* time to the request
+//!   (virtual-time pacing), so closed-loop load tests work in every
+//!   build and report modeled-GPU latencies, not host-CPU ones.
+
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use super::{load_weights, Engine, Session, Tensor};
+
+/// What one backend execution produced.
+pub struct ExecutionOutcome {
+    /// The network's output tensor (argmax → predicted class).
+    pub logits: Tensor,
+    /// Latency the backend charges for this request. `Some(d)` means
+    /// the backend runs on a virtual clock (simulated device time) and
+    /// `d` replaces the host wall-clock execution time in the latency
+    /// accounting; `None` means the engine measures wall time itself.
+    pub charged: Option<Duration>,
+}
+
+/// A per-executor-thread serving session. Not required to be `Send`:
+/// it is constructed and used entirely on one executor thread.
+pub trait ExecutorSession {
+    /// Run one single-image inference.
+    fn run_image(&mut self, image: &Tensor) -> Result<ExecutionOutcome>;
+}
+
+/// A thread-safe session factory: `load → session → run-image`.
+pub trait ExecutionBackend: Send + Sync + 'static {
+    type Session: ExecutorSession;
+
+    /// Build this worker's private session. Called once per executor
+    /// thread, on that thread; expensive setup (compilation, weight
+    /// upload, route lowering) belongs here, not on the request path.
+    fn connect(&self, worker: usize) -> Result<Self::Session>;
+
+    /// Human-readable identity for logs, e.g. `pjrt:resnet18_ilpm_r56`.
+    fn label(&self) -> String;
+}
+
+/// The PJRT execution backend: serve a named AOT artifact from a
+/// directory. In a no-`pjrt` build [`ExecutionBackend::connect`] fails
+/// with the stub's actionable message, exactly as `Engine::new` did
+/// before the engine was backend-generic.
+pub struct PjrtBackend {
+    artifact_dir: PathBuf,
+    model: String,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: &Path, model: &str) -> PjrtBackend {
+        PjrtBackend { artifact_dir: artifact_dir.to_path_buf(), model: model.to_string() }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+}
+
+/// A PJRT serving session: one client + compiled model + uploaded
+/// weights, owned by a single executor thread.
+pub struct PjrtSession {
+    session: Session,
+    // The engine owns the PJRT client the session borrows buffers from;
+    // it must outlive the session — fields drop in declaration order,
+    // so the engine is declared (and dropped) last.
+    _engine: Engine,
+}
+
+impl ExecutorSession for PjrtSession {
+    fn run_image(&mut self, image: &Tensor) -> Result<ExecutionOutcome> {
+        Ok(ExecutionOutcome { logits: self.session.run_image(image)?, charged: None })
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    type Session = PjrtSession;
+
+    fn connect(&self, _worker: usize) -> Result<PjrtSession> {
+        // Weights are uploaded to device buffers once at startup; the
+        // request path pays only one image upload + execute.
+        let engine = Engine::new(&self.artifact_dir)?;
+        let model = engine.load(&self.model)?;
+        let art = model.artifact.clone();
+        let wpath = self.artifact_dir.join(
+            art.weights
+                .as_ref()
+                .ok_or_else(|| anyhow!("{} has no weights container", self.model))?,
+        );
+        let weights: Vec<Tensor> =
+            load_weights(&wpath)?.into_iter().map(|(_, t)| t).collect();
+        let session = engine.session(&self.model, &weights)?;
+        Ok(PjrtSession { session, _engine: engine })
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt:{}", self.model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_backend_fails_at_connect_with_actionable_message() {
+        let b = PjrtBackend::new(Path::new("artifacts"), "resnet18_ref_r56");
+        let err = b.connect(0).err().expect("stub must fail");
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+
+    #[test]
+    fn label_names_the_model() {
+        let b = PjrtBackend::new(Path::new("artifacts"), "m");
+        assert_eq!(b.label(), "pjrt:m");
+    }
+}

@@ -16,10 +16,12 @@ mod client;
 #[cfg(not(feature = "pjrt"))]
 #[path = "client_stub.rs"]
 mod client;
+mod backend;
 mod manifest;
 mod tensor;
 mod weights;
 
+pub use backend::{ExecutionBackend, ExecutionOutcome, ExecutorSession, PjrtBackend, PjrtSession};
 pub use client::{Engine, LoadedModel, Session};
 pub use manifest::{Artifact, ArtifactKind, Manifest, ShapeEntry};
 pub use tensor::Tensor;

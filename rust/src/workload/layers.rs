@@ -120,6 +120,13 @@ pub struct ResNetDepth {
     pub convs: [usize; 4],
 }
 
+impl ResNetDepth {
+    /// Look up a depth variant by its Table-2 name, e.g. `resnet18`.
+    pub fn by_name(name: &str) -> Option<&'static ResNetDepth> {
+        RESNET_DEPTHS.iter().find(|d| d.name.eq_ignore_ascii_case(name))
+    }
+}
+
 /// Table 2 columns. `blocks x convs` per class, multiplied out.
 pub const RESNET_DEPTHS: [ResNetDepth; 5] = [
     ResNetDepth { name: "resnet18", convs: [4, 4, 4, 4] },
@@ -173,5 +180,12 @@ mod tests {
             assert_eq!(LayerClass::from_name(l.name()), Some(l));
         }
         assert_eq!(LayerClass::from_name("conv9.x"), None);
+    }
+
+    #[test]
+    fn depth_by_name() {
+        assert_eq!(ResNetDepth::by_name("resnet18").unwrap().convs, [4, 4, 4, 4]);
+        assert_eq!(ResNetDepth::by_name("ResNet152").unwrap().convs, [3, 8, 36, 3]);
+        assert!(ResNetDepth::by_name("vgg16").is_none());
     }
 }

@@ -26,7 +26,7 @@ fn artifact_dir() -> Option<PathBuf> {
 #[test]
 fn engine_serves_closed_loop_and_is_deterministic() {
     let Some(dir) = artifact_dir() else { return };
-    let engine = InferenceEngine::start(&dir, "resnet18_ref_r56", 1, 4).expect("start");
+    let engine = InferenceEngine::start_pjrt(&dir, "resnet18_ref_r56", 1, 4).expect("start");
     let mut gen = RequestGen::new(&[3, 56, 56], TraceKind::ClosedLoop, 7);
     let (summary, results) = engine.run_closed_loop(&mut gen, 5).expect("serve");
     assert_eq!(summary.count, 5);
@@ -45,7 +45,7 @@ fn engine_serves_closed_loop_and_is_deterministic() {
 #[test]
 fn engine_parallel_workers_agree() {
     let Some(dir) = artifact_dir() else { return };
-    let engine = InferenceEngine::start(&dir, "resnet18_ref_r56", 2, 4).expect("start");
+    let engine = InferenceEngine::start_pjrt(&dir, "resnet18_ref_r56", 2, 4).expect("start");
     let mut gen = RequestGen::new(&[3, 56, 56], TraceKind::ClosedLoop, 7);
     let (_, results) = engine.run_closed_loop(&mut gen, 8).expect("serve");
     // both workers must produce identical logits for identical images:
@@ -66,7 +66,7 @@ fn engine_parallel_workers_agree() {
 #[test]
 fn engine_rejects_unknown_model() {
     let Some(dir) = artifact_dir() else { return };
-    assert!(InferenceEngine::start(&dir, "no_such_model", 1, 2).is_err());
+    assert!(InferenceEngine::start_pjrt(&dir, "no_such_model", 1, 2).is_err());
 }
 
 #[test]
