@@ -40,7 +40,7 @@ fn main() {
         );
         print!("{:<10}", layer.name());
         for alg in ["im2col", "libdnn", "winograd", "direct", "ilpm", "ref"] {
-            let model = engine.load_layer(layer.name(), alg).expect(alg);
+            let model = engine.load_layer(&layer.name(), alg).expect(alg);
             let stats = b.run(|| model.run(&[x.clone(), w.clone()]).expect("run"));
             print!(" {:>12}", fmt_ns(stats.median_ns));
         }

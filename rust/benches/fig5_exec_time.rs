@@ -1,6 +1,8 @@
-//! Bench: regenerate **Figure 5** — execution time of the five
-//! convolution algorithms on all four ResNet layer classes across the
-//! three device models, each at its auto-tuned configuration.
+//! Bench: regenerate **Figure 5** — execution time of the paper's
+//! five convolution algorithms on all four ResNet layer classes across
+//! the three device models, each at its auto-tuned configuration. (The
+//! depthwise generator sits this one out: it only runs MobileNet's
+//! grouped layers — see `bench mobilenet`.)
 //!
 //! Also prints the paper's headline ratios: ILP-M speedup vs im2col
 //! (paper: 14.6x) and vs direct (paper: 2.30x) on the mobile device.
@@ -53,13 +55,19 @@ fn main() {
 
     // ---- network-level view: Table 2 depth x per-layer times --------
     println!("=== whole-network 3x3-conv time per ResNet depth (ms) ===");
+    let resnet_algs: Vec<Algorithm> = Algorithm::ALL
+        .into_iter()
+        .filter(|a| LayerClass::ALL.iter().all(|l| a.supports(&l.shape())))
+        .collect();
     for dev in DeviceConfig::paper_devices() {
         println!("--- {} ---", dev.name);
-        println!(
-            "{:<10} {:>10} {:>10} {:>10} {:>10} {:>10}",
-            "depth", "im2col", "libdnn", "winograd", "direct", "ilpm"
-        );
-        let per_layer: Vec<Vec<f64>> = Algorithm::ALL
+        // header columns come from the same filtered list as the data
+        print!("{:<10}", "depth");
+        for alg in &resnet_algs {
+            print!(" {:>10}", alg.name());
+        }
+        println!();
+        let per_layer: Vec<Vec<f64>> = resnet_algs
             .iter()
             .map(|alg| {
                 LayerClass::ALL

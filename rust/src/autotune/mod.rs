@@ -2,14 +2,25 @@
 //! library to choose the optimal combination of the kernel parameters,
 //! such as the tile size and workload per thread".
 //!
-//! The search evaluates candidate [`TuneParams`] against the simulator
-//! cost model and keeps the fastest configuration per (device, layer,
-//! algorithm). The paper's engineering argument (§2.3) is that for
-//! *inference* the network is frozen, so spending effort tuning each
-//! layer once is worth it — this module is that effort, automated.
+//! The search evaluates candidate [`crate::convgen::TuneParams`]
+//! against the simulator cost model and keeps the fastest configuration
+//! per (device, layer, algorithm). The paper's engineering argument
+//! (§2.3) is that for *inference* the network is frozen, so spending
+//! effort tuning each layer once is worth it — this module is that
+//! effort, automated.
+//!
+//! The work-list is a set of [`crate::workload::LayerClass`] keys:
+//! [`tune_all_warm`] sweeps the paper's four ResNet classes,
+//! [`tune_layers_warm`] any explicit list (e.g.
+//! `NetworkDef::mobilenet_v1(..).classes()`), both warm-started from
+//! the persistent [`crate::tunedb`] store. Candidate spaces are
+//! group-aware: grouped layers clamp channel-indexed knobs to their
+//! per-group extents before the sweep ([`candidates`]).
 
 mod search;
 mod space;
 
-pub use search::{tune, tune_all, tune_all_warm, TunedEntry, TuningDatabase, WarmStats};
+pub use search::{
+    tune, tune_all, tune_all_warm, tune_layers_warm, TunedEntry, TuningDatabase, WarmStats,
+};
 pub use space::{candidates, SearchStats};

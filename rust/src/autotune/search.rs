@@ -118,7 +118,7 @@ impl TuningDatabase {
             .map(|e| {
                 let mut m = BTreeMap::new();
                 m.insert("device".into(), Json::Str(e.device.clone()));
-                m.insert("layer".into(), Json::Str(e.layer.name().into()));
+                m.insert("layer".into(), Json::Str(e.layer.name()));
                 m.insert("algorithm".into(), Json::Str(e.algorithm.name().into()));
                 m.insert("time_ms".into(), Json::Num(e.time_ms));
                 m.insert("params".into(), e.params.to_json());
@@ -176,18 +176,31 @@ pub struct WarmStats {
     pub pruned: usize,
 }
 
-/// Tune every (algorithm, layer) pair on the given devices, in parallel.
+/// Tune every (algorithm, ResNet layer) pair on the given devices, in
+/// parallel.
 pub fn tune_all(devices: &[DeviceConfig], threads: usize) -> TuningDatabase {
     tune_all_warm(devices, threads, &mut TuneStore::new()).0
 }
 
-/// [`tune_all`] warm-started from a persistent store: keys already in
-/// the store (under the device's *fingerprint* — an edited spec misses)
-/// are rehydrated without evaluating a single candidate; the rest are
-/// tuned and merged back into the store for the next run. A second run
-/// against the same store therefore evaluates zero candidates.
+/// [`tune_layers_warm`] over the paper's four ResNet classes.
 pub fn tune_all_warm(
     devices: &[DeviceConfig],
+    threads: usize,
+    store: &mut TuneStore,
+) -> (TuningDatabase, WarmStats) {
+    tune_layers_warm(devices, &LayerClass::ALL, threads, store)
+}
+
+/// Tune every `(device, layer, supported algorithm)` key over an
+/// explicit layer work-list (e.g. a network's distinct classes),
+/// warm-started from a persistent store: keys already in the store
+/// (under the device's *fingerprint* — an edited spec misses) are
+/// rehydrated without evaluating a single candidate; the rest are
+/// tuned and merged back into the store for the next run. A second run
+/// against the same store therefore evaluates zero candidates.
+pub fn tune_layers_warm(
+    devices: &[DeviceConfig],
+    layers: &[LayerClass],
     threads: usize,
     store: &mut TuneStore,
 ) -> (TuningDatabase, WarmStats) {
@@ -196,7 +209,7 @@ pub fn tune_all_warm(
     let mut jobs = Vec::new();
     for dev in devices {
         let fp = dev.fingerprint();
-        for layer in LayerClass::ALL {
+        for &layer in layers {
             for alg in Algorithm::ALL {
                 if !alg.supports(&layer.shape()) {
                     continue;
@@ -272,6 +285,9 @@ mod tests {
         let dev = DeviceConfig::mali_g76_mp10();
         let mut db = TuningDatabase::default();
         for alg in Algorithm::ALL {
+            if !alg.supports(&LayerClass::Conv4x.shape()) {
+                continue; // the depthwise specialist sits ResNet out
+            }
             db.insert(tune(alg, LayerClass::Conv4x, &dev));
         }
         let best = db.best_algorithm(dev.name, LayerClass::Conv4x).unwrap();

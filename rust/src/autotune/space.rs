@@ -22,6 +22,13 @@ const K_PER_THREAD: &[u64] = &[1, 2, 4, 8, 16];
 /// Only the knobs the algorithm actually reads are swept (the paper's
 /// §3.3 point that direct convolution has *more* parameters than the
 /// GEMM-based algorithms shows up here as a larger space).
+///
+/// Every candidate is clamped into the layer's legal range — which for
+/// grouped shapes means the *per-group* channel extents — and
+/// duplicates are dropped, so the sweep respects groups-divisibility
+/// instead of re-evaluating many knob values that collapse onto the
+/// same legal configuration (a depthwise layer has `K/g == 1`, so all
+/// of `tile_m`'s values are the same candidate).
 pub fn candidates(alg: Algorithm, shape: &ConvShape) -> Vec<TuneParams> {
     let base = TuneParams::for_shape(shape);
     let mut out = Vec::new();
@@ -89,8 +96,24 @@ pub fn candidates(alg: Algorithm, shape: &ConvShape) -> Vec<TuneParams> {
                 }
             }
         }
+        Algorithm::Dwconv => {
+            // register-tile edge x workgroup size: the only knobs the
+            // barrier-free depthwise kernel reads
+            for &px in TILE_PX {
+                for &wg in WG_SIZES {
+                    out.push(TuneParams { tile_px: px, wg_size: wg, ..base });
+                }
+            }
+        }
     }
-    out
+    let mut deduped: Vec<TuneParams> = Vec::with_capacity(out.len());
+    for cand in out {
+        let cand = cand.clamped(shape);
+        if !deduped.contains(&cand) {
+            deduped.push(cand);
+        }
+    }
+    deduped
 }
 
 #[cfg(test)]
@@ -111,6 +134,32 @@ mod tests {
         let c = candidates(Algorithm::Ilpm, &LayerClass::Conv5x.shape());
         assert!(c.iter().any(|p| p.transpose_output));
         assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn grouped_spaces_respect_per_group_extents() {
+        let dw = ConvShape::depthwise(256, 28, 1);
+        for alg in [Algorithm::Im2col, Algorithm::Direct, Algorithm::Ilpm, Algorithm::Dwconv] {
+            let cands = candidates(alg, &dw);
+            assert!(!cands.is_empty(), "{alg:?}");
+            for p in &cands {
+                assert!(p.tile_m <= 1, "{alg:?}: tile_m {} > K/g", p.tile_m);
+                assert!(p.tile_k <= 9, "{alg:?}: tile_k {} > (C/g)*R*S", p.tile_k);
+                assert!(p.k_per_thread <= 1, "{alg:?}: kpt {}", p.k_per_thread);
+            }
+            // duplicates collapsed: no two candidates identical
+            for (i, a) in cands.iter().enumerate() {
+                assert!(!cands[i + 1..].contains(a), "{alg:?}: duplicate candidate");
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_space_sweeps_tile_and_workgroup() {
+        let c = candidates(Algorithm::Dwconv, &ConvShape::depthwise(512, 14, 1));
+        assert!(c.len() > 8);
+        assert!(c.iter().any(|p| p.tile_px != c[0].tile_px));
+        assert!(c.iter().any(|p| p.wg_size != c[0].wg_size));
     }
 
     #[test]

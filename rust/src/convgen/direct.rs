@@ -18,32 +18,41 @@
 //!   filter values are fetched by every workgroup (duplicated traffic
 //!   that keeps the memory units busy — Table 3's 81%).
 
+use super::halo_factor;
 use super::params::TuneParams;
 use crate::simulator::spec::{KernelSpec, Segment, Stream};
 use crate::workload::ConvShape;
 
 /// Generate the direct-convolution kernel trace (one kernel).
+///
+/// Grouped shapes partition the channel loops: a workgroup's
+/// `k_per_thread` output channels always live in one group, so it
+/// stages and reduces over only that group's `C/g` input channels.
 pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
-    let c = shape.in_channels as u64;
-    let k = shape.out_channels as u64;
     let px = shape.out_pixels() as u64;
+    let in_px = (shape.height * shape.width) as u64;
     let fs = shape.filter_len() as u64;
+    let g = shape.groups as u64;
+    let cg = shape.channels_per_group() as u64; // reduction depth per group
+    let kg = shape.filters_per_group() as u64;
 
-    let kpt = p.k_per_thread.clamp(1, k); // channels per workgroup/thread
+    let kpt = p.k_per_thread.clamp(1, kg.max(1)); // channels per workgroup/thread
     let tile_px = (p.tile_px * p.tile_px).clamp(1, px); // pixels per wg
     let wg = tile_px.max(16);
     let wgs_px = px.div_ceil(tile_px);
-    let k_groups = k.div_ceil(kpt);
+    let kgroups_per_group = kg.div_ceil(kpt);
+    let k_groups = g * kgroups_per_group;
     let workgroups = wgs_px * k_groups;
 
-    // halo factor for the staged image tile
-    let halo = 1.0 + 2.0 * (fs as f64).sqrt() / (tile_px as f64).sqrt();
+    // halo factor for the staged image tile (stride-aware: a strided
+    // tile's input window is ((e-1)*stride + R)^2 for an e x e tile)
+    let halo = halo_factor(shape, tile_px);
     let img_tile_elems = tile_px as f64 * halo;
 
     let mut segments = Vec::new();
 
-    // ---- per input channel: stage image tile ------------------------
-    let mut stage_img = Segment::new("stage image tile", c);
+    // ---- per input channel of the group: stage image tile -----------
+    let mut stage_img = Segment::new("stage image tile", cg);
     stage_img.gmem_loads_per_thread = img_tile_elems / wg as f64;
     stage_img.smem_stores_per_thread = img_tile_elems / wg as f64;
     stage_img.independent_loads = (img_tile_elems / wg as f64).max(1.0);
@@ -59,9 +68,9 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     let (read_streams, base_regs);
     if p.cache_filters {
         // ---- CONV_CACHE_FILTER ---------------------------------------
-        // per (input channel x owned output channel): stage 3x3 filter,
-        // barrier, fs-FMA dot — Algorithm 1 lines 4-8
-        let reps = c * kpt;
+        // per (group input channel x owned output channel): stage 3x3
+        // filter, barrier, fs-FMA dot — Algorithm 1 lines 4-8
+        let reps = cg * kpt;
         let mut stage_f = Segment::new("stage one filter", reps);
         stage_f.gmem_loads_per_thread = fs as f64 / wg as f64;
         stage_f.smem_stores_per_thread = fs as f64 / wg as f64;
@@ -96,8 +105,9 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
             Stream {
                 label: "input image",
                 unique_bytes: (input_bytes as f64 * halo) as u64,
-                // re-staged per channel group, padded tiles included
-                touches: k_groups as f64 * coverage,
+                // re-staged per channel group of its own group, padded
+                // tiles included (strided tiles window a px/in_px slice)
+                touches: kgroups_per_group as f64 * coverage * px as f64 / in_px as f64,
                 reuse_distance_bytes: input_bytes,
             },
             Stream {
@@ -113,7 +123,7 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
         base_regs = 24;
     } else {
         // ---- CONV_NOCACHE_FILTER --------------------------------------
-        let reps = c * kpt;
+        let reps = cg * kpt;
         let mut dot = Segment::new("dot with DRAM taps", reps);
         dot.gmem_loads_per_thread = fs as f64; // every tap, per thread
         dot.gmem_same_address = true; // all lanes fetch the same tap
@@ -138,7 +148,7 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
             Stream {
                 label: "input image",
                 unique_bytes: (input_bytes as f64 * halo) as u64,
-                touches: k_groups as f64 * coverage,
+                touches: kgroups_per_group as f64 * coverage * px as f64 / in_px as f64,
                 reuse_distance_bytes: input_bytes,
             },
             Stream {
@@ -219,6 +229,20 @@ mod tests {
         // Table 3: direct_conv 512 B/wg, far below the GEMM kernels
         let s = gen(true);
         assert!(s.smem_per_wg < 2048, "{}", s.smem_per_wg);
+    }
+
+    #[test]
+    fn grouped_lowering_shrinks_the_reduction_loop() {
+        // depthwise: each output channel reduces over 1 input channel,
+        // so the dot repeats collapse from C*kpt to kpt
+        let dw = ConvShape::depthwise(256, 28, 1);
+        let p = TuneParams::for_shape(&dw).clamped(&dw);
+        let s = generate(&dw, &p).remove(0);
+        let dot = s.segments.iter().find(|x| x.label.contains("dot")).unwrap();
+        assert_eq!(dot.repeats, p.k_per_thread, "cg == 1");
+        let stage = s.segments.iter().find(|x| x.label.contains("image")).unwrap();
+        assert_eq!(stage.repeats, 1, "one input channel per group");
+        assert_eq!(s.write_bytes, dw.output_bytes());
     }
 
     #[test]

@@ -18,29 +18,44 @@
 //! * scalar instructions almost vanish: the tap loop is a pair of
 //!   pointer increments (Table 4: 43.84 x 10^4 vs direct's 990).
 
+use super::halo_factor;
 use super::params::TuneParams;
 use crate::simulator::spec::{KernelSpec, Segment, Stream};
 use crate::workload::ConvShape;
 
-/// Generate the ILP-M kernel trace (one kernel).
+/// Generate the ILP-M kernel trace (one kernel; `groups` launches for
+/// grouped shapes).
+///
+/// ILP-M's structure — all threads of a workgroup share one staged
+/// image tile and reduce over every input channel — only works within
+/// a channel group, so grouped shapes lower as `groups` independent
+/// per-group launches of `K/g` output channels over `C/g` input
+/// channels. For depthwise (`K/g == 1`) that degenerates to nearly
+/// empty workgroups: the broadcast trick has nothing to broadcast
+/// over, which is exactly why the dedicated
+/// [`super::depthwise`] generator exists.
 pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
-    let c = shape.in_channels as u64;
-    let k = shape.out_channels as u64;
     let px = shape.out_pixels() as u64;
+    let in_px = (shape.height * shape.width) as u64;
     let fs = shape.filter_len() as u64;
+    let g = shape.groups as u64;
+    let cg = shape.channels_per_group() as u64;
+    let kg = shape.filters_per_group() as u64;
 
-    // threads <-> output channels; the workgroup covers min(K, wg_size)
-    let wg = p.wg_size.clamp(16, 1024).min(k.max(16));
-    let k_blocks = k.div_ceil(wg);
+    // threads <-> output channels of one group; the workgroup covers
+    // min(K/g, wg_size)
+    let wg = p.wg_size.clamp(16, 1024).min(kg.max(16));
+    let k_blocks = kg.div_ceil(wg);
     let tile_px = (p.tile_px * p.tile_px).clamp(1, px); // image tile area
     let n_tiles = px.div_ceil(tile_px);
-    let workgroups = k_blocks * n_tiles;
+    let workgroups = k_blocks * n_tiles; // per launch
 
-    let halo = 1.0 + 2.0 * (fs as f64).sqrt() / (tile_px as f64).sqrt();
+    let halo = halo_factor(shape, tile_px);
     let tile_elems = tile_px as f64 * halo;
 
-    // ---- per input channel: stage image tile, the only barrier ------
-    let mut stage = Segment::new("stage image tile (Alg.2 l.9-10)", c);
+    // ---- per input channel of the group: stage image tile, the only
+    // barrier --------------------------------------------------------
+    let mut stage = Segment::new("stage image tile (Alg.2 l.9-10)", cg);
     stage.gmem_loads_per_thread = tile_elems / wg as f64;
     stage.smem_stores_per_thread = tile_elems / wg as f64;
     stage.independent_loads = (tile_elems / wg as f64).max(1.0);
@@ -50,7 +65,7 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     stage.barrier_at_end = true;
 
     // ---- tap loop: one coalesced weight load, tile-wide FMA ---------
-    let mut taps = Segment::new("tap loop (Alg.2 l.12-21)", c);
+    let mut taps = Segment::new("tap loop (Alg.2 l.12-21)", cg);
     taps.gmem_loads_per_thread = fs as f64; // one weight per (r,s)
     taps.coalesced = true; // [C][R][S][K] layout: lanes read consecutive K
     taps.valu_per_thread = fs as f64 * tile_px as f64; // FMA whole tile per tap
@@ -80,6 +95,9 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
 
     let input_bytes = shape.input_bytes();
     let filter_bytes = shape.filter_bytes();
+    // per-launch slices: one group's channels and filters
+    let group_input_bytes = input_bytes / g;
+    let group_filter_bytes = filter_bytes / g;
     vec![KernelSpec {
         name: "ILP-M_conv".into(),
         workgroups,
@@ -94,23 +112,24 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
         read_streams: vec![
             Stream {
                 label: "input image",
-                unique_bytes: (input_bytes as f64 * halo) as u64,
+                unique_bytes: (group_input_bytes as f64 * halo) as u64,
                 // re-staged per channel block; padded tiles included
-                touches: k_blocks as f64 * (tile_px * n_tiles) as f64 / px as f64,
-                reuse_distance_bytes: input_bytes,
+                // (strided tiles window a px/in_px slice of the input)
+                touches: k_blocks as f64 * (tile_px * n_tiles) as f64 / in_px as f64,
+                reuse_distance_bytes: group_input_bytes,
             },
             Stream {
                 // each (k-block, tile) wg reads its filter slice once:
                 // the full set crosses DRAM ~n_tiles times pre-L2, with
                 // tight per-channel reuse that L2 absorbs
                 label: "filters [C][R][S][K]",
-                unique_bytes: filter_bytes,
-                touches: n_tiles as f64 * (wg * k_blocks) as f64 / k as f64,
-                reuse_distance_bytes: filter_bytes / c.max(1),
+                unique_bytes: group_filter_bytes,
+                touches: n_tiles as f64 * (wg * k_blocks) as f64 / kg as f64,
+                reuse_distance_bytes: group_filter_bytes / cg.max(1),
             },
         ],
-        write_bytes: shape.output_bytes(),
-        launches: 1,
+        write_bytes: kg * px * 4,
+        launches: g,
         library_kernel: false,
     }]
 }

@@ -16,11 +16,21 @@ use crate::simulator::spec::{KernelSpec, Segment, Stream};
 use crate::workload::ConvShape;
 
 /// Generate the im2col pipeline (unroll kernel + GEMM kernel).
+///
+/// Grouped shapes lower block-diagonally: the unroll still writes one
+/// `[C/g * R*S, P]` slice per group (same total bytes), and the single
+/// big GEMM becomes `g` per-group GEMMs of `[K/g, C/g * R*S] x
+/// [C/g * R*S, P]` — each paying the fixed launch overhead, which is
+/// exactly why im2col collapses on depthwise layers (`g == C` means
+/// `C` launches of a 9-deep "GEMM").
 pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     let c = shape.in_channels as u64;
-    let k = shape.out_channels as u64;
     let px = shape.out_pixels() as u64;
+    let in_px = (shape.height * shape.width) as u64;
     let fs = shape.filter_len() as u64; // R*S
+    let g = shape.groups as u64;
+    let cg = shape.channels_per_group() as u64;
+    let kg = shape.filters_per_group() as u64;
     let input_bytes = shape.input_bytes();
     let unrolled_bytes = c * fs * px * 4;
 
@@ -51,10 +61,11 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
         read_streams: vec![Stream {
             // each input pixel is re-read for each of the R*S positions
             // it participates in, but neighbouring reads are rows apart:
-            // L2 absorbs nearly all of it
+            // L2 absorbs nearly all of it (strided layers touch only
+            // every stride-th window, hence the px/in_px factor)
             label: "input image",
             unique_bytes: input_bytes,
-            touches: fs as f64,
+            touches: fs as f64 * px as f64 / in_px as f64,
             reuse_distance_bytes: (shape.width * 4 * 3) as u64,
         }],
         write_bytes: unrolled_bytes,
@@ -63,13 +74,15 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     };
 
     // ---- kernel 2: SGEMM over the unrolled matrix -------------------
+    // one `[K/g, C/g*fs] x [C/g*fs, P]` GEMM per group (g == 1 is the
+    // paper's single clBLAS call)
     let mut gemm = gemm_spec(
         "im2col_gemm",
-        k,
+        kg,
         px,
-        c * fs,
+        cg * fs,
         p,
-        1,
+        g,
         "filters",
         "unrolled matrix",
     );
@@ -123,5 +136,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn grouped_gemm_goes_block_diagonal() {
+        let shape = ConvShape::depthwise(256, 28, 1);
+        let ks = generate(&shape, &TuneParams::for_shape(&shape).clamped(&shape));
+        // one tiny GEMM per group: [1, 9] x [9, px], 256 launches
+        assert_eq!(ks[1].launches, 256);
+        assert_eq!(ks[1].read_streams[0].unique_bytes, 9 * 4, "per-group filter slice");
+        assert_eq!(ks[1].read_streams[1].unique_bytes, 9 * 28 * 28 * 4, "per-group unrolled slice");
+        assert_eq!(ks[1].write_bytes * ks[1].launches, shape.output_bytes());
+        // the unroll still materialises R*S x the input in total
+        assert_eq!(ks[0].write_bytes, 9 * shape.input_bytes());
+    }
+
+    #[test]
+    fn pointwise_unroll_is_a_pure_copy() {
+        // 1x1: fs == 1, the "unrolled" matrix is exactly the input
+        let shape = ConvShape::pointwise(64, 128, 56);
+        let ks = generate(&shape, &TuneParams::for_shape(&shape).clamped(&shape));
+        assert_eq!(ks[0].write_bytes, shape.input_bytes());
+        assert_eq!(ks[1].launches, 1);
     }
 }

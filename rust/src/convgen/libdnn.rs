@@ -12,23 +12,27 @@ use super::params::TuneParams;
 use crate::simulator::spec::{KernelSpec, Segment, Stream};
 use crate::workload::ConvShape;
 
-/// Generate the fused libdnn kernel trace.
+/// Generate the fused libdnn kernel trace (`groups` launches for
+/// grouped shapes: each group is its own fused implicit GEMM over
+/// `C/g` reduction channels and `K/g` output channels).
 pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
-    let c = shape.in_channels as u64;
-    let k = shape.out_channels as u64;
     let px = shape.out_pixels() as u64;
+    let in_px = (shape.height * shape.width) as u64;
     let fs = shape.filter_len() as u64;
+    let g = shape.groups as u64;
+    let cg = shape.channels_per_group() as u64;
+    let kg = shape.filters_per_group() as u64;
 
-    let tm = p.tile_m.min(k).max(1); // output channels per wg
+    let tm = p.tile_m.min(kg).max(1); // output channels per wg
     let tn = p.tile_n.min(px).max(1); // pixels per wg
     let wg = p.wg_size.min(tm * tn).max(16);
-    let wgs_m = k.div_ceil(tm);
+    let wgs_m = kg.div_ceil(tm);
     let wgs_n = px.div_ceil(tn);
-    let workgroups = wgs_m * wgs_n;
-    // reduction runs over C in steps of tile_k channels, each step
-    // unrolling fs rows of the implicit matrix
-    let tk_c = p.tile_k.clamp(1, c);
-    let steps = c.div_ceil(tk_c);
+    let workgroups = wgs_m * wgs_n; // per launch
+    // reduction runs over the group's C/g channels in steps of tile_k
+    // channels, each step unrolling fs rows of the implicit matrix
+    let tk_c = p.tile_k.clamp(1, cg.max(1));
+    let steps = cg.div_ceil(tk_c);
     let acc_per_thread = (tm * tn).div_ceil(wg) as f64;
 
     // ---- stage: input patch + filter slice + on-the-fly unroll ------
@@ -68,6 +72,9 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
 
     let input_bytes = shape.input_bytes();
     let filter_bytes = shape.filter_bytes();
+    // per-launch slices: one group's channels and filters
+    let group_input_bytes = input_bytes / g;
+    let group_filter_bytes = filter_bytes / g;
     let spec = KernelSpec {
         name: "libdnn_conv".into(),
         workgroups,
@@ -78,24 +85,25 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
         read_streams: vec![
             Stream {
                 // each pixel-tile's patch is re-read by every channel-tile wg
+                // (strided layers window a px/in_px slice of the input)
                 label: "input image",
-                unique_bytes: (input_bytes as f64 * 1.6) as u64, // halo
+                unique_bytes: (group_input_bytes as f64 * 1.6) as u64, // halo
                 touches: wgs_m as f64
-                    * ((tn * wgs_n) as f64 / px as f64)
-                    * ((tk_c * steps) as f64 / c as f64),
-                reuse_distance_bytes: input_bytes + filter_bytes,
+                    * ((tn * wgs_n) as f64 / in_px as f64)
+                    * ((tk_c * steps) as f64 / cg as f64),
+                reuse_distance_bytes: group_input_bytes + group_filter_bytes,
             },
             Stream {
                 label: "filters",
-                unique_bytes: filter_bytes,
+                unique_bytes: group_filter_bytes,
                 touches: wgs_n as f64
-                    * ((tm * wgs_m) as f64 / k as f64)
-                    * ((tk_c * steps) as f64 / c as f64),
-                reuse_distance_bytes: input_bytes + filter_bytes,
+                    * ((tm * wgs_m) as f64 / kg as f64)
+                    * ((tk_c * steps) as f64 / cg as f64),
+                reuse_distance_bytes: group_input_bytes + group_filter_bytes,
             },
         ],
-        write_bytes: shape.output_bytes(),
-        launches: 1,
+        write_bytes: kg * px * 4,
+        launches: g,
         library_kernel: false,
     };
     vec![spec]

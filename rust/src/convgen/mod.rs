@@ -1,14 +1,24 @@
 //! convgen — lowers each convolution algorithm into the simulator's
 //! abstract-kernel IR.
 //!
-//! One generator per algorithm the paper evaluates (§3–4): im2col,
-//! libdnn, Winograd, direct (both Algorithm-1 variants) and ILP-M. A
-//! generator maps `(ConvShape, TuneParams)` to the kernel launch
-//! sequence the OpenCL implementation would issue, with instruction
-//! counts, barrier structure, register pressure and memory streams —
-//! everything [`crate::simulator`] needs to reproduce Tables 3–4 and
-//! Figure 5.
+//! One generator per algorithm: the five the paper evaluates (§3–4) —
+//! im2col, libdnn, Winograd, direct (both Algorithm-1 variants) and
+//! ILP-M — plus a dedicated depthwise generator in the spirit of Zhang
+//! et al. 2020 for MobileNet's `groups == C` layers. A generator maps
+//! `(ConvShape, TuneParams)` to the kernel launch sequence the OpenCL
+//! implementation would issue, with instruction counts, barrier
+//! structure, register pressure and memory streams — everything
+//! [`crate::simulator`] needs to reproduce Tables 3–4 and Figure 5.
+//!
+//! Grouped shapes (`ConvShape::groups > 1`) lower as `groups`
+//! independent per-group sub-convolutions wherever the algorithm's
+//! structure allows it (im2col's GEMM goes block-diagonal, direct and
+//! ILP-M partition their channel loops, libdnn fuses per group);
+//! Winograd declines them ([`Algorithm::supports`]) — its filter
+//! transform amortises over a dense channel reduction that depthwise
+//! layers simply do not have.
 
+pub mod depthwise;
 pub mod direct;
 pub mod gemm;
 pub mod ilpm;
@@ -22,7 +32,8 @@ pub use params::TuneParams;
 use crate::simulator::spec::KernelSpec;
 use crate::workload::ConvShape;
 
-/// The five algorithms of the paper's evaluation.
+/// The convolution algorithms the system can lower: the paper's five
+/// plus the MobileNet-era depthwise specialist.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     Im2col,
@@ -30,15 +41,20 @@ pub enum Algorithm {
     Winograd,
     Direct,
     Ilpm,
+    /// Channel-parallel depthwise convolution (Zhang et al. 2020): no
+    /// im2col materialisation, no shared-memory staging, no barriers —
+    /// each thread owns a register tile of one channel's output.
+    Dwconv,
 }
 
 impl Algorithm {
-    pub const ALL: [Algorithm; 5] = [
+    pub const ALL: [Algorithm; 6] = [
         Algorithm::Im2col,
         Algorithm::Libdnn,
         Algorithm::Winograd,
         Algorithm::Direct,
         Algorithm::Ilpm,
+        Algorithm::Dwconv,
     ];
 
     pub fn name(self) -> &'static str {
@@ -48,6 +64,7 @@ impl Algorithm {
             Algorithm::Winograd => "winograd",
             Algorithm::Direct => "direct",
             Algorithm::Ilpm => "ilpm",
+            Algorithm::Dwconv => "depthwise",
         }
     }
 
@@ -58,16 +75,52 @@ impl Algorithm {
     }
 
     /// Can this algorithm run the given layer at all?
+    ///
+    /// Every algorithm requires the groups to divide the channels.
+    /// Winograd additionally requires a dense (`groups == 1`) stride-1
+    /// 3x3 layer: F(2x2,3x3) trades multiplications for extra V/M
+    /// round trips, a trade that only pays when the GEMMs reduce over
+    /// many channels — a depthwise "GEMM" would be a 1-deep dot.
+    /// The depthwise generator runs only true depthwise layers.
     pub fn supports(self, shape: &ConvShape) -> bool {
+        if !shape.has_valid_groups() {
+            return false;
+        }
         match self {
-            Algorithm::Winograd => shape.stride == 1 && shape.filter_h == 3 && shape.filter_w == 3,
+            Algorithm::Winograd => {
+                shape.groups == 1
+                    && shape.stride == 1
+                    && shape.filter_h == 3
+                    && shape.filter_w == 3
+            }
+            Algorithm::Dwconv => shape.is_depthwise(),
             _ => true,
         }
     }
 }
 
+/// Halo factor of a staged image tile: staged elements per output-tile
+/// element for a `tile_area`-pixel tile.
+///
+/// Stride-1 keeps the seed's closed form (`1 + 2*sqrt(R*S)/e`) so every
+/// ResNet number is bit-identical to the original model; strided tiles
+/// use the exact input-window area `((e-1)*stride + R)^2 / e^2`, which
+/// the stride-1 approximation badly underestimates.
+pub(crate) fn halo_factor(shape: &ConvShape, tile_area: u64) -> f64 {
+    let e = (tile_area as f64).sqrt();
+    let fs = shape.filter_len() as f64;
+    if shape.stride == 1 {
+        1.0 + 2.0 * fs.sqrt() / e
+    } else {
+        let in_h = (e - 1.0) * shape.stride as f64 + shape.filter_h as f64;
+        let in_w = (e - 1.0) * shape.stride as f64 + shape.filter_w as f64;
+        (in_h * in_w) / tile_area as f64
+    }
+}
+
 /// Lower `(algorithm, layer, tuning)` to its kernel launch sequence.
 pub fn generate(alg: Algorithm, shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
+    debug_assert!(alg.supports(shape), "{alg:?} cannot lower {shape:?}");
     let p = p.clamped(shape);
     match alg {
         Algorithm::Im2col => im2col::generate(shape, &p),
@@ -75,27 +128,42 @@ pub fn generate(alg: Algorithm, shape: &ConvShape, p: &TuneParams) -> Vec<Kernel
         Algorithm::Winograd => winograd::generate(shape, &p),
         Algorithm::Direct => direct::generate(shape, &p),
         Algorithm::Ilpm => ilpm::generate(shape, &p),
+        Algorithm::Dwconv => depthwise::generate(shape, &p),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::LayerClass;
+    use crate::workload::{LayerClass, NetworkDef};
+
+    /// Every layer class any serveable network uses.
+    fn all_network_shapes() -> Vec<(String, ConvShape)> {
+        let mut out: Vec<(String, ConvShape)> =
+            crate::workload::layer_classes().into_iter().map(|(l, s)| (l.name(), s)).collect();
+        for net in [NetworkDef::mobilenet_v1(false), NetworkDef::mobilenet_v1(true)] {
+            for l in net.classes() {
+                if !out.iter().any(|(n, _)| *n == l.name()) {
+                    out.push((l.name(), l.shape()));
+                }
+            }
+        }
+        out
+    }
 
     #[test]
-    fn every_algorithm_generates_every_layer() {
+    fn every_algorithm_generates_every_supported_layer() {
         for alg in Algorithm::ALL {
-            for (_, shape) in crate::workload::layer_classes() {
+            for (name, shape) in all_network_shapes() {
                 if !alg.supports(&shape) {
                     continue;
                 }
                 let ks = generate(alg, &shape, &TuneParams::for_shape(&shape));
-                assert!(!ks.is_empty(), "{alg:?}");
+                assert!(!ks.is_empty(), "{alg:?}/{name}");
                 for k in &ks {
-                    assert!(k.workgroups > 0);
-                    assert!(k.wg_size > 0);
-                    assert!(!k.segments.is_empty());
+                    assert!(k.workgroups > 0, "{alg:?}/{name}");
+                    assert!(k.wg_size > 0, "{alg:?}/{name}");
+                    assert!(!k.segments.is_empty(), "{alg:?}/{name}");
                 }
             }
         }
@@ -103,10 +171,14 @@ mod tests {
 
     #[test]
     fn all_write_the_same_output_bytes() {
-        // every algorithm's final kernel writes exactly the output image
+        // every algorithm's final kernel writes exactly the output
+        // image (per launch, for per-group pipelines)
         let shape = LayerClass::Conv3x.shape();
         let p = TuneParams::for_shape(&shape);
         for alg in Algorithm::ALL {
+            if !alg.supports(&shape) {
+                continue;
+            }
             let ks = generate(alg, &shape, &p);
             assert_eq!(
                 ks.last().unwrap().write_bytes,
@@ -117,17 +189,66 @@ mod tests {
     }
 
     #[test]
+    fn grouped_pipelines_write_the_full_output_across_launches() {
+        for (name, shape) in all_network_shapes() {
+            for alg in Algorithm::ALL {
+                if !alg.supports(&shape) {
+                    continue;
+                }
+                let ks = generate(alg, &shape, &TuneParams::for_shape(&shape));
+                let last = ks.last().unwrap();
+                assert_eq!(
+                    last.write_bytes * last.launches,
+                    shape.output_bytes(),
+                    "{alg:?}/{name}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn byte_conservation_across_generators() {
         for alg in Algorithm::ALL {
-            for (_, shape) in crate::workload::layer_classes() {
+            for (name, shape) in all_network_shapes() {
                 if !alg.supports(&shape) {
                     continue;
                 }
                 for k in generate(alg, &shape, &TuneParams::for_shape(&shape)) {
                     let err = k.byte_conservation_error(64);
-                    assert!(err < 0.35, "{alg:?}/{}: {err}", k.name);
+                    assert!(err < 0.35, "{alg:?}/{name}/{}: {err}", k.name);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn winograd_declines_grouped_and_strided_layers() {
+        let dw = ConvShape::depthwise(64, 56, 1);
+        assert!(!Algorithm::Winograd.supports(&dw));
+        let pw = ConvShape::pointwise(64, 128, 56);
+        assert!(!Algorithm::Winograd.supports(&pw), "1x1 filter");
+        let mut strided = LayerClass::Conv4x.shape();
+        strided.stride = 2;
+        assert!(!Algorithm::Winograd.supports(&strided));
+        assert!(Algorithm::Winograd.supports(&LayerClass::Conv4x.shape()));
+    }
+
+    #[test]
+    fn depthwise_algorithm_runs_only_depthwise_layers() {
+        assert!(Algorithm::Dwconv.supports(&ConvShape::depthwise(64, 112, 2)));
+        assert!(!Algorithm::Dwconv.supports(&LayerClass::Conv4x.shape()));
+        assert!(!Algorithm::Dwconv.supports(&ConvShape::pointwise(64, 128, 56)));
+        // grouped-but-not-depthwise is declined too
+        let grouped = LayerClass::Conv2x.shape().with_groups(4).unwrap();
+        assert!(!Algorithm::Dwconv.supports(&grouped));
+    }
+
+    #[test]
+    fn invalid_groups_are_unsupported_everywhere() {
+        let mut bad = LayerClass::Conv2x.shape();
+        bad.groups = 3; // does not divide 64
+        for alg in Algorithm::ALL {
+            assert!(!alg.supports(&bad), "{alg:?}");
         }
     }
 
@@ -138,6 +259,7 @@ mod tests {
         }
         assert_eq!(Algorithm::from_name("ILPM"), Some(Algorithm::Ilpm));
         assert_eq!(Algorithm::from_name("Im2Col"), Some(Algorithm::Im2col));
+        assert_eq!(Algorithm::from_name("Depthwise"), Some(Algorithm::Dwconv));
         assert_eq!(Algorithm::from_name("fft"), None);
     }
 }

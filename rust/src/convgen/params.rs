@@ -69,6 +69,9 @@ impl TuneParams {
         let base = TuneParams::default();
         match alg {
             A::Ilpm => TuneParams { wg_size: 256, tile_px: 5, ..base },
+            // Zhang-et-al-style depthwise: small register tiles, modest
+            // workgroups (the kernel has no barriers to amortise)
+            A::Dwconv => TuneParams { wg_size: 64, tile_px: 4, ..base },
             A::Direct => TuneParams {
                 tile_px: 8,
                 k_per_thread: 4,
@@ -116,16 +119,21 @@ impl TuneParams {
     }
 
     /// Clamp every knob into a legal range for the given layer.
+    ///
+    /// Grouped shapes clamp the channel-indexed knobs to the *per-group*
+    /// extents (`K / groups` output channels, `C / groups` reduction
+    /// channels): a tile must never straddle a group boundary, because
+    /// no generator mixes channels across groups.
     pub fn clamped(mut self, shape: &ConvShape) -> TuneParams {
-        let k = shape.out_channels as u64;
-        let c = shape.in_channels as u64;
+        let kg = shape.filters_per_group() as u64;
+        let cg = shape.channels_per_group() as u64;
         let px = shape.out_pixels() as u64;
         self.wg_size = self.wg_size.clamp(16, 1024);
-        self.tile_m = self.tile_m.clamp(1, k);
+        self.tile_m = self.tile_m.clamp(1, kg.max(1));
         self.tile_n = self.tile_n.clamp(1, px);
-        self.tile_k = self.tile_k.clamp(1, c * shape.filter_len() as u64);
+        self.tile_k = self.tile_k.clamp(1, (cg * shape.filter_len() as u64).max(1));
         self.tile_px = self.tile_px.clamp(1, (px as f64).sqrt().ceil() as u64 + 1);
-        self.k_per_thread = self.k_per_thread.clamp(1, 16.min(k));
+        self.k_per_thread = self.k_per_thread.clamp(1, 16.min(kg.max(1)));
         self
     }
 }

@@ -16,6 +16,10 @@ use crate::workload::ConvShape;
 /// transform).
 pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     assert_eq!(shape.stride, 1, "winograd F(2x2,3x3) is stride-1 only");
+    // Winograd's 16 GEMMs amortise the transforms over a dense channel
+    // reduction; a grouped/depthwise layer has none to offer (see
+    // `Algorithm::supports`)
+    assert_eq!(shape.groups, 1, "winograd declines grouped convolutions");
     let c = shape.in_channels as u64;
     let k = shape.out_channels as u64;
     let n_th = (shape.out_height() as u64).div_ceil(2);

@@ -4,9 +4,12 @@
 //! worker executes requests through a pluggable
 //! [`crate::runtime::ExecutionBackend`] — PJRT over AOT artifacts, or
 //! the route-aware simulated backend ([`SimBackend`]) that prices each
-//! request on the modeled mobile GPU. The per-layer algorithm choice
-//! comes from the routing table the auto-tuner fills. Python never
-//! runs here.
+//! request on the modeled mobile GPU for any serveable
+//! [`crate::workload::NetworkDef`] (ResNet depths, MobileNetV1 at
+//! width 1.0/0.5). The per-layer algorithm choice comes from the
+//! [`RoutingTable`] the auto-tuner fills (one [`Route`] per layer
+//! class, carrying the tuned kernel parameters to the executor).
+//! Python never runs here.
 
 mod engine;
 mod reference;

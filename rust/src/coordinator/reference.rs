@@ -55,6 +55,7 @@ mod tests {
             filter_w: 1,
             stride: 1,
             padding: 0,
+            groups: 1,
         };
         let x = Tensor::randn(&[1, 4, 4], 3);
         let w = Tensor::new(vec![1, 1, 1, 1], vec![1.0]).unwrap();

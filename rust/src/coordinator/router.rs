@@ -6,16 +6,19 @@ use std::collections::HashMap;
 
 use crate::autotune::TuningDatabase;
 use crate::convgen::{Algorithm, TuneParams};
-use crate::workload::LayerClass;
+use crate::workload::{LayerClass, NetworkDef};
 
-/// The algorithm (and tuned parameters) chosen for one layer class.
+/// The algorithm (and tuned parameters) chosen for one layer class —
+/// what the tuner hands the serving path.
 ///
 /// Carrying the [`TuneParams`] is what lets routing decisions reach the
 /// executor: a backend lowering this route re-generates the exact
 /// kernel configuration the tuner picked, not a default one.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Route {
+    /// The layer class this route covers (the tuning key).
     pub layer: LayerClass,
+    /// The algorithm chosen to run this layer class.
     pub algorithm: Algorithm,
     /// Kernel parameters to run the algorithm with (tuned winners for
     /// tuned tables; shape-scaled defaults for uniform baselines).
@@ -33,38 +36,73 @@ pub struct RoutingTable {
 }
 
 impl RoutingTable {
-    /// All layers on one algorithm with shape-scaled default parameters
-    /// (the paper's baseline configurations). Costs are unknown (NaN):
-    /// nobody simulated them, and [`Self::expected_network_ms`] must
-    /// not let them poison a sum.
+    /// The paper's four ResNet classes on one algorithm with
+    /// shape-scaled default parameters (the paper's baseline
+    /// configurations). Costs are unknown (NaN): nobody simulated
+    /// them, and [`Self::expected_network_ms`] must not let them
+    /// poison a sum.
+    ///
+    /// # Panics
+    /// If the algorithm cannot run the ResNet classes (only the
+    /// depthwise specialist can't) — use [`Self::uniform_for`] for a
+    /// fallible, network-aware baseline.
     pub fn uniform(alg: Algorithm) -> RoutingTable {
+        Self::uniform_for(alg, &LayerClass::ALL).expect("algorithm must run the ResNet classes")
+    }
+
+    /// An explicit layer set on one algorithm with shape-scaled default
+    /// parameters. Errors when the algorithm cannot run one of the
+    /// layers (e.g. `--uniform winograd` on a depthwise class) —
+    /// a baseline that silently skips layers would serve a
+    /// partly-priced network.
+    pub fn uniform_for(alg: Algorithm, layers: &[LayerClass]) -> anyhow::Result<RoutingTable> {
         let mut routes = HashMap::new();
-        for layer in LayerClass::ALL {
+        for &layer in layers {
+            let shape = layer.shape();
+            if !alg.supports(&shape) {
+                anyhow::bail!(
+                    "algorithm '{}' cannot run layer {} (groups={}, {}x{} filter, stride {})",
+                    alg.name(),
+                    layer.name(),
+                    shape.groups,
+                    shape.filter_h,
+                    shape.filter_w,
+                    shape.stride,
+                );
+            }
             routes.insert(
                 layer,
                 Route {
                     layer,
                     algorithm: alg,
-                    params: TuneParams::for_shape(&layer.shape()),
+                    params: TuneParams::for_shape(&shape),
                     expected_ms: f64::NAN,
                 },
             );
         }
-        RoutingTable { routes }
+        Ok(RoutingTable { routes })
     }
 
-    /// Build from tuning results: fastest algorithm per layer.
+    /// Build from tuning results: fastest algorithm for *every* layer
+    /// class the database holds for this device (ResNet, MobileNet or
+    /// both — whatever was tuned).
     pub fn from_tuning(db: &TuningDatabase, device: &str) -> RoutingTable {
-        let mut routes = HashMap::new();
-        for layer in LayerClass::ALL {
-            if let Some(best) = db.best_algorithm(device, layer) {
+        let mut routes: HashMap<LayerClass, Route> = HashMap::new();
+        // single pass: each entry only replaces a slower incumbent, so
+        // no per-entry best_algorithm rescan is needed
+        for e in db.entries().filter(|e| e.device == device) {
+            let incumbent = routes.get(&e.layer);
+            // a non-finite incumbent cost (legacy table rows) always
+            // yields to a measured one
+            if incumbent.is_none_or(|r| !r.expected_ms.is_finite() || e.time_ms < r.expected_ms)
+            {
                 routes.insert(
-                    layer,
+                    e.layer,
                     Route {
-                        layer,
-                        algorithm: best.algorithm,
-                        params: best.params,
-                        expected_ms: best.time_ms,
+                        layer: e.layer,
+                        algorithm: e.algorithm,
+                        params: e.params,
+                        expected_ms: e.time_ms,
                     },
                 );
             }
@@ -73,25 +111,28 @@ impl RoutingTable {
     }
 
     /// Build from the persistent tunedb store — the serve-time path:
-    /// zero simulator evaluations, just disk → routes. Lookup is by the
-    /// device's *fingerprint*, so a store tuned against an edited spec
-    /// returns `None` (stale entries never route silently) while other
-    /// devices in the same file stay loadable.
+    /// zero simulator evaluations, just disk → routes, covering every
+    /// layer class stored for the device. Lookup is by the device's
+    /// *fingerprint*, so a store tuned against an edited spec returns
+    /// `None` (stale entries never route silently) while other devices
+    /// in the same file stay loadable.
     pub fn from_store(
         store: &crate::tunedb::TuneStore,
         dev: &crate::simulator::DeviceConfig,
     ) -> Option<RoutingTable> {
         let tunings = store.device(dev.fingerprint())?;
-        let mut routes = HashMap::new();
-        for layer in LayerClass::ALL {
-            if let Some(best) = tunings.best_algorithm(layer) {
+        let mut routes: HashMap<LayerClass, Route> = HashMap::new();
+        for t in tunings.entries() {
+            let incumbent = routes.get(&t.layer);
+            if incumbent.is_none_or(|r| !r.expected_ms.is_finite() || t.time_ms < r.expected_ms)
+            {
                 routes.insert(
-                    layer,
+                    t.layer,
                     Route {
-                        layer,
-                        algorithm: best.algorithm,
-                        params: best.params,
-                        expected_ms: best.time_ms,
+                        layer: t.layer,
+                        algorithm: t.algorithm,
+                        params: t.params,
+                        expected_ms: t.time_ms,
                     },
                 );
             }
@@ -129,10 +170,17 @@ impl RoutingTable {
         self.routes.is_empty()
     }
 
-    /// Expected single-pass time over the routed layers for a depth
-    /// (paper Table 2: per-class conv counts), in ms. Routes with an
-    /// unknown (non-finite) cost — uniform baselines — contribute zero
-    /// instead of poisoning the whole sum with NaN.
+    /// The routed layer classes, sorted by name (stable printing order).
+    pub fn layers(&self) -> Vec<LayerClass> {
+        let mut out: Vec<LayerClass> = self.routes.keys().copied().collect();
+        out.sort_by_key(|l| l.name());
+        out
+    }
+
+    /// Expected single-pass time over the routed layers for a ResNet
+    /// depth (paper Table 2: per-class conv counts), in ms. Routes with
+    /// an unknown (non-finite) cost — uniform baselines — contribute
+    /// zero instead of poisoning the whole sum with NaN.
     pub fn expected_network_ms(&self, convs_per_class: &[usize; 4]) -> f64 {
         LayerClass::ALL
             .iter()
@@ -141,6 +189,23 @@ impl RoutingTable {
             .filter(|(ms, _)| ms.is_finite())
             .map(|(ms, n)| ms * n as f64)
             .sum()
+    }
+
+    /// [`Self::expected_network_ms`] for any serveable network: sums
+    /// `route cost x per-pass conv count` over the network's layer
+    /// table, skipping unknown (non-finite) costs.
+    pub fn expected_network_ms_for(&self, net: &NetworkDef) -> f64 {
+        net.layers
+            .iter()
+            .filter_map(|(l, n)| self.route(*l).map(|r| (r.expected_ms, *n)))
+            .filter(|(ms, _)| ms.is_finite())
+            .map(|(ms, n)| ms * n as f64)
+            .sum()
+    }
+
+    /// True when every layer of `net` has a route.
+    pub fn covers(&self, net: &NetworkDef) -> bool {
+        net.layers.iter().all(|(l, _)| self.routes.contains_key(l))
     }
 }
 
@@ -162,6 +227,9 @@ mod tests {
         let dev = DeviceConfig::mali_g76_mp10();
         let mut db = TuningDatabase::default();
         for alg in Algorithm::ALL {
+            if !alg.supports(&LayerClass::Conv4x.shape()) {
+                continue; // the depthwise specialist sits ResNet out
+            }
             db.insert(tune(alg, LayerClass::Conv4x, &dev));
         }
         let table = RoutingTable::from_tuning(&db, dev.name);
@@ -238,6 +306,50 @@ mod tests {
         );
         let table = RoutingTable::from_store(&store, &dev).expect("routes");
         assert_eq!(table.route(LayerClass::Conv4x).unwrap().params, tuned);
+    }
+
+    #[test]
+    fn uniform_for_rejects_unsupported_algorithms() {
+        let net = NetworkDef::mobilenet_v1(false);
+        let classes = net.classes();
+        // winograd can't run depthwise or 1x1; dwconv can't run pointwise
+        assert!(RoutingTable::uniform_for(Algorithm::Winograd, &classes).is_err());
+        assert!(RoutingTable::uniform_for(Algorithm::Dwconv, &classes).is_err());
+        let t = RoutingTable::uniform_for(Algorithm::Im2col, &classes).expect("im2col runs all");
+        assert_eq!(t.len(), 18);
+        assert!(t.covers(&net));
+        assert!(!t.covers(&NetworkDef::mobilenet_v1(true)), "half-width classes differ");
+    }
+
+    #[test]
+    fn store_routes_cover_mobilenet_classes() {
+        use crate::convgen::TuneParams;
+        use crate::tunedb::{StoredTuning, TuneStore};
+        let dev = DeviceConfig::mali_g76_mp10();
+        let net = NetworkDef::mobilenet_v1(false);
+        let mut store = TuneStore::new();
+        for layer in net.classes() {
+            let shape = layer.shape();
+            let alg =
+                if shape.is_depthwise() { Algorithm::Dwconv } else { Algorithm::Ilpm };
+            store.insert(
+                dev.fingerprint(),
+                dev.name,
+                StoredTuning {
+                    layer,
+                    algorithm: alg,
+                    params: TuneParams::for_shape(&shape),
+                    time_ms: 2.0,
+                    evaluated: 1,
+                    pruned: 0,
+                },
+            );
+        }
+        let table = RoutingTable::from_store(&store, &dev).expect("routes");
+        assert_eq!(table.len(), 18);
+        assert!(table.covers(&net));
+        // 26 convs per pass at 2 ms each
+        assert!((table.expected_network_ms_for(&net) - 52.0).abs() < 1e-9);
     }
 
     #[test]

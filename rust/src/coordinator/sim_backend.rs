@@ -16,7 +16,8 @@
 //!   (`class`, per-worker agreement) stay meaningful.
 //! * **Latency** runs on the modeled device: each request is charged
 //!   the *simulated* time of a full network pass (per-conv simulated ms
-//!   × Table-2 conv counts, summed over the four classes). The session
+//!   × the network table's conv counts, summed over its layer classes
+//!   — ResNet's four, MobileNetV1's eighteen). The session
 //!   optionally sleeps `simulated × time_scale` ("pacing") so wall-clock
 //!   throughput also reflects the modeled GPU; with `time_scale = 0`
 //!   the run finishes at host speed and only the charged latencies are
@@ -32,7 +33,7 @@ use super::router::RoutingTable;
 use crate::convgen::{generate, Algorithm, TuneParams};
 use crate::runtime::{ExecutionBackend, ExecutionOutcome, ExecutorSession, Tensor};
 use crate::simulator::{simulate_pipeline, total_time_ms, DeviceConfig};
-use crate::workload::{ConvShape, LayerClass, ResNetDepth};
+use crate::workload::{ConvShape, LayerClass, NetworkDef};
 
 /// Proxy-network geometry: one tiny 3×3 conv stands in for each routed
 /// layer class. Kept miniature so the host-side numeric path costs
@@ -70,7 +71,7 @@ impl PlannedLayer {
 /// mobile-GPU latencies out.
 pub struct SimBackend {
     device_name: String,
-    network: &'static str,
+    network: String,
     plan: Vec<PlannedLayer>,
     network_time: Duration,
     time_scale: f64,
@@ -80,25 +81,28 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
-    /// Lower and price every routed layer on `dev`. Fails when the
-    /// routing table misses a layer class: a partly-tuned store must
-    /// not silently serve a partly-priced network.
+    /// Lower and price every routed layer of `net` on `dev`. Fails
+    /// when the routing table misses one of the network's layer
+    /// classes: a partly-tuned store must not silently serve a
+    /// partly-priced network.
     pub fn new(
         dev: &DeviceConfig,
         routes: &RoutingTable,
-        depth: &ResNetDepth,
+        net: &NetworkDef,
         time_scale: f64,
     ) -> Result<SimBackend> {
         if !(time_scale.is_finite() && time_scale >= 0.0) {
             bail!("time_scale must be finite and >= 0, got {time_scale}");
         }
-        let mut plan = Vec::with_capacity(LayerClass::ALL.len());
-        for (layer, convs) in LayerClass::ALL.into_iter().zip(depth.convs) {
+        let mut plan = Vec::with_capacity(net.layers.len());
+        for &(layer, convs) in &net.layers {
             let route = routes.route(layer).ok_or_else(|| {
                 anyhow!(
-                    "routing table has no entry for {} — partly-tuned store? \
-                     re-run `ilpm tune --out` for this device",
-                    layer.name()
+                    "routing table has no entry for {} — partly-tuned store, or a \
+                     store tuned for a different network? re-run \
+                     `ilpm tune --network {} --out` for this device",
+                    layer.name(),
+                    net.name,
                 )
             })?;
             let shape = layer.shape();
@@ -124,7 +128,7 @@ impl SimBackend {
             .collect();
         Ok(SimBackend {
             device_name: dev.name.to_string(),
-            network: depth.name,
+            network: net.name.clone(),
             plan,
             network_time: Duration::from_secs_f64(network_ms / 1e3),
             time_scale,
@@ -134,13 +138,15 @@ impl SimBackend {
 
     /// Uniform-algorithm baseline (e.g. the paper's all-im2col and
     /// all-direct configurations) at shape-scaled default parameters.
+    /// Errors when the algorithm cannot run one of the network's layer
+    /// classes (e.g. Winograd on MobileNet's depthwise layers).
     pub fn uniform(
         alg: Algorithm,
         dev: &DeviceConfig,
-        depth: &ResNetDepth,
+        net: &NetworkDef,
         time_scale: f64,
     ) -> Result<SimBackend> {
-        SimBackend::new(dev, &RoutingTable::uniform(alg), depth, time_scale)
+        SimBackend::new(dev, &RoutingTable::uniform_for(alg, &net.classes())?, net, time_scale)
     }
 
     /// The image shape requests must carry (the proxy network's input).
@@ -159,7 +165,8 @@ impl SimBackend {
         self.network_time
     }
 
-    /// The lowered, priced per-layer plan, in [`LayerClass::ALL`] order.
+    /// The lowered, priced per-layer plan, in the network's layer
+    /// table order.
     pub fn plan(&self) -> &[PlannedLayer] {
         &self.plan
     }
@@ -168,8 +175,8 @@ impl SimBackend {
         &self.device_name
     }
 
-    pub fn network(&self) -> &'static str {
-        self.network
+    pub fn network(&self) -> &str {
+        &self.network
     }
 }
 
@@ -234,14 +241,14 @@ impl ExecutorSession for SimSession {
 mod tests {
     use super::*;
 
-    fn resnet18() -> &'static ResNetDepth {
-        ResNetDepth::by_name("resnet18").unwrap()
+    fn resnet18() -> NetworkDef {
+        NetworkDef::by_name("resnet18").unwrap()
     }
 
     #[test]
     fn plan_prices_every_layer_and_sums_to_network_time() {
         let dev = DeviceConfig::mali_g76_mp10();
-        let b = SimBackend::uniform(Algorithm::Direct, &dev, resnet18(), 0.0).expect("backend");
+        let b = SimBackend::uniform(Algorithm::Direct, &dev, &resnet18(), 0.0).expect("backend");
         assert_eq!(b.plan().len(), 4);
         for p in b.plan() {
             assert_eq!(p.algorithm, Algorithm::Direct);
@@ -257,14 +264,14 @@ mod tests {
         let dev = DeviceConfig::mali_g76_mp10();
         let mut table = RoutingTable::default();
         table.set(LayerClass::Conv2x, Algorithm::Ilpm, 1.0);
-        let err = SimBackend::new(&dev, &table, resnet18(), 0.0).unwrap_err();
+        let err = SimBackend::new(&dev, &table, &resnet18(), 0.0).unwrap_err();
         assert!(format!("{err:#}").contains("no entry"), "{err:#}");
     }
 
     #[test]
     fn sessions_are_deterministic_and_charge_simulated_time() {
         let dev = DeviceConfig::mali_g76_mp10();
-        let b = SimBackend::uniform(Algorithm::Ilpm, &dev, resnet18(), 0.0).expect("backend");
+        let b = SimBackend::uniform(Algorithm::Ilpm, &dev, &resnet18(), 0.0).expect("backend");
         let mut s1 = b.connect(0).unwrap();
         let mut s2 = b.connect(1).unwrap();
         let img = Tensor::randn(&b.input_shape(), 42);
@@ -277,11 +284,32 @@ mod tests {
     }
 
     #[test]
+    fn mobilenet_uniform_backend_prices_every_class() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let net = NetworkDef::mobilenet_v1(false);
+        let b = SimBackend::uniform(Algorithm::Im2col, &dev, &net, 0.0).expect("backend");
+        assert_eq!(b.plan().len(), net.layers.len(), "one plan row per table row");
+        assert!(b.network_ms() > 0.0);
+        assert_eq!(b.network(), "mobilenetV1");
+        // winograd cannot serve mobilenet (depthwise + 1x1 layers)
+        assert!(SimBackend::uniform(Algorithm::Winograd, &dev, &net, 0.0).is_err());
+        // the half-width variant is cheaper
+        let half = SimBackend::uniform(
+            Algorithm::Im2col,
+            &dev,
+            &NetworkDef::mobilenet_v1(true),
+            0.0,
+        )
+        .expect("backend");
+        assert!(half.network_ms() < b.network_ms());
+    }
+
+    #[test]
     fn deeper_networks_cost_more_simulated_time() {
         let dev = DeviceConfig::mali_g76_mp10();
-        let d152 = ResNetDepth::by_name("resnet152").unwrap();
-        let b18 = SimBackend::uniform(Algorithm::Direct, &dev, resnet18(), 0.0).unwrap();
-        let b152 = SimBackend::uniform(Algorithm::Direct, &dev, d152, 0.0).unwrap();
+        let d152 = NetworkDef::by_name("resnet152").unwrap();
+        let b18 = SimBackend::uniform(Algorithm::Direct, &dev, &resnet18(), 0.0).unwrap();
+        let b152 = SimBackend::uniform(Algorithm::Direct, &dev, &d152, 0.0).unwrap();
         assert!(b152.network_ms() > b18.network_ms());
     }
 }

@@ -11,13 +11,18 @@
 //!   single-image inference [`coordinator`], the mobile-GPU
 //!   microarchitecture [`simulator`] that reproduces the paper's
 //!   evaluation (Figure 5, Tables 3–4), per-algorithm abstract-kernel
-//!   trace generators in [`convgen`], the [`autotune`] search the
-//!   paper's §5 describes, and the persistent [`tunedb`] store that
-//!   makes tuning results durable across processes (tune once per
-//!   device, serve from disk forever).
+//!   trace generators in [`convgen`] (the paper's five plus a
+//!   depthwise specialist for MobileNet's grouped layers), the network
+//!   layer tables in [`workload`] (ResNet Table 2 and MobileNetV1 at
+//!   width 1.0/0.5), the [`autotune`] search the paper's §5 describes,
+//!   and the persistent [`tunedb`] store that makes tuning results
+//!   durable across processes (tune once per device, serve from disk
+//!   forever).
 //!
-//! See DESIGN.md for the paper→module map and the tunedb on-disk
-//! format and invalidation rules.
+//! See README.md for the CLI front door, and DESIGN.md for the
+//! paper→module map, the workload tables, the grouped-convolution
+//! lowering rules, and the tunedb on-disk format and invalidation
+//! rules.
 
 pub mod autotune;
 pub mod cli;

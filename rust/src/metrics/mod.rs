@@ -1,5 +1,13 @@
 //! Metrics — latency/throughput aggregation for the engine, plus the
 //! paper-table formatters the bench harnesses print.
+//!
+//! [`LatencyRecorder`]/[`LatencySummary`] aggregate the serving side
+//! (p50/p95/p99, throughput, JSON rows for BENCH_*.json);
+//! [`fig5_table`]/[`table3`]/[`table4`] regenerate the paper's
+//! artifacts from tuned simulations. Table formatters take their
+//! algorithm columns from [`crate::convgen::Algorithm::ALL`] filtered
+//! by layer support, so workload-specific generators (the depthwise
+//! specialist) appear only where they can run.
 
 mod latency;
 mod tables;

@@ -37,21 +37,28 @@ pub fn fig5_table(dev: &DeviceConfig) -> Vec<Fig5Row> {
     rows
 }
 
-/// Render Figure 5 rows as the text table the bench prints.
+/// Render Figure 5 rows as the text table the bench prints. Columns
+/// are the algorithms that actually appear in `rows` (in
+/// [`Algorithm::ALL`] order), so a ResNet table keeps the paper's five
+/// columns while a depthwise sweep grows a sixth.
 pub fn render_fig5(rows: &[Fig5Row]) -> String {
-    let mut out = String::new();
-    out.push_str(&format!(
-        "{:<10} {:>10} {:>10} {:>10} {:>10} {:>10}   (ms, lower is better)\n",
-        "layer", "im2col", "libdnn", "winograd", "direct", "ilpm"
-    ));
+    let algs: Vec<Algorithm> = Algorithm::ALL
+        .into_iter()
+        .filter(|a| rows.iter().any(|r| r.algorithm == *a))
+        .collect();
+    let mut out = format!("{:<10}", "layer");
+    for alg in &algs {
+        out.push_str(&format!(" {:>10}", alg.name()));
+    }
+    out.push_str("   (ms, lower is better)\n");
     for layer in LayerClass::ALL {
         let mut line = format!("{:<10}", layer.name());
-        for alg in Algorithm::ALL {
+        for alg in &algs {
             let cell = rows
                 .iter()
-                .find(|r| r.layer == layer && r.algorithm == alg)
-                .map(|r| format!("{:>10.3}", r.time_ms))
-                .unwrap_or_else(|| format!("{:>10}", "-"));
+                .find(|r| r.layer == layer && r.algorithm == *alg)
+                .map(|r| format!(" {:>10.3}", r.time_ms))
+                .unwrap_or_else(|| format!(" {:>10}", "-"));
             line.push_str(&cell);
         }
         out.push_str(&line);
@@ -62,7 +69,7 @@ pub fn render_fig5(rows: &[Fig5Row]) -> String {
 
 /// Profile rows for one (device, layer): every kernel of every
 /// algorithm at the **paper's profiled configurations** (see
-/// [`TuneParams::paper_profile`]) — Tables 3/4 compare algorithm
+/// [`crate::convgen::TuneParams::paper_profile`]) — Tables 3/4 compare algorithm
 /// structure, so the knobs are pinned to what the paper's kernels used,
 /// not to this cost model's tuner choices.
 pub fn profile_rows(dev: &DeviceConfig, layer: LayerClass) -> Vec<(Algorithm, Vec<SimReport>)> {

@@ -60,7 +60,7 @@ pub struct DeviceConfig {
     /// device. clBLAS is tuned for GCN wavefronts; on Mali's 8-wide
     /// warps its tiling and vector widths fit poorly — the paper's own
     /// explanation for im2col/Winograd collapsing on mobile ("GEMM ...
-    /// needs large workgroup; [Mali] favors a smaller workgroup size").
+    /// needs large workgroup; \[Mali\] favors a smaller workgroup size").
     pub gemm_library_efficiency: f64,
 }
 

@@ -13,9 +13,13 @@
 //! * Entries are keyed by a **device fingerprint** —
 //!   [`crate::simulator::DeviceConfig::fingerprint`], a stable FNV-1a
 //!   hash of *every* field of the device spec — plus
-//!   `(LayerClass, Algorithm)`. Editing any device parameter changes
-//!   the fingerprint, so stale results for that device silently miss
-//!   and get re-tuned, while other devices' entries stay valid.
+//!   `(LayerClass, Algorithm)`. The layer key carries the full class
+//!   geometry (a depthwise `dw64s1@56` and the dense `conv2.x` with
+//!   identical C/K/H/W are distinct keys: their `groups` differ, so
+//!   their lowerings and winners do too). Editing any device parameter
+//!   changes the fingerprint, so stale results for that device
+//!   silently miss and get re-tuned, while other devices' entries stay
+//!   valid.
 //! * [`crate::autotune::tune_all_warm`] warm-starts the exhaustive
 //!   search from a store: keys already present are loaded instead of
 //!   swept (a second run evaluates zero candidates), fresh results are

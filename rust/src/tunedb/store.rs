@@ -196,7 +196,7 @@ impl TuneStore {
                     .into_iter()
                     .map(|t| {
                         let mut m = BTreeMap::new();
-                        m.insert("layer".into(), Json::Str(t.layer.name().into()));
+                        m.insert("layer".into(), Json::Str(t.layer.name()));
                         m.insert("algorithm".into(), Json::Str(t.algorithm.name().into()));
                         m.insert("time_ms".into(), Json::Num(t.time_ms));
                         m.insert("evaluated".into(), Json::Num(t.evaluated as f64));

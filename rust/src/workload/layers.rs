@@ -1,11 +1,28 @@
-//! Paper Table 2: the convolution layers of ResNet on ImageNet.
+//! Network layer tables: paper Table 2 (ResNet) and MobileNetV1.
 //!
 //! All non-1x1 convolutions of ResNet share four geometry classes
 //! (`conv2.x`…`conv5.x`); the depth variants only change how many times
 //! each class executes. The paper evaluates exactly these four classes
 //! with 3x3 filters, stride 1, padding 1.
+//!
+//! MobileNetV1 (Howard et al. 2017) is the second serveable workload:
+//! thirteen depthwise-separable blocks, each a 3x3 *depthwise*
+//! convolution (`groups == channels`, one filter slice per channel)
+//! followed by a 1x1 *pointwise* convolution. Their arithmetic-intensity
+//! and ILP profiles differ radically from ResNet's dense 3x3 layers —
+//! the regime studied by Zhang et al. 2020 ("High Performance Depthwise
+//! and Pointwise Convolutions on Mobile Devices") — which is why the
+//! repo carries a dedicated depthwise generator
+//! ([`crate::convgen::depthwise`]) next to the paper's five algorithms.
 
 /// Geometry of a convolution layer (mirrors `python/compile/kernels/common.py`).
+///
+/// `groups` partitions the channels: input channels are split into
+/// `groups` equal slices and each output channel reads only its own
+/// slice (`groups == 1` is a dense convolution, `groups == C == K` is a
+/// depthwise convolution). Both channel counts must be divisible by
+/// `groups`; [`ConvShape::has_valid_groups`] checks, and the checked
+/// constructor [`ConvShape::with_groups`] rejects indivisible requests.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConvShape {
     pub in_channels: usize,  // C
@@ -16,6 +33,8 @@ pub struct ConvShape {
     pub filter_w: usize,     // S
     pub stride: usize,
     pub padding: usize,
+    /// Channel groups (1 = dense, C = depthwise).
+    pub groups: usize,
 }
 
 impl ConvShape {
@@ -29,7 +48,80 @@ impl ConvShape {
             filter_w: 3,
             stride: 1,
             padding: 1,
+            groups: 1,
         }
+    }
+
+    /// A 3x3 depthwise convolution: `groups == in == out == c`, one
+    /// 3x3 filter slice per channel (MobileNet's spatial stage).
+    pub const fn depthwise(c: usize, hw: usize, stride: usize) -> ConvShape {
+        ConvShape {
+            in_channels: c,
+            out_channels: c,
+            height: hw,
+            width: hw,
+            filter_h: 3,
+            filter_w: 3,
+            stride,
+            padding: 1,
+            groups: c,
+        }
+    }
+
+    /// A 1x1 pointwise convolution `c -> k` (MobileNet's channel-mixing
+    /// stage): stride 1, no padding, dense across channels.
+    pub const fn pointwise(c: usize, k: usize, hw: usize) -> ConvShape {
+        ConvShape {
+            in_channels: c,
+            out_channels: k,
+            height: hw,
+            width: hw,
+            filter_h: 1,
+            filter_w: 1,
+            stride: 1,
+            padding: 0,
+            groups: 1,
+        }
+    }
+
+    /// Re-group this shape, rejecting group counts that do not divide
+    /// both channel extents (a grouped convolution with ragged channel
+    /// slices is not a thing any backend can lower).
+    pub fn with_groups(mut self, groups: usize) -> anyhow::Result<ConvShape> {
+        self.groups = groups;
+        if self.has_valid_groups() {
+            Ok(self)
+        } else {
+            anyhow::bail!(
+                "groups={groups} does not divide channels C={} K={}",
+                self.in_channels,
+                self.out_channels
+            )
+        }
+    }
+
+    /// Do the groups divide both channel extents?
+    pub fn has_valid_groups(&self) -> bool {
+        self.groups >= 1
+            && self.in_channels % self.groups == 0
+            && self.out_channels % self.groups == 0
+    }
+
+    /// Input channels each output channel reads (C / groups).
+    pub fn channels_per_group(&self) -> usize {
+        self.in_channels / self.groups.max(1)
+    }
+
+    /// Output channels per group (K / groups).
+    pub fn filters_per_group(&self) -> usize {
+        self.out_channels / self.groups.max(1)
+    }
+
+    /// One filter slice per channel, nothing shared across channels.
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1
+            && self.groups == self.in_channels
+            && self.groups == self.out_channels
     }
 
     pub fn out_height(&self) -> usize {
@@ -45,11 +137,12 @@ impl ConvShape {
         self.out_height() * self.out_width()
     }
 
-    /// Useful FLOPs (mul+add).
+    /// Useful FLOPs (mul+add). Each output channel reduces over only
+    /// its group's `C / groups` input channels.
     pub fn flops(&self) -> u64 {
         2 * self.out_channels as u64
             * self.out_pixels() as u64
-            * self.in_channels as u64
+            * self.channels_per_group() as u64
             * (self.filter_h * self.filter_w) as u64
     }
 
@@ -62,9 +155,10 @@ impl ConvShape {
         (self.in_channels * self.height * self.width * 4) as u64
     }
 
-    /// Bytes of all filters (f32).
+    /// Bytes of all filters (f32): each of the K filters spans only its
+    /// group's `C / groups` input channels.
     pub fn filter_bytes(&self) -> u64 {
-        (self.out_channels * self.in_channels * self.filter_len() * 4) as u64
+        (self.out_channels * self.channels_per_group() * self.filter_len() * 4) as u64
     }
 
     /// Bytes of the output image (f32).
@@ -73,41 +167,97 @@ impl ConvShape {
     }
 }
 
-/// One of the paper's four evaluated layer classes.
+/// A tunable layer class: one of the paper's four evaluated ResNet
+/// geometries, or a MobileNetV1 depthwise / pointwise geometry.
+///
+/// A `LayerClass` is the tuning key: the autotuner, the tunedb store
+/// and the routing table are all indexed by `(device, LayerClass,
+/// Algorithm)`. The MobileNet variants carry their geometry in the
+/// variant payload, so a depthwise layer and a dense layer with
+/// identical C/K/H/W are *different* keys (their lowering, and hence
+/// their tuned winners, differ).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerClass {
     Conv2x,
     Conv3x,
     Conv4x,
     Conv5x,
+    /// MobileNet 3x3 depthwise stage: `channels` at `hw`x`hw`, `stride`.
+    Dw { channels: u32, hw: u32, stride: u32 },
+    /// MobileNet 1x1 pointwise stage: `in_channels -> out_channels` at
+    /// `hw`x`hw`.
+    Pw { in_channels: u32, out_channels: u32, hw: u32 },
 }
 
 impl LayerClass {
+    /// The paper's four evaluated ResNet classes (Table 2). MobileNet
+    /// classes are enumerated by [`NetworkDef`] tables, not here.
     pub const ALL: [LayerClass; 4] =
         [LayerClass::Conv2x, LayerClass::Conv3x, LayerClass::Conv4x, LayerClass::Conv5x];
 
-    /// Table 2 geometry.
+    /// Layer geometry (Table 2 for the ResNet classes).
     pub fn shape(self) -> ConvShape {
         match self {
             LayerClass::Conv2x => ConvShape::square3x3(64, 64, 56),
             LayerClass::Conv3x => ConvShape::square3x3(128, 128, 28),
             LayerClass::Conv4x => ConvShape::square3x3(256, 256, 14),
             LayerClass::Conv5x => ConvShape::square3x3(512, 512, 7),
+            LayerClass::Dw { channels, hw, stride } => {
+                ConvShape::depthwise(channels as usize, hw as usize, stride as usize)
+            }
+            LayerClass::Pw { in_channels, out_channels, hw } => {
+                ConvShape::pointwise(in_channels as usize, out_channels as usize, hw as usize)
+            }
         }
     }
 
-    /// Paper's name, e.g. `conv4.x`.
-    pub fn name(self) -> &'static str {
+    /// Canonical name, parseable by [`LayerClass::from_name`]:
+    /// `conv4.x` (paper), `dw64s2@112` (depthwise: 64 channels,
+    /// stride 2, 112x112 input), `pw64-128@56` (pointwise: 64 -> 128
+    /// channels at 56x56).
+    pub fn name(self) -> String {
         match self {
-            LayerClass::Conv2x => "conv2.x",
-            LayerClass::Conv3x => "conv3.x",
-            LayerClass::Conv4x => "conv4.x",
-            LayerClass::Conv5x => "conv5.x",
+            LayerClass::Conv2x => "conv2.x".to_string(),
+            LayerClass::Conv3x => "conv3.x".to_string(),
+            LayerClass::Conv4x => "conv4.x".to_string(),
+            LayerClass::Conv5x => "conv5.x".to_string(),
+            LayerClass::Dw { channels, hw, stride } => format!("dw{channels}s{stride}@{hw}"),
+            LayerClass::Pw { in_channels, out_channels, hw } => {
+                format!("pw{in_channels}-{out_channels}@{hw}")
+            }
         }
     }
 
+    /// Parse any name produced by [`LayerClass::name`]. Degenerate
+    /// geometries (zero channels, zero stride, zero grid) are rejected
+    /// here so shape math downstream never divides by zero; any
+    /// positive grid is fine (dw pads by 1, so even `hw == 1` keeps
+    /// `H + 2P - R` non-negative).
     pub fn from_name(name: &str) -> Option<LayerClass> {
-        LayerClass::ALL.into_iter().find(|l| l.name() == name)
+        if let Some(l) = LayerClass::ALL.into_iter().find(|l| l.name() == name) {
+            return Some(l);
+        }
+        if let Some(rest) = name.strip_prefix("dw") {
+            let (channels, rest) = rest.split_once('s')?;
+            let (stride, hw) = rest.split_once('@')?;
+            let (channels, stride, hw) =
+                (channels.parse().ok()?, stride.parse().ok()?, hw.parse().ok()?);
+            if channels == 0 || stride == 0 || hw == 0 {
+                return None;
+            }
+            return Some(LayerClass::Dw { channels, hw, stride });
+        }
+        if let Some(rest) = name.strip_prefix("pw") {
+            let (cin, rest) = rest.split_once('-')?;
+            let (cout, hw) = rest.split_once('@')?;
+            let (in_channels, out_channels, hw) =
+                (cin.parse().ok()?, cout.parse().ok()?, hw.parse().ok()?);
+            if in_channels == 0 || out_channels == 0 || hw == 0 {
+                return None;
+            }
+            return Some(LayerClass::Pw { in_channels, out_channels, hw });
+        }
+        None
     }
 }
 
@@ -136,7 +286,111 @@ pub const RESNET_DEPTHS: [ResNetDepth; 5] = [
     ResNetDepth { name: "resnet152", convs: [3, 8, 36, 3] },
 ];
 
-/// All four evaluated classes with their shapes.
+/// MobileNetV1's thirteen depthwise-separable blocks at width
+/// multiplier 1.0: `(in_channels, input hw, dw stride, out_channels,
+/// repeats)`. Each block is one `Dw` layer followed by one `Pw` layer
+/// at the post-stride resolution. (The initial dense 3x3 stem conv is
+/// <2% of the network's work and is not modeled, mirroring how the
+/// ResNet tables cover only the four 3x3 classes.)
+const MOBILENET_V1_BLOCKS: [(u32, u32, u32, u32, usize); 9] = [
+    (32, 112, 1, 64, 1),
+    (64, 112, 2, 128, 1),
+    (128, 56, 1, 128, 1),
+    (128, 56, 2, 256, 1),
+    (256, 28, 1, 256, 1),
+    (256, 28, 2, 512, 1),
+    (512, 14, 1, 512, 5),
+    (512, 14, 2, 1024, 1),
+    (1024, 7, 1, 1024, 1),
+];
+
+/// A serveable network: an ordered list of `(layer class, how many
+/// convs of that class one forward pass executes)`.
+///
+/// This is what the serving stack consumes: [`crate::coordinator`]
+/// lowers and prices each class once and multiplies by the count.
+/// Distinct classes double as the tuning work-list for the network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkDef {
+    pub name: String,
+    /// `(layer class, convs per forward pass)`, in execution order.
+    pub layers: Vec<(LayerClass, usize)>,
+}
+
+impl NetworkDef {
+    /// A ResNet depth variant over the paper's four classes.
+    pub fn resnet(depth: &ResNetDepth) -> NetworkDef {
+        NetworkDef {
+            name: depth.name.to_string(),
+            layers: LayerClass::ALL.into_iter().zip(depth.convs).collect(),
+        }
+    }
+
+    /// MobileNetV1 at width multiplier 1.0, or 0.5 when `half_width`
+    /// (every channel count halved — the deployment-popular slim
+    /// variant; both multipliers keep all channel counts integral).
+    pub fn mobilenet_v1(half_width: bool) -> NetworkDef {
+        let div = if half_width { 2 } else { 1 };
+        let mut layers = Vec::with_capacity(2 * MOBILENET_V1_BLOCKS.len());
+        for (c, hw, stride, k, reps) in MOBILENET_V1_BLOCKS {
+            let (c, k) = (c / div, k / div);
+            layers.push((LayerClass::Dw { channels: c, hw, stride }, reps));
+            layers.push((
+                LayerClass::Pw { in_channels: c, out_channels: k, hw: hw / stride },
+                reps,
+            ));
+        }
+        NetworkDef {
+            name: if half_width { "mobilenetV1-0.5" } else { "mobilenetV1" }.to_string(),
+            layers,
+        }
+    }
+
+    /// Look up a serveable network: any `resnetNN` (Table 2) or
+    /// `mobilenetV1` / `mobilenetV1-0.5`. Case-insensitive.
+    pub fn by_name(name: &str) -> Option<NetworkDef> {
+        if let Some(d) = ResNetDepth::by_name(name) {
+            return Some(NetworkDef::resnet(d));
+        }
+        match name.to_ascii_lowercase().as_str() {
+            "mobilenetv1" | "mobilenet" => Some(NetworkDef::mobilenet_v1(false)),
+            "mobilenetv1-0.5" | "mobilenet-0.5" => Some(NetworkDef::mobilenet_v1(true)),
+            _ => None,
+        }
+    }
+
+    /// The names [`NetworkDef::by_name`] accepts (for CLI errors).
+    pub fn known_names() -> Vec<String> {
+        let mut names: Vec<String> = RESNET_DEPTHS.iter().map(|d| d.name.to_string()).collect();
+        names.push("mobilenetV1".to_string());
+        names.push("mobilenetV1-0.5".to_string());
+        names
+    }
+
+    /// Distinct layer classes of this network (the tuning work-list),
+    /// in first-appearance order.
+    pub fn classes(&self) -> Vec<LayerClass> {
+        let mut out: Vec<LayerClass> = Vec::new();
+        for (l, _) in &self.layers {
+            if !out.contains(l) {
+                out.push(*l);
+            }
+        }
+        out
+    }
+
+    /// Total convolutions one forward pass executes.
+    pub fn total_convs(&self) -> usize {
+        self.layers.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Useful FLOPs of one forward pass over the modeled layers.
+    pub fn flops(&self) -> u64 {
+        self.layers.iter().map(|(l, n)| l.shape().flops() * *n as u64).sum()
+    }
+}
+
+/// The paper's four evaluated ResNet classes with their shapes.
 pub fn layer_classes() -> Vec<(LayerClass, ConvShape)> {
     LayerClass::ALL.into_iter().map(|l| (l, l.shape())).collect()
 }
@@ -169,7 +423,7 @@ mod tests {
 
     #[test]
     fn all_classes_equal_flops() {
-        // the four classes are iso-FLOP by ResNet design
+        // the four ResNet classes are iso-FLOP by design
         let f: Vec<u64> = layer_classes().iter().map(|(_, s)| s.flops()).collect();
         assert!(f.windows(2).all(|w| w[0] == w[1]));
     }
@@ -177,7 +431,7 @@ mod tests {
     #[test]
     fn from_name_round_trips() {
         for l in LayerClass::ALL {
-            assert_eq!(LayerClass::from_name(l.name()), Some(l));
+            assert_eq!(LayerClass::from_name(&l.name()), Some(l));
         }
         assert_eq!(LayerClass::from_name("conv9.x"), None);
     }
@@ -187,5 +441,138 @@ mod tests {
         assert_eq!(ResNetDepth::by_name("resnet18").unwrap().convs, [4, 4, 4, 4]);
         assert_eq!(ResNetDepth::by_name("ResNet152").unwrap().convs, [3, 8, 36, 3]);
         assert!(ResNetDepth::by_name("vgg16").is_none());
+    }
+
+    // ---- grouped-shape math -------------------------------------------
+
+    #[test]
+    fn stride2_depthwise_halves_the_output_grid() {
+        // dw 3x3 s2 pad 1: 112 -> 56, 56 -> 28, 14 -> 7
+        for (hw, want) in [(112usize, 56usize), (56, 28), (14, 7)] {
+            let s = ConvShape::depthwise(64, hw, 2);
+            assert_eq!(s.out_height(), want, "hw {hw}");
+            assert_eq!(s.out_width(), want, "hw {hw}");
+        }
+        // stride 1 preserves the grid under same-padding
+        let s1 = ConvShape::depthwise(64, 112, 1);
+        assert_eq!((s1.out_height(), s1.out_width()), (112, 112));
+    }
+
+    #[test]
+    fn groups_divisibility_is_enforced() {
+        let dense = ConvShape::square3x3(64, 64, 56);
+        assert!(dense.has_valid_groups());
+        assert!(dense.with_groups(64).is_ok());
+        assert!(dense.with_groups(3).is_err(), "3 does not divide 64");
+        assert!(ConvShape::square3x3(64, 96, 56).with_groups(64).is_err(), "K not divisible");
+        let dw = dense.with_groups(64).unwrap();
+        assert!(dw.is_depthwise());
+        assert_eq!(dw.channels_per_group(), 1);
+        assert_eq!(dw.filters_per_group(), 1);
+        assert!(!dense.is_depthwise());
+    }
+
+    #[test]
+    fn grouped_flops_and_filter_bytes_shrink_by_groups() {
+        let dense = ConvShape::square3x3(64, 64, 56);
+        let dw = dense.with_groups(64).unwrap();
+        assert_eq!(dw.flops() * 64, dense.flops());
+        assert_eq!(dw.filter_bytes() * 64, dense.filter_bytes());
+        // pointwise: dense 1x1, flops = 2*K*px*C
+        let pw = ConvShape::pointwise(64, 128, 56);
+        assert_eq!(pw.flops(), 2 * 128 * 56 * 56 * 64);
+        assert_eq!(pw.out_pixels(), 56 * 56);
+    }
+
+    #[test]
+    fn mobilenet_class_names_round_trip() {
+        for net in [NetworkDef::mobilenet_v1(false), NetworkDef::mobilenet_v1(true)] {
+            for l in net.classes() {
+                assert_eq!(LayerClass::from_name(&l.name()), Some(l), "{}", l.name());
+            }
+        }
+        assert_eq!(
+            LayerClass::from_name("dw64s2@112"),
+            Some(LayerClass::Dw { channels: 64, hw: 112, stride: 2 })
+        );
+        assert_eq!(
+            LayerClass::from_name("pw64-128@56"),
+            Some(LayerClass::Pw { in_channels: 64, out_channels: 128, hw: 56 })
+        );
+        assert_eq!(LayerClass::from_name("dw64@112"), None);
+        assert_eq!(LayerClass::from_name("pw64@56"), None);
+        // degenerate geometry must fail parse, not panic in shape math
+        assert_eq!(LayerClass::from_name("dw64s0@112"), None, "stride 0");
+        assert_eq!(LayerClass::from_name("dw0s1@112"), None, "zero channels");
+        assert_eq!(LayerClass::from_name("dw64s1@0"), None, "zero grid");
+        assert_eq!(LayerClass::from_name("pw0-64@56"), None);
+        assert_eq!(LayerClass::from_name("pw64-0@56"), None);
+        assert_eq!(LayerClass::from_name("pw64-64@0"), None);
+    }
+
+    #[test]
+    fn mobilenet_v1_has_thirteen_separable_blocks() {
+        let net = NetworkDef::mobilenet_v1(false);
+        let dw: usize = net
+            .layers
+            .iter()
+            .filter(|(l, _)| matches!(l, LayerClass::Dw { .. }))
+            .map(|(_, n)| n)
+            .sum();
+        let pw: usize = net
+            .layers
+            .iter()
+            .filter(|(l, _)| matches!(l, LayerClass::Pw { .. }))
+            .map(|(_, n)| n)
+            .sum();
+        assert_eq!(dw, 13, "MobileNetV1 runs 13 depthwise convs");
+        assert_eq!(pw, 13, "…each followed by a pointwise conv");
+        assert_eq!(net.classes().len(), 18, "9 distinct dw + 9 distinct pw classes");
+        // every modeled shape is legal
+        for l in net.classes() {
+            assert!(l.shape().has_valid_groups(), "{}", l.name());
+        }
+        // depthwise is the cheap stage: <10% of the network's FLOPs
+        let dw_flops: u64 = net
+            .layers
+            .iter()
+            .filter(|(l, _)| matches!(l, LayerClass::Dw { .. }))
+            .map(|(l, n)| l.shape().flops() * *n as u64)
+            .sum();
+        assert!(
+            (dw_flops as f64) < 0.10 * net.flops() as f64,
+            "dw {} of {}",
+            dw_flops,
+            net.flops()
+        );
+    }
+
+    #[test]
+    fn width_multiplier_halves_channels_and_quarters_flops() {
+        let full = NetworkDef::mobilenet_v1(false);
+        let half = NetworkDef::mobilenet_v1(true);
+        assert_eq!(full.layers.len(), half.layers.len());
+        match (full.layers[0].0, half.layers[0].0) {
+            (LayerClass::Dw { channels: a, .. }, LayerClass::Dw { channels: b, .. }) => {
+                assert_eq!(a, 2 * b)
+            }
+            other => panic!("unexpected first layers {other:?}"),
+        }
+        // pointwise flops scale ~quadratically in width, depthwise
+        // linearly, so the total lands between 2x and 4x
+        let ratio = full.flops() as f64 / half.flops() as f64;
+        assert!((2.0..4.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn network_by_name_covers_both_families() {
+        assert_eq!(NetworkDef::by_name("resnet18").unwrap().total_convs(), 16);
+        assert_eq!(NetworkDef::by_name("mobilenetV1").unwrap().total_convs(), 26);
+        assert_eq!(
+            NetworkDef::by_name("MobileNetV1-0.5").unwrap().name,
+            "mobilenetV1-0.5"
+        );
+        assert!(NetworkDef::by_name("vgg16").is_none());
+        assert!(NetworkDef::known_names().iter().any(|n| n == "mobilenetV1"));
     }
 }

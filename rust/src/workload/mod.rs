@@ -1,7 +1,8 @@
-//! Workloads — paper Table 2 ResNet layer geometry and request generators.
+//! Workloads — network layer tables (paper Table 2 ResNet, MobileNetV1
+//! depthwise-separable) and request generators.
 
 mod layers;
 mod requests;
 
-pub use layers::{layer_classes, ConvShape, LayerClass, ResNetDepth, RESNET_DEPTHS};
+pub use layers::{layer_classes, ConvShape, LayerClass, NetworkDef, ResNetDepth, RESNET_DEPTHS};
 pub use requests::{Request, RequestGen, TraceKind};

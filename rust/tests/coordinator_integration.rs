@@ -81,7 +81,7 @@ fn session_layer_numerics_vs_naive_conv() {
         6,
     );
     let expected = naive_conv(&shape, &x, &w);
-    let model = engine.load_layer(layer.name(), "ilpm").expect("load");
+    let model = engine.load_layer(&layer.name(), "ilpm").expect("load");
     let out = model.run(&[x, w]).expect("run");
     let diff = out[0].max_abs_diff(&expected).unwrap();
     assert!(diff < 1e-2, "diff {diff}");

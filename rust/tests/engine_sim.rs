@@ -13,10 +13,10 @@ use ilpm::autotune::tune_all;
 use ilpm::convgen::Algorithm;
 use ilpm::coordinator::{InferenceEngine, RoutingTable, SimBackend};
 use ilpm::simulator::DeviceConfig;
-use ilpm::workload::{RequestGen, ResNetDepth, TraceKind};
+use ilpm::workload::{NetworkDef, RequestGen, TraceKind};
 
-fn resnet18() -> &'static ResNetDepth {
-    ResNetDepth::by_name("resnet18").expect("table 2 depth")
+fn resnet18() -> NetworkDef {
+    NetworkDef::by_name("resnet18").expect("table 2 depth")
 }
 
 #[test]
@@ -24,7 +24,7 @@ fn closed_loop_over_sim_backend_completes_every_request() {
     let n = 24;
     let workers = 2;
     let dev = DeviceConfig::mali_g76_mp10();
-    let backend = SimBackend::uniform(Algorithm::Direct, &dev, resnet18(), 0.0).expect("backend");
+    let backend = SimBackend::uniform(Algorithm::Direct, &dev, &resnet18(), 0.0).expect("backend");
     let img_shape = backend.input_shape();
     let engine = InferenceEngine::start(backend, workers, 4).expect("start");
     let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
@@ -54,7 +54,7 @@ fn closed_loop_over_sim_backend_completes_every_request() {
 #[test]
 fn charged_latency_is_the_simulated_network_time() {
     let dev = DeviceConfig::mali_g76_mp10();
-    let backend = SimBackend::uniform(Algorithm::Ilpm, &dev, resnet18(), 0.0).expect("backend");
+    let backend = SimBackend::uniform(Algorithm::Ilpm, &dev, &resnet18(), 0.0).expect("backend");
     let img_shape = backend.input_shape();
     let engine = InferenceEngine::start(backend, 1, 4).expect("start");
     let expect = engine.backend().network_time();
@@ -73,7 +73,7 @@ fn charged_latency_is_the_simulated_network_time() {
 #[test]
 fn workers_agree_on_logits_for_identical_images() {
     let dev = DeviceConfig::vega8();
-    let backend = SimBackend::uniform(Algorithm::Direct, &dev, resnet18(), 0.0).expect("backend");
+    let backend = SimBackend::uniform(Algorithm::Direct, &dev, &resnet18(), 0.0).expect("backend");
     let img_shape = backend.input_shape();
     let engine = InferenceEngine::start(backend, 2, 4).expect("start");
     // images are a pure function of the request id, so re-serving the
@@ -93,12 +93,12 @@ fn workers_agree_on_logits_for_identical_images() {
 #[test]
 fn tuned_routes_beat_uniform_im2col_in_simulated_p50() {
     let dev = DeviceConfig::mali_g76_mp10();
-    let depth = resnet18();
+    let net = resnet18();
     let db = tune_all(&[dev.clone()], 8);
     let tuned_table = RoutingTable::from_tuning(&db, dev.name);
     assert_eq!(tuned_table.len(), 4, "tuning must route all four classes");
 
-    let tuned = SimBackend::new(&dev, &tuned_table, depth, 0.0).expect("tuned backend");
+    let tuned = SimBackend::new(&dev, &tuned_table, &net, 0.0).expect("tuned backend");
     // the backend's executed plan must match the routing table decision
     // for every layer — routes reach the executor, not just the logs
     for p in tuned.plan() {
@@ -106,7 +106,7 @@ fn tuned_routes_beat_uniform_im2col_in_simulated_p50() {
         assert_eq!(p.algorithm, route.algorithm, "{}", p.layer.name());
         assert_eq!(p.params, route.params, "{}", p.layer.name());
     }
-    let baseline = SimBackend::uniform(Algorithm::Im2col, &dev, depth, 0.0).expect("baseline");
+    let baseline = SimBackend::uniform(Algorithm::Im2col, &dev, &net, 0.0).expect("baseline");
 
     let p50 = |backend: SimBackend| {
         let img_shape = backend.input_shape();

@@ -1,0 +1,128 @@
+//! Integration: the MobileNetV1 workload end to end in the default
+//! (no-pjrt) build — tune the depthwise/pointwise classes, route them,
+//! serve a closed loop over the sim backend, and verify the workload's
+//! headline: the dedicated depthwise generator beats lowering through
+//! im2col on every Table-1 device.
+
+use std::sync::atomic::Ordering;
+
+use ilpm::autotune::{tune, tune_layers_warm};
+use ilpm::convgen::Algorithm;
+use ilpm::coordinator::{InferenceEngine, RoutingTable, SimBackend};
+use ilpm::simulator::DeviceConfig;
+use ilpm::tunedb::TuneStore;
+use ilpm::workload::{LayerClass, NetworkDef, RequestGen, TraceKind};
+
+#[test]
+fn mobilenet_serves_to_completion_over_sim_backend() {
+    let n = 12;
+    let workers = 2;
+    let dev = DeviceConfig::mali_g76_mp10();
+    let net = NetworkDef::mobilenet_v1(false);
+    let backend = SimBackend::uniform(Algorithm::Ilpm, &dev, &net, 0.0).expect("backend");
+    assert_eq!(backend.plan().len(), net.layers.len());
+    assert!(backend.network_ms() > 0.0);
+    let img_shape = backend.input_shape();
+    let engine = InferenceEngine::start(backend, workers, 4).expect("start");
+    let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
+    let (summary, results) = engine.run_closed_loop(&mut gen, n).expect("serve");
+    assert_eq!(summary.count, n);
+    assert_eq!(results.len(), n);
+    assert_eq!(engine.stats.completed.load(Ordering::Relaxed), n as u64);
+    assert_eq!(engine.stats.errors.load(Ordering::Relaxed), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn tuned_mobilenet_routes_cover_serve_and_beat_uniform_im2col() {
+    let dev = DeviceConfig::mali_g76_mp10();
+    let net = NetworkDef::mobilenet_v1(true); // half-width: quick sweep
+    let mut store = TuneStore::new();
+    let (db, warm) = tune_layers_warm(&[dev.clone()], &net.classes(), 8, &mut store);
+    assert_eq!(warm.misses, db.len(), "cold run tunes every key");
+    let table = RoutingTable::from_tuning(&db, dev.name);
+    assert!(table.covers(&net), "tuning must route all {} classes", net.classes().len());
+    // depthwise classes must never route through a GEMM lowering: the
+    // channel-parallel paths (the dedicated depthwise generator, or
+    // direct at kpt=1) win, and im2col/libdnn pay `C` tiny launches
+    for layer in net.classes() {
+        let route = table.route(layer).expect("route");
+        if layer.shape().is_depthwise() {
+            assert!(
+                matches!(route.algorithm, Algorithm::Dwconv | Algorithm::Direct),
+                "{}: dw layer routed through {:?}",
+                layer.name(),
+                route.algorithm
+            );
+        }
+    }
+
+    let tuned = SimBackend::new(&dev, &table, &net, 0.0).expect("tuned backend");
+    let baseline = SimBackend::uniform(Algorithm::Im2col, &dev, &net, 0.0).expect("baseline");
+    assert!(
+        tuned.network_ms() < baseline.network_ms(),
+        "tuned {:.3} ms must beat uniform im2col {:.3} ms",
+        tuned.network_ms(),
+        baseline.network_ms()
+    );
+
+    // and the tuned backend actually serves
+    let img_shape = tuned.input_shape();
+    let engine = InferenceEngine::start(tuned, 2, 4).expect("start");
+    let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
+    let (summary, _) = engine.run_closed_loop(&mut gen, 8).expect("serve");
+    assert_eq!(summary.count, 8);
+    assert_eq!(engine.stats.errors.load(Ordering::Relaxed), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn depthwise_beats_im2col_on_every_paper_device() {
+    // the acceptance claim behind BENCH_mobilenet.json, at tuned
+    // configurations on the full Table-1 fleet
+    let dw_classes: Vec<LayerClass> = NetworkDef::mobilenet_v1(false)
+        .classes()
+        .into_iter()
+        .filter(|l| l.shape().is_depthwise())
+        .collect();
+    assert_eq!(dw_classes.len(), 9);
+    for dev in DeviceConfig::paper_devices() {
+        for &layer in &dw_classes {
+            let dw = tune(Algorithm::Dwconv, layer, &dev);
+            let im2 = tune(Algorithm::Im2col, layer, &dev);
+            assert!(
+                dw.time_ms < im2.time_ms,
+                "{}/{}: depthwise {:.3} ms !< im2col {:.3} ms",
+                dev.name,
+                layer.name(),
+                dw.time_ms,
+                im2.time_ms
+            );
+        }
+    }
+}
+
+#[test]
+fn mobilenet_store_round_trips_and_serves_from_disk() {
+    let dev = DeviceConfig::mali_g76_mp10();
+    let net = NetworkDef::mobilenet_v1(true);
+    let mut store = TuneStore::new();
+    let (_, cold) = tune_layers_warm(&[dev.clone()], &net.classes(), 8, &mut store);
+    assert!(cold.evaluated > 0);
+    let path = std::env::temp_dir()
+        .join(format!("ilpm_mobilenet_store_{}.json", std::process::id()));
+    store.save(&path).expect("save");
+
+    // a second process warm-starts with zero evaluations
+    let mut store2 = TuneStore::load(&path).expect("load");
+    let (_, warm) = tune_layers_warm(&[dev.clone()], &net.classes(), 8, &mut store2);
+    assert_eq!(warm.evaluated, 0, "mobilenet keys warm-start too");
+    assert_eq!(warm.misses, 0);
+
+    // disk -> routes -> backend, no tuner in the loop
+    let table = RoutingTable::from_store(&store2, &dev).expect("routes from disk");
+    assert!(table.covers(&net));
+    let backend = SimBackend::new(&dev, &table, &net, 0.0).expect("backend from disk routes");
+    assert!(backend.network_ms() > 0.0);
+    std::fs::remove_file(&path).ok();
+}

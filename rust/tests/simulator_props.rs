@@ -167,6 +167,9 @@ fn prop_more_bandwidth_never_slower() {
         let p = k.params();
         let shape = LayerClass::Conv4x.shape();
         for alg in Algorithm::ALL {
+            if !alg.supports(&shape) {
+                continue;
+            }
             let specs = generate(alg, &shape, &p);
             let base = DeviceConfig::mali_g76_mp10();
             let mut fat = base.clone();
@@ -187,6 +190,9 @@ fn prop_more_l2_never_increases_dram_traffic() {
         let p = k.params();
         let shape = LayerClass::Conv4x.shape();
         for alg in Algorithm::ALL {
+            if !alg.supports(&shape) {
+                continue;
+            }
             for spec in generate(alg, &shape, &p) {
                 let small = DeviceConfig::vega8();
                 let mut big = small.clone();

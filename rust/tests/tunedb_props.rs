@@ -172,6 +172,49 @@ fn editing_a_device_field_invalidates_only_that_device() {
 }
 
 #[test]
+fn store_key_distinguishes_depthwise_from_dense_at_identical_geometry() {
+    // Conv2x is a dense 64->64 3x3 at 56x56; dw64s1@56 is the same
+    // C/K/H/W with groups == C. They are different tuning keys with
+    // different winners, and the store must never conflate them —
+    // including across a disk round trip.
+    let dense = LayerClass::Conv2x;
+    let dw = LayerClass::Dw { channels: 64, hw: 56, stride: 1 };
+    {
+        let (a, b) = (dense.shape(), dw.shape());
+        assert_eq!(
+            (a.in_channels, a.out_channels, a.height, a.width),
+            (b.in_channels, b.out_channels, b.height, b.width)
+        );
+        assert_ne!(a.groups, b.groups);
+    }
+    assert_ne!(dense.name(), dw.name());
+
+    let dev = DeviceConfig::mali_g76_mp10();
+    let fp = dev.fingerprint();
+    let mut store = TuneStore::new();
+    let entry = |layer, alg, t| StoredTuning {
+        layer,
+        algorithm: alg,
+        params: TuneParams::default(),
+        time_ms: t,
+        evaluated: 1,
+        pruned: 0,
+    };
+    store.insert(fp, dev.name, entry(dense, Algorithm::Ilpm, 1.0));
+    store.insert(fp, dev.name, entry(dw, Algorithm::Ilpm, 7.0));
+    assert_eq!(store.len(), 2, "two distinct keys, not one overwritten");
+    assert_eq!(store.get(fp, dense, Algorithm::Ilpm).unwrap().time_ms, 1.0);
+    assert_eq!(store.get(fp, dw, Algorithm::Ilpm).unwrap().time_ms, 7.0);
+
+    let path = tmp("tunedb_groups_key");
+    store.save(&path).expect("save");
+    let back = TuneStore::load(&path).expect("load");
+    assert_eq!(back.get(fp, dense, Algorithm::Ilpm).unwrap().time_ms, 1.0);
+    assert_eq!(back.get(fp, dw, Algorithm::Ilpm).unwrap().time_ms, 7.0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn tune_save_load_warm_starts_with_zero_evaluations() {
     let dev = DeviceConfig::mali_g76_mp10();
     let path = tmp("tunedb_warm");
