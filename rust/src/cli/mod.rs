@@ -23,7 +23,10 @@ pub use args::Args;
 use crate::autotune::{tune, tune_layers_warm};
 use crate::convgen::Algorithm;
 use crate::coordinator::{InferenceEngine, RoutingTable, SimBackend};
-use crate::metrics::{fig5_table, render_fig5, table3, table4, LatencySummary};
+use crate::fleet::{
+    run_open_loop, DevicePool, DispatchPolicy, FleetReport, FleetSpec, OpenLoopConfig, SloConfig,
+};
+use crate::metrics::{bench_envelope, fig5_table, render_fig5, table3, table4, LatencySummary};
 use crate::simulator::DeviceConfig;
 use crate::tunedb::TuneStore;
 use crate::workload::{LayerClass, NetworkDef, RequestGen, TraceKind};
@@ -38,6 +41,8 @@ USAGE: ilpm <command> [flags]
 NETWORKS: resnet18|34|50|101|152, mobilenetV1, mobilenetV1-0.5
 ALGORITHMS: im2col, libdnn, winograd, direct, ilpm, depthwise
 
+POLICIES: round-robin, least-outstanding, cost-aware
+
 COMMANDS:
   serve     --n <requests> [--workers N] [--queue N] [--backend pjrt|sim]
             pjrt: --model <name> [--artifacts DIR] [--routes PATH]
@@ -47,13 +52,23 @@ COMMANDS:
                   closed-loop load test on the modeled device: per-layer
                   algorithms come from the tunedb routes, latency from
                   the simulator (works in every build)
-  bench     <fig5|table3|table4|serve|mobilenet>
+            --fleet DEV[:N],DEV[:N]...  (e.g. mali:2,vega8:1)
+                  open-loop serving over a heterogeneous device fleet:
+                  [--policy cost-aware] [--rate HZ] [--burst N]
+                  [--deadline-ms X [--admission on|off]] [--seed S]
+                  [--routes STORE] — per-device routes warm-start from
+                  STORE, cold-tune on miss (merged back when STORE given)
+  bench     <fig5|table3|table4|serve|mobilenet|fleet>
             [--device mali|vega8|radeonvii|all]
             regenerate a paper table/figure from tuned simulations;
             `serve` sweeps device x routing policy through the sim
             backend (any --network) and writes BENCH_serve.json;
             `mobilenet` sweeps every MobileNetV1 layer class x algorithm
-            x device and writes BENCH_mobilenet.json; --routes STORE
+            x device and writes BENCH_mobilenet.json; `fleet` races the
+            dispatch policies over a device mix (default the Table-1
+            fleet) plus an overloaded SLO phase and writes
+            BENCH_fleet.json with a cost_aware_beats_round_robin
+            verdict ([--fleet SPEC] [--n N] [--seed S]); --routes STORE
             warm-starts from STORE and merges fresh results back into it
   tune      [--device mali|vega8|radeonvii|all] [--threads N] [--out PATH]
             [--network resnet|mobilenetV1|mobilenetV1-0.5|all]
@@ -196,30 +211,181 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         argv,
         &[
             "model", "n", "workers", "artifacts", "queue", "rate", "routes", "device",
-            "backend", "network", "uniform", "time-scale",
+            "backend", "network", "uniform", "time-scale", "fleet", "policy", "deadline-ms",
+            "admission", "burst", "seed", "threads",
         ],
     )?;
-    // flags that only one backend reads are rejected under the other,
-    // not silently ignored
-    let reject = |flags: &[&str], backend: &str| -> Result<(), String> {
+    // flags that only one serve mode reads are rejected under the
+    // others, not silently ignored
+    let reject = |flags: &[&str], mode: &str| -> Result<(), String> {
         for &f in flags {
             if a.get(f).is_some() {
-                return Err(format!("--{f} has no effect with --backend {backend}"));
+                return Err(format!("--{f} has no effect with {mode}"));
             }
         }
         Ok(())
     };
+    const FLEET_ONLY: [&str; 7] =
+        ["policy", "deadline-ms", "admission", "burst", "seed", "rate", "threads"];
+    if a.get("fleet").is_some() {
+        if a.get_or("backend", "sim") != "sim" {
+            return Err("--fleet serves over simulated devices; drop --backend".to_string());
+        }
+        reject(&["model", "artifacts", "uniform", "workers", "time-scale"], "--fleet")?;
+        return cmd_serve_fleet(&a);
+    }
     match a.get_or("backend", "pjrt") {
         "pjrt" => {
-            reject(&["uniform", "network", "time-scale"], "pjrt")?;
+            reject(&["uniform", "network", "time-scale"], "--backend pjrt")?;
+            reject(&FLEET_ONLY, "--backend pjrt")?;
             cmd_serve_pjrt(&a)
         }
         "sim" => {
-            reject(&["model", "artifacts"], "sim")?;
+            reject(&["model", "artifacts"], "--backend sim")?;
+            reject(&FLEET_ONLY, "--backend sim (without --fleet)")?;
             cmd_serve_sim(&a)
         }
         other => Err(format!("unknown backend '{other}' (pjrt|sim)")),
     }
+}
+
+/// Parse `serve --fleet`'s SLO flags: an optional positive deadline
+/// and the admission switch (admission only means anything once a
+/// deadline exists). `bench fleet` takes no SLO flags — its overload
+/// phase pins the deadline to the fleet so the file stays a pure
+/// function of the seed.
+fn slo_flags(a: &Args) -> Result<SloConfig, String> {
+    let deadline_ms = match a.get("deadline-ms") {
+        None => None,
+        Some(_) => {
+            let d = a.get_f64("deadline-ms", 0.0)?;
+            if !(d.is_finite() && d > 0.0) {
+                return Err(format!("--deadline-ms must be positive, got {d}"));
+            }
+            Some(d)
+        }
+    };
+    let admission = match a.get_or("admission", "on") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => return Err(format!("--admission expects on|off, got '{other}'")),
+    };
+    if a.get("admission").is_some() && deadline_ms.is_none() {
+        return Err("--admission without --deadline-ms has nothing to enforce".to_string());
+    }
+    Ok(SloConfig { deadline_ms, admission: admission && deadline_ms.is_some() })
+}
+
+/// `serve --fleet` — open-loop serving across a heterogeneous device
+/// pool: per-device routes from the tunedb store (cold-tuned on miss
+/// and merged back when `--routes` names a path), dispatch by
+/// `--policy`, optional SLO admission control. Latency numbers run on
+/// the fleet's deterministic virtual clock; every admitted request
+/// also executes on its replica's real engine.
+fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
+    let spec = FleetSpec::parse(a.get("fleet").expect("checked by caller"))
+        .map_err(|e| format!("{e:#}"))?;
+    let n = positive(a.get_usize("n", 64)?, "n")?;
+    let queue = positive(a.get_usize("queue", 8)?, "queue")?;
+    let threads = a.get_usize("threads", 8)?;
+    let seed = a.get_usize("seed", 7)? as u64;
+    let burst = positive(a.get_usize("burst", 1)?, "burst")?;
+    let net = network(a)?;
+    let policy_name = a.get_or("policy", "cost-aware");
+    let policy = DispatchPolicy::from_name(policy_name).ok_or_else(|| {
+        format!("unknown --policy '{policy_name}' (round-robin|least-outstanding|cost-aware)")
+    })?;
+    let slo = slo_flags(a)?;
+
+    let mut store = match a.get("routes") {
+        Some(p) => TuneStore::load_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
+        None => TuneStore::new(),
+    };
+    let (pool, warm) = DevicePool::start(&spec, &net, &mut store, threads, queue)
+        .map_err(|e| format!("fleet start: {e:#}"))?;
+    println!(
+        "fleet routes for {}: {} warm from store, {} cold-tuned",
+        net.name, warm.hits, warm.misses
+    );
+    if let Some(p) = a.get("routes") {
+        if warm.misses > 0 {
+            store.save(Path::new(p)).map_err(|e| format!("save {p}: {e:#}"))?;
+            println!("merged {} freshly-tuned entries back into {p}", warm.misses);
+        }
+    }
+
+    let cap = pool.capacity_rps();
+    let rate = match a.get("rate") {
+        Some(_) => a.get_f64("rate", 0.0)?,
+        // default: 80% of fleet capacity — loaded, not drowning
+        None => 0.8 * cap,
+    };
+    let arrival = if burst > 1 {
+        TraceKind::Burst { rate_hz: rate, burst: burst as u32 }
+    } else {
+        TraceKind::Poisson { rate_hz: rate }
+    };
+    println!(
+        "fleet: {} ({} replicas, capacity {:.1} req/s), offered {:.1} req/s{}",
+        spec.render(),
+        pool.replicas().len(),
+        cap,
+        rate,
+        if burst > 1 { format!(" in bursts of {burst}") } else { String::new() }
+    );
+    println!("{:<18} {:>12} {:>12}", "replica", "cost(ms)", "sim(ms)");
+    for r in pool.replicas() {
+        println!("{:<18} {:>12.3} {:>12.3}", r.label, r.cost_ms, r.sim_ms);
+    }
+    let cfg = OpenLoopConfig { n, arrival, policy, seed, slo };
+    let report = run_open_loop(&pool, &cfg).map_err(|e| format!("fleet serving: {e:#}"))?;
+    pool.shutdown();
+    print_fleet_report(&report);
+    if report.errors > 0 {
+        Err(format!(
+            "{} of {} admitted requests failed in execution",
+            report.errors, report.admitted
+        ))
+    } else {
+        Ok(())
+    }
+}
+
+/// Human-readable tail of a fleet run: per-replica rows, the aggregate
+/// summary, and the SLO ledger.
+fn print_fleet_report(r: &FleetReport) {
+    println!(
+        "{:<18} {:>8} {:>6} {:>8} {:>10} {:>10} {:>10}",
+        "replica", "admitted", "shed", "violated", "p50(ms)", "p99(ms)", "max(ms)"
+    );
+    for rep in &r.replicas {
+        println!(
+            "{:<18} {:>8} {:>6} {:>8} {:>10.3} {:>10.3} {:>10.3}",
+            rep.label,
+            rep.admitted,
+            rep.shed,
+            rep.violated,
+            rep.latency.p50_ms,
+            rep.latency.p99_ms,
+            rep.latency.max_ms
+        );
+    }
+    println!(
+        "{} over {} requests ({}): aggregate {}",
+        r.policy, r.submitted, r.network, r.aggregate
+    );
+    println!(
+        "slo: deadline {} admission {} | shed {} ({} deadline + {} queue, rate {:.1}%) \
+         violated {} errors {}",
+        r.deadline_ms.map_or("-".to_string(), |d| format!("{d:.1}ms")),
+        if r.admission { "on" } else { "off" },
+        r.shed(),
+        r.shed_deadline,
+        r.shed_queue,
+        100.0 * r.shed_rate(),
+        r.violated,
+        r.errors,
+    );
 }
 
 /// `serve --backend sim` — route-aware simulated serving: per-layer
@@ -385,9 +551,22 @@ fn cmd_serve_pjrt(a: &Args) -> Result<(), String> {
 fn cmd_bench(argv: &[String]) -> Result<(), String> {
     let a = Args::parse(
         argv,
-        &["device", "layer", "n", "workers", "routes", "out", "network", "time-scale", "threads"],
+        &[
+            "device", "layer", "n", "workers", "routes", "out", "network", "time-scale",
+            "threads", "fleet", "seed", "queue",
+        ],
     )?;
     let which = a.positional.first().map(String::as_str).unwrap_or("fig5");
+    if which == "fleet" {
+        return bench_fleet(&a);
+    }
+    // flags only `bench fleet` reads are rejected elsewhere, not
+    // silently ignored
+    for f in ["fleet", "seed", "queue"] {
+        if a.get(f).is_some() {
+            return Err(format!("--{f} only applies to `bench fleet`"));
+        }
+    }
     if which == "serve" {
         return bench_serve(&a);
     }
@@ -522,8 +701,7 @@ fn bench_mobilenet(a: &Args) -> Result<(), String> {
     );
 
     let n_rows = rows.len();
-    let mut root = BTreeMap::new();
-    root.insert("bench".into(), Json::Str("mobilenet".into()));
+    let mut root = bench_envelope("mobilenet", &devices.iter().collect::<Vec<_>>());
     root.insert("network".into(), Json::Str(net.name.clone()));
     root.insert("depthwise_beats_im2col_everywhere".into(), Json::Bool(dw_wins_everywhere));
     root.insert("rows".into(), Json::Arr(rows));
@@ -678,8 +856,7 @@ fn bench_serve(a: &Args) -> Result<(), String> {
             Json::Obj(m)
         })
         .collect();
-    let mut root = BTreeMap::new();
-    root.insert("bench".into(), Json::Str("serve".into()));
+    let mut root = bench_envelope("serve", &devices.iter().collect::<Vec<_>>());
     root.insert("network".into(), Json::Str(net.name.clone()));
     root.insert("n".into(), Json::Num(n as f64));
     root.insert("workers".into(), Json::Num(workers as f64));
@@ -688,6 +865,135 @@ fn bench_serve(a: &Args) -> Result<(), String> {
     std::fs::write(&out, Json::Obj(root).to_json_string())
         .map_err(|e| format!("write {out}: {e}"))?;
     println!("wrote {out} ({} rows)", cells.len());
+    Ok(())
+}
+
+/// `bench fleet` — the multi-device serving trajectory, written to
+/// BENCH_fleet.json. Two deterministic phases over one fleet (default
+/// the paper's Table-1 mix) and one PRNG seed:
+///
+/// 1. **dispatch race**: every policy serves the same Poisson trace at
+///    70% of fleet capacity, no SLO — the verdict
+///    `cost_aware_beats_round_robin` compares aggregate p99.
+/// 2. **overload**: cost-aware under 3x capacity in bursts of 8 with a
+///    deadline and admission control — the shed/violated ledger under
+///    deliberate overload.
+///
+/// The virtual clock makes the whole file a pure function of the seed:
+/// identical `--seed`, byte-identical BENCH_fleet.json.
+fn bench_fleet(a: &Args) -> Result<(), String> {
+    let spec = FleetSpec::parse(a.get_or("fleet", "mali:1,vega8:1,radeonvii:1"))
+        .map_err(|e| format!("{e:#}"))?;
+    let n = positive(a.get_usize("n", 256)?, "n")?;
+    let seed = a.get_usize("seed", 7)? as u64;
+    let threads = a.get_usize("threads", 8)?;
+    let queue = positive(a.get_usize("queue", 16)?, "queue")?; // per-replica queue depth
+    let out = a.get_or("out", "BENCH_fleet.json").to_string();
+    let net = network(a)?;
+    let mut store = match a.get("routes") {
+        Some(p) => TuneStore::load_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
+        None => TuneStore::new(),
+    };
+    let (pool, warm) = DevicePool::start(&spec, &net, &mut store, threads, queue)
+        .map_err(|e| format!("fleet start: {e:#}"))?;
+    if let Some(p) = a.get("routes") {
+        if warm.misses > 0 {
+            store.save(Path::new(p)).map_err(|e| format!("save {p}: {e:#}"))?;
+            println!("merged {} freshly-tuned entries back into {p}", warm.misses);
+        } else {
+            println!("fully warm from {p}: store unchanged");
+        }
+    }
+    let cap = pool.capacity_rps();
+    let slowest_ms = pool.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max);
+    println!(
+        "BENCH fleet — {} on {} ({} replicas, capacity {:.1} req/s), n={n} seed={seed}",
+        net.name,
+        spec.render(),
+        pool.replicas().len(),
+        cap
+    );
+
+    let mut reports: Vec<FleetReport> = Vec::new();
+    // phase 1: dispatch race at moderate load, no SLO
+    for policy in DispatchPolicy::ALL {
+        let cfg = OpenLoopConfig {
+            n,
+            arrival: TraceKind::Poisson { rate_hz: 0.7 * cap },
+            policy,
+            seed,
+            slo: SloConfig::none(),
+        };
+        reports.push(run_open_loop(&pool, &cfg).map_err(|e| format!("{policy}: {e:#}"))?);
+    }
+    // phase 2: deliberate overload (3x capacity, bursty) with a
+    // deadline twice the slowest device's pass — admission must shed
+    let overload_cfg = OpenLoopConfig {
+        n,
+        arrival: TraceKind::Burst { rate_hz: 3.0 * cap, burst: 8 },
+        policy: DispatchPolicy::CostAware,
+        seed,
+        slo: SloConfig { deadline_ms: Some(2.0 * slowest_ms), admission: true },
+    };
+    let overload = run_open_loop(&pool, &overload_cfg).map_err(|e| format!("overload: {e:#}"))?;
+    pool.shutdown();
+
+    println!(
+        "{:<20} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8}",
+        "phase/policy", "p50(ms)", "p99(ms)", "req/s", "admit", "shed", "violate"
+    );
+    let p99 = |policy: DispatchPolicy| -> f64 {
+        reports
+            .iter()
+            .find(|r| r.policy == policy)
+            .map(|r| r.aggregate.p99_ms)
+            .unwrap_or(f64::NAN)
+    };
+    for r in reports.iter().chain(std::iter::once(&overload)) {
+        let phase = if r.deadline_ms.is_some() { "overload/" } else { "race/" };
+        println!(
+            "{:<20} {:>10.3} {:>10.3} {:>10.1} {:>8} {:>8} {:>8}",
+            format!("{phase}{}", r.policy),
+            r.aggregate.p50_ms,
+            r.aggregate.p99_ms,
+            r.aggregate.throughput_rps,
+            r.admitted,
+            r.shed(),
+            r.violated
+        );
+    }
+    let cost_aware_wins = p99(DispatchPolicy::CostAware) < p99(DispatchPolicy::RoundRobin);
+    println!(
+        "cost-aware beats round-robin on aggregate p99: {} ({:.3} vs {:.3} ms)",
+        if cost_aware_wins { "yes" } else { "NO" },
+        p99(DispatchPolicy::CostAware),
+        p99(DispatchPolicy::RoundRobin)
+    );
+    println!(
+        "overload phase: shed {} of {} ({:.1}%), violated {}",
+        overload.shed(),
+        overload.submitted,
+        100.0 * overload.shed_rate(),
+        overload.violated
+    );
+
+    use crate::util::json::Json;
+    let devices = spec.devices();
+    let mut root = bench_envelope("fleet", &devices.iter().collect::<Vec<_>>());
+    root.insert("network".into(), Json::Str(net.name.clone()));
+    root.insert("fleet".into(), Json::Str(spec.render()));
+    root.insert("n".into(), Json::Num(n as f64));
+    root.insert("seed".into(), Json::Num(seed as f64));
+    root.insert("capacity_rps".into(), Json::Num(cap));
+    root.insert("cost_aware_beats_round_robin".into(), Json::Bool(cost_aware_wins));
+    root.insert("overload_shed".into(), Json::Num(overload.shed() as f64));
+    root.insert("overload_violated".into(), Json::Num(overload.violated as f64));
+    let rows: Vec<Json> =
+        reports.iter().chain(std::iter::once(&overload)).map(FleetReport::to_json).collect();
+    root.insert("rows".into(), Json::Arr(rows));
+    std::fs::write(&out, Json::Obj(root).to_json_string())
+        .map_err(|e| format!("write {out}: {e}"))?;
+    println!("wrote {out} ({} rows)", reports.len() + 1);
     Ok(())
 }
 
@@ -1051,6 +1357,61 @@ mod tests {
         assert!(err.contains("cannot run"), "{err}");
     }
 
+    /// Shared BENCH envelope checks: schema version + the fingerprints
+    /// of every device the bench priced.
+    fn assert_bench_envelope(j: &crate::util::json::Json, bench: &str, devices: &[&str]) {
+        use crate::util::json::Json;
+        assert_eq!(
+            j.get("schema_version").and_then(Json::as_u64),
+            Some(crate::metrics::BENCH_SCHEMA_VERSION),
+            "{bench}: missing/wrong schema_version"
+        );
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some(bench));
+        let listed = j.get("devices").and_then(Json::as_arr).expect("devices array");
+        assert_eq!(listed.len(), devices.len(), "{bench}: device list length");
+        for (row, want) in listed.iter().zip(devices) {
+            assert_eq!(row.get("device").and_then(Json::as_str), Some(*want));
+            let fp = row.get("fingerprint").and_then(Json::as_str).expect("fingerprint");
+            assert_eq!(fp.len(), 16, "{bench}: fingerprint must be 16 hex chars, got {fp:?}");
+            assert!(fp.chars().all(|c| c.is_ascii_hexdigit()), "{fp:?}");
+        }
+    }
+
+    #[test]
+    fn serve_fleet_flag_combinations_are_validated() {
+        let e = run(&sv(&["serve", "--fleet", "mali:1", "--uniform", "direct"])).unwrap_err();
+        assert!(e.contains("--uniform"), "{e}");
+        let e = run(&sv(&["serve", "--fleet", "gtx1080:1"])).unwrap_err();
+        assert!(e.contains("unknown device"), "{e}");
+        let e = run(&sv(&["serve", "--backend", "pjrt", "--fleet", "mali:1"])).unwrap_err();
+        assert!(e.contains("simulated"), "{e}");
+        // fleet-only flags are rejected under plain sim serving
+        let e = run(&sv(&[
+            "serve", "--backend", "sim", "--uniform", "direct", "--policy", "cost-aware",
+        ]))
+        .unwrap_err();
+        assert!(e.contains("--policy"), "{e}");
+        // admission without a deadline has nothing to enforce
+        let e = run(&sv(&["serve", "--fleet", "mali:1", "--admission", "on"])).unwrap_err();
+        assert!(e.contains("deadline"), "{e}");
+        let e =
+            run(&sv(&["serve", "--fleet", "mali:1", "--policy", "fastest-first"])).unwrap_err();
+        assert!(e.contains("--policy"), "{e}");
+        let e = run(&sv(&["serve", "--fleet", "mali:1", "--deadline-ms", "-3"])).unwrap_err();
+        assert!(e.contains("deadline"), "{e}");
+    }
+
+    #[test]
+    fn serve_fleet_single_device_cold_tunes_and_serves() {
+        // one integrated GPU, cold-tuned in process, 8 open-loop
+        // requests at the default 80%-capacity rate
+        run(&sv(&[
+            "serve", "--fleet", "vega8:1", "--n", "8", "--seed", "3", "--policy",
+            "least-outstanding",
+        ]))
+        .expect("fleet serve over one device");
+    }
+
     #[test]
     fn bench_mobilenet_writes_json_and_depthwise_beats_im2col() {
         use crate::util::json::Json;
@@ -1065,6 +1426,7 @@ mod tests {
         ]))
         .expect("bench mobilenet");
         let j = Json::parse(&std::fs::read_to_string(&out).expect("written")).expect("json");
+        assert_bench_envelope(&j, "mobilenet", &["Mali-G76 MP10"]);
         assert_eq!(
             j.get("depthwise_beats_im2col_everywhere").and_then(Json::as_bool),
             Some(true),
@@ -1108,6 +1470,7 @@ mod tests {
         .expect("bench serve");
         let text = std::fs::read_to_string(&out).expect("trajectory written");
         let j = crate::util::json::Json::parse(&text).expect("valid json");
+        assert_bench_envelope(&j, "serve", &["Mali-G76 MP10"]);
         let rows = j.get("rows").and_then(crate::util::json::Json::as_arr).expect("rows");
         assert_eq!(rows.len(), 3, "uniform-im2col, uniform-direct, tuned");
         // tuned must beat the uniform-im2col baseline on Mali — the

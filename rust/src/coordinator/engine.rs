@@ -8,9 +8,10 @@
 //! backend lowers the routed per-layer algorithms through the simulator
 //! and charges modeled device time to each request. Requests are
 //! distributed over executors through a bounded channel (backpressure:
-//! `submit` blocks when the queue is full). Single-image inference has
-//! no batch dimension to exploit — parallelism across requests comes
-//! from executor threads.
+//! `submit` blocks when the queue is full; `try_submit` hands the
+//! request back instead, for open-loop callers that must shed rather
+//! than stall). Single-image inference has no batch dimension to
+//! exploit — parallelism across requests comes from executor threads.
 //!
 //! Latency accounting: a backend that returns `charged: Some(d)` runs
 //! on a virtual clock — `d` is the simulated execution time, and the
@@ -21,7 +22,7 @@
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -56,6 +57,18 @@ pub struct EngineStats {
 enum Job {
     Run { req: Request, submitted: Instant },
     Shutdown,
+}
+
+/// What a non-blocking [`InferenceEngine::try_submit`] did with the
+/// request.
+#[derive(Debug)]
+pub enum Submission {
+    /// The request is on the queue.
+    Queued,
+    /// The bounded queue is full; the request is handed back so the
+    /// caller can shed it, retry later, or drain a result first —
+    /// bounded backpressure instead of blocking forever.
+    Saturated(Request),
 }
 
 /// What one receive attempt on the results channel yielded.
@@ -133,11 +146,43 @@ impl<B: ExecutionBackend> InferenceEngine<B> {
     }
 
     /// Enqueue a request; blocks when the queue is full (backpressure).
+    /// Open-loop callers that must never block use
+    /// [`Self::try_submit`] instead.
     pub fn submit(&self, req: Request) -> Result<()> {
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Job::Run { req, submitted: Instant::now() })
             .map_err(|_| anyhow!("engine shut down"))
+    }
+
+    /// Non-blocking enqueue: a full queue returns
+    /// [`Submission::Saturated`] with the request handed back instead
+    /// of blocking — the backpressure signal open-loop dispatchers and
+    /// admission control act on. Only accepted requests count as
+    /// submitted.
+    pub fn try_submit(&self, req: Request) -> Result<Submission> {
+        match self.tx.try_send(Job::Run { req, submitted: Instant::now() }) {
+            Ok(()) => {
+                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Submission::Queued)
+            }
+            Err(TrySendError::Full(Job::Run { req, .. })) => Ok(Submission::Saturated(req)),
+            Err(TrySendError::Full(Job::Shutdown)) => {
+                unreachable!("try_submit only sends Run jobs")
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("engine shut down")),
+        }
+    }
+
+    /// Requests accepted but not yet finished executing (queued or
+    /// in flight on an executor; finished results may still be waiting
+    /// on the results channel). Non-blocking — the queue-depth signal
+    /// for least-outstanding dispatch and admission control.
+    pub fn outstanding(&self) -> u64 {
+        let submitted = self.stats.submitted.load(Ordering::Relaxed);
+        let done = self.stats.completed.load(Ordering::Relaxed)
+            + self.stats.errors.load(Ordering::Relaxed);
+        submitted.saturating_sub(done)
     }
 
     /// Receive the next completed result (blocking).
@@ -436,6 +481,77 @@ mod tests {
         assert_eq!(results.len(), 3);
         assert_eq!(engine.stats.completed.load(Ordering::Relaxed), 3);
         assert_eq!(engine.stats.errors.load(Ordering::Relaxed), 3);
+        engine.shutdown();
+    }
+
+    /// Sessions block on a gate channel until the test releases them —
+    /// the only way to fill the bounded queue deterministically.
+    struct GatedBackend {
+        gate: Arc<Mutex<std::sync::mpsc::Receiver<()>>>,
+    }
+    struct GatedSession {
+        gate: Arc<Mutex<std::sync::mpsc::Receiver<()>>>,
+    }
+    impl ExecutorSession for GatedSession {
+        fn run_image(&mut self, image: &Tensor) -> Result<ExecutionOutcome> {
+            // one () per request; recv() parks the executor until the
+            // test releases it
+            self.gate.lock().unwrap().recv().map_err(|_| anyhow!("gate closed"))?;
+            Ok(ExecutionOutcome { logits: image.clone(), charged: None })
+        }
+    }
+    impl ExecutionBackend for GatedBackend {
+        type Session = GatedSession;
+        fn connect(&self, _worker: usize) -> Result<GatedSession> {
+            Ok(GatedSession { gate: Arc::clone(&self.gate) })
+        }
+        fn label(&self) -> String {
+            "gated".into()
+        }
+    }
+
+    #[test]
+    fn try_submit_saturates_instead_of_blocking_and_outstanding_tracks_depth() {
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let backend = GatedBackend { gate: Arc::new(Mutex::new(gate_rx)) };
+        let queue = 2;
+        let engine = InferenceEngine::start(backend, 1, queue).expect("start");
+        let req = |id| crate::workload::Request {
+            id,
+            image: Tensor::zeros(&[2]),
+            arrival: Duration::ZERO,
+        };
+        // keep submitting until the queue pushes back; with one parked
+        // worker the engine absorbs between `queue` and `queue + 1`
+        // requests (the worker may or may not have dequeued one yet)
+        let mut accepted = 0u64;
+        let returned = loop {
+            match engine.try_submit(req(accepted)).expect("engine alive") {
+                Submission::Queued => accepted += 1,
+                Submission::Saturated(r) => break r,
+            }
+        };
+        assert!(
+            (queue as u64..=queue as u64 + 1).contains(&accepted),
+            "accepted {accepted} with queue depth {queue}"
+        );
+        // the saturated request is handed back intact, not dropped
+        assert_eq!(returned.id, accepted);
+        // nothing has executed yet: every accepted request is outstanding
+        assert_eq!(engine.outstanding(), accepted);
+        assert_eq!(engine.stats.submitted.load(Ordering::Relaxed), accepted);
+        // release the gate once per request and drain
+        for _ in 0..accepted {
+            gate_tx.send(()).unwrap();
+        }
+        for _ in 0..accepted {
+            engine.recv().expect("gated request completes");
+        }
+        assert_eq!(engine.outstanding(), 0, "drained engine has no outstanding work");
+        // with space freed, the returned request now queues
+        assert!(matches!(engine.try_submit(returned).unwrap(), Submission::Queued));
+        gate_tx.send(()).unwrap();
+        engine.recv().expect("resubmitted request completes");
         engine.shutdown();
     }
 

@@ -16,7 +16,7 @@ mod reference;
 mod router;
 mod sim_backend;
 
-pub use engine::{EngineStats, InferenceEngine, InferenceResult};
+pub use engine::{EngineStats, InferenceEngine, InferenceResult, Submission};
 pub use reference::naive_conv;
 pub use router::{Route, RoutingTable};
 pub use sim_backend::{PlannedLayer, SimBackend, SimSession};

@@ -35,6 +35,23 @@ pub struct RoutingTable {
     routes: HashMap<LayerClass, Route>,
 }
 
+/// Does a candidate `(time_ms, algorithm)` beat the incumbent route?
+/// Strictly faster wins; an exact time tie breaks by algorithm name so
+/// route resolution is independent of map iteration order (the fleet
+/// bench demands bit-identical output for an identical seed); a
+/// non-finite incumbent cost (legacy table rows) always yields to a
+/// measured one.
+fn beats_incumbent(incumbent: Option<&Route>, time_ms: f64, alg: Algorithm) -> bool {
+    match incumbent {
+        None => true,
+        Some(r) if !r.expected_ms.is_finite() => true,
+        Some(r) => {
+            time_ms < r.expected_ms
+                || (time_ms == r.expected_ms && alg.name() < r.algorithm.name())
+        }
+    }
+}
+
 impl RoutingTable {
     /// The paper's four ResNet classes on one algorithm with
     /// shape-scaled default parameters (the paper's baseline
@@ -91,11 +108,7 @@ impl RoutingTable {
         // single pass: each entry only replaces a slower incumbent, so
         // no per-entry best_algorithm rescan is needed
         for e in db.entries().filter(|e| e.device == device) {
-            let incumbent = routes.get(&e.layer);
-            // a non-finite incumbent cost (legacy table rows) always
-            // yields to a measured one
-            if incumbent.is_none_or(|r| !r.expected_ms.is_finite() || e.time_ms < r.expected_ms)
-            {
+            if beats_incumbent(routes.get(&e.layer), e.time_ms, e.algorithm) {
                 routes.insert(
                     e.layer,
                     Route {
@@ -123,9 +136,7 @@ impl RoutingTable {
         let tunings = store.device(dev.fingerprint())?;
         let mut routes: HashMap<LayerClass, Route> = HashMap::new();
         for t in tunings.entries() {
-            let incumbent = routes.get(&t.layer);
-            if incumbent.is_none_or(|r| !r.expected_ms.is_finite() || t.time_ms < r.expected_ms)
-            {
+            if beats_incumbent(routes.get(&t.layer), t.time_ms, t.algorithm) {
                 routes.insert(
                     t.layer,
                     Route {
@@ -350,6 +361,38 @@ mod tests {
         assert!(table.covers(&net));
         // 26 convs per pass at 2 ms each
         assert!((table.expected_network_ms_for(&net) - 52.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_time_ties_resolve_by_algorithm_name() {
+        use crate::convgen::TuneParams;
+        use crate::tunedb::{StoredTuning, TuneStore};
+        let dev = DeviceConfig::mali_g76_mp10();
+        // identical times for two algorithms: the winner must not depend
+        // on HashMap iteration order, or fleet benches stop being
+        // byte-reproducible
+        for (first, second) in
+            [(Algorithm::Ilpm, Algorithm::Direct), (Algorithm::Direct, Algorithm::Ilpm)]
+        {
+            let mut store = TuneStore::new();
+            for alg in [first, second] {
+                store.insert(
+                    dev.fingerprint(),
+                    dev.name,
+                    StoredTuning {
+                        layer: LayerClass::Conv4x,
+                        algorithm: alg,
+                        params: TuneParams::default(),
+                        time_ms: 2.0,
+                        evaluated: 1,
+                        pruned: 0,
+                    },
+                );
+            }
+            let table = RoutingTable::from_store(&store, &dev).expect("routes");
+            // "direct" < "ilpm" lexicographically
+            assert_eq!(table.route(LayerClass::Conv4x).unwrap().algorithm, Algorithm::Direct);
+        }
     }
 
     #[test]

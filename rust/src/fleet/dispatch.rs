@@ -1,0 +1,139 @@
+//! Pluggable dispatch policies — how the fleet picks a replica for
+//! each arriving request.
+//!
+//! The policies form a ladder of how much the dispatcher knows:
+//!
+//! | policy              | signal used                                  |
+//! |---------------------|----------------------------------------------|
+//! | `round-robin`       | nothing (request sequence number)            |
+//! | `least-outstanding` | per-replica queue depth                      |
+//! | `cost-aware`        | queue drain time + the replica's per-request |
+//! |                     | route cost (the ILP-M/HNTMP selection output)|
+//!
+//! `cost-aware` is the fleet-level payoff of per-device tuning: the
+//! tunedb routes give every device an expected per-request cost
+//! ([`crate::coordinator::RoutingTable::expected_network_ms_for`]),
+//! and greedily minimising `predicted queue wait + cost` keeps slow
+//! mobile GPUs from queueing work a dedicated GPU would finish sooner.
+
+/// A replica as the dispatcher sees it at one arrival instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    /// Requests admitted to this replica and not yet finished.
+    pub outstanding: usize,
+    /// Predicted time until the replica's queue drains (ms).
+    pub queue_wait_ms: f64,
+    /// Expected per-request cost on this replica (ms) — the route
+    /// cost signal.
+    pub cost_ms: f64,
+}
+
+/// Which replica gets the next request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    RoundRobin,
+    LeastOutstanding,
+    CostAware,
+}
+
+impl DispatchPolicy {
+    pub const ALL: [DispatchPolicy; 3] =
+        [DispatchPolicy::RoundRobin, DispatchPolicy::LeastOutstanding, DispatchPolicy::CostAware];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::LeastOutstanding => "least-outstanding",
+            DispatchPolicy::CostAware => "cost-aware",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<DispatchPolicy> {
+        Self::ALL.into_iter().find(|p| p.name().eq_ignore_ascii_case(name))
+    }
+
+    /// Pick a replica for request number `seq`. Ties break toward the
+    /// lowest index (deterministic: identical inputs, identical pick).
+    ///
+    /// # Panics
+    /// On an empty fleet — a pool always has at least one replica.
+    pub fn choose(self, seq: u64, replicas: &[ReplicaView]) -> usize {
+        assert!(!replicas.is_empty(), "dispatch over an empty fleet");
+        match self {
+            DispatchPolicy::RoundRobin => (seq % replicas.len() as u64) as usize,
+            DispatchPolicy::LeastOutstanding => {
+                let mut best = 0;
+                for (i, r) in replicas.iter().enumerate().skip(1) {
+                    if r.outstanding < replicas[best].outstanding {
+                        best = i;
+                    }
+                }
+                best
+            }
+            DispatchPolicy::CostAware => {
+                let predicted = |r: &ReplicaView| r.queue_wait_ms + r.cost_ms;
+                let mut best = 0;
+                for (i, r) in replicas.iter().enumerate().skip(1) {
+                    if predicted(r) < predicted(&replicas[best]) {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for DispatchPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(outstanding: usize, queue_wait_ms: f64, cost_ms: f64) -> ReplicaView {
+        ReplicaView { outstanding, queue_wait_ms, cost_ms }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for p in DispatchPolicy::ALL {
+            assert_eq!(DispatchPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::from_name("Cost-Aware"), Some(DispatchPolicy::CostAware));
+        assert_eq!(DispatchPolicy::from_name("random"), None);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let rs = vec![view(9, 9.0, 9.0); 3];
+        let picks: Vec<usize> =
+            (0..6).map(|s| DispatchPolicy::RoundRobin.choose(s, &rs)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_ignores_cost() {
+        let rs = [view(3, 1.0, 1.0), view(1, 100.0, 100.0), view(2, 0.0, 0.0)];
+        assert_eq!(DispatchPolicy::LeastOutstanding.choose(0, &rs), 1);
+        // tie breaks toward the lowest index
+        let tied = [view(2, 0.0, 0.0), view(2, 0.0, 0.0)];
+        assert_eq!(DispatchPolicy::LeastOutstanding.choose(7, &tied), 0);
+    }
+
+    #[test]
+    fn cost_aware_minimises_predicted_finish() {
+        // an idle slow device loses to a busy fast one when the fast
+        // queue still drains sooner
+        let rs = [view(0, 0.0, 50.0), view(4, 8.0, 2.0)];
+        assert_eq!(DispatchPolicy::CostAware.choose(0, &rs), 1);
+        // …but wins once the fast queue is long enough
+        let rs = [view(0, 0.0, 50.0), view(30, 60.0, 2.0)];
+        assert_eq!(DispatchPolicy::CostAware.choose(0, &rs), 0);
+        let tied = [view(0, 1.0, 1.0), view(0, 0.0, 2.0)];
+        assert_eq!(DispatchPolicy::CostAware.choose(3, &tied), 0);
+    }
+}

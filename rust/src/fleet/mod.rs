@@ -1,0 +1,32 @@
+//! Fleet — heterogeneous multi-device serving above the engine.
+//!
+//! The paper tunes per-layer algorithm routes *per device* because
+//! mobile GPUs differ wildly; this module is the layer the ROADMAP's
+//! "serve heavy traffic" north star demands above that: many simulated
+//! devices ([`DevicePool`] — each replica its own
+//! [`crate::coordinator::InferenceEngine`] over a
+//! [`crate::coordinator::SimBackend`], routes resolved per device from
+//! the tunedb store in one warm-started pass), an open-loop traffic
+//! generator (Poisson / burst arrivals from
+//! [`crate::workload::TraceKind`]), pluggable [`DispatchPolicy`]s
+//! culminating in `cost-aware` — which spends the tuner's per-device
+//! route costs as a load-balancing signal — and SLO machinery
+//! ([`SloConfig`]: per-request deadlines with admission control that
+//! sheds predicted-late work, sheds and violations ledgered separately
+//! in the [`FleetReport`]).
+//!
+//! CLI front doors: `ilpm serve --fleet mali:2,vega8:1 --policy
+//! cost-aware …` and `ilpm bench fleet` (BENCH_fleet.json with the
+//! `cost_aware_beats_round_robin` verdict). See DESIGN.md "Fleet
+//! serving" for the dispatch-policy table and the admission-control
+//! formula.
+
+mod dispatch;
+mod pool;
+mod serve;
+mod spec;
+
+pub use dispatch::{DispatchPolicy, ReplicaView};
+pub use pool::{resolve_routes, DevicePool, PoolReplica};
+pub use serve::{run_open_loop, FleetReport, OpenLoopConfig, ReplicaReport, SloConfig};
+pub use spec::{FleetEntry, FleetSpec, MAX_REPLICAS};

@@ -1,0 +1,221 @@
+//! The device pool: N heterogeneous simulated devices, each its own
+//! serving engine.
+//!
+//! Every replica wraps one [`SimBackend`] in one
+//! [`InferenceEngine`] with a single executor — one engine per modeled
+//! phone/GPU, not one engine with many threads — so per-replica queue
+//! depth and per-replica cost stay meaningful to the dispatcher. Route
+//! resolution is a single warm-started pass over the whole fleet:
+//! devices the tunedb store covers load from disk, the rest cold-tune
+//! in one [`tune_layers_warm`] call, and the caller decides whether to
+//! merge the fresh entries back to disk.
+
+use anyhow::{Context, Result};
+
+use super::spec::FleetSpec;
+use crate::autotune::{tune_layers_warm, WarmStats};
+use crate::coordinator::{InferenceEngine, RoutingTable, SimBackend};
+use crate::simulator::DeviceConfig;
+use crate::tunedb::TuneStore;
+use crate::workload::NetworkDef;
+
+/// One simulated device in the fleet, with its serving engine and the
+/// two costs the dispatcher needs.
+pub struct PoolReplica {
+    /// `device#idx`, unique within the pool.
+    pub label: String,
+    pub device_name: String,
+    /// Fingerprint of the device spec (ties BENCH rows to the tunedb).
+    pub fingerprint: u64,
+    pub engine: InferenceEngine<SimBackend>,
+    /// Actual simulated time one request occupies this device (ms).
+    pub sim_ms: f64,
+    /// The dispatch cost signal: the routes' expected per-pass time
+    /// ([`RoutingTable::expected_network_ms_for`]); falls back to
+    /// `sim_ms` when the table carries no finite cost (uniform
+    /// baselines).
+    pub cost_ms: f64,
+}
+
+/// A started fleet: replicas in spec order, ready to serve.
+pub struct DevicePool {
+    replicas: Vec<PoolReplica>,
+    queue_depth: usize,
+    network: String,
+    input_shape: Vec<usize>,
+}
+
+/// Resolve per-device routing tables for a whole fleet in one pass:
+/// warm keys load from `store`, misses cold-tune (one
+/// [`tune_layers_warm`] call over every fleet device) and are merged
+/// into `store` — the caller persists the store if it wants the
+/// cold-tune to stick.
+pub fn resolve_routes(
+    spec: &FleetSpec,
+    net: &NetworkDef,
+    store: &mut TuneStore,
+    threads: usize,
+) -> Result<(Vec<(DeviceConfig, RoutingTable)>, WarmStats)> {
+    let devices = spec.devices();
+    let (_, warm) = tune_layers_warm(&devices, &net.classes(), threads, store);
+    let mut tables = Vec::with_capacity(devices.len());
+    for dev in devices {
+        let table = RoutingTable::from_store(store, &dev)
+            .filter(|t| t.covers(net))
+            .with_context(|| {
+                format!("no routes covering {} for {} after tuning", net.name, dev.name)
+            })?;
+        tables.push((dev, table));
+    }
+    Ok((tables, warm))
+}
+
+impl DevicePool {
+    /// Resolve routes for the fleet (warm-start from `store`, cold-tune
+    /// misses in one pass) and start every replica's engine. The warm
+    /// stats tell the caller whether the store gained entries worth
+    /// persisting.
+    pub fn start(
+        spec: &FleetSpec,
+        net: &NetworkDef,
+        store: &mut TuneStore,
+        threads: usize,
+        queue_depth: usize,
+    ) -> Result<(DevicePool, WarmStats)> {
+        let (tables, warm) = resolve_routes(spec, net, store, threads)?;
+        let with_replicas: Vec<(DeviceConfig, usize, RoutingTable)> = spec
+            .entries
+            .iter()
+            .zip(tables)
+            .map(|(e, (dev, table))| (dev, e.replicas, table))
+            .collect();
+        Ok((Self::start_with_tables(&with_replicas, net, queue_depth)?, warm))
+    }
+
+    /// Start a fleet from explicit `(device, replicas, routes)` triples
+    /// — the injection point for tests and for callers that resolved
+    /// routes themselves.
+    pub fn start_with_tables(
+        entries: &[(DeviceConfig, usize, RoutingTable)],
+        net: &NetworkDef,
+        queue_depth: usize,
+    ) -> Result<DevicePool> {
+        anyhow::ensure!(!entries.is_empty(), "fleet needs at least one device");
+        anyhow::ensure!(queue_depth >= 1, "fleet queue depth must be at least 1");
+        let mut replicas = Vec::new();
+        let mut input_shape = Vec::new();
+        for (dev, count, table) in entries {
+            for idx in 0..*count {
+                // pacing (time_scale) stays 0: the fleet driver runs a
+                // virtual clock of its own, so wall-clock sleeps would
+                // only slow the host without changing any reported
+                // number
+                let backend = SimBackend::new(dev, table, net, 0.0)
+                    .with_context(|| format!("fleet replica {}#{idx}", dev.name))?;
+                let sim_ms = backend.network_ms();
+                anyhow::ensure!(
+                    sim_ms > 0.0,
+                    "{}: simulated pass priced at {sim_ms} ms",
+                    dev.name
+                );
+                let route_ms = table.expected_network_ms_for(net);
+                let cost_ms =
+                    if route_ms.is_finite() && route_ms > 0.0 { route_ms } else { sim_ms };
+                input_shape = backend.input_shape();
+                let engine = InferenceEngine::start(backend, 1, queue_depth)
+                    .with_context(|| format!("start engine for {}#{idx}", dev.name))?;
+                replicas.push(PoolReplica {
+                    label: format!("{}#{idx}", dev.name),
+                    device_name: dev.name.to_string(),
+                    fingerprint: dev.fingerprint(),
+                    engine,
+                    sim_ms,
+                    cost_ms,
+                });
+            }
+        }
+        Ok(DevicePool { replicas, queue_depth, network: net.name.clone(), input_shape })
+    }
+
+    pub fn replicas(&self) -> &[PoolReplica] {
+        &self.replicas
+    }
+
+    /// Per-replica bounded queue depth (backpressure/admission cap).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    pub fn network(&self) -> &str {
+        &self.network
+    }
+
+    /// The image shape fleet requests must carry.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    /// Aggregate service capacity: requests/second the fleet sustains
+    /// with every device busy (`Σ 1000 / sim_ms`). The yardstick
+    /// open-loop arrival rates are set against.
+    pub fn capacity_rps(&self) -> f64 {
+        self.replicas.iter().map(|r| 1e3 / r.sim_ms).sum()
+    }
+
+    /// Drain and join every replica engine.
+    pub fn shutdown(self) {
+        for r in self.replicas {
+            r.engine.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convgen::Algorithm;
+
+    fn quick_pool() -> DevicePool {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let classes = net.classes();
+        let mali = DeviceConfig::mali_g76_mp10();
+        let vega = DeviceConfig::vega8();
+        let entries = vec![
+            (mali, 2, RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap()),
+            (vega, 1, RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap()),
+        ];
+        DevicePool::start_with_tables(&entries, &net, 4).expect("pool")
+    }
+
+    #[test]
+    fn pool_builds_one_replica_per_count_with_costs() {
+        let pool = quick_pool();
+        let labels: Vec<&str> = pool.replicas().iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, vec!["Mali-G76 MP10#0", "Mali-G76 MP10#1", "Vega 8#0"]);
+        for r in pool.replicas() {
+            assert!(r.sim_ms > 0.0);
+            // uniform tables carry no measured cost: the dispatch
+            // signal falls back to the simulated pass time
+            assert_eq!(r.cost_ms, r.sim_ms, "{}", r.label);
+        }
+        // identical replicas price identically; the integrated GPU is
+        // faster than the mobile one
+        assert_eq!(pool.replicas()[0].sim_ms, pool.replicas()[1].sim_ms);
+        assert!(pool.replicas()[2].sim_ms < pool.replicas()[0].sim_ms);
+        assert!(pool.capacity_rps() > 0.0);
+        assert_eq!(pool.network(), "resnet18");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn empty_fleet_and_partial_routes_are_rejected() {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        assert!(DevicePool::start_with_tables(&[], &net, 4).is_err());
+        // a table missing a class must fail pool startup, not serve a
+        // partly-priced network
+        let mut partial = RoutingTable::default();
+        partial.set(crate::workload::LayerClass::Conv2x, Algorithm::Ilpm, 1.0);
+        let entries = vec![(DeviceConfig::vega8(), 1, partial)];
+        assert!(DevicePool::start_with_tables(&entries, &net, 4).is_err());
+    }
+}

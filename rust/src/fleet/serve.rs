@@ -1,0 +1,552 @@
+//! Open-loop fleet serving: a deterministic virtual-clock dispatcher
+//! over the device pool, with SLO admission control.
+//!
+//! Requests arrive on an open-loop process ([`TraceKind::Poisson`] /
+//! [`TraceKind::Burst`]) — arrivals do not wait for completions, so
+//! queues genuinely build when the fleet is offered more than its
+//! capacity. Two clocks, mirroring the engine's own convention:
+//!
+//! * **Latency runs on a virtual clock.** Each replica is a FIFO
+//!   single-server queue; an admitted request starts at
+//!   `max(arrival, busy_until)` and occupies the device for its
+//!   simulated pass time. Every reported number (wait, latency,
+//!   shed/violated counts, throughput over the virtual makespan) is a
+//!   pure function of the seed — identical seed, byte-identical
+//!   BENCH_fleet.json.
+//! * **Numerics run on the host.** Every admitted request is also
+//!   pushed through the replica's real
+//!   [`crate::coordinator::InferenceEngine`] (via the non-blocking
+//!   `try_submit`, draining a result when the bounded queue pushes
+//!   back), so the whole stack — routing, lowering, proxy-net
+//!   execution, error accounting — is exercised, not just modeled.
+//!
+//! **Admission control** (per-request SLO): a request is shed at
+//! dispatch when `predicted queue wait + expected cost > deadline`,
+//! where the expected cost is the replica's route cost signal. Sheds
+//! and violations are counted separately: a shed request never ran; a
+//! violated one ran but finished after its deadline. With tuned routes
+//! the cost signal equals the simulated pass time, so admission is
+//! exact and admitted requests never violate — violations appear
+//! exactly when the cost model and reality diverge (or admission is
+//! disabled), which is the distinction worth measuring.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use super::dispatch::{DispatchPolicy, ReplicaView};
+use super::pool::DevicePool;
+use crate::coordinator::Submission;
+use crate::metrics::{LatencyRecorder, LatencySummary};
+use crate::util::json::Json;
+use crate::workload::{RequestGen, TraceKind};
+
+/// Per-request SLO configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SloConfig {
+    /// Deadline from arrival to completion (ms). `None` disables both
+    /// shedding and violation counting.
+    pub deadline_ms: Option<f64>,
+    /// When true, requests predicted to miss the deadline are shed at
+    /// dispatch; when false they run anyway and count as violated if
+    /// late.
+    pub admission: bool,
+}
+
+impl SloConfig {
+    pub fn none() -> SloConfig {
+        SloConfig { deadline_ms: None, admission: false }
+    }
+}
+
+/// One open-loop run: how many requests, how they arrive, how they are
+/// dispatched, and the SLO to hold them to.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenLoopConfig {
+    pub n: usize,
+    /// Arrival process; must be open-loop (Poisson or Burst).
+    pub arrival: TraceKind,
+    pub policy: DispatchPolicy,
+    pub seed: u64,
+    pub slo: SloConfig,
+}
+
+/// Per-replica outcome of an open-loop run.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub label: String,
+    pub device: String,
+    pub fingerprint: u64,
+    pub sim_ms: f64,
+    pub cost_ms: f64,
+    pub admitted: usize,
+    /// Requests the dispatcher aimed here but shed (deadline or full
+    /// queue).
+    pub shed: usize,
+    pub violated: usize,
+    pub latency: LatencySummary,
+}
+
+/// Fleet-level outcome: aggregate and per-replica latency summaries
+/// plus the SLO ledger.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub policy: DispatchPolicy,
+    pub network: String,
+    pub arrival: TraceKind,
+    pub seed: u64,
+    pub deadline_ms: Option<f64>,
+    pub admission: bool,
+    /// Requests the arrival process generated.
+    pub submitted: usize,
+    pub admitted: usize,
+    /// Shed because predicted wait + cost exceeded the deadline.
+    pub shed_deadline: usize,
+    /// Shed because the chosen replica's bounded queue was full.
+    pub shed_queue: usize,
+    /// Admitted requests that finished after their deadline.
+    pub violated: usize,
+    /// Engine-side execution failures among admitted requests.
+    pub errors: u64,
+    /// Virtual makespan: last completion (or last arrival if nothing
+    /// was admitted), ms.
+    pub span_ms: f64,
+    pub aggregate: LatencySummary,
+    pub replicas: Vec<ReplicaReport>,
+}
+
+impl FleetReport {
+    /// Total requests shed (deadline + queue).
+    pub fn shed(&self) -> usize {
+        self.shed_deadline + self.shed_queue
+    }
+
+    /// Fraction of generated requests shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / self.submitted as f64
+        }
+    }
+
+    /// Machine-readable row for BENCH_fleet.json. Every number is
+    /// finite (deadline `null` when unset).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut arrival = BTreeMap::new();
+        match self.arrival {
+            TraceKind::ClosedLoop => {
+                arrival.insert("kind".into(), Json::Str("closed-loop".into()));
+            }
+            TraceKind::Poisson { rate_hz } => {
+                arrival.insert("kind".into(), Json::Str("poisson".into()));
+                arrival.insert("rate_hz".into(), Json::Num(rate_hz));
+            }
+            TraceKind::Burst { rate_hz, burst } => {
+                arrival.insert("kind".into(), Json::Str("burst".into()));
+                arrival.insert("rate_hz".into(), Json::Num(rate_hz));
+                arrival.insert("burst".into(), Json::Num(burst as f64));
+            }
+        }
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("replica".into(), Json::Str(r.label.clone()));
+                m.insert("device".into(), Json::Str(r.device.clone()));
+                m.insert("fingerprint".into(), Json::Str(format!("{:016x}", r.fingerprint)));
+                m.insert("sim_ms".into(), Json::Num(r.sim_ms));
+                m.insert("cost_ms".into(), Json::Num(r.cost_ms));
+                m.insert("admitted".into(), Json::Num(r.admitted as f64));
+                m.insert("shed".into(), Json::Num(r.shed as f64));
+                m.insert("violated".into(), Json::Num(r.violated as f64));
+                m.insert("latency".into(), r.latency.to_json());
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("policy".into(), Json::Str(self.policy.name().into()));
+        m.insert("network".into(), Json::Str(self.network.clone()));
+        m.insert("arrival".into(), Json::Obj(arrival));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("deadline_ms".into(), self.deadline_ms.map_or(Json::Null, Json::Num));
+        m.insert("admission".into(), Json::Bool(self.admission));
+        m.insert("submitted".into(), Json::Num(self.submitted as f64));
+        m.insert("admitted".into(), Json::Num(self.admitted as f64));
+        m.insert("shed_deadline".into(), Json::Num(self.shed_deadline as f64));
+        m.insert("shed_queue".into(), Json::Num(self.shed_queue as f64));
+        m.insert("shed_rate".into(), Json::Num(self.shed_rate()));
+        m.insert("violated".into(), Json::Num(self.violated as f64));
+        m.insert("errors".into(), Json::Num(self.errors as f64));
+        m.insert("span_ms".into(), Json::Num(self.span_ms));
+        m.insert("aggregate".into(), self.aggregate.to_json());
+        m.insert("replicas".into(), Json::Arr(replicas));
+        Json::Obj(m)
+    }
+}
+
+/// Virtual-queue state of one replica during a run.
+struct ReplicaState {
+    /// Virtual instant the device finishes its last admitted request.
+    busy_until_ms: f64,
+    /// Completion instants of requests still queued or in service.
+    completions: VecDeque<f64>,
+    /// Requests submitted to the real engine, results not yet drained.
+    pending: usize,
+    rec: LatencyRecorder,
+    admitted: usize,
+    shed: usize,
+    violated: usize,
+}
+
+/// Drive `cfg.n` open-loop requests through the pool. See the module
+/// docs for the two-clock contract.
+pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetReport> {
+    ensure!(cfg.n >= 1, "open loop needs at least one request");
+    match cfg.arrival.rate_hz() {
+        Some(r) if r.is_finite() && r > 0.0 => {}
+        Some(r) => bail!("arrival rate must be finite and positive, got {r}"),
+        None => bail!("fleet serving is open-loop: use a Poisson or Burst arrival process"),
+    }
+    if let Some(d) = cfg.slo.deadline_ms {
+        ensure!(d.is_finite() && d > 0.0, "deadline must be finite and positive, got {d}");
+    }
+
+    let replicas = pool.replicas();
+    let mut gen = RequestGen::new(pool.input_shape(), cfg.arrival, cfg.seed);
+    let mut states: Vec<ReplicaState> = replicas
+        .iter()
+        .map(|_| ReplicaState {
+            busy_until_ms: 0.0,
+            completions: VecDeque::new(),
+            pending: 0,
+            rec: LatencyRecorder::new(),
+            admitted: 0,
+            shed: 0,
+            violated: 0,
+        })
+        .collect();
+    let errors_before: Vec<u64> = replicas
+        .iter()
+        .map(|r| r.engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed))
+        .collect();
+
+    let mut agg = LatencyRecorder::new();
+    let (mut shed_deadline, mut shed_queue, mut violated) = (0usize, 0usize, 0usize);
+    let mut span_ms = 0.0f64;
+
+    for seq in 0..cfg.n {
+        let req = gen.next_request();
+        let now_ms = req.arrival.as_secs_f64() * 1e3;
+        span_ms = span_ms.max(now_ms);
+        // retire virtually-finished work before looking at queue depths
+        for st in &mut states {
+            while st.completions.front().is_some_and(|&c| c <= now_ms) {
+                st.completions.pop_front();
+            }
+        }
+        let views: Vec<ReplicaView> = states
+            .iter()
+            .zip(replicas)
+            .map(|(st, r)| ReplicaView {
+                outstanding: st.completions.len(),
+                queue_wait_ms: (st.busy_until_ms - now_ms).max(0.0),
+                cost_ms: r.cost_ms,
+            })
+            .collect();
+        let pick = cfg.policy.choose(seq as u64, &views);
+        let (rep, st) = (&replicas[pick], &mut states[pick]);
+
+        // bounded backpressure: the virtual queue cap mirrors the
+        // engine's bounded channel
+        if st.completions.len() >= pool.queue_depth() {
+            st.shed += 1;
+            shed_queue += 1;
+            continue;
+        }
+        // SLO admission: shed what the cost model predicts will miss
+        if cfg.slo.admission {
+            if let Some(d) = cfg.slo.deadline_ms {
+                let predicted = (st.busy_until_ms - now_ms).max(0.0) + rep.cost_ms;
+                if predicted > d {
+                    st.shed += 1;
+                    shed_deadline += 1;
+                    continue;
+                }
+            }
+        }
+
+        // admit on the virtual clock
+        let start = st.busy_until_ms.max(now_ms);
+        let completion = start + rep.sim_ms;
+        st.busy_until_ms = completion;
+        st.completions.push_back(completion);
+        span_ms = span_ms.max(completion);
+        let latency_ms = completion - now_ms;
+        if cfg.slo.deadline_ms.is_some_and(|d| latency_ms > d) {
+            st.violated += 1;
+            violated += 1;
+        }
+        let latency = Duration::from_secs_f64(latency_ms / 1e3);
+        st.rec.record(latency);
+        agg.record(latency);
+        st.admitted += 1;
+
+        // and through the real engine; a saturated queue drains one
+        // result first (the engine runs at host speed, so this always
+        // makes progress)
+        let mut req = req;
+        loop {
+            match rep.engine.try_submit(req)? {
+                Submission::Queued => {
+                    st.pending += 1;
+                    break;
+                }
+                Submission::Saturated(returned) => {
+                    ensure!(st.pending > 0, "{}: saturated with nothing in flight", rep.label);
+                    // per-request failures surface via stats.errors
+                    let _ = rep.engine.recv();
+                    st.pending -= 1;
+                    req = returned;
+                }
+            }
+        }
+    }
+
+    // drain every engine so error counts are final
+    for (st, rep) in states.iter_mut().zip(replicas) {
+        while st.pending > 0 {
+            let _ = rep.engine.recv();
+            st.pending -= 1;
+        }
+    }
+    let errors: u64 = replicas
+        .iter()
+        .zip(&errors_before)
+        .map(|(r, before)| {
+            r.engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed) - before
+        })
+        .sum();
+
+    let span = Duration::from_secs_f64(span_ms.max(0.0) / 1e3);
+    let replica_reports: Vec<ReplicaReport> = states
+        .iter()
+        .zip(replicas)
+        .map(|(st, r)| ReplicaReport {
+            label: r.label.clone(),
+            device: r.device_name.clone(),
+            fingerprint: r.fingerprint,
+            sim_ms: r.sim_ms,
+            cost_ms: r.cost_ms,
+            admitted: st.admitted,
+            shed: st.shed,
+            violated: st.violated,
+            latency: st.rec.summary(span),
+        })
+        .collect();
+    let admitted = states.iter().map(|s| s.admitted).sum();
+    Ok(FleetReport {
+        policy: cfg.policy,
+        network: pool.network().to_string(),
+        arrival: cfg.arrival,
+        seed: cfg.seed,
+        deadline_ms: cfg.slo.deadline_ms,
+        admission: cfg.slo.admission,
+        submitted: cfg.n,
+        admitted,
+        shed_deadline,
+        shed_queue,
+        violated,
+        errors,
+        span_ms,
+        aggregate: agg.summary(span),
+        replicas: replica_reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convgen::Algorithm;
+    use crate::coordinator::RoutingTable;
+    use crate::simulator::DeviceConfig;
+    use crate::workload::NetworkDef;
+
+    fn pool(queue_depth: usize) -> DevicePool {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let classes = net.classes();
+        let entries = vec![
+            (
+                DeviceConfig::mali_g76_mp10(),
+                1,
+                RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap(),
+            ),
+            (
+                DeviceConfig::vega8(),
+                1,
+                RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap(),
+            ),
+        ];
+        DevicePool::start_with_tables(&entries, &net, queue_depth).expect("pool")
+    }
+
+    fn cfg(policy: DispatchPolicy, rate: f64, slo: SloConfig) -> OpenLoopConfig {
+        OpenLoopConfig {
+            n: 96,
+            arrival: TraceKind::Poisson { rate_hz: rate },
+            policy,
+            seed: 11,
+            slo,
+        }
+    }
+
+    #[test]
+    fn open_loop_runs_all_requests_with_zero_errors() {
+        let p = pool(64);
+        let cap = p.capacity_rps();
+        let report =
+            run_open_loop(&p, &cfg(DispatchPolicy::CostAware, 0.5 * cap, SloConfig::none()))
+                .expect("run");
+        assert_eq!(report.submitted, 96);
+        assert_eq!(report.admitted, 96, "nothing sheds without a deadline and with deep queues");
+        assert_eq!(report.shed(), 0);
+        assert_eq!(report.violated, 0);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.aggregate.count, 96);
+        let per_replica: usize = report.replicas.iter().map(|r| r.admitted).sum();
+        assert_eq!(per_replica, 96);
+        assert!(report.span_ms > 0.0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn closed_loop_and_bad_rates_are_rejected() {
+        let p = pool(8);
+        let bad = OpenLoopConfig {
+            n: 4,
+            arrival: TraceKind::ClosedLoop,
+            policy: DispatchPolicy::RoundRobin,
+            seed: 1,
+            slo: SloConfig::none(),
+        };
+        assert!(run_open_loop(&p, &bad).is_err());
+        let bad_rate =
+            OpenLoopConfig { arrival: TraceKind::Poisson { rate_hz: 0.0 }, ..bad };
+        assert!(run_open_loop(&p, &bad_rate).is_err());
+        p.shutdown();
+    }
+
+    #[test]
+    fn exact_cost_signal_admission_sheds_without_violations() {
+        // uniform tables fall back to cost_ms == sim_ms, so admission
+        // predicts latency exactly: overload must shed, never violate
+        let p = pool(64);
+        let cap = p.capacity_rps();
+        let slow = p.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max);
+        let slo = SloConfig { deadline_ms: Some(2.0 * slow), admission: true };
+        let report =
+            run_open_loop(&p, &cfg(DispatchPolicy::RoundRobin, 4.0 * cap, slo)).expect("run");
+        assert!(report.shed_deadline > 0, "4x overload must shed: {report:?}");
+        assert_eq!(report.violated, 0, "exact admission never admits a violator");
+        assert!(report.shed_rate() > 0.0 && report.shed_rate() < 1.0);
+        assert_eq!(report.admitted + report.shed(), report.submitted);
+        p.shutdown();
+    }
+
+    #[test]
+    fn admission_off_converts_sheds_into_violations() {
+        let p = pool(64);
+        let cap = p.capacity_rps();
+        let slow = p.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max);
+        let slo = SloConfig { deadline_ms: Some(2.0 * slow), admission: false };
+        let report =
+            run_open_loop(&p, &cfg(DispatchPolicy::RoundRobin, 4.0 * cap, slo)).expect("run");
+        assert_eq!(report.shed_deadline, 0, "admission off never deadline-sheds");
+        assert!(report.violated > 0, "overload without shedding must violate: {report:?}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn optimistic_cost_signal_lets_violations_through_admission() {
+        // a routing table whose expected costs are 100x too small:
+        // admission believes it and admits requests that then violate
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let dev = DeviceConfig::mali_g76_mp10();
+        let classes = net.classes();
+        let honest = RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap();
+        let probe = DevicePool::start_with_tables(&[(dev.clone(), 1, honest.clone())], &net, 8)
+            .expect("probe");
+        let sim_ms = probe.replicas()[0].sim_ms;
+        probe.shutdown();
+        let mut lying = honest;
+        for l in classes {
+            // spread the fib over the four classes; each claims ~1% of
+            // one pass
+            lying.set(l, Algorithm::Direct, sim_ms / 400.0);
+        }
+        let p = DevicePool::start_with_tables(&[(dev, 1, lying)], &net, 64).expect("pool");
+        assert!(p.replicas()[0].cost_ms < p.replicas()[0].sim_ms / 10.0);
+        let slo = SloConfig { deadline_ms: Some(1.5 * sim_ms), admission: true };
+        let report = run_open_loop(
+            &p,
+            &cfg(DispatchPolicy::CostAware, 3.0 * p.capacity_rps(), slo),
+        )
+        .expect("run");
+        assert!(
+            report.violated > 0,
+            "an optimistic cost model must leak violations: {report:?}"
+        );
+        p.shutdown();
+    }
+
+    #[test]
+    fn full_virtual_queue_sheds_as_backpressure() {
+        let p = pool(2); // tiny bounded queue
+        let cap = p.capacity_rps();
+        let report =
+            run_open_loop(&p, &cfg(DispatchPolicy::RoundRobin, 6.0 * cap, SloConfig::none()))
+                .expect("run");
+        assert!(report.shed_queue > 0, "queue cap 2 under 6x overload must shed: {report:?}");
+        assert_eq!(report.shed_deadline, 0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn identical_seed_identical_report() {
+        let run = || {
+            let p = pool(8);
+            let c = cfg(
+                DispatchPolicy::CostAware,
+                1.5 * p.capacity_rps(),
+                SloConfig { deadline_ms: Some(500.0), admission: true },
+            );
+            let r = run_open_loop(&p, &c).expect("run");
+            p.shutdown();
+            r.to_json().to_json_string()
+        };
+        assert_eq!(run(), run(), "virtual-clock runs must be bit-reproducible");
+    }
+
+    #[test]
+    fn cost_aware_beats_round_robin_on_a_heterogeneous_fleet() {
+        // the tentpole claim at unit scale: with one slow and one fast
+        // device at moderate load, round-robin queues half the traffic
+        // on the slow device and its p99 explodes
+        let p = pool(96);
+        let rate = 0.6 * p.capacity_rps();
+        let rr = run_open_loop(&p, &cfg(DispatchPolicy::RoundRobin, rate, SloConfig::none()))
+            .expect("rr");
+        let ca = run_open_loop(&p, &cfg(DispatchPolicy::CostAware, rate, SloConfig::none()))
+            .expect("ca");
+        assert!(
+            ca.aggregate.p99_ms < rr.aggregate.p99_ms,
+            "cost-aware p99 {} >= round-robin p99 {}",
+            ca.aggregate.p99_ms,
+            rr.aggregate.p99_ms
+        );
+        p.shutdown();
+    }
+}

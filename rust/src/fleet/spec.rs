@@ -1,0 +1,143 @@
+//! Fleet specification — which device models, how many replicas each.
+//!
+//! The CLI spelling is a comma list of `device[:replicas]` items, e.g.
+//! `mali:2,vega8:1` or just `mali` (one replica). Mixed device classes
+//! are the point: the paper's Table-1 mix (`mali,vega8,radeonvii`) is a
+//! mobile GPU, an integrated GPU and a dedicated GPU serving the same
+//! network at wildly different per-request costs.
+
+use anyhow::{bail, Result};
+
+use crate::simulator::DeviceConfig;
+
+/// Hard cap on total replicas in one fleet — each replica owns an
+/// executor thread, and a typo like `mali:20000` should fail parsing,
+/// not exhaust the host.
+pub const MAX_REPLICAS: usize = 64;
+
+/// One line of a fleet spec: a device model and its replica count.
+#[derive(Debug, Clone)]
+pub struct FleetEntry {
+    /// The `--device` spelling the user wrote — what
+    /// [`FleetSpec::render`] echoes back so printed specs stay
+    /// parseable.
+    pub alias: String,
+    pub device: DeviceConfig,
+    pub replicas: usize,
+}
+
+/// A parsed heterogeneous fleet: distinct device models with replica
+/// counts, in spec order.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub entries: Vec<FleetEntry>,
+}
+
+impl FleetSpec {
+    /// Parse `device[:replicas],device[:replicas],…`. Duplicate device
+    /// models are rejected (merge the counts instead), as are zero
+    /// replica counts and fleets beyond [`MAX_REPLICAS`].
+    pub fn parse(spec: &str) -> Result<FleetSpec> {
+        let mut entries: Vec<FleetEntry> = Vec::new();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                bail!("empty item in fleet spec {spec:?} (stray comma?)");
+            }
+            let (alias, count) = match item.split_once(':') {
+                Some((name, n)) => {
+                    let n: usize = n.parse().map_err(|_| {
+                        anyhow::anyhow!("bad replica count in {item:?} (want device:N)")
+                    })?;
+                    (name.trim(), n)
+                }
+                None => (item, 1),
+            };
+            if count == 0 {
+                bail!("device '{alias}' asks for 0 replicas — drop it from the spec instead");
+            }
+            let device = DeviceConfig::by_name(alias)
+                .ok_or_else(|| anyhow::anyhow!("unknown device '{alias}' in fleet spec"))?;
+            if entries.iter().any(|e| e.device.name == device.name) {
+                bail!(
+                    "device '{}' appears twice in fleet spec {spec:?} — merge the replica counts",
+                    device.name
+                );
+            }
+            entries.push(FleetEntry { alias: alias.to_string(), device, replicas: count });
+        }
+        let spec = FleetSpec { entries };
+        if spec.total_replicas() > MAX_REPLICAS {
+            bail!(
+                "fleet spec asks for {} replicas; the cap is {MAX_REPLICAS}",
+                spec.total_replicas()
+            );
+        }
+        Ok(spec)
+    }
+
+    /// The paper's Table-1 device mix, one replica each.
+    pub fn paper_mix() -> FleetSpec {
+        FleetSpec::parse("mali:1,vega8:1,radeonvii:1").expect("paper devices parse")
+    }
+
+    /// Total replicas across all devices.
+    pub fn total_replicas(&self) -> usize {
+        self.entries.iter().map(|e| e.replicas).sum()
+    }
+
+    /// The distinct device models, in spec order.
+    pub fn devices(&self) -> Vec<DeviceConfig> {
+        self.entries.iter().map(|e| e.device.clone()).collect()
+    }
+
+    /// Canonical `alias:count,…` rendering, built from the `--device`
+    /// spellings the user wrote so the string parses back through
+    /// [`FleetSpec::parse`] (console output and the BENCH `fleet`
+    /// field stay copy-pasteable).
+    pub fn render(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| format!("{}:{}", e.alias, e.replicas))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_counts_and_defaults() {
+        let s = FleetSpec::parse("mali:2,vega8").expect("parse");
+        assert_eq!(s.entries.len(), 2);
+        assert_eq!(s.entries[0].device.name, "Mali-G76 MP10");
+        assert_eq!(s.entries[0].replicas, 2);
+        assert_eq!(s.entries[1].replicas, 1);
+        assert_eq!(s.total_replicas(), 3);
+        // render uses the user's aliases, so it round-trips
+        assert_eq!(s.render(), "mali:2,vega8:1");
+        let back = FleetSpec::parse(&s.render()).expect("render must parse back");
+        assert_eq!(back.total_replicas(), s.total_replicas());
+        assert_eq!(back.render(), s.render());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FleetSpec::parse("").is_err());
+        assert!(FleetSpec::parse("mali,,vega8").is_err(), "stray comma");
+        assert!(FleetSpec::parse("gtx1080:2").is_err(), "unknown device");
+        assert!(FleetSpec::parse("mali:0").is_err(), "zero replicas");
+        assert!(FleetSpec::parse("mali:x").is_err(), "non-numeric count");
+        assert!(FleetSpec::parse("mali:2,mali-g76:1").is_err(), "duplicate via alias");
+        assert!(FleetSpec::parse("mali:999").is_err(), "over the replica cap");
+    }
+
+    #[test]
+    fn paper_mix_is_the_table1_fleet() {
+        let s = FleetSpec::paper_mix();
+        assert_eq!(s.total_replicas(), 3);
+        assert_eq!(s.devices().len(), 3);
+    }
+}

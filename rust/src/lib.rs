@@ -15,9 +15,11 @@
 //!   depthwise specialist for MobileNet's grouped layers), the network
 //!   layer tables in [`workload`] (ResNet Table 2 and MobileNetV1 at
 //!   width 1.0/0.5), the [`autotune`] search the paper's §5 describes,
-//!   and the persistent [`tunedb`] store that makes tuning results
+//!   the persistent [`tunedb`] store that makes tuning results
 //!   durable across processes (tune once per device, serve from disk
-//!   forever).
+//!   forever), and the [`fleet`] layer that serves open-loop traffic
+//!   across many heterogeneous simulated devices with cost-aware
+//!   dispatch and SLO admission control.
 //!
 //! See README.md for the CLI front door, and DESIGN.md for the
 //! paper→module map, the workload tables, the grouped-convolution
@@ -28,6 +30,7 @@ pub mod autotune;
 pub mod cli;
 pub mod convgen;
 pub mod coordinator;
+pub mod fleet;
 pub mod metrics;
 pub mod runtime;
 pub mod simulator;

@@ -40,8 +40,16 @@ impl LatencyRecorder {
 
     /// Summarise; `wall` is the wall-clock spanned by the run (for
     /// throughput — distinct from the sum of latencies under overlap).
+    ///
+    /// An empty recorder yields [`LatencySummary::zero`] — not a panic
+    /// and not NaN percentiles. Runs where every request was shed or
+    /// failed still need a well-formed row in BENCH_*.json, and JSON
+    /// has no encoding for NaN, so non-finite numbers must never reach
+    /// [`LatencySummary::to_json`].
     pub fn summary(&self, wall: Duration) -> LatencySummary {
-        assert!(!self.samples_us.is_empty(), "no samples");
+        if self.samples_us.is_empty() {
+            return LatencySummary::zero();
+        }
         let mut s = self.samples_us.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pct = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)] / 1e3;
@@ -58,6 +66,20 @@ impl LatencyRecorder {
 }
 
 impl LatencySummary {
+    /// The explicit no-samples summary: `count == 0`, every statistic
+    /// zero. What an all-shed or all-failed run reports.
+    pub fn zero() -> LatencySummary {
+        LatencySummary {
+            count: 0,
+            mean_ms: 0.0,
+            p50_ms: 0.0,
+            p95_ms: 0.0,
+            p99_ms: 0.0,
+            max_ms: 0.0,
+            throughput_rps: 0.0,
+        }
+    }
+
     /// Serialise for machine-readable bench output (BENCH_serve.json).
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
@@ -106,10 +128,40 @@ mod tests {
         assert!((s.throughput_rps - 100.0).abs() < 1e-6);
     }
 
+    /// Every number in a summary's JSON must be finite — BENCH files
+    /// are parsed downstream and JSON cannot encode NaN/inf.
+    fn assert_all_finite(j: &crate::util::json::Json) {
+        use crate::util::json::Json;
+        match j {
+            Json::Num(n) => assert!(n.is_finite(), "non-finite number {n} in summary JSON"),
+            Json::Arr(xs) => xs.iter().for_each(assert_all_finite),
+            Json::Obj(m) => m.values().for_each(assert_all_finite),
+            _ => {}
+        }
+    }
+
     #[test]
-    #[should_panic(expected = "no samples")]
-    fn empty_summary_panics() {
-        LatencyRecorder::new().summary(Duration::from_secs(1));
+    fn empty_summary_is_zeroed_not_nan() {
+        // regression: the empty case used to panic, and a panic-free
+        // rewrite could easily have produced 0/0 percentiles instead
+        let s = LatencyRecorder::new().summary(Duration::from_secs(1));
+        assert_eq!(s, LatencySummary::zero());
+        assert_eq!(s.count, 0);
+        assert_all_finite(&s.to_json());
+        // zero wall clock must not divide to inf either
+        assert_all_finite(&LatencyRecorder::new().summary(Duration::ZERO).to_json());
+    }
+
+    #[test]
+    fn single_sample_summary_is_that_sample_everywhere() {
+        let mut r = LatencyRecorder::new();
+        r.record(Duration::from_millis(3));
+        let s = r.summary(Duration::ZERO); // zero wall: throughput clamps, not inf
+        assert_eq!(s.count, 1);
+        for v in [s.mean_ms, s.p50_ms, s.p95_ms, s.p99_ms, s.max_ms] {
+            assert!((v - 3.0).abs() < 1e-9, "{v}");
+        }
+        assert_all_finite(&s.to_json());
     }
 
     #[test]

@@ -14,3 +14,57 @@ mod tables;
 
 pub use latency::{LatencyRecorder, LatencySummary};
 pub use tables::{fig5_table, profile_rows, render_fig5, table3, table4, Fig5Row};
+
+use crate::simulator::DeviceConfig;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Version of the shared BENCH_*.json envelope. Bump on any
+/// incompatible change to the common fields (`schema_version`, `bench`,
+/// `devices`); bench-specific payloads evolve independently.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// The common root fields every BENCH_*.json emitter starts from: the
+/// envelope schema version, the bench name, and the full fingerprints
+/// of the device models priced — so a perf trajectory can tell "the
+/// code got slower" apart from "the device model changed" (the same
+/// invalidation story the tunedb store uses).
+pub fn bench_envelope(bench: &str, devices: &[&DeviceConfig]) -> BTreeMap<String, Json> {
+    let devs: Vec<Json> = devices
+        .iter()
+        .map(|d| {
+            let mut m = BTreeMap::new();
+            m.insert("device".into(), Json::Str(d.name.to_string()));
+            m.insert("fingerprint".into(), Json::Str(format!("{:016x}", d.fingerprint())));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("schema_version".into(), Json::Num(BENCH_SCHEMA_VERSION as f64));
+    root.insert("bench".into(), Json::Str(bench.to_string()));
+    root.insert("devices".into(), Json::Arr(devs));
+    root
+}
+
+#[cfg(test)]
+mod envelope_tests {
+    use super::*;
+
+    #[test]
+    fn envelope_carries_schema_and_fingerprints() {
+        let devs = DeviceConfig::paper_devices();
+        let refs: Vec<&DeviceConfig> = devs.iter().collect();
+        let root = Json::Obj(bench_envelope("serve", &refs));
+        assert_eq!(root.get("schema_version").and_then(Json::as_u64), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(root.get("bench").and_then(Json::as_str), Some("serve"));
+        let listed = root.get("devices").and_then(Json::as_arr).expect("devices");
+        assert_eq!(listed.len(), devs.len());
+        for (j, d) in listed.iter().zip(&devs) {
+            assert_eq!(j.get("device").and_then(Json::as_str), Some(d.name));
+            assert_eq!(
+                j.get("fingerprint").and_then(Json::as_str),
+                Some(format!("{:016x}", d.fingerprint()).as_str())
+            );
+        }
+    }
+}

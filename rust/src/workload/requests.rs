@@ -3,7 +3,8 @@
 //! Single-image inference requests arrive one at a time (the paper's
 //! setting: an edge device sees one camera frame per request, there is
 //! no batch dimension to exploit). Generators produce deterministic
-//! synthetic images with Poisson or closed-loop arrivals.
+//! synthetic images with closed-loop, Poisson, or bursty open-loop
+//! arrivals.
 
 use crate::runtime::Tensor;
 use crate::util::prng::Rng;
@@ -15,6 +16,23 @@ pub enum TraceKind {
     ClosedLoop,
     /// Poisson arrivals at `rate_hz` (open loop, measures latency).
     Poisson { rate_hz: f64 },
+    /// Bursty open-loop arrivals: groups of `burst` requests land at
+    /// the same instant, with exponential gaps of mean
+    /// `burst / rate_hz` between groups — the long-run rate stays
+    /// `rate_hz`, but the instantaneous load a dispatcher sees is far
+    /// spikier than Poisson (the camera-burst / notification-fanout
+    /// shape that stresses admission control).
+    Burst { rate_hz: f64, burst: u32 },
+}
+
+impl TraceKind {
+    /// Long-run request rate, if the process has one (open-loop kinds).
+    pub fn rate_hz(&self) -> Option<f64> {
+        match self {
+            TraceKind::ClosedLoop => None,
+            TraceKind::Poisson { rate_hz } | TraceKind::Burst { rate_hz, .. } => Some(*rate_hz),
+        }
+    }
 }
 
 /// One single-image inference request.
@@ -33,11 +51,20 @@ pub struct RequestGen {
     shape: Vec<usize>,
     kind: TraceKind,
     clock: f64, // seconds
+    /// Position within the current burst (Burst traces only).
+    burst_pos: u32,
 }
 
 impl RequestGen {
     pub fn new(shape: &[usize], kind: TraceKind, seed: u64) -> RequestGen {
-        RequestGen { rng: Rng::new(seed), next_id: 0, shape: shape.to_vec(), kind, clock: 0.0 }
+        RequestGen {
+            rng: Rng::new(seed),
+            next_id: 0,
+            shape: shape.to_vec(),
+            kind,
+            clock: 0.0,
+            burst_pos: 0,
+        }
     }
 
     /// Generate the next request.
@@ -50,6 +77,16 @@ impl RequestGen {
                 // exponential inter-arrival
                 let u = self.rng.f64().max(1e-12);
                 self.clock += -u.ln() / rate_hz;
+            }
+            TraceKind::Burst { rate_hz, burst } => {
+                let burst = burst.max(1);
+                if self.burst_pos == 0 {
+                    // exponential gap between bursts; mean burst/rate
+                    // keeps the long-run rate at rate_hz
+                    let u = self.rng.f64().max(1e-12);
+                    self.clock += -u.ln() * burst as f64 / rate_hz;
+                }
+                self.burst_pos = (self.burst_pos + 1) % burst;
             }
         }
         let image = Tensor::randn(&self.shape, 0xC0FFEE ^ id);
@@ -90,6 +127,40 @@ mod tests {
         // mean inter-arrival should be ~10ms
         let total = reqs.last().unwrap().arrival.as_secs_f64();
         assert!(total > 0.1 && total < 2.0, "total {total}");
+    }
+
+    #[test]
+    fn burst_arrivals_group_and_keep_the_long_run_rate() {
+        let burst = 4u32;
+        let rate = 200.0;
+        let mut g = RequestGen::new(&[3, 4, 4], TraceKind::Burst { rate_hz: rate, burst }, 3);
+        let reqs = g.take(200);
+        // arrivals are non-decreasing and grouped in runs of `burst`
+        // sharing one instant
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        for group in reqs.chunks(burst as usize) {
+            assert!(
+                group.iter().all(|r| r.arrival == group[0].arrival),
+                "burst members must arrive together"
+            );
+        }
+        // consecutive bursts are separated (exponential gap > 0)
+        assert!(reqs[0].arrival < reqs[burst as usize].arrival);
+        // long-run rate within 3x either way of the nominal 200 req/s
+        let span = reqs.last().unwrap().arrival.as_secs_f64();
+        let measured = reqs.len() as f64 / span;
+        assert!(measured > rate / 3.0 && measured < rate * 3.0, "rate {measured}");
+        // a degenerate burst of 1 behaves like Poisson (no panic, gaps
+        // everywhere)
+        let mut g1 = RequestGen::new(&[3, 4, 4], TraceKind::Burst { rate_hz: 50.0, burst: 1 }, 4);
+        let reqs = g1.take(10);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        assert_eq!(TraceKind::Burst { rate_hz: 50.0, burst: 1 }.rate_hz(), Some(50.0));
+        assert_eq!(TraceKind::ClosedLoop.rate_hz(), None);
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Integration: heterogeneous fleet serving end to end.
+//!
+//! Covers the fleet acceptance story on the paper's Table-1 device mix
+//! (Mali-G76, Vega 8, Radeon VII): `bench fleet` shows cost-aware
+//! dispatch beating round-robin on aggregate p99 and a nonzero shed
+//! count under deliberate overload; an identical PRNG seed produces a
+//! byte-identical BENCH_fleet.json; and a fleet cold-tune merges its
+//! routes back through the tunedb store on disk, so the next start is
+//! fully warm.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use ilpm::autotune::tune_layers_warm;
+use ilpm::cli;
+use ilpm::coordinator::RoutingTable;
+use ilpm::fleet::{
+    resolve_routes, run_open_loop, DevicePool, DispatchPolicy, FleetSpec, OpenLoopConfig,
+    SloConfig,
+};
+use ilpm::simulator::DeviceConfig;
+use ilpm::tunedb::TuneStore;
+use ilpm::util::json::Json;
+use ilpm::workload::{LayerClass, NetworkDef, TraceKind};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ilpm_fleet_{name}_{}.json", std::process::id()))
+}
+
+fn sv(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+/// The Table-1 fleet tuned once for the whole test binary — every test
+/// that needs tuned routes shares this store instead of re-sweeping.
+fn paper_store() -> &'static TuneStore {
+    static STORE: OnceLock<TuneStore> = OnceLock::new();
+    STORE.get_or_init(|| {
+        let mut store = TuneStore::new();
+        tune_layers_warm(&DeviceConfig::paper_devices(), &LayerClass::ALL, 8, &mut store);
+        store
+    })
+}
+
+#[test]
+fn bench_fleet_verdict_and_overload_shed_on_the_table1_mix() {
+    let routes = tmp("bench_routes");
+    paper_store().save(&routes).expect("persist store");
+    let out = tmp("bench_out");
+    cli::run(&sv(&[
+        "bench",
+        "fleet",
+        "--routes",
+        routes.to_str().unwrap(),
+        "--out",
+        out.to_str().unwrap(),
+        "--n",
+        "160",
+        "--seed",
+        "7",
+    ]))
+    .expect("bench fleet");
+    let j = Json::parse(&std::fs::read_to_string(&out).expect("written")).expect("json");
+    // the shared BENCH envelope: schema version + all three fingerprints
+    assert_eq!(j.get("schema_version").and_then(Json::as_u64), Some(1));
+    assert_eq!(j.get("bench").and_then(Json::as_str), Some("fleet"));
+    let devices = j.get("devices").and_then(Json::as_arr).expect("devices");
+    assert_eq!(devices.len(), 3, "Table-1 mix lists three device models");
+    // the headline verdict: per-device route costs as a dispatch signal
+    // beat cost-blind round-robin on tail latency
+    assert_eq!(
+        j.get("cost_aware_beats_round_robin").and_then(Json::as_bool),
+        Some(true),
+        "cost-aware must beat round-robin on aggregate p99"
+    );
+    // the overload phase must actually shed
+    let shed = j.get("overload_shed").and_then(Json::as_usize).expect("overload_shed");
+    assert!(shed > 0, "3x-capacity burst phase must shed load");
+    // three race rows + one overload row, every one clean of errors
+    let rows = j.get("rows").and_then(Json::as_arr).expect("rows");
+    assert_eq!(rows.len(), 4);
+    for r in rows {
+        assert_eq!(r.get("errors").and_then(Json::as_u64), Some(0), "request failures in {r:?}");
+        // conservation: every generated request is admitted or shed
+        let (sub, adm) = (
+            r.get("submitted").and_then(Json::as_usize).unwrap(),
+            r.get("admitted").and_then(Json::as_usize).unwrap(),
+        );
+        let shed = r.get("shed_deadline").and_then(Json::as_usize).unwrap()
+            + r.get("shed_queue").and_then(Json::as_usize).unwrap();
+        assert_eq!(sub, adm + shed);
+    }
+    std::fs::remove_file(&routes).ok();
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn bench_fleet_is_byte_identical_for_an_identical_seed() {
+    let routes = tmp("det_routes");
+    paper_store().save(&routes).expect("persist store");
+    let run_once = |out: &PathBuf| {
+        cli::run(&sv(&[
+            "bench",
+            "fleet",
+            "--routes",
+            routes.to_str().unwrap(),
+            "--out",
+            out.to_str().unwrap(),
+            "--n",
+            "96",
+            "--seed",
+            "41",
+        ]))
+        .expect("bench fleet");
+        std::fs::read(out).expect("read bench output")
+    };
+    let (a, b) = (tmp("det_a"), tmp("det_b"));
+    let first = run_once(&a);
+    let second = run_once(&b);
+    assert_eq!(first, second, "identical seed must give a byte-identical BENCH_fleet.json");
+    for p in [&routes, &a, &b] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn fleet_cold_tune_merges_back_through_disk_and_warm_starts() {
+    let routes = tmp("merge_back");
+    assert!(!routes.exists());
+    // cold start: no store on disk — serve --fleet must tune both
+    // devices in one pass and persist the results
+    cli::run(&sv(&[
+        "serve",
+        "--fleet",
+        "mali:2,vega8:1",
+        "--policy",
+        "cost-aware",
+        "--routes",
+        routes.to_str().unwrap(),
+        "--n",
+        "16",
+        "--seed",
+        "5",
+    ]))
+    .expect("cold fleet serve");
+    // the merged store covers both fingerprints with full route tables
+    let net = NetworkDef::by_name("resnet18").unwrap();
+    let loaded = TuneStore::load(&routes).expect("merged store readable");
+    assert_eq!(loaded.device_count(), 2, "one fingerprint per fleet device");
+    for dev in [DeviceConfig::mali_g76_mp10(), DeviceConfig::vega8()] {
+        let table = RoutingTable::from_store(&loaded, &dev)
+            .unwrap_or_else(|| panic!("{}: no routes after merge-back", dev.name));
+        assert!(table.covers(&net), "{}: partial coverage", dev.name);
+    }
+    // a second resolution over the loaded store is fully warm
+    let spec = FleetSpec::parse("mali:2,vega8:1").unwrap();
+    let mut warm_store = loaded;
+    let (_, warm) = resolve_routes(&spec, &net, &mut warm_store, 8).expect("warm resolve");
+    assert_eq!(warm.misses, 0, "disk round trip must leave nothing to tune");
+    assert!(warm.hits > 0);
+    std::fs::remove_file(&routes).ok();
+}
+
+#[test]
+fn tuned_fleet_admission_sheds_exactly_the_predicted_violators() {
+    // library-level restatement of the SLO story on tuned routes: the
+    // tuner's cost signal equals the simulated pass time, so admission
+    // predictions are exact — overload sheds, nothing admitted violates
+    let net = NetworkDef::by_name("resnet18").unwrap();
+    let spec = FleetSpec::paper_mix();
+    let mut store = paper_store().clone();
+    let (pool, warm) = DevicePool::start(&spec, &net, &mut store, 8, 16).expect("pool");
+    assert_eq!(warm.misses, 0, "shared store must cover the paper mix");
+    for r in pool.replicas() {
+        assert!(
+            (r.cost_ms - r.sim_ms).abs() < 1e-6,
+            "{}: tuned cost {} != simulated {}",
+            r.label,
+            r.cost_ms,
+            r.sim_ms
+        );
+    }
+    let slowest = pool.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max);
+    let cfg = OpenLoopConfig {
+        n: 128,
+        arrival: TraceKind::Burst { rate_hz: 3.0 * pool.capacity_rps(), burst: 8 },
+        policy: DispatchPolicy::CostAware,
+        seed: 13,
+        slo: SloConfig { deadline_ms: Some(2.0 * slowest), admission: true },
+    };
+    let report = run_open_loop(&pool, &cfg).expect("overloaded run");
+    pool.shutdown();
+    assert!(report.shed() > 0, "3x overload must shed: {report:?}");
+    assert_eq!(report.violated, 0, "exact cost signal admits no violators");
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.admitted + report.shed(), report.submitted);
+    // the aggregate summary never carries non-finite numbers, even if a
+    // replica served nothing
+    let json = report.to_json().to_json_string();
+    assert!(!json.contains("NaN") && !json.contains("inf"), "{json}");
+}

@@ -215,6 +215,87 @@ fn store_key_distinguishes_depthwise_from_dense_at_identical_geometry() {
 }
 
 #[test]
+fn multi_device_route_resolution_never_leaks_across_fingerprints() {
+    // Property: over a store holding all three paper fingerprints —
+    // with every time value tagged by its device — the routes
+    // `RoutingTable::from_store` resolves for one device never carry
+    // another device's entries, before or after a disk round trip.
+    // Time values encode the device index in their thousands digit and
+    // stay dyadic (k/64) so they survive the JSON text round trip
+    // bit-exactly.
+    let path = tmp("tunedb_leak_prop");
+    let devices = DeviceConfig::paper_devices();
+    forall(
+        30,
+        0x5ca1_ab1e,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut store = TuneStore::new();
+            for (i, dev) in devices.iter().enumerate() {
+                for layer in LayerClass::ALL {
+                    for alg in Algorithm::ALL {
+                        if !alg.supports(&layer.shape()) || rng.below(3) == 0 {
+                            continue;
+                        }
+                        store.insert(
+                            dev.fingerprint(),
+                            dev.name,
+                            StoredTuning {
+                                layer,
+                                algorithm: alg,
+                                params: random_params(&mut rng),
+                                time_ms: (i + 1) as f64 * 1000.0
+                                    + rng.below(64_000) as f64 / 64.0,
+                                evaluated: 1,
+                                pruned: 0,
+                            },
+                        );
+                    }
+                }
+            }
+            store.save(&path).map_err(|e| format!("save: {e:#}"))?;
+            let reloaded = TuneStore::load(&path).map_err(|e| format!("load: {e:#}"))?;
+            for (i, dev) in devices.iter().enumerate() {
+                let band = ((i + 1) as f64 * 1000.0, (i + 2) as f64 * 1000.0);
+                for (label, s) in [("fresh", &store), ("reloaded", &reloaded)] {
+                    let Some(table) = RoutingTable::from_store(s, dev) else {
+                        continue; // this device drew no entries
+                    };
+                    for layer in table.layers() {
+                        let route = table.route(layer).expect("listed layer routes");
+                        if !(route.expected_ms >= band.0 && route.expected_ms < band.1) {
+                            return Err(format!(
+                                "{label}: {} route for {} costs {} — outside this \
+                                 fingerprint's band [{}, {}): leaked from another device",
+                                dev.name,
+                                layer.name(),
+                                route.expected_ms,
+                                band.0,
+                                band.1
+                            ));
+                        }
+                        // and the store agrees the entry really is this
+                        // fingerprint's
+                        if s.get(dev.fingerprint(), layer, route.algorithm).is_none() {
+                            return Err(format!(
+                                "{label}: {} routed ({}, {}) that its fingerprint does \
+                                 not hold",
+                                dev.name,
+                                layer.name(),
+                                route.algorithm.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn tune_save_load_warm_starts_with_zero_evaluations() {
     let dev = DeviceConfig::mali_g76_mp10();
     let path = tmp("tunedb_warm");
