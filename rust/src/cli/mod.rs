@@ -79,6 +79,13 @@ COMMANDS:
             print the stored per-layer winners for a device fleet
   simulate  --alg <name> --layer <conv4.x|dw512s1@14|pw512-512@14> [--device ...]
             simulate one algorithm and print its profile counters
+  verify    [--device mali|vega8|radeonvii|all] [--seed S] [--fuzz N]
+            differential conformance sweep over all six lowerings:
+            analytic invariants (FLOP accounting, stream byte
+            conservation, grouped == sum-of-per-group), numeric oracles
+            for the reference path, and cost-signal sanity on every
+            device; prints a per-algorithm pass/fail report and exits
+            nonzero on any violation (default: all devices, seed 7)
   layers    [--artifacts DIR] [--device-check]
             execute each conv-layer artifact once via PJRT and verify
   help      print this message
@@ -96,6 +103,42 @@ fn positive(v: usize, flag: &str) -> Result<usize, String> {
         Err(format!("--{flag} must be at least 1"))
     } else {
         Ok(v)
+    }
+}
+
+/// Parse an explicitly-passed flag that must be a positive, finite
+/// number. Guards the serve-path rates: a zero/negative/non-finite
+/// `--rate` used to sail through to `-u.ln() / rate_hz` in the request
+/// generator, yielding an infinite or backwards virtual clock.
+fn positive_f64(a: &Args, flag: &str) -> Result<f64, String> {
+    let v = a.get_f64(flag, 0.0)?;
+    if v.is_finite() && v > 0.0 {
+        Ok(v)
+    } else {
+        Err(format!("--{flag} must be a positive, finite number, got {v}"))
+    }
+}
+
+/// Parse a flag that must be a finite, non-negative number (pacing
+/// scales: 0 means "as fast as the host runs").
+fn non_negative_f64(a: &Args, flag: &str, default: f64) -> Result<f64, String> {
+    let v = a.get_f64(flag, default)?;
+    if v.is_finite() && v >= 0.0 {
+        Ok(v)
+    } else {
+        Err(format!("--{flag} must be a finite number >= 0, got {v}"))
+    }
+}
+
+/// Parse `--burst`: at least 1, and within `u32` (the arrival process
+/// stores the burst size as `u32`; a silent `as u32` truncation used to
+/// turn e.g. 2^32 into 0).
+fn burst_flag(a: &Args) -> Result<u32, String> {
+    let v = a.get_usize("burst", 1)?;
+    if v == 0 || v > u32::MAX as usize {
+        Err(format!("--burst must be between 1 and {}, got {v}", u32::MAX))
+    } else {
+        Ok(v as u32)
     }
 }
 
@@ -201,6 +244,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "tune" => cmd_tune(rest),
         "routes" => cmd_routes(rest),
         "simulate" => cmd_simulate(rest),
+        "verify" => cmd_verify(rest),
         "layers" => cmd_layers(rest),
         other => Err(format!("unknown command '{other}' (try `ilpm help`)")),
     }
@@ -257,13 +301,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
 fn slo_flags(a: &Args) -> Result<SloConfig, String> {
     let deadline_ms = match a.get("deadline-ms") {
         None => None,
-        Some(_) => {
-            let d = a.get_f64("deadline-ms", 0.0)?;
-            if !(d.is_finite() && d > 0.0) {
-                return Err(format!("--deadline-ms must be positive, got {d}"));
-            }
-            Some(d)
-        }
+        Some(_) => Some(positive_f64(a, "deadline-ms")?),
     };
     let admission = match a.get_or("admission", "on") {
         "on" | "true" | "1" => true,
@@ -289,7 +327,13 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
     let queue = positive(a.get_usize("queue", 8)?, "queue")?;
     let threads = a.get_usize("threads", 8)?;
     let seed = a.get_usize("seed", 7)? as u64;
-    let burst = positive(a.get_usize("burst", 1)?, "burst")?;
+    let burst = burst_flag(a)?;
+    // validate --rate before the (expensive) fleet cold-tune below: a
+    // bad rate must fail fast, not after minutes of tuning
+    let explicit_rate = match a.get("rate") {
+        Some(_) => Some(positive_f64(a, "rate")?),
+        None => None,
+    };
     let net = network(a)?;
     let policy_name = a.get_or("policy", "cost-aware");
     let policy = DispatchPolicy::from_name(policy_name).ok_or_else(|| {
@@ -315,13 +359,10 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
     }
 
     let cap = pool.capacity_rps();
-    let rate = match a.get("rate") {
-        Some(_) => a.get_f64("rate", 0.0)?,
-        // default: 80% of fleet capacity — loaded, not drowning
-        None => 0.8 * cap,
-    };
+    // default: 80% of fleet capacity — loaded, not drowning
+    let rate = explicit_rate.unwrap_or(0.8 * cap);
     let arrival = if burst > 1 {
-        TraceKind::Burst { rate_hz: rate, burst: burst as u32 }
+        TraceKind::Burst { rate_hz: rate, burst }
     } else {
         TraceKind::Poisson { rate_hz: rate }
     };
@@ -342,8 +383,10 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
     pool.shutdown();
     print_fleet_report(&report);
     if report.errors > 0 {
+        // errors ledger = engine execution failures + non-finite
+        // latency samples the recorder dropped (poisoned cost signal)
         Err(format!(
-            "{} of {} admitted requests failed in execution",
+            "{} of {} admitted requests errored (execution failure or non-finite latency)",
             report.errors, report.admitted
         ))
     } else {
@@ -397,7 +440,7 @@ fn cmd_serve_sim(a: &Args) -> Result<(), String> {
     let n = positive(a.get_usize("n", 16)?, "n")?;
     let workers = positive(a.get_usize("workers", 1)?, "workers")?;
     let queue = a.get_usize("queue", 8)?;
-    let time_scale = a.get_f64("time-scale", 1.0)?;
+    let time_scale = non_negative_f64(a, "time-scale", 1.0)?;
     let net = network(a)?;
     let table = match (a.get("routes"), a.get("uniform")) {
         (Some(_), Some(_)) => {
@@ -733,7 +776,7 @@ fn bench_serve(a: &Args) -> Result<(), String> {
     let n = positive(a.get_usize("n", 32)?, "n")?;
     let workers = positive(a.get_usize("workers", 2)?, "workers")?;
     let threads = a.get_usize("threads", 8)?;
-    let time_scale = a.get_f64("time-scale", 1.0)?;
+    let time_scale = non_negative_f64(a, "time-scale", 1.0)?;
     let out = a.get_or("out", "BENCH_serve.json").to_string();
     let net = network(a)?;
     let devices = if a.get_or("device", "all") == "all" {
@@ -1199,6 +1242,41 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `ilpm verify` — run the differential conformance suite over every
+/// convgen lowering (see [`crate::conformance`]): the full table/edge
+/// corpus plus `--fuzz` seeded shapes, analytic + numeric + cost
+/// checks, per-algorithm pass/fail report. Exits nonzero on any
+/// violation; each violation prints the seed and full shape needed to
+/// reproduce it.
+fn cmd_verify(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["device", "seed", "fuzz"])?;
+    // conformance defaults to the whole paper fleet: cost signals must
+    // be sane on every device the router could route for
+    let devices = if a.get("device").is_none() || a.get_or("device", "all") == "all" {
+        DeviceConfig::paper_devices()
+    } else {
+        vec![device(&a)?]
+    };
+    let cfg = crate::conformance::ConformanceConfig {
+        seed: a.get_usize("seed", 7)? as u64,
+        fuzz: a.get_usize("fuzz", 24)?,
+        devices,
+        ..Default::default()
+    };
+    let report = crate::conformance::run(&cfg);
+    print!("{}", report.render());
+    if report.pass() {
+        println!("conformance: PASS");
+        Ok(())
+    } else {
+        Err(format!(
+            "conformance: {} violation(s) across {} check(s)",
+            report.violations.len(),
+            report.checks
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1399,6 +1477,58 @@ mod tests {
         assert!(e.contains("--policy"), "{e}");
         let e = run(&sv(&["serve", "--fleet", "mali:1", "--deadline-ms", "-3"])).unwrap_err();
         assert!(e.contains("deadline"), "{e}");
+    }
+
+    #[test]
+    fn serve_fleet_rejects_degenerate_rates() {
+        // regression: a zero/negative/non-finite --rate used to sail
+        // through to `-u.ln() / rate_hz` in the request generator,
+        // yielding an infinite or backwards virtual clock — and only
+        // after the whole fleet had been cold-tuned
+        for bad in ["0", "-3", "nan", "inf", "-inf"] {
+            let e = run(&sv(&["serve", "--fleet", "mali:1", "--rate", bad])).unwrap_err();
+            assert!(e.contains("--rate"), "rate {bad}: {e}");
+        }
+        // non-numeric still reports the parse error
+        let e = run(&sv(&["serve", "--fleet", "mali:1", "--rate", "fast"])).unwrap_err();
+        assert!(e.contains("--rate"), "{e}");
+    }
+
+    #[test]
+    fn serve_fleet_rejects_degenerate_bursts() {
+        // regression: `burst as u32` silently truncated large values
+        // (2^32 became 0) and --burst 0 only survived via a .max(1)
+        // deep inside the generator
+        let e = run(&sv(&["serve", "--fleet", "mali:1", "--burst", "0"])).unwrap_err();
+        assert!(e.contains("--burst"), "{e}");
+        let too_big = (u32::MAX as u64 + 1).to_string();
+        let e = run(&sv(&["serve", "--fleet", "mali:1", "--burst", &too_big])).unwrap_err();
+        assert!(e.contains("--burst"), "{e}");
+    }
+
+    #[test]
+    fn time_scale_must_be_finite_and_non_negative() {
+        for bad in ["-1", "nan", "inf"] {
+            let e = run(&sv(&[
+                "serve", "--backend", "sim", "--uniform", "direct", "--n", "2", "--time-scale",
+                bad,
+            ]))
+            .unwrap_err();
+            assert!(e.contains("--time-scale"), "time-scale {bad}: {e}");
+            let e = run(&sv(&["bench", "serve", "--device", "mali", "--time-scale", bad]))
+                .unwrap_err();
+            assert!(e.contains("--time-scale"), "bench time-scale {bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn verify_smoke_runs_clean_on_one_device() {
+        // the bounded conformance sweep must pass in-process (the full
+        // corpus runs in CI and tests/conformance.rs)
+        run(&sv(&["verify", "--device", "mali", "--fuzz", "4", "--seed", "7"]))
+            .expect("conformance sweep must be clean");
+        // unknown flags still rejected
+        assert!(run(&sv(&["verify", "--bogus", "1"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! Analytic invariants over a generated kernel pipeline.
+//!
+//! These are the paper-level accounting identities every lowering must
+//! satisfy, checked against the shape's closed-form totals
+//! ([`ConvShape::flops`], `filter_bytes`, `output_bytes`):
+//!
+//! * **Output conservation** — the final kernel's writes, summed over
+//!   its launches, are exactly the output image.
+//! * **Filter conservation** — the filter-labeled read streams sum to
+//!   exactly the filter set (grouped shapes: per-launch slices × the
+//!   launch count), except Winograd, whose offline-transformed `U` is
+//!   `16/9 ×` the spatial filters by construction.
+//! * **Input bounds** — the input-labeled streams cover the image at
+//!   least once and at most `max(R*S, stride²) ×` (the largest halo a
+//!   contiguous staged window can honestly charge).
+//! * **Intermediate conservation** — any stream that is neither input
+//!   nor filters (im2col's unrolled matrix, Winograd's V and M) must
+//!   byte-match something an earlier kernel in the pipeline wrote.
+//! * **Segment/stream agreement** — the per-thread load counts and the
+//!   stream totals describe the same traffic (the invariant
+//!   `KernelSpec::byte_conservation_error` encodes), within the lane
+//!   rounding a partial last workgroup can introduce.
+//! * **FLOP accounting** — executed vector-ALU lane-work reconciles
+//!   with `ConvShape::flops`: never below the algorithm's analytic
+//!   floor (Winograd's 4/9 multiplication reduction, 1× otherwise),
+//!   and inside a per-algorithm window on the table geometries.
+
+use crate::convgen::Algorithm;
+use crate::simulator::spec::{KernelSpec, Stream};
+use crate::workload::ConvShape;
+
+use super::{Check, Violation};
+
+/// How a read stream participates in the conservation ledger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StreamKind {
+    Input,
+    Filters,
+    Intermediate,
+}
+
+/// Classify a stream by its label. Intermediates are matched first:
+/// "V (transformed input)" is a pipeline intermediate, not the image.
+fn classify(stream: &Stream) -> Option<StreamKind> {
+    let l = stream.label;
+    if l.contains("unrolled") || l.starts_with("V (") || l.starts_with("M (") {
+        Some(StreamKind::Intermediate)
+    } else if l.contains("filter") {
+        Some(StreamKind::Filters)
+    } else if l.contains("input") || l.contains("image") {
+        Some(StreamKind::Input)
+    } else {
+        None
+    }
+}
+
+/// Total vector-ALU lane-work a pipeline executes (instructions across
+/// all lanes of all workgroups of all launches). One FMA is one lane
+/// instruction, so the useful-work yardstick is `flops / 2`.
+pub fn executed_valu_lanes(specs: &[KernelSpec]) -> f64 {
+    specs
+        .iter()
+        .map(|k| {
+            k.segments
+                .iter()
+                .map(|s| s.repeats as f64 * s.valu_per_thread)
+                .sum::<f64>()
+                * (k.wg_size * k.workgroups * k.launches) as f64
+        })
+        .sum()
+}
+
+/// Total gross (pre-L2) read plus written bytes — the structural
+/// traffic yardstick for the monotonicity checks.
+pub fn structural_bytes(specs: &[KernelSpec]) -> f64 {
+    specs
+        .iter()
+        .map(|k| k.gross_read_bytes() + (k.write_bytes * k.launches) as f64)
+        .sum()
+}
+
+/// Per-algorithm FLOP-ratio window (`executed / (flops/2)`) on the
+/// table geometries. Lower edges are analytic floors with float slack;
+/// upper edges allow the documented arithmetic overheads (libdnn's
+/// unroll index math, direct's per-tap address math — strongest for
+/// 1x1 filters, where 2 bookkeeping ops ride on 1 useful FMA) plus
+/// tile-rounding coverage.
+fn flop_window(alg: Algorithm, shape: &ConvShape) -> (f64, f64) {
+    let fs = shape.filter_len() as f64;
+    match alg {
+        Algorithm::Winograd => (0.40, 0.80),
+        Algorithm::Libdnn => (1.05, 3.5),
+        Algorithm::Direct => (0.95, (fs + 2.0) / fs * 2.5),
+        Algorithm::Im2col | Algorithm::Ilpm => (0.85, 2.5),
+        Algorithm::Dwconv => (0.95, 2.0),
+    }
+}
+
+/// The analytic floor that holds on *every* legal shape: executed
+/// lane-work can never undercut the algorithm's useful arithmetic
+/// (tile coverage only ever rounds up). Winograd's floor is its 4/9
+/// multiplication reduction.
+fn flop_floor(alg: Algorithm) -> f64 {
+    match alg {
+        Algorithm::Winograd => 0.40,
+        _ => 0.90,
+    }
+}
+
+/// Lane padding can legitimately inflate executed work on degenerate
+/// grids (a 16-lane floor driving 1 productive pixel), so the fuzz
+/// upper envelope only applies once the useful work amortises it.
+const FUZZ_ENVELOPE: f64 = 64.0;
+const FUZZ_ENVELOPE_MIN_FMAS: f64 = 16_384.0;
+
+/// Run every analytic check on one generated pipeline. `table` selects
+/// the tight FLOP windows (true for Table-2/MobileNet geometries).
+pub fn check_pipeline(
+    alg: Algorithm,
+    subject: &str,
+    shape: &ConvShape,
+    specs: &[KernelSpec],
+    table: bool,
+    out: &mut Vec<Violation>,
+) -> usize {
+    let mut checks = 0;
+    let fail = |check: Check, detail: String, out: &mut Vec<Violation>| {
+        out.push(Violation { algorithm: Some(alg), check, subject: subject.to_string(), detail });
+    };
+
+    // ---- well-formedness ------------------------------------------------
+    checks += 1;
+    if specs.is_empty() {
+        fail(Check::WellFormed, "empty pipeline".into(), out);
+        return checks;
+    }
+    for k in specs {
+        checks += 1;
+        if k.workgroups == 0 || k.wg_size == 0 || k.launches == 0 || k.segments.is_empty() {
+            fail(
+                Check::WellFormed,
+                format!(
+                    "{}: degenerate launch (workgroups={} wg_size={} launches={} segments={})",
+                    k.name,
+                    k.workgroups,
+                    k.wg_size,
+                    k.launches,
+                    k.segments.len()
+                ),
+                out,
+            );
+        }
+        for seg in &k.segments {
+            checks += 1;
+            let fields = [
+                seg.valu_per_thread,
+                seg.salu_per_warp,
+                seg.gmem_loads_per_thread,
+                seg.gmem_stores_per_thread,
+                seg.gmem_bytes_per_lane,
+                seg.smem_loads_per_thread,
+                seg.smem_stores_per_thread,
+                seg.smem_broadcast_per_thread,
+                seg.bank_conflict_way,
+                seg.independent_loads,
+                seg.regs_per_load,
+                seg.l2_hit_fraction,
+            ];
+            if fields.iter().any(|v| !v.is_finite() || *v < 0.0) {
+                fail(
+                    Check::WellFormed,
+                    format!("{}/{}: non-finite or negative segment field", k.name, seg.label),
+                    out,
+                );
+            }
+        }
+        for s in &k.read_streams {
+            checks += 1;
+            if !s.touches.is_finite() || s.touches < 0.0 {
+                fail(
+                    Check::WellFormed,
+                    format!("{}/{}: touches {}", k.name, s.label, s.touches),
+                    out,
+                );
+            }
+        }
+    }
+
+    // ---- output conservation -------------------------------------------
+    checks += 1;
+    let last = specs.last().expect("non-empty");
+    let written = last.write_bytes * last.launches;
+    if written != shape.output_bytes() {
+        fail(
+            Check::OutputBytes,
+            format!(
+                "final kernel {} writes {written} B over {} launch(es), output is {} B",
+                last.name,
+                last.launches,
+                shape.output_bytes()
+            ),
+            out,
+        );
+    }
+
+    // ---- stream ledger --------------------------------------------------
+    let mut input_total = 0.0f64;
+    let mut filter_total = 0u64;
+    // write totals of kernels seen so far, for intermediate matching
+    let mut upstream_writes: Vec<(String, u64)> = Vec::new();
+    for k in specs {
+        for s in &k.read_streams {
+            let total = s.unique_bytes * k.launches;
+            match classify(s) {
+                Some(StreamKind::Input) => input_total += total as f64,
+                Some(StreamKind::Filters) => filter_total += total,
+                Some(StreamKind::Intermediate) => {
+                    checks += 1;
+                    if !upstream_writes.iter().any(|(_, w)| *w == total) {
+                        fail(
+                            Check::Intermediates,
+                            format!(
+                                "{}/{}: reads {total} B that no earlier kernel wrote \
+                                 (upstream writes: {upstream_writes:?})",
+                                k.name, s.label
+                            ),
+                            out,
+                        );
+                    }
+                }
+                None => {
+                    checks += 1;
+                    fail(
+                        Check::WellFormed,
+                        format!("{}: unclassifiable stream label '{}'", k.name, s.label),
+                        out,
+                    );
+                }
+            }
+        }
+        upstream_writes.push((k.name.clone(), k.write_bytes * k.launches));
+    }
+
+    checks += 1;
+    let expected_filters = if alg == Algorithm::Winograd {
+        // offline-transformed U: a 4x4 tap grid per 3x3 filter
+        16 * (shape.out_channels * shape.in_channels * 4) as u64
+    } else {
+        shape.filter_bytes()
+    };
+    if filter_total != expected_filters {
+        fail(
+            Check::FilterBytes,
+            format!(
+                "filter streams total {filter_total} B, expected {expected_filters} B \
+                 (grouped slices must sum exactly to the filter set)"
+            ),
+            out,
+        );
+    }
+
+    checks += 1;
+    let input_bytes = shape.input_bytes() as f64;
+    // largest honest halo of a contiguous staged window (a 1-pixel
+    // tile stages its whole R*S window; a strided tile's bounding box
+    // approaches stride^2 per output), with 2x modelling slack — the
+    // check exists to catch order-of-magnitude halo miscounts, not to
+    // re-derive each generator's tiling
+    let max_halo = (shape.filter_len() as f64).max((shape.stride * shape.stride) as f64) * 2.0;
+    if input_total < input_bytes * (1.0 - 1e-9) {
+        fail(
+            Check::InputBytes,
+            format!(
+                "input streams total {input_total:.0} B < image {input_bytes:.0} B: \
+                 some input is never read"
+            ),
+            out,
+        );
+    } else if input_total > input_bytes * max_halo * (1.0 + 1e-9) {
+        fail(
+            Check::InputBytes,
+            format!(
+                "input streams total {input_total:.0} B > {max_halo:.1}x image \
+                 ({input_bytes:.0} B): halo overcounted"
+            ),
+            out,
+        );
+    }
+
+    // ---- segment/stream agreement --------------------------------------
+    for k in specs {
+        checks += 1;
+        let seg_bytes: f64 = k
+            .segments
+            .iter()
+            .map(|s| {
+                s.repeats as f64 * s.gmem_loads_per_thread * k.wg_size as f64
+                    * s.gmem_bytes_per_lane
+            })
+            .sum::<f64>()
+            * (k.workgroups * k.launches) as f64;
+        let stream_bytes = k.gross_read_bytes();
+        if stream_bytes > 0.0 {
+            let r = seg_bytes / stream_bytes;
+            // undercounting is the dangerous direction (the kernel looks
+            // cheaper than its own streams); overcounting is bounded by
+            // the <2x lane rounding of one partial workgroup plus the
+            // k-group rounding of the direct path
+            if !(0.65..=2.1).contains(&r) {
+                fail(
+                    Check::ByteConservation,
+                    format!(
+                        "{}: segment loads {seg_bytes:.0} B vs streams {stream_bytes:.0} B \
+                         (ratio {r:.3})",
+                        k.name
+                    ),
+                    out,
+                );
+            }
+        } else if seg_bytes > 0.0 {
+            fail(
+                Check::ByteConservation,
+                format!("{}: {seg_bytes:.0} B of segment loads but no read streams", k.name),
+                out,
+            );
+        }
+    }
+
+    // ---- FLOP accounting ------------------------------------------------
+    checks += 1;
+    let useful = shape.flops() as f64 / 2.0;
+    let executed = executed_valu_lanes(specs);
+    let ratio = executed / useful;
+    if ratio < flop_floor(alg) {
+        fail(
+            Check::FlopAccounting,
+            format!(
+                "executed {executed:.0} VALU lane-ops vs useful {useful:.0} FMAs \
+                 (ratio {ratio:.3} under the {:.2} analytic floor)",
+                flop_floor(alg)
+            ),
+            out,
+        );
+    }
+    if table && (shape.groups == 1 || alg == Algorithm::Dwconv) {
+        checks += 1;
+        let (lo, hi) = flop_window(alg, shape);
+        if !(lo..=hi).contains(&ratio) {
+            fail(
+                Check::FlopAccounting,
+                format!(
+                    "table-shape FLOP ratio {ratio:.3} outside {}'s window [{lo:.2}, {hi:.2}]",
+                    alg.name()
+                ),
+                out,
+            );
+        }
+    } else if useful >= FUZZ_ENVELOPE_MIN_FMAS {
+        checks += 1;
+        if ratio > FUZZ_ENVELOPE {
+            fail(
+                Check::FlopAccounting,
+                format!("FLOP ratio {ratio:.1} beyond the {FUZZ_ENVELOPE:.0}x fuzz envelope"),
+                out,
+            );
+        }
+    }
+
+    checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convgen::{generate, TuneParams};
+    use crate::workload::LayerClass;
+
+    #[test]
+    fn table_shapes_pass_every_analytic_check() {
+        for (layer, shape) in crate::workload::layer_classes() {
+            for alg in Algorithm::ALL {
+                if !alg.supports(&shape) {
+                    continue;
+                }
+                let specs = generate(alg, &shape, &TuneParams::for_shape(&shape));
+                let mut v = Vec::new();
+                let n = check_pipeline(alg, &layer.name(), &shape, &specs, true, &mut v);
+                assert!(n > 5, "{alg:?}/{}: only {n} checks ran", layer.name());
+                assert!(v.is_empty(), "{alg:?}/{}: {:?}", layer.name(), v);
+            }
+        }
+    }
+
+    #[test]
+    fn a_planted_flop_undercount_is_caught() {
+        let shape = LayerClass::Conv4x.shape();
+        let mut specs = generate(Algorithm::Ilpm, &shape, &TuneParams::for_shape(&shape));
+        for seg in &mut specs[0].segments {
+            seg.valu_per_thread /= 10.0; // the lowering "forgets" 90% of its FMAs
+        }
+        let mut v = Vec::new();
+        check_pipeline(Algorithm::Ilpm, "planted", &shape, &specs, true, &mut v);
+        assert!(
+            v.iter().any(|x| x.check == Check::FlopAccounting),
+            "undercount must trip FLOP accounting: {v:?}"
+        );
+    }
+
+    #[test]
+    fn a_planted_filter_slice_leak_is_caught() {
+        // a grouped lowering that forgets the per-group filter slicing
+        // (reads the whole filter set per launch) must fail conservation
+        let shape = crate::workload::ConvShape::depthwise(64, 14, 1);
+        let mut specs = generate(Algorithm::Ilpm, &shape, &TuneParams::for_shape(&shape));
+        for s in &mut specs[0].read_streams {
+            if s.label.contains("filter") {
+                s.unique_bytes *= shape.groups as u64;
+            }
+        }
+        let mut v = Vec::new();
+        check_pipeline(Algorithm::Ilpm, "planted", &shape, &specs, false, &mut v);
+        assert!(v.iter().any(|x| x.check == Check::FilterBytes), "{v:?}");
+    }
+
+    #[test]
+    fn a_planted_output_shortfall_is_caught() {
+        let shape = LayerClass::Conv3x.shape();
+        let mut specs = generate(Algorithm::Direct, &shape, &TuneParams::for_shape(&shape));
+        specs.last_mut().unwrap().write_bytes /= 2;
+        let mut v = Vec::new();
+        check_pipeline(Algorithm::Direct, "planted", &shape, &specs, true, &mut v);
+        assert!(v.iter().any(|x| x.check == Check::OutputBytes), "{v:?}");
+    }
+}

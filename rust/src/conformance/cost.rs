@@ -1,0 +1,203 @@
+//! Cost-signal sanity: the simulated times the tuner ranks by, the
+//! router picks winners with, and the fleet's admission control spends
+//! as a load-balancing signal.
+//!
+//! Three properties per `(algorithm, device)`:
+//!
+//! * **positive and finite** — a zero, negative, NaN or infinite
+//!   per-kernel time poisons every consumer downstream (a NaN cost
+//!   would flow into `RoutingTable` comparisons, `cost_ms` admission
+//!   arithmetic and the fleet's virtual clock);
+//! * **structurally monotone in image size** — quadrupling the output
+//!   grid must strictly increase the pipeline's executed lane-work and
+//!   its gross memory traffic (pure functions of the specs — a
+//!   violation means a generator normalised by the wrong pixel count);
+//! * **time roughly monotone** — simulated time may legitimately
+//!   plateau while the grid is too small to fill the device (the
+//!   paper's single-image pathology) and can even dip slightly as L2
+//!   behaviour improves with scale, but a big drop on a 4x-larger
+//!   image means the cost model inverted.
+
+use crate::convgen::{generate, Algorithm, TuneParams};
+use crate::simulator::{simulate_pipeline, total_time_ms, DeviceConfig, KernelSpec};
+use crate::workload::ConvShape;
+
+use super::{quiet_catch, Check, Violation};
+
+/// Simulate one already-generated pipeline on one device; every
+/// kernel's time must be strictly positive and finite. Returns the
+/// check count. (The caller passes the specs it generated for the
+/// analytic checks — lowering is device-independent, so there is
+/// nothing to regenerate per device.)
+pub fn check_time_sane(
+    alg: Algorithm,
+    subject: &str,
+    specs: &[KernelSpec],
+    dev: &DeviceConfig,
+    out: &mut Vec<Violation>,
+) -> usize {
+    let reports = match quiet_catch(|| simulate_pipeline(specs, dev)) {
+        Ok(r) => r,
+        Err(_) => {
+            out.push(Violation {
+                algorithm: Some(alg),
+                check: Check::TimeSanity,
+                subject: subject.to_string(),
+                detail: format!("simulate panicked on {}", dev.name),
+            });
+            return 1;
+        }
+    };
+    for r in &reports {
+        if !(r.time_ms.is_finite() && r.time_ms > 0.0) {
+            out.push(Violation {
+                algorithm: Some(alg),
+                check: Check::TimeSanity,
+                subject: subject.to_string(),
+                detail: format!("{}/{}: time {} ms", dev.name, r.kernel, r.time_ms),
+            });
+        }
+    }
+    reports.len()
+}
+
+/// A hw-doubling shape family for the monotonicity check (each step
+/// quadruples the output grid).
+struct Family {
+    name: &'static str,
+    shapes: Vec<ConvShape>,
+}
+
+fn families() -> Vec<Family> {
+    let dense = |hw| ConvShape::square3x3(32, 32, hw);
+    let strided = |hw| {
+        let mut s = ConvShape::square3x3(32, 32, hw);
+        s.stride = 2;
+        s
+    };
+    vec![
+        Family { name: "dense3x3", shapes: [7, 14, 28, 56].map(dense).to_vec() },
+        Family { name: "dense3x3-s2", shapes: [8, 16, 32, 64].map(strided).to_vec() },
+        Family {
+            name: "pointwise",
+            shapes: [7, 14, 28, 56].map(|hw| ConvShape::pointwise(32, 64, hw)).to_vec(),
+        },
+        Family {
+            name: "depthwise",
+            shapes: [14, 28, 56, 112].map(|hw| ConvShape::depthwise(64, hw, 1)).to_vec(),
+        },
+    ]
+}
+
+/// How far time may drop between consecutive family members before it
+/// counts as an inversion (occupancy and L2 effects legitimately eat
+/// some of the 4x work increase on undersaturated devices).
+const TIME_SLACK: f64 = 0.5;
+
+/// Check every family the algorithm supports: structural monotonicity
+/// once (device-independent), time monotonicity per device, generating
+/// each family pipeline exactly once. Returns the check count.
+pub fn check_monotone(alg: Algorithm, devices: &[DeviceConfig], out: &mut Vec<Violation>) -> usize {
+    let mut checks = 0;
+    for fam in families() {
+        if !fam.shapes.iter().all(|s| alg.supports(s)) {
+            continue;
+        }
+        let pipelines: Vec<(usize, Vec<KernelSpec>)> = fam
+            .shapes
+            .iter()
+            .map(|shape| (shape.height, generate(alg, shape, &TuneParams::for_shape(shape))))
+            .collect();
+        // structural: executed work and gross traffic strictly grow
+        for w in pipelines.windows(2) {
+            let ((phw, prev), (hw, next)) = (&w[0], &w[1]);
+            checks += 2;
+            let subject = format!("{}[{phw}->{hw}]", fam.name);
+            let (pv, valu) = (
+                super::analytic::executed_valu_lanes(prev),
+                super::analytic::executed_valu_lanes(next),
+            );
+            if valu <= pv {
+                out.push(Violation {
+                    algorithm: Some(alg),
+                    check: Check::Monotonicity,
+                    subject: subject.clone(),
+                    detail: format!("executed lane-work fell {pv:.0} -> {valu:.0} on a 4x grid"),
+                });
+            }
+            let (pb, bytes) = (
+                super::analytic::structural_bytes(prev),
+                super::analytic::structural_bytes(next),
+            );
+            if bytes <= pb {
+                out.push(Violation {
+                    algorithm: Some(alg),
+                    check: Check::Monotonicity,
+                    subject,
+                    detail: format!("gross traffic fell {pb:.0} -> {bytes:.0} B on a 4x grid"),
+                });
+            }
+        }
+        // temporal: per device, time never collapses across a 4x grid
+        for dev in devices {
+            let times: Vec<f64> = pipelines
+                .iter()
+                .map(|(_, specs)| total_time_ms(&simulate_pipeline(specs, dev)))
+                .collect();
+            for (i, w) in times.windows(2).enumerate() {
+                checks += 1;
+                if w[1] < TIME_SLACK * w[0] {
+                    out.push(Violation {
+                        algorithm: Some(alg),
+                        check: Check::Monotonicity,
+                        subject: format!(
+                            "{}[{}->{}]",
+                            fam.name,
+                            pipelines[i].0,
+                            pipelines[i + 1].0
+                        ),
+                        detail: format!(
+                            "time fell {:.4} -> {:.4} ms on a 4x grid ({})",
+                            w[0], w[1], dev.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_algorithm_is_monotone_on_every_device() {
+        let devices = DeviceConfig::paper_devices();
+        for alg in Algorithm::ALL {
+            let mut v = Vec::new();
+            let n = check_monotone(alg, &devices, &mut v);
+            assert!(n > 0, "{alg:?}: no supported family");
+            assert!(v.is_empty(), "{alg:?}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn table_shapes_price_positive_and_finite_everywhere() {
+        for dev in DeviceConfig::paper_devices() {
+            for cs in super::super::corpus::table_shapes() {
+                for alg in Algorithm::ALL {
+                    if !alg.supports(&cs.shape) {
+                        continue;
+                    }
+                    let specs = generate(alg, &cs.shape, &TuneParams::for_shape(&cs.shape));
+                    let mut v = Vec::new();
+                    let n = check_time_sane(alg, &cs.name, &specs, &dev, &mut v);
+                    assert!(n > 0, "{alg:?}/{}", cs.name);
+                    assert!(v.is_empty(), "{alg:?}/{}/{}: {v:?}", cs.name, dev.name);
+                }
+            }
+        }
+    }
+}

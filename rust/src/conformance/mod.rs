@@ -1,0 +1,370 @@
+//! Conformance — differential verification of every convgen lowering.
+//!
+//! The whole system rests on the six [`crate::convgen`] generators: the
+//! tuner ranks candidates by their simulated times, the router picks
+//! per-layer algorithms from those ranks, and the fleet's cost-aware
+//! dispatch and SLO admission spend the same numbers as load-balancing
+//! signals. A lowering bug here does not crash — it quietly flips route
+//! winners and admission verdicts fleet-wide. This module cross-checks
+//! the generators against each other and against the closed-form
+//! accounting of [`crate::workload::ConvShape`], over a seeded shape
+//! fuzzer plus every ResNet/MobileNet table geometry:
+//!
+//! * [`analytic`] — FLOP accounting, stream byte conservation (grouped
+//!   slices must sum exactly), input-halo bounds, intermediate-buffer
+//!   matching, segment/stream agreement;
+//! * [`numeric`] — the serve-time reference path (`naive_conv`) against
+//!   an independent im2col host implementation and exact structural
+//!   oracles (group embedding, depthwise split, stride subsampling);
+//! * [`cost`] — simulated times strictly positive, finite, and
+//!   monotone in image size for every `(algorithm, device)` pair;
+//! * `supports()`/`generate()` agreement — a supported shape must lower
+//!   without panicking; a self-checking generator must refuse an
+//!   unsupported one.
+//!
+//! The CLI front door is `ilpm verify` (see README.md); the bounded
+//! corpus also runs as a tier-1 test (`tests/conformance.rs`). Every
+//! violation prints the corpus seed and full shape parameters, so a
+//! failure reproduces with `ilpm verify --seed <S> --fuzz <N>` and can
+//! be pinned as a deterministic regression test.
+
+pub mod analytic;
+pub mod corpus;
+pub mod cost;
+pub mod numeric;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::convgen::{generate, Algorithm, TuneParams};
+use crate::simulator::DeviceConfig;
+
+/// Serialises [`quiet_catch`]'s swap of the process-global panic hook:
+/// without it, two concurrent callers (parallel `cargo test` threads)
+/// could each take the other's no-op hook as "previous" and leave the
+/// process permanently silent.
+static PANIC_HOOK_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// `catch_unwind` with the default "thread panicked" stderr chatter
+/// suppressed: the supports/generate agreement probes panic *by
+/// design* (self-checking generators refusing unsupported shapes), and
+/// a verify run must not spew backtraces for expected refusals. The
+/// previous hook is restored before returning; concurrent panics in
+/// *other* threads during the window lose their message (the hook is
+/// process-global), but never their propagation.
+pub(crate) fn quiet_catch<R>(f: impl FnOnce() -> R) -> std::thread::Result<R> {
+    let _guard = PANIC_HOOK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let r = catch_unwind(AssertUnwindSafe(f));
+    std::panic::set_hook(prev);
+    r
+}
+
+pub use corpus::{corpus, describe, edge_shapes, fuzz_shapes, table_shapes, CorpusShape, Origin};
+
+/// Which invariant a violation broke.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Check {
+    WellFormed,
+    OutputBytes,
+    FilterBytes,
+    InputBytes,
+    Intermediates,
+    ByteConservation,
+    FlopAccounting,
+    SupportsAgreement,
+    TimeSanity,
+    Monotonicity,
+    Numeric,
+}
+
+impl Check {
+    pub fn name(self) -> &'static str {
+        match self {
+            Check::WellFormed => "well-formed",
+            Check::OutputBytes => "output-bytes",
+            Check::FilterBytes => "filter-bytes",
+            Check::InputBytes => "input-bytes",
+            Check::Intermediates => "intermediates",
+            Check::ByteConservation => "byte-conservation",
+            Check::FlopAccounting => "flop-accounting",
+            Check::SupportsAgreement => "supports-agreement",
+            Check::TimeSanity => "time-sanity",
+            Check::Monotonicity => "monotonicity",
+            Check::Numeric => "numeric",
+        }
+    }
+}
+
+/// One failed invariant, with everything needed to reproduce it.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// The lowering at fault; `None` for the shared numeric reference.
+    pub algorithm: Option<Algorithm>,
+    pub check: Check,
+    /// Corpus shape name (fuzz shapes embed their seed and index).
+    pub subject: String,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}] {} / {}: {}",
+            self.check.name(),
+            self.algorithm.map_or("reference", Algorithm::name),
+            self.subject,
+            self.detail
+        )
+    }
+}
+
+/// Per-algorithm tally for the pass/fail report.
+#[derive(Debug, Clone)]
+pub struct AlgorithmReport {
+    pub algorithm: Algorithm,
+    /// Corpus shapes this algorithm supports (and was checked on).
+    pub shapes: usize,
+    pub checks: usize,
+    pub violations: usize,
+}
+
+/// Outcome of a full conformance run.
+#[derive(Debug, Clone)]
+pub struct ConformanceReport {
+    pub seed: u64,
+    pub fuzz: usize,
+    pub shapes: usize,
+    pub devices: Vec<String>,
+    pub checks: usize,
+    pub numeric_checks: usize,
+    pub numeric_violations: usize,
+    pub per_algorithm: Vec<AlgorithmReport>,
+    pub violations: Vec<Violation>,
+}
+
+impl ConformanceReport {
+    pub fn pass(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable per-algorithm pass/fail table plus the full
+    /// violation list.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "conformance: {} shapes (seed {}, {} fuzzed) x {} device(s), {} checks",
+            self.shapes,
+            self.seed,
+            self.fuzz,
+            self.devices.len(),
+            self.checks
+        );
+        let _ = writeln!(
+            s,
+            "{:<12} {:>8} {:>8} {:>11} {:>8}",
+            "algorithm", "shapes", "checks", "violations", "status"
+        );
+        for a in &self.per_algorithm {
+            let _ = writeln!(
+                s,
+                "{:<12} {:>8} {:>8} {:>11} {:>8}",
+                a.algorithm.name(),
+                a.shapes,
+                a.checks,
+                a.violations,
+                if a.violations == 0 { "PASS" } else { "FAIL" }
+            );
+        }
+        let _ = writeln!(
+            s,
+            "{:<12} {:>8} {:>8} {:>11} {:>8}",
+            "reference",
+            "-",
+            self.numeric_checks,
+            self.numeric_violations,
+            if self.numeric_violations == 0 { "PASS" } else { "FAIL" }
+        );
+        if !self.violations.is_empty() {
+            let _ = writeln!(s, "\n{} violation(s):", self.violations.len());
+            for v in &self.violations {
+                let _ = writeln!(s, "  {v}");
+            }
+            let _ = writeln!(
+                s,
+                "reproduce: ilpm verify --seed {} --fuzz {} (shape parameters above)",
+                self.seed, self.fuzz
+            );
+        }
+        s
+    }
+}
+
+/// Configuration of one conformance run.
+#[derive(Debug, Clone)]
+pub struct ConformanceConfig {
+    /// Fuzzer seed (printed with every violation).
+    pub seed: u64,
+    /// Fuzzed shapes appended to the table + edge corpus.
+    pub fuzz: usize,
+    /// Devices the cost-signal checks price on.
+    pub devices: Vec<DeviceConfig>,
+    /// Skip numeric oracles above this input element count (the host
+    /// reference is O(K * px * C/g * R * S) per shape).
+    pub max_numeric_elems: usize,
+}
+
+impl Default for ConformanceConfig {
+    fn default() -> Self {
+        ConformanceConfig {
+            seed: 7,
+            fuzz: 24,
+            devices: DeviceConfig::paper_devices(),
+            max_numeric_elems: 16 * 1024,
+        }
+    }
+}
+
+/// Run the full conformance sweep.
+pub fn run(cfg: &ConformanceConfig) -> ConformanceReport {
+    let shapes = corpus::corpus(cfg.seed, cfg.fuzz);
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut checks = 0usize;
+    let mut per_algorithm = Vec::with_capacity(Algorithm::ALL.len());
+
+    for alg in Algorithm::ALL {
+        let before = violations.len();
+        let mut alg_checks = 0usize;
+        let mut alg_shapes = 0usize;
+        for cs in &shapes {
+            let shape = &cs.shape;
+            let subject = format!("{} ({})", cs.name, describe(shape));
+            if !alg.supports(shape) {
+                // self-checking generators must refuse what supports()
+                // declines (the others document caller-checked contracts)
+                if matches!(alg, Algorithm::Winograd | Algorithm::Dwconv) {
+                    alg_checks += 1;
+                    let p = TuneParams::for_shape(shape);
+                    let r = quiet_catch(|| generate(alg, shape, &p));
+                    if r.is_ok() {
+                        violations.push(Violation {
+                            algorithm: Some(alg),
+                            check: Check::SupportsAgreement,
+                            subject,
+                            detail: "generate() accepted a shape supports() declines".into(),
+                        });
+                    }
+                }
+                continue;
+            }
+            alg_shapes += 1;
+            let p = TuneParams::for_shape(shape);
+            alg_checks += 1;
+            let specs = match quiet_catch(|| generate(alg, shape, &p)) {
+                Ok(s) => s,
+                Err(_) => {
+                    violations.push(Violation {
+                        algorithm: Some(alg),
+                        check: Check::SupportsAgreement,
+                        subject,
+                        detail: "generate() panicked on a shape supports() accepts".into(),
+                    });
+                    continue;
+                }
+            };
+            let table = cs.origin == Origin::Table;
+            let shape_before = violations.len();
+            alg_checks +=
+                analytic::check_pipeline(alg, &subject, shape, &specs, table, &mut violations);
+            // cost sanity only for pipelines whose accounting holds
+            if violations.len() == shape_before {
+                for dev in &cfg.devices {
+                    alg_checks +=
+                        cost::check_time_sane(alg, &subject, &specs, dev, &mut violations);
+                }
+            }
+        }
+        alg_checks += cost::check_monotone(alg, &cfg.devices, &mut violations);
+        checks += alg_checks;
+        per_algorithm.push(AlgorithmReport {
+            algorithm: alg,
+            shapes: alg_shapes,
+            checks: alg_checks,
+            violations: violations.len() - before,
+        });
+    }
+
+    // numeric oracles on the shapes small enough to convolve on the host
+    let mut numeric_checks = 0usize;
+    let numeric_before = violations.len();
+    for cs in &shapes {
+        let elems = cs.shape.in_channels * cs.shape.height * cs.shape.width;
+        if elems > cfg.max_numeric_elems {
+            continue;
+        }
+        let subject = format!("{} ({})", cs.name, describe(&cs.shape));
+        numeric_checks += numeric::check_shape(&subject, &cs.shape, cfg.seed, &mut violations);
+    }
+    let numeric_violations = violations.len() - numeric_before;
+    checks += numeric_checks;
+
+    ConformanceReport {
+        seed: cfg.seed,
+        fuzz: cfg.fuzz,
+        shapes: shapes.len(),
+        devices: cfg.devices.iter().map(|d| d.name.to_string()).collect(),
+        checks,
+        numeric_checks,
+        numeric_violations,
+        per_algorithm,
+        violations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_run_is_clean_and_covers_all_six_algorithms() {
+        let cfg = ConformanceConfig {
+            fuzz: 8,
+            devices: vec![DeviceConfig::mali_g76_mp10()],
+            ..Default::default()
+        };
+        let report = run(&cfg);
+        assert!(report.pass(), "{}", report.render());
+        assert_eq!(report.per_algorithm.len(), 6);
+        for a in &report.per_algorithm {
+            assert!(a.shapes > 0, "{}: no supported corpus shapes", a.algorithm.name());
+            assert!(a.checks > 0, "{}: no checks ran", a.algorithm.name());
+        }
+        assert!(report.numeric_checks > 0);
+        assert!(report.checks > 500, "only {} checks", report.checks);
+        // the render names every algorithm and the final status
+        let text = report.render();
+        for alg in Algorithm::ALL {
+            assert!(text.contains(alg.name()), "{text}");
+        }
+        assert!(text.contains("PASS"));
+    }
+
+    #[test]
+    fn report_renders_violations_with_reproduction_hint() {
+        let mut report =
+            run(&ConformanceConfig { fuzz: 0, devices: vec![], ..Default::default() });
+        report.violations.push(Violation {
+            algorithm: Some(Algorithm::Ilpm),
+            check: Check::FlopAccounting,
+            subject: "fuzz#3(seed=7) (C=4 K=4 8x8 f3x3 s1 p1 g1)".into(),
+            detail: "planted".into(),
+        });
+        assert!(!report.pass());
+        let text = report.render();
+        assert!(text.contains("flop-accounting"), "{text}");
+        assert!(text.contains("reproduce: ilpm verify --seed 7"), "{text}");
+    }
+}

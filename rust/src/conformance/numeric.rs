@@ -1,0 +1,261 @@
+//! Numerical conformance of the serve-time reference path.
+//!
+//! The abstract-kernel IR carries instruction and byte counts, not
+//! values, so the numeric oracle targets the implementation the serving
+//! stack actually computes with: [`crate::coordinator::naive_conv`]
+//! (the proxy-network executor of the sim backend and the engine's
+//! verify mode). Two fully independent implementations are compared on
+//! small seeded shapes, plus exact structural oracles:
+//!
+//! * **im2col differential** — an independent host convolution that
+//!   materialises the per-group patch matrix and inner-products it
+//!   (mirroring the im2col lowering's data flow), compared within a
+//!   float tolerance. A different summation order catches indexing
+//!   bugs the same-order checks cannot.
+//! * **group embedding** — a grouped convolution equals the dense
+//!   convolution whose filter is the block-diagonal zero-embedding of
+//!   the per-group slices, *bit-exactly* (adding a `0.0` contribution
+//!   is exact in IEEE-754, and the accumulation order is identical).
+//! * **depthwise split** — `groups == C == K` equals `C` independent
+//!   single-channel convolutions, bit-exactly.
+//! * **stride subsampling** — a stride-`s` convolution equals the
+//!   stride-1 result sampled at every `s`-th output pixel, bit-exactly
+//!   (same taps, same order).
+
+use crate::coordinator::naive_conv;
+use crate::runtime::Tensor;
+use crate::workload::ConvShape;
+
+use super::{Check, Violation};
+
+/// Absolute tolerance for the differential (different-order) compare.
+/// Accumulations run over at most a few thousand ~N(0,1) terms in f32.
+const TOL: f32 = 1e-2;
+
+/// Independent host convolution through an explicit im2col: for each
+/// group, build the patch column per output pixel and inner-product it
+/// against the filter. The patch is laid out **spatial-major**
+/// (`[R][S][C/g]`, channels fastest) so the f32 accumulation order
+/// genuinely differs from `naive_conv`'s channel-major loop nest — a
+/// same-order re-implementation would be bit-identical by construction
+/// and blind to accumulation-sensitive defects.
+pub fn im2col_conv_host(shape: &ConvShape, x: &Tensor, w: &Tensor) -> Tensor {
+    let (c, h, wd) = (shape.in_channels, shape.height, shape.width);
+    let (k, r, s) = (shape.out_channels, shape.filter_h, shape.filter_w);
+    let (st, pad) = (shape.stride as isize, shape.padding as isize);
+    let cg = shape.channels_per_group();
+    let kg = shape.filters_per_group();
+    assert_eq!(x.shape, vec![c, h, wd], "input shape");
+    assert_eq!(w.shape, vec![k, cg, r, s], "filter shape");
+    let (ho, wo) = (shape.out_height(), shape.out_width());
+    let patch_len = cg * r * s;
+    let mut out = vec![0f32; k * ho * wo];
+    let mut patch = vec![0f32; patch_len];
+    // patch index p decomposes spatial-major: p = (ry*S + sx)*cg + cig
+    let split = |p: usize| (p / (s * cg), (p / cg) % s, p % cg);
+    for g in 0..shape.groups {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                // materialise one unrolled column (zero-padded halo)
+                for (p, slot) in patch.iter_mut().enumerate() {
+                    let (ry, sx, cig) = split(p);
+                    let iy = oy as isize * st + ry as isize - pad;
+                    let ix = ox as isize * st + sx as isize - pad;
+                    *slot = if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                        0.0
+                    } else {
+                        let ci = g * cg + cig;
+                        x.data[(ci * h + iy as usize) * wd + ix as usize]
+                    };
+                }
+                for kog in 0..kg {
+                    let ko = g * kg + kog;
+                    let mut acc = 0f32;
+                    for (p, xv) in patch.iter().enumerate() {
+                        let (ry, sx, cig) = split(p);
+                        acc += xv * w.data[((ko * cg + cig) * r + ry) * s + sx];
+                    }
+                    out[(ko * ho + oy) * wo + ox] = acc;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![k, ho, wo], out).expect("shape consistent")
+}
+
+/// Zero-embed a grouped filter `[K, C/g, R, S]` into the dense
+/// `[K, C, R, S]` block-diagonal equivalent.
+fn embed_dense(shape: &ConvShape, w: &Tensor) -> Tensor {
+    let (c, k, r, s) = (
+        shape.in_channels,
+        shape.out_channels,
+        shape.filter_h,
+        shape.filter_w,
+    );
+    let cg = shape.channels_per_group();
+    let kg = shape.filters_per_group();
+    let mut dense = vec![0f32; k * c * r * s];
+    for ko in 0..k {
+        let g = ko / kg;
+        for cig in 0..cg {
+            let ci = g * cg + cig;
+            for t in 0..r * s {
+                dense[(ko * c + ci) * r * s + t] = w.data[(ko * cg + cig) * r * s + t];
+            }
+        }
+    }
+    Tensor::new(vec![k, c, r, s], dense).expect("dense filter")
+}
+
+/// Run every numeric oracle on one shape. Returns the check count.
+pub fn check_shape(subject: &str, shape: &ConvShape, seed: u64, out: &mut Vec<Violation>) -> usize {
+    let mut checks = 0;
+    let fail = |detail: String, out: &mut Vec<Violation>| {
+        out.push(Violation {
+            algorithm: None,
+            check: Check::Numeric,
+            subject: subject.to_string(),
+            detail,
+        });
+    };
+    let x = Tensor::randn(&[shape.in_channels, shape.height, shape.width], seed);
+    let w = Tensor::randn(
+        &[shape.out_channels, shape.channels_per_group(), shape.filter_h, shape.filter_w],
+        seed ^ 0xF1_17E6,
+    );
+    let y = naive_conv(shape, &x, &w);
+
+    // ---- im2col differential -------------------------------------------
+    checks += 1;
+    let y2 = im2col_conv_host(shape, &x, &w);
+    match y.max_abs_diff(&y2) {
+        Ok(d) if d <= TOL => {}
+        Ok(d) => fail(
+            format!("naive_conv vs im2col host differ by {d:.2e} (> {TOL:.0e})"),
+            out,
+        ),
+        Err(e) => fail(format!("im2col host shape mismatch: {e:#}"), out),
+    }
+
+    // ---- group embedding (bit-exact) -----------------------------------
+    if shape.groups > 1 {
+        checks += 1;
+        let dense_shape = ConvShape { groups: 1, ..*shape };
+        let yd = naive_conv(&dense_shape, &x, &embed_dense(shape, &w));
+        match y.max_abs_diff(&yd) {
+            Ok(d) if d == 0.0 => {}
+            Ok(d) => fail(
+                format!("grouped result differs from zero-embedded dense by {d:.2e}"),
+                out,
+            ),
+            Err(e) => fail(format!("embedding shape mismatch: {e:#}"), out),
+        }
+    }
+
+    // ---- depthwise split (bit-exact) -----------------------------------
+    if shape.is_depthwise() {
+        checks += 1;
+        let single = ConvShape { in_channels: 1, out_channels: 1, groups: 1, ..*shape };
+        let (h, wd) = (shape.height, shape.width);
+        let (ho, wo) = (shape.out_height(), shape.out_width());
+        let fs = shape.filter_len();
+        let mut worst = 0f32;
+        for ci in 0..shape.in_channels {
+            let xc = Tensor::new(vec![1, h, wd], x.data[ci * h * wd..(ci + 1) * h * wd].to_vec())
+                .expect("channel slice");
+            let wc = Tensor::new(
+                vec![1, 1, shape.filter_h, shape.filter_w],
+                w.data[ci * fs..(ci + 1) * fs].to_vec(),
+            )
+            .expect("filter slice");
+            let yc = naive_conv(&single, &xc, &wc);
+            for (a, b) in yc.data.iter().zip(&y.data[ci * ho * wo..(ci + 1) * ho * wo]) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        if worst != 0.0 {
+            fail(
+                format!("depthwise differs from per-channel convolutions by {worst:.2e}"),
+                out,
+            );
+        }
+    }
+
+    // ---- stride subsampling (bit-exact) --------------------------------
+    if shape.stride > 1 {
+        checks += 1;
+        let s1 = ConvShape { stride: 1, ..*shape };
+        let y1 = naive_conv(&s1, &x, &w);
+        let (ho, wo) = (shape.out_height(), shape.out_width());
+        let (h1, w1) = (s1.out_height(), s1.out_width());
+        let mut worst = 0f32;
+        for ko in 0..shape.out_channels {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let a = y.data[(ko * ho + oy) * wo + ox];
+                    let b = y1.data[(ko * h1 + oy * shape.stride) * w1 + ox * shape.stride];
+                    worst = worst.max((a - b).abs());
+                }
+            }
+        }
+        if worst != 0.0 {
+            fail(
+                format!(
+                    "stride-{} output differs from subsampled stride-1 by {worst:.2e}",
+                    shape.stride
+                ),
+                out,
+            );
+        }
+    }
+
+    checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracles_pass_on_representative_shapes() {
+        let shapes = [
+            ("dense", ConvShape::square3x3(4, 6, 8)),
+            ("pointwise", ConvShape::pointwise(5, 7, 6)),
+            ("depthwise", ConvShape::depthwise(6, 9, 1)),
+            ("depthwise-s2", ConvShape::depthwise(4, 8, 2)),
+            ("grouped", ConvShape::square3x3(8, 12, 7).with_groups(4).unwrap()),
+        ];
+        for (name, shape) in shapes {
+            let mut v = Vec::new();
+            let n = check_shape(name, &shape, 42, &mut v);
+            assert!(n >= 1, "{name}");
+            assert!(v.is_empty(), "{name}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn a_planted_filter_transpose_is_caught() {
+        // transpose the filter's spatial taps: the differential oracle
+        // must notice (both implementations read the same buffer, so a
+        // same-order check would agree with itself — the independent
+        // patch ordering is what catches it)
+        let shape = ConvShape::square3x3(3, 3, 6);
+        let x = Tensor::randn(&[3, 6, 6], 1);
+        let w = Tensor::randn(&[3, 3, 3, 3], 2);
+        let mut wt = w.clone();
+        // swap R and S axes in place
+        for ko in 0..3 {
+            for ci in 0..3 {
+                for ry in 0..3 {
+                    for sx in 0..3 {
+                        wt.data[((ko * 3 + ci) * 3 + ry) * 3 + sx] =
+                            w.data[((ko * 3 + ci) * 3 + sx) * 3 + ry];
+                    }
+                }
+            }
+        }
+        let y = naive_conv(&shape, &x, &w);
+        let yt = im2col_conv_host(&shape, &x, &wt);
+        assert!(y.max_abs_diff(&yt).unwrap() > TOL, "transposed taps must diverge");
+    }
+}

@@ -45,9 +45,13 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
 
     let threads = c * n_tiles; // one thread per (channel, tile)
     // never launch workgroups wider than the grid: small layers would
-    // only pad the grid with idle lanes
-    let wg = p.wg_size.clamp(16, 1024).min(threads.max(16));
+    // only pad the grid with idle lanes (the floor is the *cap*'s
+    // floor, so a 2-thread layer gets a 2-lane workgroup, not 16
+    // phantom lanes overcounting its traffic — a conformance find)
+    let wg = p.wg_size.clamp(16, 1024).min(threads.max(1));
     let workgroups = threads.div_ceil(wg);
+    // partial last workgroup: launched lanes execute the full stream
+    let coverage = (wg * workgroups) as f64 / threads as f64;
 
     // ---- weights: R*S values per channel, loaded once into registers
     let mut taps = Segment::new("load filter slice to registers", 1);
@@ -99,8 +103,9 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
             Stream {
                 label: "input image (windowed)",
                 unique_bytes: input_bytes,
-                // each element once, plus the tile-halo overlap
-                touches: (window * n_tiles) as f64 / in_px as f64,
+                // each element once, plus the tile-halo overlap and the
+                // partial-workgroup lane rounding
+                touches: (window * n_tiles) as f64 / in_px as f64 * coverage,
                 reuse_distance_bytes: (shape.width * 4 * shape.filter_h) as u64,
             },
             Stream {
@@ -108,7 +113,7 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
                 // block straight from L2
                 label: "filters [R][S][C]",
                 unique_bytes: filter_bytes,
-                touches: n_tiles as f64,
+                touches: n_tiles as f64 * coverage,
                 reuse_distance_bytes: filter_bytes,
             },
         ],
@@ -157,6 +162,31 @@ mod tests {
             input.touches < 2.5,
             "windowed reads should stay near 1x the image, got {}x",
             input.touches
+        );
+    }
+
+    #[test]
+    fn tiny_layers_do_not_overcount_padded_lanes() {
+        // regression (conformance find): an 8-channel 1x1-grid layer
+        // has 8 threads; the old 16-lane floor padded the launch 2x and
+        // the segment loads overcounted the streams by the same 2x
+        let shape = ConvShape::depthwise(8, 1, 1);
+        let ks = generate(&shape, &TuneParams::for_shape(&shape).clamped(&shape));
+        assert_eq!(ks[0].wg_size, 8);
+        assert!(
+            ks[0].byte_conservation_error(64) < 1e-9,
+            "err {}",
+            ks[0].byte_conservation_error(64)
+        );
+        // non-dividing workgroup: the coverage factor keeps it exact
+        let odd = ConvShape::depthwise(24, 14, 1);
+        let mut p = TuneParams::for_shape(&odd);
+        p.wg_size = 128; // 24 channels x 13 tiles = 312 threads, 312 % 128 != 0
+        let ks = generate(&odd, &p.clamped(&odd));
+        assert!(
+            ks[0].byte_conservation_error(64) < 1e-9,
+            "err {}",
+            ks[0].byte_conservation_error(64)
         );
     }
 

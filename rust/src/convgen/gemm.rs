@@ -29,7 +29,9 @@ pub fn gemm_spec(
     let tm = p.tile_m.min(m).max(1);
     let tn = p.tile_n.min(n).max(1);
     let tk = p.tile_k.min(kd).max(1);
-    let wg = p.wg_size.min(tm * tn).max(16);
+    // never launch more lanes than the tile has outputs (degenerate
+    // tiles would otherwise pad the accumulator math 16x)
+    let wg = p.wg_size.min(tm * tn).max(16.min(tm * tn)).max(1);
     let wgs_m = m.div_ceil(tm);
     let wgs_n = n.div_ceil(tn);
     let workgroups = wgs_m * wgs_n;

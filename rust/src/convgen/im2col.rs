@@ -35,9 +35,14 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     let unrolled_bytes = c * fs * px * 4;
 
     // ---- kernel 1: the unroll --------------------------------------
-    let wg = p.wg_size.max(64);
     let threads = c * px; // one thread per (channel, output pixel)
+    // never launch workgroups wider than the grid (tiny layers would
+    // pad the launch with idle lanes and overcount their traffic)
+    let wg = p.wg_size.max(64).min(threads.max(1));
     let workgroups = threads.div_ceil(wg);
+    // partial last workgroup: the launched lanes still execute the
+    // per-thread stream, so the stream totals scale by the coverage
+    let coverage = (wg * workgroups) as f64 / threads as f64;
     let mut body = Segment::new("gather neighbourhood + scatter rows", 1);
     body.gmem_loads_per_thread = fs as f64;
     body.gmem_stores_per_thread = fs as f64;
@@ -65,7 +70,7 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
             // every stride-th window, hence the px/in_px factor)
             label: "input image",
             unique_bytes: input_bytes,
-            touches: fs as f64 * px as f64 / in_px as f64,
+            touches: fs as f64 * px as f64 / in_px as f64 * coverage,
             reuse_distance_bytes: (shape.width * 4 * 3) as u64,
         }],
         write_bytes: unrolled_bytes,
@@ -149,6 +154,39 @@ mod tests {
         assert_eq!(ks[1].write_bytes * ks[1].launches, shape.output_bytes());
         // the unroll still materialises R*S x the input in total
         assert_eq!(ks[0].write_bytes, 9 * shape.input_bytes());
+    }
+
+    #[test]
+    fn tiny_grids_do_not_overcount_unroll_lanes() {
+        // regression (conformance find): a 1-pixel 8-channel layer has
+        // 8 unroll threads; the old 64-lane floor padded the launch 8x
+        // and its segment loads overcounted the stream by the same 8x
+        let shape = ConvShape::pointwise(8, 8, 1);
+        let ks = generate(&shape, &TuneParams::for_shape(&shape).clamped(&shape));
+        assert_eq!(ks[0].wg_size, 8, "workgroup capped at the thread count");
+        assert!(
+            ks[0].byte_conservation_error(64) < 1e-9,
+            "err {}",
+            ks[0].byte_conservation_error(64)
+        );
+        // partial last workgroups stay conserving too (65 threads / 64)
+        let odd = ConvShape {
+            in_channels: 13,
+            out_channels: 8,
+            height: 5,
+            width: 1,
+            filter_h: 1,
+            filter_w: 1,
+            stride: 1,
+            padding: 0,
+            groups: 1,
+        };
+        let ks = generate(&odd, &TuneParams::for_shape(&odd).clamped(&odd));
+        assert!(
+            ks[0].byte_conservation_error(64) < 1e-9,
+            "err {}",
+            ks[0].byte_conservation_error(64)
+        );
     }
 
     #[test]

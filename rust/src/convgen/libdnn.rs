@@ -8,6 +8,7 @@
 //! needs — the paper's Table 4 shows libdnn with the most vector
 //! instructions of all kernels for exactly this reason.
 
+use super::halo_factor;
 use super::params::TuneParams;
 use crate::simulator::spec::{KernelSpec, Segment, Stream};
 use crate::workload::ConvShape;
@@ -25,7 +26,7 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
 
     let tm = p.tile_m.min(kg).max(1); // output channels per wg
     let tn = p.tile_n.min(px).max(1); // pixels per wg
-    let wg = p.wg_size.min(tm * tn).max(16);
+    let wg = p.wg_size.min(tm * tn).max(16.min(tm * tn)).max(1);
     let wgs_m = kg.div_ceil(tm);
     let wgs_n = px.div_ceil(tn);
     let workgroups = wgs_m * wgs_n; // per launch
@@ -35,10 +36,24 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     let steps = cg.div_ceil(tk_c);
     let acc_per_thread = (tm * tn).div_ceil(wg) as f64;
 
+    // Halo of the tn-pixel patch tile: none at all for 1x1 filters (a
+    // pointwise "patch" is the pixel itself — the old hardcoded 60%
+    // charged phantom traffic on every MobileNet pointwise layer, a
+    // conformance find), the seed's ~60% for dense stride-1 tiles
+    // (ResNet numbers bit-identical), and the exact staged-window area
+    // for strided tiles, like the other staged generators.
+    let halo = if fs == 1 {
+        1.0
+    } else if shape.stride == 1 {
+        1.6
+    } else {
+        halo_factor(shape, tn)
+    };
+
     // ---- stage: input patch + filter slice + on-the-fly unroll ------
     let mut stage = Segment::new("fetch patch + unroll to smem", steps);
     // input patch feeding tn pixels with halo, per channel of the step
-    let halo_elems = (tn as f64 * 1.6).ceil() * tk_c as f64; // ~60% halo overhead
+    let halo_elems = (tn as f64 * halo).ceil() * tk_c as f64;
     let filt_elems = (tm * tk_c * fs) as f64;
     stage.gmem_loads_per_thread = (halo_elems + filt_elems) / wg as f64;
     // unroll scatter: the [tk_c*fs, tn] implicit-matrix tile into smem
@@ -87,7 +102,7 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
                 // each pixel-tile's patch is re-read by every channel-tile wg
                 // (strided layers window a px/in_px slice of the input)
                 label: "input image",
-                unique_bytes: (group_input_bytes as f64 * 1.6) as u64, // halo
+                unique_bytes: (group_input_bytes as f64 * halo) as u64,
                 touches: wgs_m as f64
                     * ((tn * wgs_n) as f64 / in_px as f64)
                     * ((tk_c * steps) as f64 / cg as f64),
@@ -135,6 +150,23 @@ mod tests {
         let lib_v = simulate(lib, &dev).vector_inst;
         let gemm_v = simulate(&im2[1], &dev).vector_inst;
         assert!(lib_v > gemm_v, "libdnn {lib_v} <= im2col_gemm {gemm_v}");
+    }
+
+    #[test]
+    fn pointwise_patches_have_no_halo() {
+        // regression (conformance find): the hardcoded ~60% halo used
+        // to be charged even on 1x1 filters, whose "patch" is exactly
+        // the pixel itself — phantom traffic on every pointwise layer
+        let pw = ConvShape::pointwise(64, 128, 56);
+        let ks = generate(&pw, &TuneParams::for_shape(&pw).clamped(&pw));
+        assert_eq!(ks[0].read_streams[0].unique_bytes, pw.input_bytes());
+        // dense stride-1 keeps the seed's 1.6 (ResNet bit-identity)
+        let dense = LayerClass::Conv4x.shape();
+        let ks = generate(&dense, &TuneParams::for_shape(&dense));
+        assert_eq!(
+            ks[0].read_streams[0].unique_bytes,
+            (dense.input_bytes() as f64 * 1.6) as u64
+        );
     }
 
     #[test]

@@ -102,15 +102,23 @@ impl Algorithm {
 /// Halo factor of a staged image tile: staged elements per output-tile
 /// element for a `tile_area`-pixel tile.
 ///
-/// Stride-1 keeps the seed's closed form (`1 + 2*sqrt(R*S)/e`) so every
-/// ResNet number is bit-identical to the original model; strided tiles
-/// use the exact input-window area `((e-1)*stride + R)^2 / e^2`, which
-/// the stride-1 approximation badly underestimates.
+/// A 1x1 stride-1 filter windows exactly its own tile — no halo exists,
+/// and the closed form below would charge a phantom `2/e` overhead on
+/// every pointwise layer (the cuConv-style miscount the conformance
+/// suite flushed out). Stride-1 otherwise keeps the seed's closed form
+/// (`1 + 2*sqrt(R*S)/e`) so every ResNet number is bit-identical to the
+/// original model; strided tiles use the exact input-window area
+/// `((e-1)*stride + R)^2 / e^2`, which the stride-1 approximation badly
+/// underestimates.
 pub(crate) fn halo_factor(shape: &ConvShape, tile_area: u64) -> f64 {
     let e = (tile_area as f64).sqrt();
     let fs = shape.filter_len() as f64;
     if shape.stride == 1 {
-        1.0 + 2.0 * fs.sqrt() / e
+        if shape.filter_h == 1 && shape.filter_w == 1 {
+            1.0
+        } else {
+            1.0 + 2.0 * fs.sqrt() / e
+        }
     } else {
         let in_h = (e - 1.0) * shape.stride as f64 + shape.filter_h as f64;
         let in_w = (e - 1.0) * shape.stride as f64 + shape.filter_w as f64;
@@ -250,6 +258,47 @@ mod tests {
         for alg in Algorithm::ALL {
             assert!(!alg.supports(&bad), "{alg:?}");
         }
+    }
+
+    #[test]
+    fn pointwise_tiles_have_no_halo() {
+        // regression (conformance find): 1x1 stride-1 filters window
+        // exactly their own tile; the closed form used to charge a
+        // phantom 1 + 2/e on every pointwise layer
+        let pw = ConvShape::pointwise(64, 128, 56);
+        for tile_area in [1u64, 4, 16, 64] {
+            assert_eq!(halo_factor(&pw, tile_area), 1.0, "tile {tile_area}");
+        }
+        // the staged generators therefore read exactly the input once
+        for alg in [Algorithm::Direct, Algorithm::Ilpm] {
+            let ks = generate(alg, &pw, &TuneParams::for_shape(&pw));
+            let input: u64 = ks
+                .iter()
+                .flat_map(|k| k.read_streams.iter().map(move |s| (k, s)))
+                .filter(|(_, s)| s.label.contains("input"))
+                .map(|(k, s)| s.unique_bytes * k.launches)
+                .sum();
+            assert_eq!(input, pw.input_bytes(), "{alg:?}: phantom pointwise halo");
+        }
+    }
+
+    #[test]
+    fn dense_stride1_halo_keeps_the_seed_closed_form() {
+        // the ResNet-shape halo must stay bit-identical to the seed model
+        let dense = LayerClass::Conv4x.shape();
+        assert_eq!(halo_factor(&dense, 64), 1.0 + 2.0 * 3.0 / 8.0);
+        assert_eq!(halo_factor(&dense, 16), 1.0 + 2.0 * 3.0 / 4.0);
+    }
+
+    #[test]
+    fn strided_halo_is_the_exact_window_area() {
+        let dw = ConvShape::depthwise(64, 112, 2);
+        // e = 4: window (3*2+3)^2 = 81 over 16 tile pixels
+        assert_eq!(halo_factor(&dw, 16), 81.0 / 16.0);
+        // 1x1 stride-2: the contiguous staged box still spans the stride
+        let mut pw2 = ConvShape::pointwise(8, 8, 8);
+        pw2.stride = 2;
+        assert_eq!(halo_factor(&pw2, 16), 49.0 / 16.0);
     }
 
     #[test]

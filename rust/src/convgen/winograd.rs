@@ -16,6 +16,13 @@ use crate::workload::ConvShape;
 /// transform).
 pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     assert_eq!(shape.stride, 1, "winograd F(2x2,3x3) is stride-1 only");
+    // conformance find: without this check a non-3x3 filter would be
+    // silently lowered with 3x3 transform algebra (wrong V/M/U sizes)
+    assert_eq!(
+        (shape.filter_h, shape.filter_w),
+        (3, 3),
+        "winograd F(2x2,3x3) supports only 3x3 filters"
+    );
     // Winograd's 16 GEMMs amortise the transforms over a dense channel
     // reduction; a grouped/depthwise layer has none to offer (see
     // `Algorithm::supports`)
@@ -29,8 +36,12 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     let m_bytes = 16 * k * n_tiles * 4; // transformed product
 
     // ---- trans_from_image -------------------------------------------
-    let wg = p.wg_size.max(64);
     let threads = c * n_tiles; // one thread per (channel, tile)
+    // never launch wider than the grid; a partial last workgroup's
+    // padded lanes still execute the stream, hence the coverage factor
+    let wg = p.wg_size.max(64).min(threads.max(1));
+    let coverage = (wg * threads.div_ceil(wg)) as f64 / threads as f64;
+    let in_px = (shape.height * shape.width) as f64;
     let mut body = Segment::new("B^T d B per 4x4 tile", 1);
     body.gmem_loads_per_thread = 16.0; // the 4x4 input tile
     body.coalesced = false; // 2D gathers with stride-2 overlap
@@ -51,8 +62,12 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
             label: "input image",
             unique_bytes: shape.input_bytes(),
             // each pixel lands in ~4 overlapping 4x4 tiles (16 reads
-            // per tile over ~4 output pixels), padded tiles included
-            touches: 16.0 * n_tiles as f64 / shape.out_pixels() as f64,
+            // per tile over ~4 *input* pixels), padded tiles and lanes
+            // included. Normalising by the input grid (not the output
+            // grid) keeps the stream honest on non-same-padding shapes,
+            // where the two differ — under same padding (every ResNet
+            // layer) the ratio is identical.
+            touches: 16.0 * n_tiles as f64 / in_px * coverage,
             reuse_distance_bytes: (shape.width * 4 * 4) as u64,
         }],
         write_bytes: v_bytes,
@@ -78,6 +93,8 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
 
     // ---- trans_to_output ----------------------------------------------
     let threads_out = k * n_tiles;
+    let wg_out = p.wg_size.max(64).min(threads_out.max(1));
+    let cov_out = (wg_out * threads_out.div_ceil(wg_out)) as f64 / threads_out as f64;
     let mut outb = Segment::new("A^T m A per tile", 1);
     outb.gmem_loads_per_thread = 16.0;
     outb.coalesced = false; // strided across the 16 M matrices
@@ -89,15 +106,15 @@ pub fn generate(shape: &ConvShape, p: &TuneParams) -> Vec<KernelSpec> {
     outb.salu_per_warp = 4.0;
     let trans_out = KernelSpec {
         name: "winograd_trans_to_output".into(),
-        workgroups: threads_out.div_ceil(wg),
-        wg_size: wg,
+        workgroups: threads_out.div_ceil(wg_out),
+        wg_size: wg_out,
         base_regs_per_thread: 24,
         smem_per_wg: 0, // Table 3: no shared memory in trans_to_output
         segments: vec![outb],
         read_streams: vec![Stream {
             label: "M (gemm product)",
             unique_bytes: m_bytes,
-            touches: 1.0,
+            touches: cov_out,
             reuse_distance_bytes: 0,
         }],
         write_bytes: shape.output_bytes(),
@@ -149,10 +166,55 @@ mod tests {
     }
 
     #[test]
+    fn non_same_padding_shapes_conserve_bytes() {
+        // regression (conformance find): the input stream used to be
+        // normalised by *output* pixels; on a pad-0 3x3 layer (which
+        // supports() accepts) input and output grids differ and the
+        // stream under-reported reads by (h/(h-2))^2 — enough to trip
+        // the simulator's conservation assertion
+        let mut shape = ConvShape::square3x3(16, 16, 8);
+        shape.padding = 0;
+        let ks = generate(&shape, &TuneParams::for_shape(&shape).clamped(&shape));
+        for k in &ks {
+            let err = k.byte_conservation_error(64);
+            assert!(err < 0.05, "{}: {err}", k.name);
+        }
+        // same padding keeps the exact seed ratio: in_px == out_px
+        let same = LayerClass::Conv2x.shape();
+        let ks = generate(&same, &TuneParams::for_shape(&same));
+        assert!(ks[0].byte_conservation_error(64) < 1e-9);
+    }
+
+    #[test]
+    fn tiny_grids_cap_transform_workgroups() {
+        // 1-channel 4x4: 4 tiles -> 4 transform threads, not a padded
+        // 64-lane launch overcounting 16x
+        let shape = ConvShape::square3x3(1, 1, 4);
+        let ks = generate(&shape, &TuneParams::for_shape(&shape).clamped(&shape));
+        assert_eq!(ks[0].wg_size, 4);
+        assert!(ks[0].byte_conservation_error(64) < 1e-9);
+        assert!(ks[2].byte_conservation_error(64) < 1e-9);
+    }
+
+    #[test]
     fn rejects_strided_layers() {
         let mut s = LayerClass::Conv4x.shape();
         s.stride = 2;
         let r = std::panic::catch_unwind(|| generate(&s, &TuneParams::default()));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_non_3x3_filters() {
+        // regression (conformance find): a 1x1 or 5x5 filter used to be
+        // lowered with 3x3 transform algebra in release builds (only a
+        // debug_assert upstream caught it)
+        for f in [1usize, 5] {
+            let mut s = LayerClass::Conv4x.shape();
+            s.filter_h = f;
+            s.filter_w = f;
+            let r = std::panic::catch_unwind(|| generate(&s, &TuneParams::default()));
+            assert!(r.is_err(), "filter {f}x{f} must be refused");
+        }
     }
 }

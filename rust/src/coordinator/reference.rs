@@ -5,20 +5,33 @@
 use crate::runtime::Tensor;
 use crate::workload::ConvShape;
 
-/// Sliding-window convolution by definition. x: [C,H,W], w: [K,C,R,S].
+/// Sliding-window convolution by definition, group-aware.
+/// x: `[C,H,W]`, w: `[K, C/groups, R, S]` — each output channel reduces
+/// over only its group's input-channel slice (for `groups == 1` the
+/// filter is the familiar dense `[K,C,R,S]` and the code path is
+/// bit-identical to the pre-grouping reference).
+///
+/// Grouped support is a conformance fix: the reference used to assert a
+/// dense `[K,C,R,S]` filter, so the serve path had *no* numeric oracle
+/// for depthwise/grouped layers at all — the suite's group-embedding
+/// and depthwise-split oracles now pin this implementation.
 pub fn naive_conv(shape: &ConvShape, x: &Tensor, w: &Tensor) -> Tensor {
     let (c, h, wd) = (shape.in_channels, shape.height, shape.width);
     let (k, r, s) = (shape.out_channels, shape.filter_h, shape.filter_w);
     let (st, pad) = (shape.stride as isize, shape.padding as isize);
+    let cg = shape.channels_per_group();
+    let kg = shape.filters_per_group();
     assert_eq!(x.shape, vec![c, h, wd], "input shape");
-    assert_eq!(w.shape, vec![k, c, r, s], "filter shape");
+    assert_eq!(w.shape, vec![k, cg, r, s], "filter shape");
     let (ho, wo) = (shape.out_height(), shape.out_width());
     let mut out = vec![0f32; k * ho * wo];
     for ko in 0..k {
+        let group = ko / kg.max(1);
         for oy in 0..ho {
             for ox in 0..wo {
                 let mut acc = 0f32;
-                for ci in 0..c {
+                for cig in 0..cg {
+                    let ci = group * cg + cig;
                     for ry in 0..r {
                         for sx in 0..s {
                             let iy = oy as isize * st + ry as isize - pad;
@@ -27,7 +40,7 @@ pub fn naive_conv(shape: &ConvShape, x: &Tensor, w: &Tensor) -> Tensor {
                                 continue;
                             }
                             let xv = x.data[(ci * h + iy as usize) * wd + ix as usize];
-                            let wv = w.data[((ko * c + ci) * r + ry) * s + sx];
+                            let wv = w.data[((ko * cg + cig) * r + ry) * s + sx];
                             acc += xv * wv;
                         }
                     }
@@ -73,6 +86,48 @@ mod tests {
         assert_eq!(y.shape, vec![1, 5, 5]);
         assert!((y.data[2 * 5 + 2] - 18.0).abs() < 1e-6);
         assert!((y.data[0] - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grouped_conv_matches_zero_embedded_dense() {
+        // regression (conformance fix): grouped filters [K, C/g, R, S]
+        // must equal the dense conv whose filter zero-embeds each
+        // group's slice block-diagonally — bit-exactly, since adding a
+        // 0.0 contribution is exact and the accumulation order matches
+        let shape = ConvShape::square3x3(8, 8, 6).with_groups(4).unwrap();
+        let x = Tensor::randn(&[8, 6, 6], 11);
+        let w = Tensor::randn(&[8, 2, 3, 3], 12); // C/g = 2
+        let grouped = naive_conv(&shape, &x, &w);
+        let mut dense_w = vec![0f32; 8 * 8 * 9];
+        for ko in 0..8 {
+            let g = ko / 2; // kg = 2
+            for cig in 0..2 {
+                let ci = g * 2 + cig;
+                for t in 0..9 {
+                    dense_w[(ko * 8 + ci) * 9 + t] = w.data[(ko * 2 + cig) * 9 + t];
+                }
+            }
+        }
+        let dense_shape = ConvShape { groups: 1, ..shape };
+        let dense_w = Tensor::new(vec![8, 8, 3, 3], dense_w).unwrap();
+        let dense = naive_conv(&dense_shape, &x, &dense_w);
+        assert_eq!(grouped.data, dense.data, "grouped != block-diagonal dense");
+    }
+
+    #[test]
+    fn depthwise_conv_is_per_channel() {
+        let shape = ConvShape::depthwise(4, 5, 1);
+        let x = Tensor::randn(&[4, 5, 5], 3);
+        let w = Tensor::randn(&[4, 1, 3, 3], 4);
+        let y = naive_conv(&shape, &x, &w);
+        assert_eq!(y.shape, vec![4, 5, 5]);
+        let single = ConvShape::square3x3(1, 1, 5);
+        for ci in 0..4 {
+            let xc = Tensor::new(vec![1, 5, 5], x.data[ci * 25..(ci + 1) * 25].to_vec()).unwrap();
+            let wc = Tensor::new(vec![1, 1, 3, 3], w.data[ci * 9..(ci + 1) * 9].to_vec()).unwrap();
+            let yc = naive_conv(&single, &xc, &wc);
+            assert_eq!(yc.data, y.data[ci * 25..(ci + 1) * 25].to_vec(), "channel {ci}");
+        }
     }
 
     #[test]

@@ -107,7 +107,9 @@ pub struct FleetReport {
     pub shed_queue: usize,
     /// Admitted requests that finished after their deadline.
     pub violated: usize,
-    /// Engine-side execution failures among admitted requests.
+    /// Engine-side execution failures among admitted requests, plus
+    /// any non-finite latency samples the recorder had to drop (a
+    /// poisoned virtual clock never panics the run — it shows up here).
     pub errors: u64,
     /// Virtual makespan: last completion (or last arrival if nothing
     /// was admitted), ms.
@@ -290,9 +292,11 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
             st.violated += 1;
             violated += 1;
         }
-        let latency = Duration::from_secs_f64(latency_ms / 1e3);
-        st.rec.record(latency);
-        agg.record(latency);
+        // record_ms cannot panic on a non-finite virtual latency (a
+        // poisoned cost signal); such samples are dropped, counted by
+        // the recorder, and folded into the error ledger below
+        st.rec.record_ms(latency_ms);
+        agg.record_ms(latency_ms);
         st.admitted += 1;
 
         // and through the real engine; a saturated queue drains one
@@ -329,7 +333,8 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
         .map(|(r, before)| {
             r.engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed) - before
         })
-        .sum();
+        .sum::<u64>()
+        + agg.dropped_nonfinite() as u64;
 
     let span = Duration::from_secs_f64(span_ms.max(0.0) / 1e3);
     let replica_reports: Vec<ReplicaReport> = states

@@ -17,9 +17,11 @@
 //!   width 1.0/0.5), the [`autotune`] search the paper's §5 describes,
 //!   the persistent [`tunedb`] store that makes tuning results
 //!   durable across processes (tune once per device, serve from disk
-//!   forever), and the [`fleet`] layer that serves open-loop traffic
+//!   forever), the [`fleet`] layer that serves open-loop traffic
 //!   across many heterogeneous simulated devices with cost-aware
-//!   dispatch and SLO admission control.
+//!   dispatch and SLO admission control, and the [`conformance`]
+//!   suite that differentially verifies every lowering against the
+//!   paper's closed-form accounting (`ilpm verify`).
 //!
 //! See README.md for the CLI front door, and DESIGN.md for the
 //! paper→module map, the workload tables, the grouped-convolution
@@ -28,6 +30,7 @@
 
 pub mod autotune;
 pub mod cli;
+pub mod conformance;
 pub mod convgen;
 pub mod coordinator;
 pub mod fleet;

@@ -6,6 +6,10 @@ use std::time::Duration;
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
     samples_us: Vec<f64>,
+    /// Non-finite samples rejected by [`LatencyRecorder::record_ms`] —
+    /// counted, never sorted (a single NaN used to panic the whole
+    /// serve/fleet run inside the percentile sort).
+    dropped_nonfinite: usize,
 }
 
 /// Percentile summary of recorded latencies.
@@ -27,7 +31,26 @@ impl LatencyRecorder {
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_secs_f64() * 1e6);
+        self.record_ms(d.as_secs_f64() * 1e3);
+    }
+
+    /// Record a latency in milliseconds. Non-finite samples (a poisoned
+    /// virtual clock, a broken cost signal) are dropped and counted via
+    /// [`Self::dropped_nonfinite`] instead of poisoning the percentile
+    /// sort — callers fold the count into their error ledger. Unlike
+    /// `record(Duration)`, this cannot panic on negative or non-finite
+    /// input, which is why the fleet's virtual clock uses it.
+    pub fn record_ms(&mut self, ms: f64) {
+        if ms.is_finite() {
+            self.samples_us.push(ms * 1e3);
+        } else {
+            self.dropped_nonfinite += 1;
+        }
+    }
+
+    /// Non-finite samples rejected since construction.
+    pub fn dropped_nonfinite(&self) -> usize {
+        self.dropped_nonfinite
     }
 
     pub fn len(&self) -> usize {
@@ -51,7 +74,9 @@ impl LatencyRecorder {
             return LatencySummary::zero();
         }
         let mut s = self.samples_us.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total order: record_ms already rejects non-finite samples,
+        // and total_cmp keeps even a hypothetical NaN from panicking
+        s.sort_by(f64::total_cmp);
         let pct = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)] / 1e3;
         LatencySummary {
             count: s.len(),
@@ -162,6 +187,31 @@ mod tests {
             assert!((v - 3.0).abs() < 1e-9, "{v}");
         }
         assert_all_finite(&s.to_json());
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped_and_counted_not_panicked() {
+        // regression: one NaN latency sample used to panic the entire
+        // serve/fleet run inside `partial_cmp(..).unwrap()`
+        let mut r = LatencyRecorder::new();
+        r.record_ms(3.0);
+        r.record_ms(f64::NAN);
+        r.record_ms(f64::INFINITY);
+        r.record_ms(f64::NEG_INFINITY);
+        r.record_ms(5.0);
+        assert_eq!(r.len(), 2, "finite samples only");
+        assert_eq!(r.dropped_nonfinite(), 3);
+        let s = r.summary(Duration::from_secs(1));
+        assert_eq!(s.count, 2);
+        assert!((s.p50_ms - 3.0).abs() < 1e-9);
+        assert!((s.max_ms - 5.0).abs() < 1e-9);
+        assert_all_finite(&s.to_json());
+        // negative virtual-clock artefacts must not panic either
+        // (Duration::from_secs_f64 would have)
+        let mut r = LatencyRecorder::new();
+        r.record_ms(-1.0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped_nonfinite(), 0);
     }
 
     #[test]

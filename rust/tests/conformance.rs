@@ -1,0 +1,134 @@
+//! Tier-1 conformance: the differential-verification corpus as
+//! deterministic tests, so a lowering regression fails `cargo test -q`
+//! without anyone running the fuzzer.
+//!
+//! The bounded sweep runs the full table + edge corpus plus a small
+//! fixed-seed fuzz batch over all six algorithms and all three Table-1
+//! devices; the individual tests below pin the edge geometries that
+//! historically break implicit-GEMM-style lowerings (cuConv's halo and
+//! stream miscounts), so a failure names the exact shape.
+
+use ilpm::conformance::{self, ConformanceConfig};
+use ilpm::convgen::{generate, Algorithm, TuneParams};
+use ilpm::simulator::{simulate_pipeline, total_time_ms, DeviceConfig};
+use ilpm::workload::ConvShape;
+
+/// Generate + lower + price one (algorithm, shape) on every device,
+/// asserting the core invariants the conformance suite checks.
+fn assert_clean(alg: Algorithm, shape: &ConvShape, what: &str) {
+    assert!(alg.supports(shape), "{what}: {alg:?} should support this shape");
+    let specs = generate(alg, shape, &TuneParams::for_shape(shape));
+    assert!(!specs.is_empty(), "{what}/{alg:?}");
+    let last = specs.last().unwrap();
+    assert_eq!(
+        last.write_bytes * last.launches,
+        shape.output_bytes(),
+        "{what}/{alg:?}: output bytes"
+    );
+    for k in &specs {
+        let err = k.byte_conservation_error(64);
+        assert!(err < 0.35, "{what}/{alg:?}/{}: conservation err {err}", k.name);
+    }
+    for dev in DeviceConfig::paper_devices() {
+        let t = total_time_ms(&simulate_pipeline(&specs, &dev));
+        assert!(t.is_finite() && t > 0.0, "{what}/{alg:?}/{}: time {t}", dev.name);
+    }
+}
+
+fn supported(shape: &ConvShape) -> Vec<Algorithm> {
+    Algorithm::ALL.into_iter().filter(|a| a.supports(shape)).collect()
+}
+
+#[test]
+fn bounded_conformance_sweep_is_clean_on_all_devices() {
+    // all six algorithms x three Table-1 devices over the table + edge
+    // corpus and a fixed-seed fuzz batch — the tier-1 restatement of
+    // `ilpm verify`
+    let report = conformance::run(&ConformanceConfig { seed: 7, fuzz: 12, ..Default::default() });
+    assert!(report.pass(), "{}", report.render());
+    assert_eq!(report.per_algorithm.len(), 6);
+    assert_eq!(report.devices.len(), 3);
+    for a in &report.per_algorithm {
+        assert!(a.shapes > 0 && a.checks > 0, "{}", a.algorithm.name());
+    }
+}
+
+#[test]
+fn grouped_stride2_lowers_cleanly_everywhere() {
+    let mut shape = ConvShape::square3x3(64, 64, 28).with_groups(4).unwrap();
+    shape.stride = 2;
+    let algs = supported(&shape);
+    assert!(algs.len() >= 4, "im2col/libdnn/direct/ilpm must all run it: {algs:?}");
+    for alg in algs {
+        assert_clean(alg, &shape, "grouped-stride2");
+    }
+}
+
+#[test]
+fn depthwise_c_equals_groups_lowers_cleanly() {
+    for (what, shape) in [
+        ("dw-s1", ConvShape::depthwise(32, 14, 1)),
+        ("dw-s2", ConvShape::depthwise(32, 14, 2)),
+        ("dw-1px", ConvShape::depthwise(8, 1, 1)),
+    ] {
+        for alg in supported(&shape) {
+            assert_clean(alg, &shape, what);
+        }
+        assert!(Algorithm::Dwconv.supports(&shape), "{what}");
+        assert!(!Algorithm::Winograd.supports(&shape), "{what}");
+    }
+}
+
+#[test]
+fn pointwise_1x1_charges_no_phantom_halo() {
+    let shape = ConvShape::pointwise(32, 64, 14);
+    for alg in supported(&shape) {
+        assert_clean(alg, &shape, "pointwise");
+    }
+    // the staged generators read exactly the input once: the phantom
+    // 1 + 2/e halo on 1x1 tiles was a real lowering bug this PR fixed
+    for alg in [Algorithm::Direct, Algorithm::Ilpm, Algorithm::Libdnn] {
+        let specs = generate(alg, &shape, &TuneParams::for_shape(&shape));
+        let input: u64 = specs
+            .iter()
+            .flat_map(|k| k.read_streams.iter().map(move |s| (k.launches, s)))
+            .filter(|(_, s)| s.label.contains("input"))
+            .map(|(launches, s)| s.unique_bytes * launches)
+            .sum();
+        assert_eq!(input, shape.input_bytes(), "{alg:?}: pointwise halo must be 1.0");
+    }
+}
+
+#[test]
+fn one_pixel_grids_lower_and_price_cleanly() {
+    for (what, shape) in [
+        ("pw-1px", ConvShape::pointwise(8, 8, 1)),
+        ("dense-1px", ConvShape::square3x3(8, 8, 1)),
+    ] {
+        for alg in supported(&shape) {
+            assert_clean(alg, &shape, what);
+        }
+    }
+}
+
+#[test]
+fn winograd_non_same_padding_conserves() {
+    // supports() accepts pad-0 3x3 stride-1; the input stream used to
+    // be normalised by output pixels and under-reported reads
+    let mut shape = ConvShape::square3x3(16, 16, 8);
+    shape.padding = 0;
+    assert!(Algorithm::Winograd.supports(&shape));
+    assert_clean(Algorithm::Winograd, &shape, "dense-pad0");
+}
+
+#[test]
+fn fuzz_corpus_is_stable_across_runs() {
+    // the tier-1 sweep must test the same shapes on every run: the
+    // fuzzer is a pure function of its seed
+    let a = conformance::fuzz_shapes(7, 12);
+    let b = conformance::fuzz_shapes(7, 12);
+    assert_eq!(a.len(), 12);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.shape, y.shape);
+    }
+}
