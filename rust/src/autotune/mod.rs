@@ -21,6 +21,7 @@ mod search;
 mod space;
 
 pub use search::{
-    tune, tune_all, tune_all_warm, tune_layers_warm, TunedEntry, TuningDatabase, WarmStats,
+    tune, tune_all, tune_all_warm, tune_layers_warm, tune_layers_warm_traced, TunedEntry,
+    TuningDatabase, WarmStats,
 };
 pub use space::{candidates, SearchStats};

@@ -1,11 +1,13 @@
 //! Exhaustive search over the candidate space against the simulator,
 //! with warm-start from the persistent tunedb store.
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 
 use super::space::{candidates, SearchStats};
 use crate::convgen::{generate, Algorithm, TuneParams};
 use crate::simulator::{simulate_pipeline, total_time_ms, DeviceConfig, SimReport};
+use crate::trace::{MetricsRegistry, SpanEvent, TraceSink};
 use crate::tunedb::TuneStore;
 use crate::util::pool::{pool_map, ThreadPool};
 use crate::workload::LayerClass;
@@ -248,6 +250,57 @@ pub fn tune_layers_warm(
     (db, stats)
 }
 
+/// [`tune_layers_warm`] with observability: warm/cold key counts and
+/// candidate totals go into `metrics` under `tuner.*` names, and (when
+/// the sink is enabled) every tuned key becomes one span on a
+/// per-device track.
+///
+/// The spans carry a *virtual* cost timeline, not wall time: per
+/// device, the `(layer, algorithm)` keys are laid out back-to-back in
+/// sorted key order, each with its tuned per-conv simulated time as the
+/// duration. That makes the trace a deterministic cost map of the
+/// search result — independent of thread count and scheduling — in
+/// keeping with the virtual-clock rule every exporter relies on.
+pub fn tune_layers_warm_traced(
+    devices: &[DeviceConfig],
+    layers: &[LayerClass],
+    threads: usize,
+    store: &mut TuneStore,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+) -> (TuningDatabase, WarmStats) {
+    let (db, stats) = tune_layers_warm(devices, layers, threads, store);
+    metrics.add("tuner.warm_hits", stats.hits as u64);
+    metrics.add("tuner.cold_misses", stats.misses as u64);
+    metrics.add("tuner.candidates_evaluated", stats.evaluated as u64);
+    metrics.add("tuner.candidates_pruned", stats.pruned as u64);
+    if sink.enabled() {
+        for (t, dev) in devices.iter().enumerate() {
+            sink.set_track(t as u32, dev.name, &[]);
+            let mut entries: Vec<&TunedEntry> =
+                db.entries().filter(|e| e.device == dev.name).collect();
+            entries.sort_by(|a, b| {
+                (a.layer.name(), a.algorithm.name()).cmp(&(b.layer.name(), b.algorithm.name()))
+            });
+            let mut clock_ms = 0.0;
+            for (i, e) in entries.iter().enumerate() {
+                let name = format!("{}/{}", e.layer.name(), e.algorithm.name());
+                let ev = SpanEvent::span(
+                    t as u32,
+                    Cow::Owned(name),
+                    "tune",
+                    clock_ms,
+                    e.time_ms,
+                    i as u64,
+                );
+                sink.record(ev);
+                clock_ms += e.time_ms;
+            }
+        }
+    }
+    (db, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -336,6 +389,39 @@ mod tests {
         assert_eq!(warm.hits, before);
         assert_eq!(db.len(), before);
         assert!(db.get(dev.name, LayerClass::Conv4x, Algorithm::Ilpm).is_some());
+    }
+
+    #[test]
+    fn traced_tuning_counts_keys_and_emits_deterministic_spans() {
+        let dev = DeviceConfig::vega8();
+        let run = |store: &mut TuneStore| {
+            let mut buf = crate::trace::TraceBuffer::new();
+            let mut m = crate::trace::MetricsRegistry::new();
+            let (db, stats) = tune_layers_warm_traced(
+                std::slice::from_ref(&dev),
+                &[LayerClass::Conv2x],
+                2,
+                store,
+                &mut buf,
+                &mut m,
+            );
+            (db, stats, m, crate::trace::chrome_trace_json(&buf).to_json_string())
+        };
+        let mut store = TuneStore::new();
+        let (db, stats, m, trace_a) = run(&mut store);
+        assert_eq!(m.counter("tuner.warm_hits"), 0, "cold store has no hits");
+        assert_eq!(m.counter("tuner.cold_misses") as usize, stats.misses);
+        assert_eq!(m.counter("tuner.candidates_evaluated") as usize, stats.evaluated);
+        assert_eq!(m.counter("tuner.candidates_pruned") as usize, stats.pruned);
+        assert!(stats.evaluated > 0);
+        // one span per tuned key, on the device's track
+        assert_eq!(trace_a.matches("\"cat\":\"tune\"").count(), db.len());
+        // warm rerun: all hits, zero evaluations, and the span layout
+        // (a cost map, not a wall-clock schedule) is byte-identical
+        let (_, warm, m2, trace_b) = run(&mut store);
+        assert_eq!(warm.evaluated, 0);
+        assert_eq!(m2.counter("tuner.warm_hits") as usize, warm.hits);
+        assert_eq!(trace_a, trace_b, "tuning traces must not depend on scheduling");
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //!               `mobilenet` class x algorithm sweep (BENCH_mobilenet.json)
 //! * `tune`    — run the auto-tuner over a `--network` work-list,
 //!               warm-started from a tunedb store
+//! * `profile` — print the paper-style per-layer cost profile of one
+//!               network on one modeled device (simulated ms, analytic
+//!               stream bytes and FLOPs, routed algorithm, % of total)
 //! * `routes`  — print stored per-layer winners from a tunedb store
 //! * `simulate`— simulate one (algorithm, layer, device) and dump counters
 //! * `layers`  — run each conv-layer artifact once through PJRT
@@ -20,16 +23,22 @@ mod args;
 
 pub use args::Args;
 
-use crate::autotune::{tune, tune_layers_warm};
+use crate::autotune::{tune, tune_layers_warm, tune_layers_warm_traced};
 use crate::convgen::Algorithm;
 use crate::coordinator::{InferenceEngine, RoutingTable, SimBackend};
 use crate::fleet::{
-    run_open_loop, DevicePool, DispatchPolicy, FleetReport, FleetSpec, OpenLoopConfig, SloConfig,
+    run_open_loop, run_open_loop_traced, DevicePool, DispatchPolicy, FleetReport, FleetSpec,
+    OpenLoopConfig, SloConfig,
 };
 use crate::metrics::{bench_envelope, fig5_table, render_fig5, table3, table4, LatencySummary};
 use crate::simulator::DeviceConfig;
+use crate::trace::{
+    chrome_trace_json, MetricsRegistry, NoopSink, ProfileReport, SpanEvent, TraceBuffer, TraceSink,
+};
 use crate::tunedb::TuneStore;
 use crate::workload::{LayerClass, NetworkDef, RequestGen, TraceKind};
+use crate::{log_info, log_warn};
+use std::borrow::Cow;
 use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
@@ -58,6 +67,9 @@ COMMANDS:
                   [--deadline-ms X [--admission on|off]] [--seed S]
                   [--routes STORE] — per-device routes warm-start from
                   STORE, cold-tune on miss (merged back when STORE given)
+            --trace PATH  (sim and fleet modes) write a Chrome
+                  trace_event JSON of the run — queue/exec spans per
+                  replica on the virtual clock, loadable in Perfetto
   bench     <fig5|table3|table4|serve|mobilenet|fleet>
             [--device mali|vega8|radeonvii|all]
             regenerate a paper table/figure from tuned simulations;
@@ -72,9 +84,18 @@ COMMANDS:
             warm-starts from STORE and merges fresh results back into it
   tune      [--device mali|vega8|radeonvii|all] [--threads N] [--out PATH]
             [--network resnet|mobilenetV1|mobilenetV1-0.5|all]
+            [--trace PATH]
             auto-tune every (layer, algorithm) of the chosen work-list;
             with --out, warm-start from the store at PATH and merge new
-            results back into it
+            results back into it; --trace writes the tuner's virtual
+            cost timeline as Chrome trace_event JSON
+  profile   --network <name> [--device ...] [--routes STORE | --uniform ALG]
+            [--threads N] [--out PATH]
+            print the paper-style per-layer profile of one network pass
+            on one modeled device: simulated ms, analytic stream bytes,
+            FLOPs, the routed algorithm, and each layer's % of the
+            total; with neither --routes nor --uniform the work-list is
+            cold-tuned in process; --out writes the same rows as JSON
   routes    [--store PATH] [--device ...|all]
             print the stored per-layer winners for a device fleet
   simulate  --alg <name> --layer <conv4.x|dw512s1@14|pw512-512@14> [--device ...]
@@ -89,6 +110,11 @@ COMMANDS:
   layers    [--artifacts DIR] [--device-check]
             execute each conv-layer artifact once via PJRT and verify
   help      print this message
+
+ENVIRONMENT:
+  RUST_PALLAS_LOG=error|warn|info|debug
+            progress-log verbosity on stderr (default info); result
+            tables and verdicts always print on stdout
 ";
 
 fn artifact_dir(a: &Args) -> PathBuf {
@@ -161,6 +187,16 @@ fn load_routes_from_store(
             dev.fingerprint(),
         )
     })
+}
+
+/// Write a recorded trace as Chrome `trace_event` JSON — loadable in
+/// Perfetto or chrome://tracing. Every timestamp in the file is
+/// virtual-clock, so the same seed writes byte-identical bytes.
+fn write_trace_file(path: &str, buf: &TraceBuffer) -> Result<(), String> {
+    std::fs::write(path, chrome_trace_json(buf).to_json_string())
+        .map_err(|e| format!("write {path}: {e}"))?;
+    log_info!("wrote {} trace event(s) to {path} ({} dropped)", buf.len(), buf.dropped());
+    Ok(())
 }
 
 fn device(a: &Args) -> Result<DeviceConfig, String> {
@@ -242,6 +278,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "serve" => cmd_serve(rest),
         "bench" => cmd_bench(rest),
         "tune" => cmd_tune(rest),
+        "profile" => cmd_profile(rest),
         "routes" => cmd_routes(rest),
         "simulate" => cmd_simulate(rest),
         "verify" => cmd_verify(rest),
@@ -256,7 +293,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         &[
             "model", "n", "workers", "artifacts", "queue", "rate", "routes", "device",
             "backend", "network", "uniform", "time-scale", "fleet", "policy", "deadline-ms",
-            "admission", "burst", "seed", "threads",
+            "admission", "burst", "seed", "threads", "trace",
         ],
     )?;
     // flags that only one serve mode reads are rejected under the
@@ -280,7 +317,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     }
     match a.get_or("backend", "pjrt") {
         "pjrt" => {
-            reject(&["uniform", "network", "time-scale"], "--backend pjrt")?;
+            // tracing runs on the virtual clock; PJRT executes on the
+            // wall clock, so a trace there would break the determinism
+            // contract — reject rather than record misleading times
+            reject(&["uniform", "network", "time-scale", "trace"], "--backend pjrt")?;
             reject(&FLEET_ONLY, "--backend pjrt")?;
             cmd_serve_pjrt(&a)
         }
@@ -347,14 +387,16 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
     };
     let (pool, warm) = DevicePool::start(&spec, &net, &mut store, threads, queue)
         .map_err(|e| format!("fleet start: {e:#}"))?;
-    println!(
+    log_info!(
         "fleet routes for {}: {} warm from store, {} cold-tuned",
-        net.name, warm.hits, warm.misses
+        net.name,
+        warm.hits,
+        warm.misses
     );
     if let Some(p) = a.get("routes") {
         if warm.misses > 0 {
             store.save(Path::new(p)).map_err(|e| format!("save {p}: {e:#}"))?;
-            println!("merged {} freshly-tuned entries back into {p}", warm.misses);
+            log_info!("merged {} freshly-tuned entries back into {p}", warm.misses);
         }
     }
 
@@ -379,8 +421,22 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
         println!("{:<18} {:>12.3} {:>12.3}", r.label, r.cost_ms, r.sim_ms);
     }
     let cfg = OpenLoopConfig { n, arrival, policy, seed, slo };
-    let report = run_open_loop(&pool, &cfg).map_err(|e| format!("fleet serving: {e:#}"))?;
+    let mut metrics = MetricsRegistry::new();
+    let report = match a.get("trace") {
+        Some(path) => {
+            let mut buf = TraceBuffer::new();
+            let r = run_open_loop_traced(&pool, &cfg, &mut buf, &mut metrics)
+                .map_err(|e| format!("fleet serving: {e:#}"))?;
+            write_trace_file(path, &buf)?;
+            r
+        }
+        None => run_open_loop_traced(&pool, &cfg, &mut NoopSink, &mut metrics)
+            .map_err(|e| format!("fleet serving: {e:#}"))?,
+    };
     pool.shutdown();
+    if crate::trace::log_enabled(crate::trace::LogLevel::Debug) {
+        eprint!("{}", metrics.render());
+    }
     print_fleet_report(&report);
     if report.errors > 0 {
         // errors ledger = engine execution failures + non-finite
@@ -452,13 +508,13 @@ fn cmd_serve_sim(a: &Args) -> Result<(), String> {
         }
         (Some(path), None) => {
             let table = load_routes_from_store(path, &dev, a.get_or("device", "mali"))?;
-            println!("routes for {} (from {path}, tuned):", dev.name);
+            log_info!("routes for {} (from {path}, tuned)", dev.name);
             table
         }
         (None, Some(alg_name)) => {
             let alg = Algorithm::from_name(alg_name)
                 .ok_or_else(|| format!("unknown algorithm '{alg_name}'"))?;
-            println!("routes for {} (uniform {}):", dev.name, alg.name());
+            log_info!("routes for {} (uniform {})", dev.name, alg.name());
             RoutingTable::uniform_for(alg, &net.classes()).map_err(|e| format!("{e:#}"))?
         }
         (None, None) => {
@@ -492,13 +548,32 @@ fn cmd_serve_sim(a: &Args) -> Result<(), String> {
         backend.network_ms()
     );
     let img_shape = backend.input_shape();
-    eprintln!("starting engine: backend={} workers={workers}", backend.label());
+    log_info!("starting engine: backend={} workers={workers}", backend.label());
     let engine = InferenceEngine::start(backend, workers, queue)
         .map_err(|e| format!("engine start: {e:#}"))?;
     let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
     let (summary, results) = engine
         .run_closed_loop(&mut gen, n)
         .map_err(|e| format!("serving: {e:#}"))?;
+    if let Some(path) = a.get("trace") {
+        // Closed-loop completion order depends on thread scheduling, so
+        // the trace is synthesised from the charged virtual cost, not
+        // from wall time: one "engine" track, one exec span per request
+        // laid back-to-back in id order, each exactly the pass time the
+        // engine charged. Same routes, same bytes — every run.
+        let b = engine.backend();
+        let mut buf = TraceBuffer::new();
+        let label = format!("{}/{}", b.device_name(), b.network());
+        buf.set_track(0, &label, &ProfileReport::from_backend(b).phases());
+        let pass_ms = b.network_ms();
+        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        for (i, id) in ids.iter().enumerate() {
+            let start = i as f64 * pass_ms;
+            buf.record(SpanEvent::span(0, Cow::Borrowed("exec"), "serve", start, pass_ms, *id));
+        }
+        write_trace_file(path, &buf)?;
+    }
     let verdict = print_serve_summary(n, &summary, engine.stats.as_ref());
     let classes: Vec<usize> = results.iter().take(8).map(|r| r.class).collect();
     println!("first predicted classes: {classes:?}");
@@ -577,7 +652,7 @@ fn cmd_serve_pjrt(a: &Args) -> Result<(), String> {
         .find(&model)
         .ok_or_else(|| format!("model '{model}' not in manifest"))?;
     let img_shape = art.inputs[0].shape.clone();
-    eprintln!("starting engine: model={model} workers={workers} (compiling…)");
+    log_info!("starting engine: model={model} workers={workers} (compiling…)");
     let engine = InferenceEngine::start_pjrt(&dir, &model, workers, queue)
         .map_err(|e| format!("engine start: {e:#}"))?;
     let mut gen = RequestGen::new(&img_shape, TraceKind::ClosedLoop, 7);
@@ -669,9 +744,9 @@ fn bench_mobilenet(a: &Args) -> Result<(), String> {
     if let Some(path) = a.get("routes") {
         if warm.misses > 0 {
             store.save(Path::new(path)).map_err(|e| format!("save {path}: {e:#}"))?;
-            println!("merged {} freshly-tuned entries back into {path}", warm.misses);
+            log_info!("merged {} freshly-tuned entries back into {path}", warm.misses);
         } else {
-            println!("fully warm from {path}: store unchanged");
+            log_info!("fully warm from {path}: store unchanged");
         }
     }
     println!(
@@ -744,7 +819,8 @@ fn bench_mobilenet(a: &Args) -> Result<(), String> {
     );
 
     let n_rows = rows.len();
-    let mut root = bench_envelope("mobilenet", &devices.iter().collect::<Vec<_>>());
+    // the sweep is a pure function of the device models — no PRNG
+    let mut root = bench_envelope("mobilenet", &devices.iter().collect::<Vec<_>>(), 0);
     root.insert("network".into(), Json::Str(net.name.clone()));
     root.insert("depthwise_beats_im2col_everywhere".into(), Json::Bool(dw_wins_everywhere));
     root.insert("rows".into(), Json::Arr(rows));
@@ -802,8 +878,8 @@ fn bench_serve(a: &Args) -> Result<(), String> {
         let errors = engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed);
         engine.shutdown();
         if errors > 0 {
-            eprintln!(
-                "warning: {device}/{policy}: {errors}/{n} requests failed — \
+            log_warn!(
+                "{device}/{policy}: {errors}/{n} requests failed — \
                  percentiles cover only the successes"
             );
         }
@@ -819,10 +895,11 @@ fn bench_serve(a: &Args) -> Result<(), String> {
         let tuned_table = match covered {
             Some(t) => t,
             None => {
-                eprintln!(
-                    "note: no stored routes covering {} for {} — tuning in \
+                log_warn!(
+                    "no stored routes covering {} for {} — tuning in \
                      process (pass a covering --routes <tunedb> to skip this sweep)",
-                    net.name, dev.name
+                    net.name,
+                    dev.name
                 );
                 // warm-start from whatever the loaded store *does* cover
                 // so a partially-covering store only pays for the gap
@@ -899,7 +976,8 @@ fn bench_serve(a: &Args) -> Result<(), String> {
             Json::Obj(m)
         })
         .collect();
-    let mut root = bench_envelope("serve", &devices.iter().collect::<Vec<_>>());
+    // seed 7: the closed-loop RequestGen seed every cell runs on
+    let mut root = bench_envelope("serve", &devices.iter().collect::<Vec<_>>(), 7);
     root.insert("network".into(), Json::Str(net.name.clone()));
     root.insert("n".into(), Json::Num(n as f64));
     root.insert("workers".into(), Json::Num(workers as f64));
@@ -942,9 +1020,9 @@ fn bench_fleet(a: &Args) -> Result<(), String> {
     if let Some(p) = a.get("routes") {
         if warm.misses > 0 {
             store.save(Path::new(p)).map_err(|e| format!("save {p}: {e:#}"))?;
-            println!("merged {} freshly-tuned entries back into {p}", warm.misses);
+            log_info!("merged {} freshly-tuned entries back into {p}", warm.misses);
         } else {
-            println!("fully warm from {p}: store unchanged");
+            log_info!("fully warm from {p}: store unchanged");
         }
     }
     let cap = pool.capacity_rps();
@@ -1022,11 +1100,10 @@ fn bench_fleet(a: &Args) -> Result<(), String> {
 
     use crate::util::json::Json;
     let devices = spec.devices();
-    let mut root = bench_envelope("fleet", &devices.iter().collect::<Vec<_>>());
+    let mut root = bench_envelope("fleet", &devices.iter().collect::<Vec<_>>(), seed);
     root.insert("network".into(), Json::Str(net.name.clone()));
     root.insert("fleet".into(), Json::Str(spec.render()));
     root.insert("n".into(), Json::Num(n as f64));
-    root.insert("seed".into(), Json::Num(seed as f64));
     root.insert("capacity_rps".into(), Json::Num(cap));
     root.insert("cost_aware_beats_round_robin".into(), Json::Bool(cost_aware_wins));
     root.insert("overload_shed".into(), Json::Num(overload.shed() as f64));
@@ -1041,7 +1118,7 @@ fn bench_fleet(a: &Args) -> Result<(), String> {
 }
 
 fn cmd_tune(argv: &[String]) -> Result<(), String> {
-    let a = Args::parse(argv, &["device", "threads", "out", "network"])?;
+    let a = Args::parse(argv, &["device", "threads", "out", "network", "trace"])?;
     let devices = device_fleet(&a)?;
     let threads = a.get_usize("threads", 8)?;
     let layers = layer_set(&a)?;
@@ -1052,7 +1129,26 @@ fn cmd_tune(argv: &[String]) -> Result<(), String> {
         Some(out) => TuneStore::load_or_empty(Path::new(out)).map_err(|e| format!("{e:#}"))?,
         None => TuneStore::new(),
     };
-    let (db, warm) = tune_layers_warm(&devices, &layers, threads, &mut store);
+    let mut metrics = MetricsRegistry::new();
+    let (db, warm) = match a.get("trace") {
+        Some(path) => {
+            let mut buf = TraceBuffer::new();
+            let r = tune_layers_warm_traced(
+                &devices,
+                &layers,
+                threads,
+                &mut store,
+                &mut buf,
+                &mut metrics,
+            );
+            write_trace_file(path, &buf)?;
+            r
+        }
+        None => tune_layers_warm(&devices, &layers, threads, &mut store),
+    };
+    if crate::trace::log_enabled(crate::trace::LogLevel::Debug) && !metrics.is_empty() {
+        eprint!("{}", metrics.render());
+    }
     println!(
         "tuned {} device(s) x {} layer class(es): {} warm hit(s), {} tuned fresh \
          ({} candidates evaluated, {} pruned)",
@@ -1065,7 +1161,7 @@ fn cmd_tune(argv: &[String]) -> Result<(), String> {
     );
     if let Some(out) = a.get("out") {
         store.save(Path::new(out)).map_err(|e| format!("save {out}: {e:#}"))?;
-        println!(
+        log_info!(
             "tunedb: {} device(s), {} entries -> {out}",
             store.device_count(),
             store.len()
@@ -1100,6 +1196,57 @@ fn cmd_tune(argv: &[String]) -> Result<(), String> {
         }
         let table = RoutingTable::from_tuning(&db, dev.name);
         print_network_estimates(&table, dev);
+    }
+    Ok(())
+}
+
+/// `ilpm profile` — the paper-style per-layer cost profile of one
+/// network pass on one modeled device: simulated ms, analytic stream
+/// bytes and FLOPs, the routed algorithm, and each layer's share of
+/// the total. Routes come from `--routes <tunedb>` or `--uniform
+/// <alg>`; with neither, the network's work-list is cold-tuned in
+/// process. The printed rows sum to exactly the pass time the sim
+/// backend charges every served request
+/// ([`ProfileReport::from_backend`]), so the profile and the serving
+/// ledger cannot disagree about where the time went.
+fn cmd_profile(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["device", "network", "routes", "uniform", "threads", "out"])?;
+    let dev = device(&a)?;
+    let net = network(&a)?;
+    let table = match (a.get("routes"), a.get("uniform")) {
+        (Some(_), Some(_)) => {
+            return Err(
+                "--routes and --uniform are contradictory: tuned per-layer routing \
+                 or a uniform baseline, pick one"
+                    .to_string(),
+            )
+        }
+        (Some(path), None) => {
+            let table = load_routes_from_store(path, &dev, a.get_or("device", "mali"))?;
+            log_info!("profiling {} on {} (routes from {path})", net.name, dev.name);
+            table
+        }
+        (None, Some(alg_name)) => {
+            let alg = Algorithm::from_name(alg_name)
+                .ok_or_else(|| format!("unknown algorithm '{alg_name}'"))?;
+            log_info!("profiling {} on {} (uniform {})", net.name, dev.name, alg.name());
+            RoutingTable::uniform_for(alg, &net.classes()).map_err(|e| format!("{e:#}"))?
+        }
+        (None, None) => {
+            let threads = a.get_usize("threads", 8)?;
+            log_info!("no --routes/--uniform: tuning {} for {} in process", net.name, dev.name);
+            let mut scratch = TuneStore::new();
+            let (db, _) = tune_layers_warm(&[dev.clone()], &net.classes(), threads, &mut scratch);
+            RoutingTable::from_tuning(&db, dev.name)
+        }
+    };
+    let backend = SimBackend::new(&dev, &table, &net, 0.0).map_err(|e| format!("{e:#}"))?;
+    let report = ProfileReport::from_backend(&backend);
+    print!("{}", report.render());
+    if let Some(out) = a.get("out") {
+        std::fs::write(out, report.to_json().to_json_string())
+            .map_err(|e| format!("write {out}: {e}"))?;
+        log_info!("wrote {out}");
     }
     Ok(())
 }
@@ -1444,6 +1591,13 @@ mod tests {
             Some(crate::metrics::BENCH_SCHEMA_VERSION),
             "{bench}: missing/wrong schema_version"
         );
+        // v2 additions: the arrival-PRNG seed and the tool version
+        assert!(j.get("seed").and_then(Json::as_u64).is_some(), "{bench}: missing seed");
+        assert_eq!(
+            j.get("tool_version").and_then(Json::as_str),
+            Some(env!("CARGO_PKG_VERSION")),
+            "{bench}: missing/wrong tool_version"
+        );
         assert_eq!(j.get("bench").and_then(Json::as_str), Some(bench));
         let listed = j.get("devices").and_then(Json::as_arr).expect("devices array");
         assert_eq!(listed.len(), devices.len(), "{bench}: device list length");
@@ -1641,6 +1795,84 @@ mod tests {
         let err = run(&sv(&["serve", "--routes", &p, "--device", "mali"])).unwrap_err();
         assert!(err.contains("fingerprint"), "{err}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn profile_uniform_writes_rows_that_sum_to_the_total() {
+        use crate::util::json::Json;
+        let out =
+            std::env::temp_dir().join(format!("ilpm_cli_profile_{}.json", std::process::id()));
+        let o = out.to_str().unwrap().to_string();
+        run(&sv(&[
+            "profile", "--network", "resnet18", "--device", "mali", "--uniform", "ilpm", "--out",
+            &o,
+        ]))
+        .expect("profile");
+        let j = Json::parse(&std::fs::read_to_string(&out).expect("written")).expect("json");
+        let total = j.get("total_ms").and_then(Json::as_f64).expect("total_ms");
+        let rows = j.get("rows").and_then(Json::as_arr).expect("rows");
+        assert_eq!(rows.len(), 4, "resnet has four layer classes");
+        let sum: f64 =
+            rows.iter().map(|r| r.get("sim_ms_total").and_then(Json::as_f64).unwrap()).sum();
+        assert!((sum - total).abs() < 1e-9, "{sum} != {total}");
+        std::fs::remove_file(&out).ok();
+        // contradictory routing flags are rejected, same as serve
+        let err = run(&sv(&["profile", "--routes", "x.json", "--uniform", "im2col"])).unwrap_err();
+        assert!(err.contains("contradictory"), "{err}");
+        assert!(run(&sv(&["profile", "--network", "vgg19"])).is_err());
+    }
+
+    #[test]
+    fn serve_fleet_writes_a_chrome_trace() {
+        use crate::util::json::Json;
+        let out = std::env::temp_dir()
+            .join(format!("ilpm_cli_fleet_trace_{}.json", std::process::id()));
+        let o = out.to_str().unwrap().to_string();
+        run(&sv(&["serve", "--fleet", "vega8:1", "--n", "8", "--seed", "3", "--trace", &o]))
+            .expect("traced fleet serve");
+        let text = std::fs::read_to_string(&out).expect("trace written");
+        let j = Json::parse(&text).expect("valid chrome trace json");
+        let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        let execs = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("exec"))
+            .count();
+        assert!(execs >= 1, "at least one exec span");
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn serve_sim_trace_is_deterministic() {
+        // closed-loop completion order is thread-scheduled, but the
+        // exported trace is synthesised from the charged virtual cost:
+        // two runs must write byte-identical files
+        let base = std::env::temp_dir().join(format!("ilpm_sim_trace_{}", std::process::id()));
+        let p1 = format!("{}_a.json", base.display());
+        let p2 = format!("{}_b.json", base.display());
+        for p in [&p1, &p2] {
+            run(&sv(&[
+                "serve", "--backend", "sim", "--uniform", "direct", "--device", "mali", "--n",
+                "5", "--workers", "2", "--time-scale", "0", "--trace", p,
+            ]))
+            .expect("traced sim serve");
+        }
+        let a = std::fs::read(&p1).expect("first trace");
+        let b = std::fs::read(&p2).expect("second trace");
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same routes must trace byte-identically");
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn tune_writes_a_tuner_cost_trace() {
+        let out =
+            std::env::temp_dir().join(format!("ilpm_tune_trace_{}.json", std::process::id()));
+        let o = out.to_str().unwrap().to_string();
+        run(&sv(&["tune", "--device", "mali", "--trace", &o])).expect("traced tune");
+        let text = std::fs::read_to_string(&out).expect("trace written");
+        assert!(text.contains("\"cat\":\"tune\""), "tuner spans present in {o}");
+        std::fs::remove_file(&out).ok();
     }
 }
 

@@ -28,5 +28,7 @@ mod spec;
 
 pub use dispatch::{DispatchPolicy, ReplicaView};
 pub use pool::{resolve_routes, DevicePool, PoolReplica};
-pub use serve::{run_open_loop, FleetReport, OpenLoopConfig, ReplicaReport, SloConfig};
+pub use serve::{
+    run_open_loop, run_open_loop_traced, FleetReport, OpenLoopConfig, ReplicaReport, SloConfig,
+};
 pub use spec::{FleetEntry, FleetSpec, MAX_REPLICAS};

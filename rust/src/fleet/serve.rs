@@ -30,6 +30,7 @@
 //! exactly when the cost model and reality diverge (or admission is
 //! disabled), which is the distinction worth measuring.
 
+use std::borrow::Cow;
 use std::collections::VecDeque;
 use std::time::Duration;
 
@@ -39,6 +40,7 @@ use super::dispatch::{DispatchPolicy, ReplicaView};
 use super::pool::DevicePool;
 use crate::coordinator::Submission;
 use crate::metrics::{LatencyRecorder, LatencySummary};
+use crate::trace::{MetricsRegistry, NoopSink, SpanEvent, TraceSink};
 use crate::util::json::Json;
 use crate::workload::{RequestGen, TraceKind};
 
@@ -205,8 +207,35 @@ struct ReplicaState {
 }
 
 /// Drive `cfg.n` open-loop requests through the pool. See the module
-/// docs for the two-clock contract.
+/// docs for the two-clock contract. Equivalent to
+/// [`run_open_loop_traced`] with tracing off and a throwaway registry —
+/// the report is bit-identical either way.
 pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetReport> {
+    run_open_loop_traced(pool, cfg, &mut NoopSink, &mut MetricsRegistry::new())
+}
+
+/// [`run_open_loop`] with observability: spans/instants into `sink` on
+/// the **virtual clock** (same seed, byte-identical trace) and run
+/// tallies into `metrics` under `fleet.*` names.
+///
+/// One sink track per replica: a `queue` span when an admitted request
+/// waits, an `exec` span for its service time, `shed_queue` /
+/// `shed_deadline` / `violated` instants for the SLO ledger. Span
+/// names are `&'static` literals and every site is guarded on
+/// [`TraceSink::enabled`], so with tracing off the per-request cost is
+/// one branch — no allocation. Per-layer detail is *not* recorded per
+/// request; exporters synthesise it from the per-track phase costs
+/// registered up front.
+///
+/// The returned report's admitted/shed/violated counts are read back
+/// out of `metrics` (as deltas over its incoming values), so the
+/// registry and the report cannot drift apart.
+pub fn run_open_loop_traced(
+    pool: &DevicePool,
+    cfg: &OpenLoopConfig,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+) -> Result<FleetReport> {
     ensure!(cfg.n >= 1, "open loop needs at least one request");
     match cfg.arrival.rate_hz() {
         Some(r) if r.is_finite() && r > 0.0 => {}
@@ -235,6 +264,28 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
         .iter()
         .map(|r| r.engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed))
         .collect();
+
+    // one trace track per replica; the fixed per-pass layer costs let
+    // exporters expand exec spans into per-layer children later
+    if sink.enabled() {
+        for (i, r) in replicas.iter().enumerate() {
+            let phases: Vec<(String, f64)> = r
+                .engine
+                .backend()
+                .plan()
+                .iter()
+                .map(|p| (format!("{}/{}", p.layer.name(), p.algorithm.name()), p.sim_ms_total()))
+                .collect();
+            sink.set_track(i as u32, &r.label, &phases);
+        }
+    }
+    // incoming counter values: the report is built from registry deltas
+    let base = [
+        metrics.counter("fleet.requests_admitted"),
+        metrics.counter("fleet.requests_shed_deadline"),
+        metrics.counter("fleet.requests_shed_queue"),
+        metrics.counter("fleet.requests_violated"),
+    ];
 
     let mut agg = LatencyRecorder::new();
     let (mut shed_deadline, mut shed_queue, mut violated) = (0usize, 0usize, 0usize);
@@ -267,6 +318,16 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
         if st.completions.len() >= pool.queue_depth() {
             st.shed += 1;
             shed_queue += 1;
+            if sink.enabled() {
+                let ev = SpanEvent::instant(
+                    pick as u32,
+                    Cow::Borrowed("shed_queue"),
+                    "slo",
+                    now_ms,
+                    seq as u64,
+                );
+                sink.record(ev);
+            }
             continue;
         }
         // SLO admission: shed what the cost model predicts will miss
@@ -276,6 +337,16 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
                 if predicted > d {
                     st.shed += 1;
                     shed_deadline += 1;
+                    if sink.enabled() {
+                        let ev = SpanEvent::instant(
+                            pick as u32,
+                            Cow::Borrowed("shed_deadline"),
+                            "slo",
+                            now_ms,
+                            seq as u64,
+                        );
+                        sink.record(ev);
+                    }
                     continue;
                 }
             }
@@ -288,9 +359,41 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
         st.completions.push_back(completion);
         span_ms = span_ms.max(completion);
         let latency_ms = completion - now_ms;
+        if sink.enabled() {
+            if start > now_ms {
+                let ev = SpanEvent::span(
+                    pick as u32,
+                    Cow::Borrowed("queue"),
+                    "fleet",
+                    now_ms,
+                    start - now_ms,
+                    seq as u64,
+                );
+                sink.record(ev);
+            }
+            let ev = SpanEvent::span(
+                pick as u32,
+                Cow::Borrowed("exec"),
+                "fleet",
+                start,
+                rep.sim_ms,
+                seq as u64,
+            );
+            sink.record(ev);
+        }
         if cfg.slo.deadline_ms.is_some_and(|d| latency_ms > d) {
             st.violated += 1;
             violated += 1;
+            if sink.enabled() {
+                let ev = SpanEvent::instant(
+                    pick as u32,
+                    Cow::Borrowed("violated"),
+                    "slo",
+                    completion,
+                    seq as u64,
+                );
+                sink.record(ev);
+            }
         }
         // record_ms cannot panic on a non-finite virtual latency (a
         // poisoned cost signal); such samples are dropped, counted by
@@ -352,7 +455,27 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
             latency: st.rec.summary(span),
         })
         .collect();
-    let admitted = states.iter().map(|s| s.admitted).sum();
+    let admitted: usize = states.iter().map(|s| s.admitted).sum();
+
+    // register the run's tallies; the report below reads them back out
+    metrics.add("fleet.requests_submitted", cfg.n as u64);
+    metrics.add("fleet.requests_admitted", admitted as u64);
+    metrics.add("fleet.requests_shed_deadline", shed_deadline as u64);
+    metrics.add("fleet.requests_shed_queue", shed_queue as u64);
+    metrics.add("fleet.requests_violated", violated as u64);
+    metrics.add("fleet.engine_errors", errors);
+    metrics.set_gauge("fleet.span_ms", span_ms);
+    metrics.put_histogram("fleet.latency_us", agg.histogram().clone());
+    for (st, r) in states.iter().zip(replicas) {
+        metrics.add(&format!("fleet.replica.{}.admitted", r.label), st.admitted as u64);
+        metrics.add(&format!("fleet.replica.{}.shed", r.label), st.shed as u64);
+        metrics.add(&format!("fleet.replica.{}.violated", r.label), st.violated as u64);
+        for p in r.engine.backend().plan() {
+            let name = format!("fleet.algorithm.{}.convs_dispatched", p.algorithm.name());
+            metrics.add(&name, (st.admitted * p.convs) as u64);
+        }
+    }
+
     Ok(FleetReport {
         policy: cfg.policy,
         network: pool.network().to_string(),
@@ -361,10 +484,10 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
         deadline_ms: cfg.slo.deadline_ms,
         admission: cfg.slo.admission,
         submitted: cfg.n,
-        admitted,
-        shed_deadline,
-        shed_queue,
-        violated,
+        admitted: (metrics.counter("fleet.requests_admitted") - base[0]) as usize,
+        shed_deadline: (metrics.counter("fleet.requests_shed_deadline") - base[1]) as usize,
+        shed_queue: (metrics.counter("fleet.requests_shed_queue") - base[2]) as usize,
+        violated: (metrics.counter("fleet.requests_violated") - base[3]) as usize,
         errors,
         span_ms,
         aggregate: agg.summary(span),
@@ -533,6 +656,81 @@ mod tests {
             r.to_json().to_json_string()
         };
         assert_eq!(run(), run(), "virtual-clock runs must be bit-reproducible");
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_report_bit_for_bit() {
+        let c = |p: &DevicePool| {
+            cfg(
+                DispatchPolicy::CostAware,
+                1.5 * p.capacity_rps(),
+                SloConfig { deadline_ms: Some(500.0), admission: true },
+            )
+        };
+        let p1 = pool(8);
+        let plain = run_open_loop(&p1, &c(&p1)).expect("plain").to_json().to_json_string();
+        p1.shutdown();
+        let p2 = pool(8);
+        let mut buf = crate::trace::TraceBuffer::new();
+        let mut m = crate::trace::MetricsRegistry::new();
+        let traced = run_open_loop_traced(&p2, &c(&p2), &mut buf, &mut m)
+            .expect("traced")
+            .to_json()
+            .to_json_string();
+        p2.shutdown();
+        assert_eq!(plain, traced, "tracing must not perturb the report");
+        assert!(!buf.is_empty(), "a traced run must record events");
+    }
+
+    #[test]
+    fn same_seed_chrome_traces_are_byte_identical() {
+        let run = || {
+            let p = pool(8);
+            let c = cfg(
+                DispatchPolicy::CostAware,
+                2.0 * p.capacity_rps(),
+                SloConfig { deadline_ms: Some(200.0), admission: true },
+            );
+            let mut buf = crate::trace::TraceBuffer::new();
+            let mut m = crate::trace::MetricsRegistry::new();
+            run_open_loop_traced(&p, &c, &mut buf, &mut m).expect("run");
+            p.shutdown();
+            crate::trace::chrome_trace_json(&buf).to_json_string()
+        };
+        let a = run();
+        assert_eq!(a, run(), "virtual-clock traces must be bit-reproducible");
+        assert!(a.contains("\"exec\""), "trace must carry exec spans");
+    }
+
+    #[test]
+    fn metrics_ledger_matches_the_report() {
+        let p = pool(8);
+        let c = cfg(
+            DispatchPolicy::CostAware,
+            2.0 * p.capacity_rps(),
+            SloConfig { deadline_ms: Some(200.0), admission: true },
+        );
+        // a deliberately tiny ring: event drops must never perturb the
+        // ledger, only the retained trace window
+        let mut buf = crate::trace::TraceBuffer::with_capacity(4);
+        let mut m = crate::trace::MetricsRegistry::new();
+        let r = run_open_loop_traced(&p, &c, &mut buf, &mut m).expect("run");
+        p.shutdown();
+        assert_eq!(m.counter("fleet.requests_submitted") as usize, r.submitted);
+        assert_eq!(m.counter("fleet.requests_admitted") as usize, r.admitted);
+        assert_eq!(m.counter("fleet.requests_shed_deadline") as usize, r.shed_deadline);
+        assert_eq!(m.counter("fleet.requests_shed_queue") as usize, r.shed_queue);
+        assert_eq!(m.counter("fleet.requests_violated") as usize, r.violated);
+        let per_replica: u64 = r
+            .replicas
+            .iter()
+            .map(|rr| m.counter(&format!("fleet.replica.{}.admitted", rr.label)))
+            .sum();
+        assert_eq!(per_replica as usize, r.admitted);
+        let hist = m.histogram("fleet.latency_us").expect("latency histogram");
+        assert_eq!(hist.count() as usize, r.aggregate.count);
+        assert_eq!(buf.len(), 4, "ring stayed at capacity");
+        assert!(buf.dropped() > 0, "overflow must be counted");
     }
 
     #[test]

@@ -19,9 +19,13 @@
 //!   durable across processes (tune once per device, serve from disk
 //!   forever), the [`fleet`] layer that serves open-loop traffic
 //!   across many heterogeneous simulated devices with cost-aware
-//!   dispatch and SLO admission control, and the [`conformance`]
+//!   dispatch and SLO admission control, the [`conformance`]
 //!   suite that differentially verifies every lowering against the
-//!   paper's closed-form accounting (`ilpm verify`).
+//!   paper's closed-form accounting (`ilpm verify`), and the [`trace`]
+//!   observability layer — deterministic virtual-clock span recording
+//!   with Chrome-trace/tree exporters, a metrics registry, the
+//!   `RUST_PALLAS_LOG` log facade, and the paper-style per-layer
+//!   profile behind `ilpm profile`.
 //!
 //! See README.md for the CLI front door, and DESIGN.md for the
 //! paper→module map, the workload tables, the grouped-convolution
@@ -37,6 +41,7 @@ pub mod fleet;
 pub mod metrics;
 pub mod runtime;
 pub mod simulator;
+pub mod trace;
 pub mod tunedb;
 pub mod util;
 pub mod workload;

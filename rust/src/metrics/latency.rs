@@ -2,10 +2,28 @@
 
 use std::time::Duration;
 
+use crate::trace::LogHistogram;
+
+/// Exact samples kept before the recorder switches to histogram-only
+/// percentiles. Below this, summaries are bit-identical to the original
+/// sort-based implementation; above it, memory stays bounded while
+/// percentiles carry at most one log-bucket of relative error
+/// ([`crate::trace::BUCKET_RELATIVE_ERROR`], ~9 %).
+const EXACT_CAP: usize = 4096;
+
 /// Collects per-request latencies and summarises them.
+///
+/// Memory is bounded at fleet scale: the first [`EXACT_CAP`] samples
+/// are kept exactly (small-n percentiles stay exact), and every sample
+/// additionally lands in a fixed-size [`LogHistogram`] that takes over
+/// the percentile estimates once the exact window overflows. Recording
+/// a million samples costs the same memory as recording five thousand.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
+    /// The first [`EXACT_CAP`] finite samples, microseconds.
     samples_us: Vec<f64>,
+    /// Every finite sample, log-bucketed (microseconds).
+    hist: LogHistogram,
     /// Non-finite samples rejected by [`LatencyRecorder::record_ms`] —
     /// counted, never sorted (a single NaN used to panic the whole
     /// serve/fleet run inside the percentile sort).
@@ -42,7 +60,11 @@ impl LatencyRecorder {
     /// input, which is why the fleet's virtual clock uses it.
     pub fn record_ms(&mut self, ms: f64) {
         if ms.is_finite() {
-            self.samples_us.push(ms * 1e3);
+            let us = ms * 1e3;
+            self.hist.observe(us);
+            if self.samples_us.len() < EXACT_CAP {
+                self.samples_us.push(us);
+            }
         } else {
             self.dropped_nonfinite += 1;
         }
@@ -53,12 +75,20 @@ impl LatencyRecorder {
         self.dropped_nonfinite
     }
 
+    /// Finite samples recorded (exact, even past the bounded window).
     pub fn len(&self) -> usize {
-        self.samples_us.len()
+        self.hist.count() as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_us.is_empty()
+        self.hist.is_empty()
+    }
+
+    /// The log-bucketed histogram over every finite sample
+    /// (microseconds) — what the fleet hands the metrics registry at
+    /// end of run.
+    pub fn histogram(&self) -> &LogHistogram {
+        &self.hist
     }
 
     /// Summarise; `wall` is the wall-clock spanned by the run (for
@@ -69,23 +99,39 @@ impl LatencyRecorder {
     /// failed still need a well-formed row in BENCH_*.json, and JSON
     /// has no encoding for NaN, so non-finite numbers must never reach
     /// [`LatencySummary::to_json`].
+    ///
+    /// Up to [`EXACT_CAP`] samples the percentiles are exact order
+    /// statistics; past that they come from the bounded histogram
+    /// (mean/max stay exact at any scale).
     pub fn summary(&self, wall: Duration) -> LatencySummary {
-        if self.samples_us.is_empty() {
+        let n = self.hist.count() as usize;
+        if n == 0 {
             return LatencySummary::zero();
         }
-        let mut s = self.samples_us.clone();
-        // total order: record_ms already rejects non-finite samples,
-        // and total_cmp keeps even a hypothetical NaN from panicking
-        s.sort_by(f64::total_cmp);
-        let pct = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)] / 1e3;
+        if n <= EXACT_CAP {
+            let mut s = self.samples_us.clone();
+            // total order: record_ms already rejects non-finite samples,
+            // and total_cmp keeps even a hypothetical NaN from panicking
+            s.sort_by(f64::total_cmp);
+            let pct = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)] / 1e3;
+            return LatencySummary {
+                count: s.len(),
+                mean_ms: s.iter().sum::<f64>() / s.len() as f64 / 1e3,
+                p50_ms: pct(0.50),
+                p95_ms: pct(0.95),
+                p99_ms: pct(0.99),
+                max_ms: s[s.len() - 1] / 1e3,
+                throughput_rps: s.len() as f64 / wall.as_secs_f64().max(1e-9),
+            };
+        }
         LatencySummary {
-            count: s.len(),
-            mean_ms: s.iter().sum::<f64>() / s.len() as f64 / 1e3,
-            p50_ms: pct(0.50),
-            p95_ms: pct(0.95),
-            p99_ms: pct(0.99),
-            max_ms: s[s.len() - 1] / 1e3,
-            throughput_rps: s.len() as f64 / wall.as_secs_f64().max(1e-9),
+            count: n,
+            mean_ms: self.hist.mean() / 1e3,
+            p50_ms: self.hist.percentile(0.50) / 1e3,
+            p95_ms: self.hist.percentile(0.95) / 1e3,
+            p99_ms: self.hist.percentile(0.99) / 1e3,
+            max_ms: self.hist.max() / 1e3,
+            throughput_rps: n as f64 / wall.as_secs_f64().max(1e-9),
         }
     }
 }
@@ -212,6 +258,57 @@ mod tests {
         r.record_ms(-1.0);
         assert_eq!(r.len(), 1);
         assert_eq!(r.dropped_nonfinite(), 0);
+    }
+
+    #[test]
+    fn fleet_scale_percentiles_stay_within_one_bucket_relative_error() {
+        // past EXACT_CAP the recorder answers from the bounded
+        // histogram; p50/p99 on a known distribution must stay within
+        // one log-bucket's relative error of the exact order statistic
+        use crate::trace::BUCKET_RELATIVE_ERROR;
+        use crate::util::prng::Rng;
+        let mut r = LatencyRecorder::new();
+        let mut rng = Rng::new(0xB0CE7);
+        let mut exact: Vec<f64> = Vec::new();
+        for _ in 0..200_000 {
+            // heavy-ish tail over ~three decades, deterministic
+            let v = 0.5 + 80.0 * rng.f64() * rng.f64() * rng.f64();
+            r.record_ms(v);
+            exact.push(v);
+        }
+        assert_eq!(r.len(), 200_000);
+        assert!(r.samples_us.len() <= EXACT_CAP, "exact window must stay bounded");
+        exact.sort_by(f64::total_cmp);
+        let s = r.summary(Duration::from_secs(1));
+        assert_eq!(s.count, 200_000);
+        for (got, p) in [(s.p50_ms, 0.50), (s.p99_ms, 0.99)] {
+            let want = exact[((exact.len() as f64 * p) as usize).min(exact.len() - 1)];
+            let rel = (got - want).abs() / want;
+            assert!(
+                rel <= BUCKET_RELATIVE_ERROR,
+                "p{}: got {got}, exact {want}, rel {rel}",
+                p * 100.0
+            );
+        }
+        // extremes and mean are exact at any scale
+        let mean: f64 = exact.iter().sum::<f64>() / exact.len() as f64;
+        assert!((s.mean_ms - mean).abs() / mean < 1e-9);
+        assert!((s.max_ms - exact[exact.len() - 1]).abs() < 1e-9);
+        assert_all_finite(&s.to_json());
+    }
+
+    #[test]
+    fn small_runs_keep_exact_percentiles() {
+        // at-or-below the exact window, the summary is the exact
+        // sort-based one — bench outputs for n <= 4096 are unchanged
+        let mut r = LatencyRecorder::new();
+        for i in 1..=257 {
+            r.record_ms(i as f64);
+        }
+        let s = r.summary(Duration::from_secs(1));
+        assert_eq!(s.count, 257);
+        assert!((s.p50_ms - 129.0).abs() < 1e-12, "exact order statistic, not a bucket centre");
+        assert!((s.max_ms - 257.0).abs() < 1e-12);
     }
 
     #[test]

@@ -20,16 +20,22 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// Version of the shared BENCH_*.json envelope. Bump on any
-/// incompatible change to the common fields (`schema_version`, `bench`,
-/// `devices`); bench-specific payloads evolve independently.
-pub const BENCH_SCHEMA_VERSION: u64 = 1;
+/// incompatible change to the common fields; bench-specific payloads
+/// evolve independently.
+///
+/// v2: added `seed` (the PRNG seed every stochastic number in the
+/// payload derives from) and `tool_version` (`CARGO_PKG_VERSION`), so
+/// a committed BENCH trajectory is self-describing and reproducible.
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
 
 /// The common root fields every BENCH_*.json emitter starts from: the
-/// envelope schema version, the bench name, and the full fingerprints
-/// of the device models priced — so a perf trajectory can tell "the
-/// code got slower" apart from "the device model changed" (the same
-/// invalidation story the tunedb store uses).
-pub fn bench_envelope(bench: &str, devices: &[&DeviceConfig]) -> BTreeMap<String, Json> {
+/// envelope schema version, the bench name, the full fingerprints of
+/// the device models priced — so a perf trajectory can tell "the code
+/// got slower" apart from "the device model changed" (the same
+/// invalidation story the tunedb store uses) — plus the arrival-PRNG
+/// seed and the tool version that produced the file. Benches with no
+/// stochastic component pass seed 0.
+pub fn bench_envelope(bench: &str, devices: &[&DeviceConfig], seed: u64) -> BTreeMap<String, Json> {
     let devs: Vec<Json> = devices
         .iter()
         .map(|d| {
@@ -43,6 +49,8 @@ pub fn bench_envelope(bench: &str, devices: &[&DeviceConfig]) -> BTreeMap<String
     root.insert("schema_version".into(), Json::Num(BENCH_SCHEMA_VERSION as f64));
     root.insert("bench".into(), Json::Str(bench.to_string()));
     root.insert("devices".into(), Json::Arr(devs));
+    root.insert("seed".into(), Json::Num(seed as f64));
+    root.insert("tool_version".into(), Json::Str(env!("CARGO_PKG_VERSION").to_string()));
     root
 }
 
@@ -54,9 +62,15 @@ mod envelope_tests {
     fn envelope_carries_schema_and_fingerprints() {
         let devs = DeviceConfig::paper_devices();
         let refs: Vec<&DeviceConfig> = devs.iter().collect();
-        let root = Json::Obj(bench_envelope("serve", &refs));
+        let root = Json::Obj(bench_envelope("serve", &refs, 77));
         assert_eq!(root.get("schema_version").and_then(Json::as_u64), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(root.get("schema_version").and_then(Json::as_u64), Some(2));
         assert_eq!(root.get("bench").and_then(Json::as_str), Some("serve"));
+        assert_eq!(root.get("seed").and_then(Json::as_u64), Some(77));
+        assert_eq!(
+            root.get("tool_version").and_then(Json::as_str),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
         let listed = root.get("devices").and_then(Json::as_arr).expect("devices");
         assert_eq!(listed.len(), devs.len());
         for (j, d) in listed.iter().zip(&devs) {

@@ -1,0 +1,208 @@
+//! Trace exporters: Chrome `trace_event` JSON (loadable in Perfetto /
+//! `chrome://tracing`) and a plain-text tree dump.
+//!
+//! Both exporters are pure functions of a [`TraceBuffer`], so a buffer
+//! filled from the virtual clock exports byte-identically across runs
+//! with the same seed. The Chrome exporter lays out one track
+//! (`tid`) per replica, duration events (`ph:"X"`) for queue/exec
+//! spans, instant events (`ph:"i"`) for shed/violation marks, and
+//! synthesises per-layer child spans under every `exec` span from the
+//! track's registered per-pass phase costs — the recorder never pays
+//! for per-layer events on the hot path.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::sink::{SpanEvent, TraceBuffer};
+use crate::util::json::Json;
+
+/// Export a buffer as Chrome `trace_event` JSON. Timestamps convert
+/// from virtual-clock milliseconds to the format's microseconds.
+pub fn chrome_trace_json(buf: &TraceBuffer) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (tid, meta) in buf.tracks().iter().enumerate() {
+        if meta.label.is_empty() {
+            continue;
+        }
+        let mut args = BTreeMap::new();
+        args.insert("name".into(), Json::Str(meta.label.clone()));
+        let mut m = BTreeMap::new();
+        m.insert("ph".into(), Json::Str("M".into()));
+        m.insert("pid".into(), Json::Num(1.0));
+        m.insert("tid".into(), Json::Num(tid as f64));
+        m.insert("name".into(), Json::Str("thread_name".into()));
+        m.insert("args".into(), Json::Obj(args));
+        events.push(Json::Obj(m));
+    }
+    for ev in buf.events() {
+        events.push(event_json(ev));
+        if ev.name == "exec" && ev.dur_ms > 0.0 {
+            if let Some(meta) = buf.track(ev.track) {
+                push_layer_children(&mut events, ev, &meta.phases);
+            }
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    root.insert("traceEvents".into(), Json::Arr(events));
+    Json::Obj(root)
+}
+
+fn event_json(ev: &SpanEvent) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("id".into(), Json::Num(ev.id as f64));
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(ev.name.clone().into_owned()));
+    m.insert("cat".into(), Json::Str(ev.cat.into()));
+    m.insert("pid".into(), Json::Num(1.0));
+    m.insert("tid".into(), Json::Num(ev.track as f64));
+    m.insert("ts".into(), Json::Num(ev.start_ms * 1e3));
+    if ev.is_instant() {
+        m.insert("ph".into(), Json::Str("i".into()));
+        m.insert("s".into(), Json::Str("t".into()));
+    } else {
+        m.insert("ph".into(), Json::Str("X".into()));
+        m.insert("dur".into(), Json::Num(ev.dur_ms * 1e3));
+    }
+    m.insert("args".into(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+/// Expand one exec span into per-layer children. The registered phase
+/// costs are scaled to the span's duration (identical when the span is
+/// one simulated pass, which it is on the fleet path), so children
+/// tile the parent exactly.
+fn push_layer_children(out: &mut Vec<Json>, parent: &SpanEvent, phases: &[(String, f64)]) {
+    let total: f64 = phases.iter().map(|(_, ms)| ms).sum();
+    if total <= 0.0 {
+        return;
+    }
+    let scale = parent.dur_ms / total;
+    let mut cursor_ms = parent.start_ms;
+    for (name, ms) in phases {
+        let dur_ms = ms * scale;
+        let mut args = BTreeMap::new();
+        args.insert("id".into(), Json::Num(parent.id as f64));
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(name.clone()));
+        m.insert("cat".into(), Json::Str("layer".into()));
+        m.insert("ph".into(), Json::Str("X".into()));
+        m.insert("pid".into(), Json::Num(1.0));
+        m.insert("tid".into(), Json::Num(parent.track as f64));
+        m.insert("ts".into(), Json::Num(cursor_ms * 1e3));
+        m.insert("dur".into(), Json::Num(dur_ms * 1e3));
+        m.insert("args".into(), Json::Obj(args));
+        out.push(Json::Obj(m));
+        cursor_ms += dur_ms;
+    }
+}
+
+/// Plain-text tree dump: one block per track, events in recording
+/// order, per-layer children indented under each exec span.
+pub fn render_tree(buf: &TraceBuffer) -> String {
+    let mut out = format!("trace: {} events, {} dropped\n", buf.len(), buf.dropped());
+    let mut tracks: BTreeSet<u32> = buf.events().map(|e| e.track).collect();
+    for (tid, meta) in buf.tracks().iter().enumerate() {
+        if !meta.label.is_empty() {
+            tracks.insert(tid as u32);
+        }
+    }
+    for tid in tracks {
+        let label = buf.track(tid).map_or("(unnamed)", |m| m.label.as_str());
+        out.push_str(&format!("track {tid}: {label}\n"));
+        for ev in buf.events().filter(|e| e.track == tid) {
+            if ev.is_instant() {
+                out.push_str(&format!("  {:>12.3}ms  !{}  #{}\n", ev.start_ms, ev.name, ev.id));
+            } else {
+                out.push_str(&format!(
+                    "  {:>12.3}ms  {} +{:.3}ms  #{}\n",
+                    ev.start_ms, ev.name, ev.dur_ms, ev.id
+                ));
+            }
+            if ev.name == "exec" && ev.dur_ms > 0.0 {
+                if let Some(meta) = buf.track(ev.track) {
+                    let total: f64 = meta.phases.iter().map(|(_, ms)| ms).sum();
+                    if total > 0.0 {
+                        for (name, ms) in &meta.phases {
+                            let dur = ms * ev.dur_ms / total;
+                            out.push_str(&format!("      {name} {dur:.3}ms\n"));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::sink::TraceSink;
+    use std::borrow::Cow;
+
+    fn sample_buffer() -> TraceBuffer {
+        let mut b = TraceBuffer::new();
+        b.set_track(
+            0,
+            "mali#0",
+            &[("conv2.x/ilpm".to_string(), 1.0), ("conv3.x/ilpm".to_string(), 3.0)],
+        );
+        b.record(SpanEvent::span(0, Cow::Borrowed("queue"), "fleet", 0.0, 2.0, 7));
+        b.record(SpanEvent::span(0, Cow::Borrowed("exec"), "fleet", 2.0, 8.0, 7));
+        b.record(SpanEvent::instant(0, Cow::Borrowed("shed_queue"), "slo", 9.0, 8));
+        b
+    }
+
+    #[test]
+    fn chrome_export_has_metadata_spans_instants_and_children() {
+        let j = chrome_trace_json(&sample_buffer());
+        let evs = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        let ph = |e: &Json| e.get("ph").and_then(Json::as_str).unwrap().to_string();
+        let meta: Vec<&Json> = evs.iter().filter(|e| ph(e) == "M").collect();
+        assert_eq!(meta.len(), 1);
+        assert_eq!(meta[0].get("args").unwrap().get("name").unwrap().as_str(), Some("mali#0"));
+        let instants: Vec<&Json> = evs.iter().filter(|e| ph(e) == "i").collect();
+        assert_eq!(instants.len(), 1);
+        assert_eq!(instants[0].get("s").and_then(Json::as_str), Some("t"));
+        // queue + exec + two synthesised layer children
+        let spans: Vec<&Json> = evs.iter().filter(|e| ph(e) == "X").collect();
+        assert_eq!(spans.len(), 4);
+        let layers: Vec<&Json> = spans
+            .iter()
+            .copied()
+            .filter(|e| e.get("cat").and_then(Json::as_str) == Some("layer"))
+            .collect();
+        assert_eq!(layers.len(), 2);
+        // children tile the parent exactly: 8 ms scaled 1:3 over 2 phases
+        let dur: f64 = layers.iter().map(|e| e.get("dur").and_then(Json::as_f64).unwrap()).sum();
+        assert!((dur - 8.0 * 1e3).abs() < 1e-9, "children must sum to the exec span");
+        let first = &layers[0];
+        assert_eq!(first.get("ts").and_then(Json::as_f64), Some(2.0 * 1e3));
+        assert!((first.get("dur").and_then(Json::as_f64).unwrap() - 2.0 * 1e3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chrome_export_is_deterministic() {
+        let a = chrome_trace_json(&sample_buffer()).to_json_string();
+        let b = chrome_trace_json(&sample_buffer()).to_json_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chrome_export_round_trips_through_the_parser() {
+        let text = chrome_trace_json(&sample_buffer()).to_json_string();
+        let back = Json::parse(&text).expect("self-parse");
+        assert!(back.get("traceEvents").and_then(Json::as_arr).is_some());
+    }
+
+    #[test]
+    fn tree_dump_lists_tracks_events_and_children() {
+        let t = render_tree(&sample_buffer());
+        assert!(t.contains("track 0: mali#0"), "{t}");
+        assert!(t.contains("queue"), "{t}");
+        assert!(t.contains("!shed_queue"), "{t}");
+        assert!(t.contains("conv3.x/ilpm 6.000ms"), "{t}");
+        assert!(t.starts_with("trace: 3 events, 0 dropped"), "{t}");
+    }
+}

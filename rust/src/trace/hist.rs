@@ -1,0 +1,232 @@
+//! Log-bucketed histogram: bounded-memory latency aggregation.
+//!
+//! Buckets grow geometrically with 8 buckets per octave (ratio
+//! `2^(1/8) ≈ 1.0905`), so any positive sample lands in a bucket whose
+//! width is at most ~9.05 % of its value — that width is the histogram's
+//! worst-case percentile error, independent of how many samples were
+//! recorded. The bucket array is fixed (`NUM_BUCKETS` slots spanning
+//! `~1e-6` to `~1e9` in the caller's unit), so memory stays constant at
+//! millions of samples where an exact sample vector would not.
+//!
+//! Exact `count`/`sum`/`min`/`max` are tracked alongside the buckets,
+//! and percentile estimates are clamped into `[min, max]`, so the
+//! extremes of a summary are always exact.
+
+/// Buckets per octave (factor-of-two range); ratio `2^(1/8)`.
+const BUCKETS_PER_OCTAVE: f64 = 8.0;
+
+/// Lowest bucket index covered: `2^(-160/8) = 2^-20 ≈ 9.5e-7`.
+const MIN_IDX: i64 = -160;
+
+/// Fixed bucket count; top of range `2^((-160+400)/8) = 2^30 ≈ 1.07e9`.
+const NUM_BUCKETS: usize = 400;
+
+/// Worst-case relative half-width of one bucket: `2^(1/8) - 1`.
+pub const BUCKET_RELATIVE_ERROR: f64 = 0.090_507_732_665_257_66;
+
+/// Fixed-memory log-bucketed histogram over non-negative-ish samples
+/// (non-positive finite samples are counted in a dedicated underflow
+/// bucket; non-finite samples are ignored — callers filter them first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    /// Samples `<= 0.0` (the recorder admits negative finite latencies
+    /// from virtual-clock artefacts; they sort below every bucket).
+    nonpositive: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            buckets: vec![0; NUM_BUCKETS],
+            nonpositive: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Record one sample. Non-finite input is silently ignored (the
+    /// recorder in front of this already drops and counts it).
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v <= 0.0 {
+            self.nonpositive += 1;
+        } else {
+            let idx = (v.log2() * BUCKETS_PER_OCTAVE).floor() as i64;
+            let slot = (idx - MIN_IDX).clamp(0, NUM_BUCKETS as i64 - 1) as usize;
+            self.buckets[slot] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Estimate the `p`-quantile (`p` in `[0, 1]`): walk the cumulative
+    /// counts to the bucket holding the rank, return that bucket's
+    /// geometric centre clamped into `[min, max]`. The estimate is
+    /// within one bucket's relative width ([`BUCKET_RELATIVE_ERROR`])
+    /// of the exact order statistic.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = self.nonpositive;
+        if rank <= cum {
+            // every non-positive sample sorts below bucket 0; min is
+            // exact and is the best single representative we hold
+            return self.min;
+        }
+        for (slot, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if rank <= cum {
+                let idx = MIN_IDX + slot as i64;
+                let mid = ((idx as f64 + 0.5) / BUCKETS_PER_OCTAVE).exp2();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zeroes() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_exact_everywhere() {
+        let mut h = LogHistogram::new();
+        h.observe(3.0);
+        assert_eq!(h.count(), 1);
+        assert!((h.mean() - 3.0).abs() < 1e-12);
+        // clamping into [min, max] collapses the bucket to the sample
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert!((h.percentile(p) - 3.0).abs() < 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentiles_within_one_bucket_relative_error() {
+        let mut h = LogHistogram::new();
+        let mut exact: Vec<f64> = Vec::new();
+        // deterministic spread over three decades
+        for i in 1..=10_000u64 {
+            let v = 0.1 + (i as f64) * 0.017;
+            h.observe(v);
+            exact.push(v);
+        }
+        exact.sort_by(f64::total_cmp);
+        for p in [0.5, 0.95, 0.99] {
+            let want = exact[((exact.len() as f64 * p) as usize).min(exact.len() - 1)];
+            let got = h.percentile(p);
+            let rel = (got - want).abs() / want;
+            assert!(rel <= BUCKET_RELATIVE_ERROR, "p={p}: got {got}, want {want}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn nonpositive_and_nonfinite_samples() {
+        let mut h = LogHistogram::new();
+        h.observe(f64::NAN); // ignored
+        h.observe(f64::INFINITY); // ignored
+        h.observe(-2.0);
+        h.observe(0.0);
+        h.observe(4.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), -2.0);
+        assert_eq!(h.max(), 4.0);
+        // ranks 1–2 are the non-positive samples; min is the estimate
+        assert_eq!(h.percentile(0.3), -2.0);
+        // the top rank lands in a real bucket, clamped to max
+        assert!((h.percentile(1.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_range_samples_clamp_into_edge_buckets() {
+        let mut h = LogHistogram::new();
+        h.observe(1e-12); // below the lowest bucket
+        h.observe(1e15); // above the highest bucket
+        assert_eq!(h.count(), 2);
+        // estimates stay inside [min, max] even though the buckets
+        // saturated at the edges
+        let p50 = h.percentile(0.5);
+        assert!((1e-12..=1e15).contains(&p50), "p50 {p50}");
+        assert_eq!(h.max(), 1e15);
+    }
+
+    #[test]
+    fn memory_is_fixed() {
+        let mut h = LogHistogram::new();
+        let before = h.buckets.len();
+        for i in 0..100_000u64 {
+            h.observe(1.0 + (i % 997) as f64);
+        }
+        assert_eq!(h.buckets.len(), before, "no growth at scale");
+        assert_eq!(h.count(), 100_000);
+    }
+}

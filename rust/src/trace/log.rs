@@ -1,0 +1,153 @@
+//! Leveled logging facade for progress/diagnostic lines.
+//!
+//! The CLI prints two kinds of output: *results* (tables, reports,
+//! BENCH JSON) on stdout, and *progress* ("tuning 3 cold keys…",
+//! "starting engine…") which used to be ad-hoc `eprintln!`/`println!`
+//! calls interleaved with the results. Everything of the second kind
+//! now goes through [`log`] (via the `log_error!`/`log_warn!`/
+//! `log_info!`/`log_debug!` macros), which writes to **stderr** with a
+//! level prefix and is filtered by the `RUST_PALLAS_LOG` environment
+//! variable (`error|warn|info|debug`, default `info`). Piping stdout
+//! therefore always yields clean, parseable output.
+//!
+//! The level is read once per process (first log call) and cached.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Environment variable holding the maximum level to emit.
+pub const LOG_ENV_VAR: &str = "RUST_PALLAS_LOG";
+
+/// Severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl LogLevel {
+    /// Parse a `RUST_PALLAS_LOG` value (case-insensitive).
+    pub fn from_env_str(s: &str) -> Option<LogLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(LogLevel::Error),
+            "warn" | "warning" => Some(LogLevel::Warn),
+            "info" => Some(LogLevel::Info),
+            "debug" => Some(LogLevel::Debug),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+}
+
+fn max_level() -> LogLevel {
+    static LEVEL: OnceLock<LogLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        std::env::var(LOG_ENV_VAR)
+            .ok()
+            .and_then(|s| LogLevel::from_env_str(&s))
+            .unwrap_or(LogLevel::Info)
+    })
+}
+
+/// Whether a line at `level` would be emitted. Callers with expensive
+/// message formatting can guard on this; the macros already pass lazy
+/// `format_args!`, so plain call sites need no guard.
+pub fn log_enabled(level: LogLevel) -> bool {
+    level <= max_level()
+}
+
+/// Emit one line to stderr if `level` passes the filter.
+pub fn log(level: LogLevel, args: fmt::Arguments<'_>) {
+    if log_enabled(level) {
+        eprintln!("[{}] {}", level.tag(), args);
+    }
+}
+
+/// Log at error level (always emitted).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::LogLevel::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::LogLevel::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at info level (the default filter).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::LogLevel::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at debug level (hidden unless `RUST_PALLAS_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::LogLevel::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_case_insensitively() {
+        assert_eq!(LogLevel::from_env_str("debug"), Some(LogLevel::Debug));
+        assert_eq!(LogLevel::from_env_str(" WARN "), Some(LogLevel::Warn));
+        assert_eq!(LogLevel::from_env_str("warning"), Some(LogLevel::Warn));
+        assert_eq!(LogLevel::from_env_str("Info"), Some(LogLevel::Info));
+        assert_eq!(LogLevel::from_env_str("error"), Some(LogLevel::Error));
+        assert_eq!(LogLevel::from_env_str("verbose"), None);
+        assert_eq!(LogLevel::from_env_str(""), None);
+    }
+
+    #[test]
+    fn severity_orders_error_first() {
+        assert!(LogLevel::Error < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+    }
+
+    #[test]
+    fn enabled_is_monotone_in_severity() {
+        // whatever the process-wide level is, a more severe line is
+        // never filtered while a less severe one passes
+        for (hi, lo) in [
+            (LogLevel::Error, LogLevel::Warn),
+            (LogLevel::Warn, LogLevel::Info),
+            (LogLevel::Info, LogLevel::Debug),
+        ] {
+            if log_enabled(lo) {
+                assert!(log_enabled(hi), "{hi:?} filtered while {lo:?} passes");
+            }
+        }
+    }
+
+    #[test]
+    fn macros_expand_and_run() {
+        // smoke: the macros must compile against format captures and
+        // positional args alike, and never panic regardless of filter
+        crate::log_debug!("probe {} {}", 1, "two");
+        let x = 3;
+        crate::log_debug!("captured {x}");
+    }
+}

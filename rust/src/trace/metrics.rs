@@ -1,0 +1,177 @@
+//! A registry of named counters, gauges and log-bucketed histograms.
+//!
+//! Subsystems register what they counted under dotted
+//! `subsystem.noun_verbed` names (`fleet.requests_admitted`,
+//! `tuner.candidates_evaluated`, `fleet.replica.mali#0.dispatched`);
+//! report emitters read the same names back out. Storage is `BTreeMap`
+//! throughout, so [`MetricsRegistry::to_json`] and
+//! [`MetricsRegistry::render`] enumerate in a deterministic order —
+//! registry output is diffable run-to-run like every other artifact in
+//! this repo.
+
+use std::collections::BTreeMap;
+
+use super::hist::LogHistogram;
+use crate::util::json::Json;
+
+/// Named counters/gauges/histograms, deterministically ordered.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, LogHistogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Increment a counter by one.
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment a counter by `by` (creates it at zero first).
+    pub fn add(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Read a counter; unregistered names read as zero.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to an instantaneous value.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one sample into a named histogram (created on first use).
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Install a pre-aggregated histogram wholesale (e.g. the fleet's
+    /// latency recorder handing over its buckets at end of run).
+    pub fn put_histogram(&mut self, name: &str, h: LogHistogram) {
+        self.histograms.insert(name.to_string(), h);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Serialise every metric. Histograms export summary statistics
+    /// (count/mean/p50/p99/min/max), not raw buckets.
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+        let hists: BTreeMap<String, Json> = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let mut m = BTreeMap::new();
+                m.insert("count".into(), Json::Num(h.count() as f64));
+                m.insert("mean".into(), Json::Num(h.mean()));
+                m.insert("p50".into(), Json::Num(h.percentile(0.50)));
+                m.insert("p99".into(), Json::Num(h.percentile(0.99)));
+                m.insert("min".into(), Json::Num(h.min()));
+                m.insert("max".into(), Json::Num(h.max()));
+                (k.clone(), Json::Obj(m))
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("counters".into(), Json::Obj(counters));
+        root.insert("gauges".into(), Json::Obj(gauges));
+        root.insert("histograms".into(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+
+    /// Human-readable dump, one metric per line, deterministic order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} = {v:.6}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                "{k} = n={} mean={:.4} p50={:.4} p99={:.4} max={:.4}\n",
+                h.count(),
+                h.mean(),
+                h.percentile(0.50),
+                h.percentile(0.99),
+                h.max()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let mut m = MetricsRegistry::new();
+        assert_eq!(m.counter("fleet.requests_admitted"), 0);
+        m.inc("fleet.requests_admitted");
+        m.add("fleet.requests_admitted", 4);
+        assert_eq!(m.counter("fleet.requests_admitted"), 5);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut m = MetricsRegistry::new();
+        m.set_gauge("fleet.span_ms", 10.0);
+        m.set_gauge("fleet.span_ms", 20.0);
+        assert_eq!(m.gauge("fleet.span_ms"), Some(20.0));
+        assert_eq!(m.gauge("missing"), None);
+    }
+
+    #[test]
+    fn histograms_observe_and_install() {
+        let mut m = MetricsRegistry::new();
+        m.observe("fleet.latency_us", 100.0);
+        m.observe("fleet.latency_us", 200.0);
+        assert_eq!(m.histogram("fleet.latency_us").unwrap().count(), 2);
+        let mut h = LogHistogram::new();
+        h.observe(1.0);
+        m.put_histogram("tuner.time_ms", h);
+        assert_eq!(m.histogram("tuner.time_ms").unwrap().count(), 1);
+    }
+
+    #[test]
+    fn json_and_render_are_deterministic() {
+        let build = || {
+            let mut m = MetricsRegistry::new();
+            // insertion order deliberately scrambled vs. lexical order
+            m.inc("z.last");
+            m.inc("a.first");
+            m.set_gauge("m.mid", 1.5);
+            m.observe("h.lat", 3.0);
+            (m.to_json().to_json_string(), m.render())
+        };
+        assert_eq!(build(), build());
+        let (json, text) = build();
+        assert!(json.find("a.first").unwrap() < json.find("z.last").unwrap());
+        assert!(text.contains("a.first = 1\n"));
+    }
+}

@@ -1,0 +1,42 @@
+//! Deterministic observability: structured tracing, a metrics
+//! registry, a log facade, and the per-layer profile report.
+//!
+//! The paper's whole argument is a *time-breakdown* argument (where do
+//! the cycles go — memory streams or compute?), so the reproduction
+//! carries an observability layer that can regenerate that breakdown on
+//! demand for any serve/tune/fleet run:
+//!
+//! * [`sink`] — the [`TraceSink`] recording trait, the [`NoopSink`]
+//!   untraced paths run against (zero per-request allocation), and the
+//!   bounded ring-buffer [`TraceBuffer`]. Events timestamp on the
+//!   **virtual clock**, so the same seed yields a byte-identical trace.
+//! * [`metrics`] — [`MetricsRegistry`]: named counters, gauges and
+//!   log-bucketed histograms under `subsystem.noun_verbed` names,
+//!   deterministically ordered.
+//! * [`hist`] — [`LogHistogram`]: fixed-memory log-bucketed latency
+//!   aggregation (≤ ~9 % percentile error, exact min/max/mean), also
+//!   backing [`crate::metrics::LatencyRecorder`] at fleet scale.
+//! * [`export`] — [`chrome_trace_json`] (Perfetto-loadable Chrome
+//!   `trace_event` JSON: one track per replica, queue/exec spans, shed
+//!   instants, per-layer child spans synthesised from phase costs) and
+//!   [`render_tree`] (plain-text dump).
+//! * [`log`] — the `RUST_PALLAS_LOG`-leveled stderr facade behind the
+//!   crate-root `log_error!`/`log_warn!`/`log_info!`/`log_debug!`
+//!   macros; keeps diagnostics off stdout.
+//! * [`profile`] — [`ProfileReport`]: the paper-style per-layer table
+//!   (simulated ms, FLOPs, stream bytes, routed algorithm, % of total)
+//!   the `profile` CLI subcommand prints.
+
+pub mod export;
+pub mod hist;
+pub mod log;
+pub mod metrics;
+pub mod profile;
+pub mod sink;
+
+pub use export::{chrome_trace_json, render_tree};
+pub use hist::{LogHistogram, BUCKET_RELATIVE_ERROR};
+pub use log::{log_enabled, LogLevel, LOG_ENV_VAR};
+pub use metrics::MetricsRegistry;
+pub use profile::{ProfileReport, ProfileRow};
+pub use sink::{NoopSink, SpanEvent, TraceBuffer, TraceSink, TrackMeta};

@@ -1,0 +1,219 @@
+//! The paper-style per-layer profile: for one tuned (or uniform)
+//! network pass on one device, a table of simulated ms, analytic FLOPs
+//! and stream bytes, the routed algorithm, and each layer's share of
+//! the total — the Table 3/4-shaped breakdown the `profile` CLI
+//! subcommand prints.
+//!
+//! Built straight from a [`SimBackend`]'s priced plan, so the row
+//! totals sum to **exactly** the pass time the engine charges every
+//! request (`SimBackend::network_ms`) — the profile and the serving
+//! ledger can never disagree about where the time went.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::SimBackend;
+use crate::util::json::Json;
+
+/// One routed layer class of the profiled network.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub layer: String,
+    pub algorithm: String,
+    /// Convs of this class per network pass.
+    pub convs: usize,
+    /// Simulated time of one conv (ms).
+    pub sim_ms_per_conv: f64,
+    /// Simulated time of all `convs` (ms) — this class's share of a pass.
+    pub sim_ms_total: f64,
+    /// Useful FLOPs of one conv (analytic, from the layer geometry).
+    pub flops_per_conv: u64,
+    /// Analytic stream traffic of one conv: input + filter + output
+    /// bytes (f32) — the lower bound the paper's Table 3 argues against.
+    pub stream_bytes_per_conv: u64,
+    /// This class's percentage of the pass total.
+    pub pct_of_total: f64,
+}
+
+/// Per-layer breakdown of one network pass on one device.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub device: String,
+    pub network: String,
+    pub rows: Vec<ProfileRow>,
+    /// Sum of every row's `sim_ms_total`; equals the backend's charged
+    /// pass time exactly.
+    pub total_ms: f64,
+}
+
+impl ProfileReport {
+    /// Profile the backend's priced plan. Rows appear in the network's
+    /// layer-table order.
+    pub fn from_backend(b: &SimBackend) -> ProfileReport {
+        let total_ms: f64 = b.plan().iter().map(|p| p.sim_ms_total()).sum();
+        let rows = b
+            .plan()
+            .iter()
+            .map(|p| {
+                let shape = p.layer.shape();
+                let stream = shape.input_bytes() + shape.filter_bytes() + shape.output_bytes();
+                ProfileRow {
+                    layer: p.layer.name(),
+                    algorithm: p.algorithm.name().to_string(),
+                    convs: p.convs,
+                    sim_ms_per_conv: p.sim_ms_per_conv,
+                    sim_ms_total: p.sim_ms_total(),
+                    flops_per_conv: shape.flops(),
+                    stream_bytes_per_conv: stream,
+                    pct_of_total: if total_ms > 0.0 {
+                        100.0 * p.sim_ms_total() / total_ms
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect();
+        ProfileReport {
+            device: b.device_name().to_string(),
+            network: b.network().to_string(),
+            rows,
+            total_ms,
+        }
+    }
+
+    /// The paper-style table, ready for stdout.
+    pub fn render(&self) -> String {
+        let mut out = format!("per-layer profile: {} on {}\n", self.network, self.device);
+        out.push_str(&format!(
+            "{:<16} {:>9} {:>6} {:>10} {:>10} {:>7} {:>12} {:>10}\n",
+            "layer", "algorithm", "convs", "ms/conv", "total ms", "%", "MFLOP/conv", "MB/conv"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<16} {:>9} {:>6} {:>10.4} {:>10.3} {:>7.1} {:>12.2} {:>10.3}\n",
+                r.layer,
+                r.algorithm,
+                r.convs,
+                r.sim_ms_per_conv,
+                r.sim_ms_total,
+                r.pct_of_total,
+                r.flops_per_conv as f64 / 1e6,
+                r.stream_bytes_per_conv as f64 / 1e6
+            ));
+        }
+        out.push_str(&format!(
+            "{:<16} {:>9} {:>6} {:>10} {:>10.3} {:>7.1}\n",
+            "total", "", "", "", self.total_ms, 100.0
+        ));
+        out
+    }
+
+    /// Machine-readable form (same fields as the table).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("layer".into(), Json::Str(r.layer.clone()));
+                m.insert("algorithm".into(), Json::Str(r.algorithm.clone()));
+                m.insert("convs".into(), Json::Num(r.convs as f64));
+                m.insert("sim_ms_per_conv".into(), Json::Num(r.sim_ms_per_conv));
+                m.insert("sim_ms_total".into(), Json::Num(r.sim_ms_total));
+                m.insert("flops_per_conv".into(), Json::Num(r.flops_per_conv as f64));
+                m.insert(
+                    "stream_bytes_per_conv".into(),
+                    Json::Num(r.stream_bytes_per_conv as f64),
+                );
+                m.insert("pct_of_total".into(), Json::Num(r.pct_of_total));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("device".into(), Json::Str(self.device.clone()));
+        m.insert("network".into(), Json::Str(self.network.clone()));
+        m.insert("total_ms".into(), Json::Num(self.total_ms));
+        m.insert("rows".into(), Json::Arr(rows));
+        Json::Obj(m)
+    }
+
+    /// The per-pass phase list exporters hang under exec spans:
+    /// `("layer/algorithm", sim ms)` per row.
+    pub fn phases(&self) -> Vec<(String, f64)> {
+        self.rows
+            .iter()
+            .map(|r| (format!("{}/{}", r.layer, r.algorithm), r.sim_ms_total))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convgen::Algorithm;
+    use crate::coordinator::InferenceEngine;
+    use crate::simulator::DeviceConfig;
+    use crate::workload::NetworkDef;
+
+    fn report(net: &str, alg: Algorithm) -> (ProfileReport, f64) {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let net = NetworkDef::by_name(net).unwrap();
+        let b = SimBackend::uniform(alg, &dev, &net, 0.0).expect("backend");
+        let r = ProfileReport::from_backend(&b);
+        (r, b.network_ms())
+    }
+
+    #[test]
+    fn row_totals_sum_to_the_charged_pass_time() {
+        // the acceptance criterion: profile total == what the engine
+        // charges each request, for the same routes
+        for net in ["resnet18", "mobilenetV1"] {
+            let alg = if net == "resnet18" { Algorithm::Ilpm } else { Algorithm::Im2col };
+            let (r, charged_ms) = report(net, alg);
+            let sum: f64 = r.rows.iter().map(|row| row.sim_ms_total).sum();
+            assert!((sum - r.total_ms).abs() < 1e-12, "{net}: total_ms out of sync");
+            assert!((sum - charged_ms).abs() < 1e-9, "{net}: {sum} != charged {charged_ms}");
+            let pct: f64 = r.rows.iter().map(|row| row.pct_of_total).sum();
+            assert!((pct - 100.0).abs() < 1e-6, "{net}: percentages sum to {pct}");
+        }
+    }
+
+    #[test]
+    fn profile_matches_a_live_engine_charge() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let b = SimBackend::uniform(Algorithm::Direct, &dev, &net, 0.0).expect("backend");
+        let engine = InferenceEngine::start(b, 1, 4).expect("engine");
+        let r = ProfileReport::from_backend(engine.backend());
+        let charged = engine.backend().network_time().as_secs_f64() * 1e3;
+        assert!((r.total_ms - charged).abs() < 1e-9);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn rows_carry_analytic_counters_and_routes() {
+        let (r, _) = report("resnet18", Algorithm::Ilpm);
+        assert_eq!(r.rows.len(), 4);
+        for row in &r.rows {
+            assert_eq!(row.algorithm, "ilpm");
+            assert!(row.flops_per_conv > 0);
+            assert!(row.stream_bytes_per_conv > 0);
+            assert!(row.convs >= 1);
+            let shape = crate::workload::LayerClass::from_name(&row.layer).unwrap().shape();
+            assert_eq!(row.flops_per_conv, shape.flops());
+        }
+    }
+
+    #[test]
+    fn render_and_json_carry_every_row() {
+        let (r, _) = report("mobilenetV1", Algorithm::Im2col);
+        let text = r.render();
+        assert!(text.contains("mobilenetV1"), "{text}");
+        assert!(text.lines().count() >= r.rows.len() + 3, "header + rows + total");
+        let j = r.to_json();
+        assert_eq!(j.get("rows").and_then(Json::as_arr).unwrap().len(), r.rows.len());
+        assert_eq!(j.get("network").and_then(Json::as_str), Some("mobilenetV1"));
+        let phases = r.phases();
+        assert_eq!(phases.len(), r.rows.len());
+        assert!(phases[0].0.contains('/'));
+    }
+}

@@ -1,0 +1,253 @@
+//! Span/event recording: the [`TraceSink`] trait, the no-op sink the
+//! hot paths run against by default, and the bounded ring-buffer
+//! [`TraceBuffer`] the exporters read.
+//!
+//! Two rules keep tracing compatible with the repo's determinism
+//! contract:
+//!
+//! * **Timestamps are virtual.** Fleet and sim paths stamp events with
+//!   the same virtual-clock milliseconds their latency ledger runs on,
+//!   so the same seed yields a byte-identical event stream. Wall-clock
+//!   time never enters a [`SpanEvent`].
+//! * **Off means free.** Instrumentation sites guard on
+//!   [`TraceSink::enabled`], and span names on the per-request paths
+//!   are `Cow::Borrowed` string literals — with the [`NoopSink`] (or
+//!   even with a live buffer) the fleet loop performs zero allocations
+//!   per request for tracing.
+
+use std::borrow::Cow;
+
+/// Default [`TraceBuffer`] capacity (events retained before the ring
+/// starts overwriting the oldest).
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// One recorded span or instant on a track's virtual timeline.
+///
+/// `dur_ms == 0.0` marks an instant (a shed decision, a violation);
+/// anything positive is a span occupying `[start_ms, start_ms + dur_ms]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Track index (one track per replica / worker / device).
+    pub track: u32,
+    /// Span name. Hot paths pass `Cow::Borrowed` literals ("queue",
+    /// "exec", "shed_deadline", …) so recording never allocates.
+    pub name: Cow<'static, str>,
+    /// Category: groups spans for exporters ("fleet", "slo", "tune").
+    pub cat: &'static str,
+    /// Virtual-clock start, milliseconds.
+    pub start_ms: f64,
+    /// Duration in milliseconds; `0.0` for instants.
+    pub dur_ms: f64,
+    /// Correlation id (request sequence number, tuning-entry index).
+    pub id: u64,
+}
+
+impl SpanEvent {
+    /// A duration span.
+    pub fn span(
+        track: u32,
+        name: Cow<'static, str>,
+        cat: &'static str,
+        start_ms: f64,
+        dur_ms: f64,
+        id: u64,
+    ) -> SpanEvent {
+        SpanEvent { track, name, cat, start_ms, dur_ms, id }
+    }
+
+    /// A zero-duration instant.
+    pub fn instant(
+        track: u32,
+        name: Cow<'static, str>,
+        cat: &'static str,
+        at_ms: f64,
+        id: u64,
+    ) -> SpanEvent {
+        SpanEvent { track, name, cat, start_ms: at_ms, dur_ms: 0.0, id }
+    }
+
+    pub fn is_instant(&self) -> bool {
+        self.dur_ms == 0.0
+    }
+}
+
+/// Per-track metadata: a display label and the fixed per-layer phase
+/// breakdown of one pass on that track's device (name, simulated ms).
+/// Exporters use the phases to synthesise per-layer child spans under
+/// each "exec" span without the recorder paying for them per request.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrackMeta {
+    pub label: String,
+    pub phases: Vec<(String, f64)>,
+}
+
+/// Where instrumentation points send events. Implementations must be
+/// cheap when disabled; callers guard recording on [`Self::enabled`]
+/// so a disabled sink costs one branch per site.
+pub trait TraceSink {
+    /// Whether events will be kept. Callers skip building events (and
+    /// any formatting) when this is false.
+    fn enabled(&self) -> bool;
+
+    /// Record one event. May drop (ring overwrite) under pressure.
+    fn record(&mut self, ev: SpanEvent);
+
+    /// Register a track's label and fixed per-pass phase costs.
+    /// Default: ignored (the no-op sink).
+    fn set_track(&mut self, _track: u32, _label: &str, _phases: &[(String, f64)]) {}
+}
+
+/// The always-off sink: every hot path is generic-free by taking
+/// `&mut dyn TraceSink`, and this is what untraced callers pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn record(&mut self, _ev: SpanEvent) {}
+}
+
+/// Bounded in-memory event store: a ring buffer that overwrites the
+/// oldest events once `capacity` is reached (counting what it dropped),
+/// plus the per-track metadata exporters need.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuffer {
+    events: Vec<SpanEvent>,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    capacity: usize,
+    dropped: u64,
+    tracks: Vec<TrackMeta>,
+}
+
+impl TraceBuffer {
+    pub fn new() -> TraceBuffer {
+        TraceBuffer::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> TraceBuffer {
+        TraceBuffer {
+            events: Vec::new(),
+            head: 0,
+            capacity: capacity.max(1),
+            dropped: 0,
+            tracks: Vec::new(),
+        }
+    }
+
+    /// Events currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &SpanEvent> {
+        let (tail, head) = self.events.split_at(self.head);
+        head.iter().chain(tail.iter())
+    }
+
+    /// Registered track metadata, indexed by track id.
+    pub fn tracks(&self) -> &[TrackMeta] {
+        &self.tracks
+    }
+
+    /// The metadata for one track, if registered.
+    pub fn track(&self, track: u32) -> Option<&TrackMeta> {
+        self.tracks.get(track as usize).filter(|t| !t.label.is_empty())
+    }
+}
+
+impl TraceSink for TraceBuffer {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, ev: SpanEvent) {
+        if self.events.len() < self.capacity {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    fn set_track(&mut self, track: u32, label: &str, phases: &[(String, f64)]) {
+        let idx = track as usize;
+        if self.tracks.len() <= idx {
+            self.tracks.resize(idx + 1, TrackMeta::default());
+        }
+        self.tracks[idx] = TrackMeta { label: label.to_string(), phases: phases.to_vec() };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64) -> SpanEvent {
+        SpanEvent::span(0, Cow::Borrowed("exec"), "fleet", id as f64, 1.0, id)
+    }
+
+    #[test]
+    fn noop_sink_is_disabled() {
+        let mut s = NoopSink;
+        assert!(!s.enabled());
+        s.record(ev(1)); // must not panic, must not retain
+    }
+
+    #[test]
+    fn buffer_retains_in_order_below_capacity() {
+        let mut b = TraceBuffer::with_capacity(8);
+        for i in 0..5 {
+            b.record(ev(i));
+        }
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.dropped(), 0);
+        let ids: Vec<u64> = b.events().map(|e| e.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut b = TraceBuffer::with_capacity(4);
+        for i in 0..10 {
+            b.record(ev(i));
+        }
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.dropped(), 6);
+        let ids: Vec<u64> = b.events().map(|e| e.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "oldest-first iteration after wrap");
+    }
+
+    #[test]
+    fn track_metadata_is_sparse_safe() {
+        let mut b = TraceBuffer::new();
+        b.set_track(2, "vega8#0", &[("conv2.x/ilpm".to_string(), 1.5)]);
+        assert!(b.track(0).is_none(), "unregistered tracks read as absent");
+        assert!(b.track(1).is_none());
+        let t = b.track(2).expect("registered");
+        assert_eq!(t.label, "vega8#0");
+        assert_eq!(t.phases.len(), 1);
+    }
+
+    #[test]
+    fn instants_have_zero_duration() {
+        let e = SpanEvent::instant(1, Cow::Borrowed("shed_queue"), "slo", 7.0, 42);
+        assert!(e.is_instant());
+        assert_eq!(e.dur_ms, 0.0);
+        assert!(!ev(0).is_instant());
+    }
+}
