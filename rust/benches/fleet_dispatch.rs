@@ -1,0 +1,225 @@
+//! Bench: the fleet's per-request hot path — one dispatch decision
+//! over dense replica state (all three policies, fleets from 64 to
+//! 4096 replicas), dense vs map-based route-cost resolution, and the
+//! event-queue push/pop cycle.
+//!
+//! Writes BENCH_dispatch.json (the shared envelope, schema v2) with
+//! one row per (bench, size) cell: timing stats plus a deterministic
+//! FNV-1a fingerprint over every pick the timed loop makes. The
+//! fingerprint is machine-independent — CI gates on it exactly even
+//! when the host is too noisy to gate on nanoseconds. Rows carry
+//! `"calibrated": true` because this binary actually measured them;
+//! the committed baseline flips the flag to false until a reference
+//! host calibrates it, and the CI comparator gates timings only when
+//! the baseline says calibrated.
+//!
+//! Run: `cargo bench --bench fleet_dispatch`
+//! (`ILPM_BENCH_OUT=path.json` to redirect the JSON)
+
+use std::collections::BTreeMap;
+
+use ilpm::fleet::{DispatchPolicy, Event, EventKind, EventQueue, FleetView};
+use ilpm::metrics::bench_envelope;
+use ilpm::simulator::DeviceConfig;
+use ilpm::util::bench::{black_box, fmt_ns, Bench, Stats};
+use ilpm::util::json::Json;
+use ilpm::util::prng::Rng;
+use ilpm::workload::NetworkDef;
+
+/// Decisions per timed sample — enough to swamp timer quantisation at
+/// 64 replicas, cheap enough to sample at 4096.
+const DECISIONS: u64 = 10_000;
+
+const FLEET_SIZES: [usize; 3] = [64, 1024, 4096];
+
+/// Deterministic synthetic fleet state: a plausible mid-run snapshot
+/// (some queues deep, some idle, heterogeneous costs).
+struct SynthFleet {
+    outstanding: Vec<u32>,
+    busy_until_ms: Vec<f64>,
+    cost_ms: Vec<f64>,
+}
+
+impl SynthFleet {
+    fn new(n: usize, seed: u64) -> SynthFleet {
+        let mut rng = Rng::new(seed);
+        SynthFleet {
+            outstanding: (0..n).map(|_| rng.below(16) as u32).collect(),
+            busy_until_ms: (0..n).map(|_| rng.f64() * 400.0).collect(),
+            cost_ms: (0..n).map(|_| 5.0 + rng.f64() * 95.0).collect(),
+        }
+    }
+
+    fn view(&self, now_ms: f64) -> FleetView<'_> {
+        FleetView {
+            outstanding: &self.outstanding,
+            busy_until_ms: &self.busy_until_ms,
+            cost_ms: &self.cost_ms,
+            now_ms,
+        }
+    }
+}
+
+/// FNV-1a over a stream of u64s — the machine-independent work
+/// fingerprint CI compares exactly.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push(&mut self, x: u64) {
+        for byte in x.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// The workload one timed sample runs: `DECISIONS` picks with the
+/// virtual clock advancing and the picked replica's queue state
+/// mutating, so the argmin never degenerates into a cached answer.
+/// Returns the pick fingerprint (identical every call — the state is
+/// reset per call).
+fn decision_loop(policy: DispatchPolicy, fleet: &mut SynthFleet, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let base_out: Vec<u32> = fleet.outstanding.clone();
+    let base_busy: Vec<f64> = fleet.busy_until_ms.clone();
+    let mut fnv = Fnv::new();
+    let mut now_ms = 0.0;
+    for seq in 0..DECISIONS {
+        now_ms += rng.f64() * 2.0;
+        let pick = policy.choose(seq, &fleet.view(now_ms));
+        fnv.push(pick as u64);
+        // admit onto the pick: the same state transition the driver does
+        fleet.busy_until_ms[pick] = fleet.busy_until_ms[pick].max(now_ms) + fleet.cost_ms[pick];
+        fleet.outstanding[pick] = (fleet.outstanding[pick] + 1) % 16;
+    }
+    fleet.outstanding.copy_from_slice(&base_out);
+    fleet.busy_until_ms.copy_from_slice(&base_busy);
+    fnv.0
+}
+
+/// One event-queue sample: push/pop `DECISIONS` interleaved events
+/// through a pre-sized heap, fingerprinting the pop order.
+fn event_queue_loop(capacity: usize, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    let mut q = EventQueue::with_capacity(capacity);
+    let mut fnv = Fnv::new();
+    let mut clock = 0.0;
+    for seq in 0..DECISIONS {
+        clock += rng.f64();
+        q.push(Event { at_ms: clock, seq, kind: EventKind::Arrival });
+        q.push(Event {
+            at_ms: clock + rng.f64() * 50.0,
+            seq,
+            kind: EventKind::ExecComplete { replica: (seq % capacity as u64) as u32 },
+        });
+        if q.len() >= capacity {
+            while let Some(ev) = q.pop() {
+                fnv.push(ev.seq);
+            }
+        }
+    }
+    while let Some(ev) = q.pop() {
+        fnv.push(ev.seq);
+    }
+    fnv.0
+}
+
+fn row(name: &str, stats: &Stats, fingerprint: u64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(name.to_string()));
+    m.insert("mean_ns".into(), Json::Num(stats.mean_ns));
+    m.insert("median_ns".into(), Json::Num(stats.median_ns));
+    m.insert("p95_ns".into(), Json::Num(stats.p95_ns));
+    m.insert("stddev_ns".into(), Json::Num(stats.stddev_ns));
+    m.insert("samples".into(), Json::Num(stats.samples as f64));
+    m.insert("decisions_per_sample".into(), Json::Num(DECISIONS as f64));
+    m.insert("fingerprint".into(), Json::Str(format!("{fingerprint:016x}")));
+    m.insert("calibrated".into(), Json::Bool(true));
+    Json::Obj(m)
+}
+
+fn main() {
+    let b = Bench::quick();
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!("=== fleet dispatch hot path ({DECISIONS} decisions per sample) ===");
+    for &size in &FLEET_SIZES {
+        for policy in DispatchPolicy::ALL {
+            let mut fleet = SynthFleet::new(size, 0xD15_7);
+            let fingerprint = decision_loop(policy, &mut fleet, 0xA11_0C);
+            let stats = b.run(|| black_box(decision_loop(policy, &mut fleet, 0xA11_0C)));
+            let per_decision = stats.median_ns / DECISIONS as f64;
+            println!(
+                "dispatch {:<18} x{size:<5} median {}/decision  ({})",
+                policy.name(),
+                fmt_ns(per_decision),
+                stats.human()
+            );
+            rows.push(row(&format!("dispatch/{}/{size}", policy.name()), &stats, fingerprint));
+        }
+    }
+
+    println!("\n=== route-cost resolution (per network pass) ===");
+    let net = NetworkDef::by_name("resnet18").expect("resnet18");
+    let table = ilpm::coordinator::RoutingTable::uniform_for(
+        ilpm::convgen::Algorithm::Direct,
+        &net.classes(),
+    )
+    .expect("uniform table");
+    let dense = table.dense_for(&net).expect("dense routes");
+    let map_stats = b.run(|| {
+        let mut acc = 0.0;
+        for _ in 0..DECISIONS {
+            acc += black_box(&table).expected_network_ms_for(black_box(&net));
+        }
+        black_box(acc)
+    });
+    println!(
+        "map lookup   median {}/pass  ({})",
+        fmt_ns(map_stats.median_ns / DECISIONS as f64),
+        map_stats.human()
+    );
+    rows.push(row("routes/map_lookup", &map_stats, dense.len() as u64));
+    let dense_stats = b.run(|| {
+        let mut acc = 0.0;
+        for _ in 0..DECISIONS {
+            acc += black_box(&dense).expected_pass_ms();
+        }
+        black_box(acc)
+    });
+    println!(
+        "dense table  median {}/pass  ({})",
+        fmt_ns(dense_stats.median_ns / DECISIONS as f64),
+        dense_stats.human()
+    );
+    rows.push(row("routes/dense_precomputed", &dense_stats, dense.len() as u64));
+    assert_eq!(
+        dense.expected_pass_ms().to_bits(),
+        table.expected_network_ms_for(&net).to_bits(),
+        "dense and map resolution must agree bit for bit"
+    );
+
+    println!("\n=== event queue (push+pop cycle) ===");
+    for &cap in &[256usize, 4096] {
+        let fingerprint = event_queue_loop(cap, 0xE0E0);
+        let stats = b.run(|| black_box(event_queue_loop(cap, 0xE0E0)));
+        println!(
+            "heap cap {cap:<5} median {}/event  ({})",
+            fmt_ns(stats.median_ns / (2.0 * DECISIONS as f64)),
+            stats.human()
+        );
+        rows.push(row(&format!("events/push_pop/{cap}"), &stats, fingerprint));
+    }
+
+    let devices = DeviceConfig::paper_devices();
+    let refs: Vec<&DeviceConfig> = devices.iter().collect();
+    let mut root = bench_envelope("dispatch", &refs, 0);
+    root.insert("rows".into(), Json::Arr(rows));
+    let out = std::env::var("ILPM_BENCH_OUT").unwrap_or_else(|_| "BENCH_dispatch.json".into());
+    std::fs::write(&out, Json::Obj(root).to_json_string()).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -70,7 +70,7 @@ COMMANDS:
             --trace PATH  (sim and fleet modes) write a Chrome
                   trace_event JSON of the run — queue/exec spans per
                   replica on the virtual clock, loadable in Perfetto
-  bench     <fig5|table3|table4|serve|mobilenet|fleet>
+  bench     <fig5|table3|table4|serve|mobilenet|fleet|fleet-scale>
             [--device mali|vega8|radeonvii|all]
             regenerate a paper table/figure from tuned simulations;
             `serve` sweeps device x routing policy through the sim
@@ -81,7 +81,13 @@ COMMANDS:
             fleet) plus an overloaded SLO phase and writes
             BENCH_fleet.json with a cost_aware_beats_round_robin
             verdict ([--fleet SPEC] [--n N] [--seed S]); --routes STORE
-            warm-starts from STORE and merges fresh results back into it
+            warm-starts from STORE and merges fresh results back into it;
+            `fleet-scale` drives the event-driven scheduler over a
+            virtual (engine-less) fleet — default 4096 replicas x 1M
+            requests, done in seconds — and writes the seed-exact
+            BENCH_fleet_scale.json ([--fleet SPEC] [--n N] [--seed S]
+            [--queue N] [--policy P] [--rate HZ] [--burst N]
+            [--deadline-ms X [--admission on|off]])
   tune      [--device mali|vega8|radeonvii|all] [--threads N] [--out PATH]
             [--network resnet|mobilenetV1|mobilenetV1-0.5|all]
             [--trace PATH]
@@ -333,11 +339,11 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     }
 }
 
-/// Parse `serve --fleet`'s SLO flags: an optional positive deadline
-/// and the admission switch (admission only means anything once a
-/// deadline exists). `bench fleet` takes no SLO flags — its overload
-/// phase pins the deadline to the fleet so the file stays a pure
-/// function of the seed.
+/// Parse the SLO flags `serve --fleet` and `bench fleet-scale` share:
+/// an optional positive deadline and the admission switch (admission
+/// only means anything once a deadline exists). `bench fleet` takes no
+/// SLO flags — its overload phase pins the deadline to the fleet so
+/// the file stays a pure function of the seed.
 fn slo_flags(a: &Args) -> Result<SloConfig, String> {
     let deadline_ms = match a.get("deadline-ms") {
         None => None,
@@ -671,18 +677,29 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
         argv,
         &[
             "device", "layer", "n", "workers", "routes", "out", "network", "time-scale",
-            "threads", "fleet", "seed", "queue",
+            "threads", "fleet", "seed", "queue", "rate", "policy", "deadline-ms", "admission",
+            "burst",
         ],
     )?;
     let which = a.positional.first().map(String::as_str).unwrap_or("fig5");
     if which == "fleet" {
+        // `bench fleet` pins its two phases so the file stays a pure
+        // function of the seed; traffic shaping is fleet-scale's knob
+        for f in ["rate", "policy", "deadline-ms", "admission", "burst"] {
+            if a.get(f).is_some() {
+                return Err(format!("--{f} only applies to `bench fleet-scale`"));
+            }
+        }
         return bench_fleet(&a);
     }
-    // flags only `bench fleet` reads are rejected elsewhere, not
+    if which == "fleet-scale" {
+        return bench_fleet_scale(&a);
+    }
+    // flags only the fleet benches read are rejected elsewhere, not
     // silently ignored
-    for f in ["fleet", "seed", "queue"] {
+    for f in ["fleet", "seed", "queue", "rate", "policy", "deadline-ms", "admission", "burst"] {
         if a.get(f).is_some() {
-            return Err(format!("--{f} only applies to `bench fleet`"));
+            return Err(format!("--{f} only applies to `bench fleet` / `bench fleet-scale`"));
         }
     }
     if which == "serve" {
@@ -1099,8 +1116,7 @@ fn bench_fleet(a: &Args) -> Result<(), String> {
     );
 
     use crate::util::json::Json;
-    let devices = spec.devices();
-    let mut root = bench_envelope("fleet", &devices.iter().collect::<Vec<_>>(), seed);
+    let mut root = bench_envelope("fleet", &spec.devices(), seed);
     root.insert("network".into(), Json::Str(net.name.clone()));
     root.insert("fleet".into(), Json::Str(spec.render()));
     root.insert("n".into(), Json::Num(n as f64));
@@ -1114,6 +1130,166 @@ fn bench_fleet(a: &Args) -> Result<(), String> {
     std::fs::write(&out, Json::Obj(root).to_json_string())
         .map_err(|e| format!("write {out}: {e}"))?;
     println!("wrote {out} ({} rows)", reports.len() + 1);
+    Ok(())
+}
+
+/// `bench fleet-scale` — the discrete-event scheduler's scale proof,
+/// written to BENCH_fleet_scale.json. One open-loop run over a
+/// *virtual* pool (no engines, so the fleet spec can go to thousands
+/// of replicas — default 4096) at a million requests, default offered
+/// load 90% of fleet capacity under cost-aware dispatch. Traffic is
+/// shapeable: `--rate`, `--burst`, `--policy`, and the SLO pair
+/// `--deadline-ms` / `--admission`.
+///
+/// Every number in the file runs on the virtual clock — a pure
+/// function of the seed, byte-identical across runs and machines (CI
+/// diffs two same-seed runs). Host wall time and events/sec print to
+/// stdout only, never into the JSON. Replica rows are rolled up per
+/// device model; a 4096-replica fleet stays a small file.
+fn bench_fleet_scale(a: &Args) -> Result<(), String> {
+    let spec = FleetSpec::parse(a.get_or("fleet", "mali:2048,vega8:1024,radeonvii:1024"))
+        .map_err(|e| format!("{e:#}"))?;
+    let n = positive(a.get_usize("n", 1_000_000)?, "n")?;
+    let seed = a.get_usize("seed", 7)? as u64;
+    let threads = a.get_usize("threads", 8)?;
+    let queue = positive(a.get_usize("queue", 16)?, "queue")?;
+    let out = a.get_or("out", "BENCH_fleet_scale.json").to_string();
+    let net = network(a)?;
+    let burst = burst_flag(a)?;
+    let explicit_rate = match a.get("rate") {
+        Some(_) => Some(positive_f64(a, "rate")?),
+        None => None,
+    };
+    let policy_name = a.get_or("policy", "cost-aware");
+    let policy = DispatchPolicy::from_name(policy_name).ok_or_else(|| {
+        format!("unknown --policy '{policy_name}' (round-robin|least-outstanding|cost-aware)")
+    })?;
+    let slo = slo_flags(a)?;
+    let mut store = match a.get("routes") {
+        Some(p) => TuneStore::load_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
+        None => TuneStore::new(),
+    };
+    let (pool, warm) = DevicePool::start_virtual(&spec, &net, &mut store, threads, queue)
+        .map_err(|e| format!("fleet start: {e:#}"))?;
+    if let Some(p) = a.get("routes") {
+        if warm.misses > 0 {
+            store.save(Path::new(p)).map_err(|e| format!("save {p}: {e:#}"))?;
+            log_info!("merged {} freshly-tuned entries back into {p}", warm.misses);
+        }
+    }
+    let cap = pool.capacity_rps();
+    let rate = explicit_rate.unwrap_or(0.9 * cap);
+    let arrival = if burst > 1 {
+        TraceKind::Burst { rate_hz: rate, burst }
+    } else {
+        TraceKind::Poisson { rate_hz: rate }
+    };
+    println!(
+        "BENCH fleet-scale — {} on {} ({} virtual replicas, capacity {:.1} req/s), \
+         n={n} seed={seed} offered {:.1} req/s",
+        net.name,
+        spec.render(),
+        pool.replicas().len(),
+        cap,
+        rate
+    );
+    let cfg = OpenLoopConfig { n, arrival, policy, seed, slo };
+    let started = std::time::Instant::now();
+    let report = run_open_loop(&pool, &cfg).map_err(|e| format!("fleet serving: {e:#}"))?;
+    let wall = started.elapsed().as_secs_f64();
+    pool.shutdown();
+    // every arrival plus one completion per admitted request went
+    // through the event heap
+    let events = report.submitted + report.admitted;
+    println!(
+        "drove {} requests ({events} events) in {wall:.2}s wall — {:.0} events/s; \
+         virtual span {:.1}s",
+        report.submitted,
+        events as f64 / wall.max(1e-9),
+        report.span_ms / 1e3
+    );
+    println!(
+        "{} aggregate {} | admitted {} shed {} ({} deadline + {} queue) violated {} errors {}",
+        report.policy,
+        report.aggregate,
+        report.admitted,
+        report.shed(),
+        report.shed_deadline,
+        report.shed_queue,
+        report.violated,
+        report.errors
+    );
+
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    // per-device rollup: spec order, sums over the model's replicas
+    let device_rows: Vec<Json> = spec
+        .entries
+        .iter()
+        .map(|e| {
+            let mine: Vec<_> =
+                report.replicas.iter().filter(|r| &*r.device == e.device.name).collect();
+            let mut m = BTreeMap::new();
+            m.insert("device".into(), Json::Str(e.device.name.into()));
+            m.insert("replicas".into(), Json::Num(mine.len() as f64));
+            m.insert(
+                "sim_ms".into(),
+                Json::Num(mine.first().map_or(f64::NAN, |r| r.sim_ms)),
+            );
+            m.insert(
+                "cost_ms".into(),
+                Json::Num(mine.first().map_or(f64::NAN, |r| r.cost_ms)),
+            );
+            m.insert(
+                "admitted".into(),
+                Json::Num(mine.iter().map(|r| r.admitted).sum::<usize>() as f64),
+            );
+            m.insert(
+                "shed".into(),
+                Json::Num(mine.iter().map(|r| r.shed).sum::<usize>() as f64),
+            );
+            m.insert(
+                "violated".into(),
+                Json::Num(mine.iter().map(|r| r.violated).sum::<usize>() as f64),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    let mut arrival_json = BTreeMap::new();
+    match report.arrival {
+        TraceKind::ClosedLoop => unreachable!("open-loop checked above"),
+        TraceKind::Poisson { rate_hz } => {
+            arrival_json.insert("kind".into(), Json::Str("poisson".into()));
+            arrival_json.insert("rate_hz".into(), Json::Num(rate_hz));
+        }
+        TraceKind::Burst { rate_hz, burst } => {
+            arrival_json.insert("kind".into(), Json::Str("burst".into()));
+            arrival_json.insert("rate_hz".into(), Json::Num(rate_hz));
+            arrival_json.insert("burst".into(), Json::Num(burst as f64));
+        }
+    }
+    let mut root = bench_envelope("fleet-scale", &spec.devices(), seed);
+    root.insert("network".into(), Json::Str(net.name.clone()));
+    root.insert("fleet".into(), Json::Str(spec.render()));
+    root.insert("replicas".into(), Json::Num(report.replicas.len() as f64));
+    root.insert("n".into(), Json::Num(n as f64));
+    root.insert("queue_depth".into(), Json::Num(queue as f64));
+    root.insert("policy".into(), Json::Str(report.policy.name().into()));
+    root.insert("arrival".into(), Json::Obj(arrival_json));
+    root.insert("capacity_rps".into(), Json::Num(cap));
+    root.insert("deadline_ms".into(), report.deadline_ms.map_or(Json::Null, Json::Num));
+    root.insert("admission".into(), Json::Bool(report.admission));
+    root.insert("admitted".into(), Json::Num(report.admitted as f64));
+    root.insert("shed_deadline".into(), Json::Num(report.shed_deadline as f64));
+    root.insert("shed_queue".into(), Json::Num(report.shed_queue as f64));
+    root.insert("violated".into(), Json::Num(report.violated as f64));
+    root.insert("errors".into(), Json::Num(report.errors as f64));
+    root.insert("span_ms".into(), Json::Num(report.span_ms));
+    root.insert("aggregate".into(), report.aggregate.to_json());
+    root.insert("devices_rollup".into(), Json::Arr(device_rows));
+    std::fs::write(&out, Json::Obj(root).to_json_string())
+        .map_err(|e| format!("write {out}: {e}"))?;
+    println!("wrote {out} ({} device rollups)", spec.entries.len());
     Ok(())
 }
 

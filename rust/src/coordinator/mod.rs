@@ -18,5 +18,5 @@ mod sim_backend;
 
 pub use engine::{EngineStats, InferenceEngine, InferenceResult, Submission};
 pub use reference::naive_conv;
-pub use router::{Route, RoutingTable};
+pub use router::{DenseRoute, DenseRoutes, Route, RoutingTable};
 pub use sim_backend::{PlannedLayer, SimBackend, SimSession};

@@ -218,6 +218,85 @@ impl RoutingTable {
     pub fn covers(&self, net: &NetworkDef) -> bool {
         net.layers.iter().all(|(l, _)| self.routes.contains_key(l))
     }
+
+    /// Flatten this table against one network: rows in `net.layers`
+    /// order, looked up by dense index instead of hashing — the serving
+    /// hot path's view of the routes. `None` unless the table covers
+    /// every layer of `net` (a partly-tuned store must not produce a
+    /// partly-dense table).
+    pub fn dense_for(&self, net: &NetworkDef) -> Option<DenseRoutes> {
+        let mut rows = Vec::with_capacity(net.layers.len());
+        for &(layer, convs) in &net.layers {
+            let r = self.route(layer)?;
+            rows.push(DenseRoute {
+                layer,
+                algorithm: r.algorithm,
+                params: r.params,
+                expected_ms: r.expected_ms,
+                convs,
+            });
+        }
+        // same arithmetic as expected_network_ms_for, term for term —
+        // the precomputed sum must be bit-identical to the map walk
+        let expected_pass_ms = rows
+            .iter()
+            .filter(|r| r.expected_ms.is_finite())
+            .map(|r| r.expected_ms * r.convs as f64)
+            .sum();
+        Some(DenseRoutes { rows, expected_pass_ms })
+    }
+}
+
+/// One row of a [`DenseRoutes`] table: a resolved route plus its
+/// per-pass conv count, pinned to one position in the network's layer
+/// list.
+#[derive(Debug, Clone)]
+pub struct DenseRoute {
+    pub layer: LayerClass,
+    pub algorithm: Algorithm,
+    pub params: TuneParams,
+    /// Tuned cost (ms); NaN for uniform baselines, same contract as
+    /// [`Route::expected_ms`].
+    pub expected_ms: f64,
+    /// Convs of this class one network pass executes.
+    pub convs: usize,
+}
+
+/// A [`RoutingTable`] flattened against one network's layer list:
+/// route lookups by dense layer index (no hashing), plus the
+/// precomputed expected per-pass cost. Built once at pool start;
+/// replicas of a device model share it.
+#[derive(Debug, Clone)]
+pub struct DenseRoutes {
+    rows: Vec<DenseRoute>,
+    expected_pass_ms: f64,
+}
+
+impl DenseRoutes {
+    /// Rows aligned with the network's `layers` list.
+    pub fn rows(&self) -> &[DenseRoute] {
+        &self.rows
+    }
+
+    /// The route for the layer at dense index `i` of the network's
+    /// layer list.
+    pub fn row(&self, i: usize) -> &DenseRoute {
+        &self.rows[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Expected single-pass cost (ms), finite rows only — precomputed
+    /// [`RoutingTable::expected_network_ms_for`].
+    pub fn expected_pass_ms(&self) -> f64 {
+        self.expected_pass_ms
+    }
 }
 
 #[cfg(test)]
@@ -393,6 +472,45 @@ mod tests {
             // "direct" < "ilpm" lexicographically
             assert_eq!(table.route(LayerClass::Conv4x).unwrap().algorithm, Algorithm::Direct);
         }
+    }
+
+    #[test]
+    fn dense_routes_mirror_the_map_bit_for_bit() {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let mut t = RoutingTable::uniform(Algorithm::Ilpm);
+        for (i, l) in LayerClass::ALL.into_iter().enumerate() {
+            t.set(l, Algorithm::Ilpm, 0.7 * (i + 1) as f64);
+        }
+        let dense = t.dense_for(&net).expect("covering table flattens");
+        assert_eq!(dense.len(), net.layers.len());
+        for (row, &(layer, convs)) in dense.rows().iter().zip(&net.layers) {
+            assert_eq!(row.layer, layer);
+            assert_eq!(row.convs, convs);
+            let r = t.route(layer).unwrap();
+            assert_eq!(row.algorithm, r.algorithm);
+            assert_eq!(row.params, r.params);
+            assert_eq!(row.expected_ms.to_bits(), r.expected_ms.to_bits());
+        }
+        // the precomputed pass cost is the map walk, bit for bit — the
+        // fleet's cost signal must not shift by an ulp when the dense
+        // path replaces the nested lookup
+        assert_eq!(dense.expected_pass_ms().to_bits(), t.expected_network_ms_for(&net).to_bits());
+        assert_eq!(dense.row(0).layer, net.layers[0].0);
+    }
+
+    #[test]
+    fn dense_routes_handle_nan_costs_and_partial_tables() {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        // uniform tables carry NaN costs: rows keep the NaN, the sum
+        // skips it (zero, like the map walk)
+        let uniform = RoutingTable::uniform(Algorithm::Im2col);
+        let dense = uniform.dense_for(&net).expect("uniform covers resnet");
+        assert!(dense.rows().iter().all(|r| r.expected_ms.is_nan()));
+        assert_eq!(dense.expected_pass_ms(), 0.0);
+        // a partial table must refuse to flatten
+        let mut partial = RoutingTable::default();
+        partial.set(LayerClass::Conv2x, Algorithm::Ilpm, 1.0);
+        assert!(partial.dense_for(&net).is_none());
     }
 
     #[test]

@@ -15,17 +15,44 @@
 //! ([`crate::coordinator::RoutingTable::expected_network_ms_for`]),
 //! and greedily minimising `predicted queue wait + cost` keeps slow
 //! mobile GPUs from queueing work a dedicated GPU would finish sooner.
+//!
+//! The decision path is allocation-free: the dispatcher reads the
+//! fleet's dense per-replica state ([`FleetView`] — three parallel
+//! slices the driver keeps hot for the whole run) instead of a
+//! per-arrival `Vec` of views, so one `choose` call is a pure argmin
+//! scan over flat arrays. The counting-allocator test pins this down.
 
-/// A replica as the dispatcher sees it at one arrival instant.
+/// The whole fleet as the dispatcher sees it at one arrival instant:
+/// dense parallel arrays indexed by replica, borrowed from the driver's
+/// run-long state — nothing is built per arrival.
 #[derive(Debug, Clone, Copy)]
-pub struct ReplicaView {
-    /// Requests admitted to this replica and not yet finished.
-    pub outstanding: usize,
-    /// Predicted time until the replica's queue drains (ms).
-    pub queue_wait_ms: f64,
-    /// Expected per-request cost on this replica (ms) — the route
-    /// cost signal.
-    pub cost_ms: f64,
+pub struct FleetView<'a> {
+    /// Requests admitted and not yet finished, per replica.
+    pub outstanding: &'a [u32],
+    /// Virtual instant each replica finishes its last admitted request
+    /// (ms). May be in the past for idle replicas — the queue wait
+    /// clamps at zero.
+    pub busy_until_ms: &'a [f64],
+    /// Expected per-request cost per replica (ms) — the route cost
+    /// signal.
+    pub cost_ms: &'a [f64],
+    /// The arrival instant (ms, virtual clock).
+    pub now_ms: f64,
+}
+
+impl FleetView<'_> {
+    pub fn len(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.outstanding.is_empty()
+    }
+
+    /// Predicted time until replica `i`'s queue drains (ms, >= 0).
+    pub fn queue_wait_ms(&self, i: usize) -> f64 {
+        (self.busy_until_ms[i] - self.now_ms).max(0.0)
+    }
 }
 
 /// Which replica gets the next request.
@@ -57,25 +84,28 @@ impl DispatchPolicy {
     ///
     /// # Panics
     /// On an empty fleet — a pool always has at least one replica.
-    pub fn choose(self, seq: u64, replicas: &[ReplicaView]) -> usize {
-        assert!(!replicas.is_empty(), "dispatch over an empty fleet");
+    pub fn choose(self, seq: u64, fleet: &FleetView<'_>) -> usize {
+        assert!(!fleet.is_empty(), "dispatch over an empty fleet");
         match self {
-            DispatchPolicy::RoundRobin => (seq % replicas.len() as u64) as usize,
+            DispatchPolicy::RoundRobin => (seq % fleet.len() as u64) as usize,
             DispatchPolicy::LeastOutstanding => {
                 let mut best = 0;
-                for (i, r) in replicas.iter().enumerate().skip(1) {
-                    if r.outstanding < replicas[best].outstanding {
+                for (i, &o) in fleet.outstanding.iter().enumerate().skip(1) {
+                    if o < fleet.outstanding[best] {
                         best = i;
                     }
                 }
                 best
             }
             DispatchPolicy::CostAware => {
-                let predicted = |r: &ReplicaView| r.queue_wait_ms + r.cost_ms;
+                let predicted = |i: usize| fleet.queue_wait_ms(i) + fleet.cost_ms[i];
                 let mut best = 0;
-                for (i, r) in replicas.iter().enumerate().skip(1) {
-                    if predicted(r) < predicted(&replicas[best]) {
+                let mut best_ms = predicted(0);
+                for i in 1..fleet.len() {
+                    let ms = predicted(i);
+                    if ms < best_ms {
                         best = i;
+                        best_ms = ms;
                     }
                 }
                 best
@@ -94,8 +124,32 @@ impl std::fmt::Display for DispatchPolicy {
 mod tests {
     use super::*;
 
-    fn view(outstanding: usize, queue_wait_ms: f64, cost_ms: f64) -> ReplicaView {
-        ReplicaView { outstanding, queue_wait_ms, cost_ms }
+    /// Owned columns a test assembles a [`FleetView`] over.
+    struct Cols {
+        outstanding: Vec<u32>,
+        busy_until_ms: Vec<f64>,
+        cost_ms: Vec<f64>,
+    }
+
+    impl Cols {
+        fn new(rows: &[(u32, f64, f64)]) -> Cols {
+            Cols {
+                outstanding: rows.iter().map(|r| r.0).collect(),
+                // tests express queue *wait*; the view stores the busy
+                // instant, so anchor now at 0
+                busy_until_ms: rows.iter().map(|r| r.1).collect(),
+                cost_ms: rows.iter().map(|r| r.2).collect(),
+            }
+        }
+
+        fn view(&self) -> FleetView<'_> {
+            FleetView {
+                outstanding: &self.outstanding,
+                busy_until_ms: &self.busy_until_ms,
+                cost_ms: &self.cost_ms,
+                now_ms: 0.0,
+            }
+        }
     }
 
     #[test]
@@ -109,31 +163,41 @@ mod tests {
 
     #[test]
     fn round_robin_cycles() {
-        let rs = vec![view(9, 9.0, 9.0); 3];
+        let c = Cols::new(&[(9, 9.0, 9.0); 3]);
         let picks: Vec<usize> =
-            (0..6).map(|s| DispatchPolicy::RoundRobin.choose(s, &rs)).collect();
+            (0..6).map(|s| DispatchPolicy::RoundRobin.choose(s, &c.view())).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
     #[test]
     fn least_outstanding_ignores_cost() {
-        let rs = [view(3, 1.0, 1.0), view(1, 100.0, 100.0), view(2, 0.0, 0.0)];
-        assert_eq!(DispatchPolicy::LeastOutstanding.choose(0, &rs), 1);
+        let c = Cols::new(&[(3, 1.0, 1.0), (1, 100.0, 100.0), (2, 0.0, 0.0)]);
+        assert_eq!(DispatchPolicy::LeastOutstanding.choose(0, &c.view()), 1);
         // tie breaks toward the lowest index
-        let tied = [view(2, 0.0, 0.0), view(2, 0.0, 0.0)];
-        assert_eq!(DispatchPolicy::LeastOutstanding.choose(7, &tied), 0);
+        let tied = Cols::new(&[(2, 0.0, 0.0), (2, 0.0, 0.0)]);
+        assert_eq!(DispatchPolicy::LeastOutstanding.choose(7, &tied.view()), 0);
     }
 
     #[test]
     fn cost_aware_minimises_predicted_finish() {
         // an idle slow device loses to a busy fast one when the fast
         // queue still drains sooner
-        let rs = [view(0, 0.0, 50.0), view(4, 8.0, 2.0)];
-        assert_eq!(DispatchPolicy::CostAware.choose(0, &rs), 1);
+        let c = Cols::new(&[(0, 0.0, 50.0), (4, 8.0, 2.0)]);
+        assert_eq!(DispatchPolicy::CostAware.choose(0, &c.view()), 1);
         // …but wins once the fast queue is long enough
-        let rs = [view(0, 0.0, 50.0), view(30, 60.0, 2.0)];
-        assert_eq!(DispatchPolicy::CostAware.choose(0, &rs), 0);
-        let tied = [view(0, 1.0, 1.0), view(0, 0.0, 2.0)];
-        assert_eq!(DispatchPolicy::CostAware.choose(3, &tied), 0);
+        let c = Cols::new(&[(0, 0.0, 50.0), (30, 60.0, 2.0)]);
+        assert_eq!(DispatchPolicy::CostAware.choose(0, &c.view()), 0);
+        let tied = Cols::new(&[(0, 1.0, 1.0), (0, 0.0, 2.0)]);
+        assert_eq!(DispatchPolicy::CostAware.choose(3, &tied.view()), 0);
+    }
+
+    #[test]
+    fn queue_wait_clamps_idle_replicas_at_zero() {
+        // a replica whose busy_until is in the past must not get a
+        // negative head start over a genuinely idle one
+        let c = Cols::new(&[(0, -500.0, 10.0), (0, 0.0, 9.0)]);
+        let v = c.view();
+        assert_eq!(v.queue_wait_ms(0), 0.0);
+        assert_eq!(DispatchPolicy::CostAware.choose(0, &v), 1);
     }
 }

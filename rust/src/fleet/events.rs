@@ -1,0 +1,221 @@
+//! The fleet's discrete-event core: a binary-heap event queue with a
+//! deterministic total order.
+//!
+//! The open-loop driver used to scan every replica's completion FIFO at
+//! every arrival — O(replicas) per request, which walls off the
+//! "thousands of handsets" scenario. The event queue replaces that scan
+//! with O(log outstanding) heap operations: replicas become passive
+//! handlers and the driver just pops the next event.
+//!
+//! # Event taxonomy
+//!
+//! | kind           | meaning                                         |
+//! |----------------|-------------------------------------------------|
+//! | `ExecComplete` | a replica finishes its oldest admitted request  |
+//! | `Deadline`     | a queued request's SLO deadline expires         |
+//! | `Arrival`      | the open-loop process delivers the next request |
+//!
+//! `Deadline` is part of the public taxonomy (its ordering is defined
+//! and tested) but the current open-loop driver never schedules one:
+//! service times are deterministic, so a request's deadline fate is
+//! known at admission and the driver accounts for it there — scheduling
+//! a separate event would only reorder trace emission. Drivers with
+//! non-deterministic service (autoscaling, churn, stragglers — the
+//! ROADMAP items this PR unlocks) schedule `Deadline` events to cancel
+//! queued work whose wait outlived its SLO.
+//!
+//! # Total order (the determinism argument)
+//!
+//! Events are ordered by `(time, kind, seq)`:
+//!
+//! 1. **time** via [`f64::total_cmp`] — virtual milliseconds; total
+//!    even in the presence of poisoned (NaN) clocks, so the heap can
+//!    never lose its invariant.
+//! 2. **kind**: `ExecComplete < Deadline < Arrival`. Completions at
+//!    instant `t` retire *before* an arrival at the same `t` — exactly
+//!    the legacy scan's `completion <= now` semantics, so a dispatcher
+//!    at `t` sees the queue depth *after* same-instant completions.
+//!    Deadlines sit between: an expiring request is gone before the
+//!    next arrival counts queue depths, but a completion at the same
+//!    instant beats its own deadline (served exactly on time is not a
+//!    violation).
+//! 3. **seq**: the per-run monotone sequence number breaks remaining
+//!    ties (burst arrivals share one instant; FIFO by generation
+//!    order).
+//!
+//! No two events in one run compare equal (seq is unique per kind
+//! instance in practice), so the pop order is a pure function of the
+//! pushed set — push order never matters, and a seeded run replays
+//! byte-identically.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// What happens at an event's instant. Variant order is load-bearing:
+/// see the module docs' tie-break rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Replica `replica` finishes its oldest outstanding request.
+    ExecComplete { replica: u32 },
+    /// A request queued on `replica` reaches its SLO deadline.
+    Deadline { replica: u32 },
+    /// The next open-loop request arrives.
+    Arrival,
+}
+
+impl EventKind {
+    /// Same-instant rank: completions, then deadlines, then arrivals.
+    fn rank(self) -> u8 {
+        match self {
+            EventKind::ExecComplete { .. } => 0,
+            EventKind::Deadline { .. } => 1,
+            EventKind::Arrival => 2,
+        }
+    }
+}
+
+/// One scheduled event on the virtual clock.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Virtual instant, milliseconds since run start.
+    pub at_ms: f64,
+    /// Monotone per-run sequence number (the request id for arrivals
+    /// and for the completion/deadline its admission scheduled).
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at_ms
+            .total_cmp(&other.at_ms)
+            .then_with(|| self.kind.rank().cmp(&other.kind.rank()))
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+/// Min-heap of [`Event`]s in `(time, kind, seq)` order.
+///
+/// Pre-size with [`EventQueue::with_capacity`]: the open-loop driver
+/// bounds live events by `replicas x queue_depth` completions plus one
+/// pending arrival, so a correctly sized queue never reallocates in
+/// steady state (the allocation-free-loop test pins this down).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> EventQueue {
+        EventQueue { heap: BinaryHeap::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        self.heap.push(Reverse(ev));
+    }
+
+    /// The earliest event under the total order, if any.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek().map(|Reverse(ev)| ev)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at_ms: f64, seq: u64, kind: EventKind) -> Event {
+        Event { at_ms, seq, kind }
+    }
+
+    #[test]
+    fn pops_in_time_order_regardless_of_push_order() {
+        let mut q = EventQueue::new();
+        for t in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            q.push(ev(t, t as u64, EventKind::Arrival));
+        }
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.at_ms).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_instant_completions_beat_deadlines_beat_arrivals() {
+        // push in the *wrong* order on purpose: the heap must sort by
+        // kind rank at an equal instant
+        let mut q = EventQueue::with_capacity(4);
+        q.push(ev(7.0, 3, EventKind::Arrival));
+        q.push(ev(7.0, 2, EventKind::Deadline { replica: 1 }));
+        q.push(ev(7.0, 1, EventKind::ExecComplete { replica: 0 }));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().kind, EventKind::ExecComplete { replica: 0 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::Deadline { replica: 1 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::Arrival);
+    }
+
+    #[test]
+    fn seq_breaks_remaining_ties_fifo() {
+        // a burst: three arrivals at one instant pop in generation order
+        let mut q = EventQueue::new();
+        for seq in [11u64, 9, 10] {
+            q.push(ev(2.5, seq, EventKind::Arrival));
+        }
+        let seqs: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![9, 10, 11]);
+    }
+
+    #[test]
+    fn order_is_total_even_for_poisoned_clocks() {
+        // total_cmp sorts NaN after every finite instant instead of
+        // breaking the heap invariant
+        let mut q = EventQueue::new();
+        q.push(ev(f64::NAN, 0, EventKind::Arrival));
+        q.push(ev(1.0, 1, EventKind::Arrival));
+        assert_eq!(q.pop().unwrap().seq, 1);
+        assert!(q.pop().unwrap().at_ms.is_nan());
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(ev(3.0, 0, EventKind::Arrival));
+        q.push(ev(1.0, 1, EventKind::ExecComplete { replica: 4 }));
+        let peeked = *q.peek().unwrap();
+        assert_eq!(q.pop().unwrap(), peeked);
+        assert_eq!(peeked.kind, EventKind::ExecComplete { replica: 4 });
+    }
+}

@@ -1,0 +1,434 @@
+//! The retired FIFO-scan open-loop driver, kept as a differential
+//! oracle for the event-driven simulator in [`super::serve`].
+//!
+//! This is the pre-event-queue implementation, byte for byte in
+//! behaviour: per arrival it scans **every** replica's completion FIFO
+//! to retire finished work (O(replicas) per request), then assembles
+//! dispatch state and runs the identical admission/bookkeeping
+//! sequence. It is deliberately the slow, obviously-correct shape —
+//! the discrete-event driver must reproduce its [`FleetReport`] *and*
+//! its Chrome trace export bit for bit on a seeded corpus of specs ×
+//! policies × arrival processes, which is what the tests at the bottom
+//! of this file assert. Compiled only for tests; the production path
+//! never touches it.
+
+use std::borrow::Cow;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use super::dispatch::{DispatchPolicy, FleetView};
+use super::pool::DevicePool;
+use super::serve::{FleetReport, OpenLoopConfig, ReplicaReport};
+use crate::coordinator::Submission;
+use crate::metrics::LatencyRecorder;
+use crate::trace::{MetricsRegistry, SpanEvent, TraceSink};
+
+/// Virtual-queue state of one replica during a run.
+struct ReplicaState {
+    busy_until_ms: f64,
+    /// Completion instants of requests still queued or in service.
+    completions: VecDeque<f64>,
+    pending: usize,
+    rec: LatencyRecorder,
+    admitted: usize,
+    shed: usize,
+    violated: usize,
+}
+
+/// The old `run_open_loop_traced`: per-replica FIFO scanning instead
+/// of an event queue. Same contract, same output, quadratically worse
+/// scaling.
+pub fn run_open_loop_fifo_scan(
+    pool: &DevicePool,
+    cfg: &OpenLoopConfig,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+) -> Result<FleetReport> {
+    ensure!(cfg.n >= 1, "open loop needs at least one request");
+    match cfg.arrival.rate_hz() {
+        Some(r) if r.is_finite() && r > 0.0 => {}
+        Some(r) => bail!("arrival rate must be finite and positive, got {r}"),
+        None => bail!("fleet serving is open-loop: use a Poisson or Burst arrival process"),
+    }
+    if let Some(d) = cfg.slo.deadline_ms {
+        ensure!(d.is_finite() && d > 0.0, "deadline must be finite and positive, got {d}");
+    }
+
+    let replicas = pool.replicas();
+    let mut gen = crate::workload::RequestGen::new(pool.input_shape(), cfg.arrival, cfg.seed);
+    let mut states: Vec<ReplicaState> = replicas
+        .iter()
+        .map(|_| ReplicaState {
+            busy_until_ms: 0.0,
+            completions: VecDeque::new(),
+            pending: 0,
+            rec: LatencyRecorder::new(),
+            admitted: 0,
+            shed: 0,
+            violated: 0,
+        })
+        .collect();
+    let errors_before: Vec<u64> = replicas
+        .iter()
+        .map(|r| {
+            r.engine
+                .as_ref()
+                .map_or(0, |e| e.stats.errors.load(std::sync::atomic::Ordering::Relaxed))
+        })
+        .collect();
+
+    if sink.enabled() {
+        for (i, r) in replicas.iter().enumerate() {
+            let phases: Vec<(String, f64)> = r
+                .plan
+                .iter()
+                .map(|p| (format!("{}/{}", p.layer.name(), p.algorithm.name()), p.sim_ms_total()))
+                .collect();
+            sink.set_track(i as u32, &r.label, &phases);
+        }
+    }
+    let base = [
+        metrics.counter("fleet.requests_admitted"),
+        metrics.counter("fleet.requests_shed_deadline"),
+        metrics.counter("fleet.requests_shed_queue"),
+        metrics.counter("fleet.requests_violated"),
+    ];
+
+    let mut agg = LatencyRecorder::new();
+    let (mut shed_deadline, mut shed_queue, mut violated) = (0usize, 0usize, 0usize);
+    let mut span_ms = 0.0f64;
+    let costs: Vec<f64> = replicas.iter().map(|r| r.cost_ms).collect();
+
+    for seq in 0..cfg.n {
+        let req = gen.next_request();
+        let now_ms = req.arrival.as_secs_f64() * 1e3;
+        span_ms = span_ms.max(now_ms);
+        // the scan the event queue replaced: every replica, every
+        // arrival
+        for st in &mut states {
+            while st.completions.front().is_some_and(|&c| c <= now_ms) {
+                st.completions.pop_front();
+            }
+        }
+        let outstanding: Vec<u32> = states.iter().map(|s| s.completions.len() as u32).collect();
+        let busy: Vec<f64> = states.iter().map(|s| s.busy_until_ms).collect();
+        let view =
+            FleetView { outstanding: &outstanding, busy_until_ms: &busy, cost_ms: &costs, now_ms };
+        let pick = cfg.policy.choose(seq as u64, &view);
+        let (rep, st) = (&replicas[pick], &mut states[pick]);
+
+        if st.completions.len() >= pool.queue_depth() {
+            st.shed += 1;
+            shed_queue += 1;
+            if sink.enabled() {
+                let ev = SpanEvent::instant(
+                    pick as u32,
+                    Cow::Borrowed("shed_queue"),
+                    "slo",
+                    now_ms,
+                    seq as u64,
+                );
+                sink.record(ev);
+            }
+            continue;
+        }
+        if cfg.slo.admission {
+            if let Some(d) = cfg.slo.deadline_ms {
+                let predicted = (st.busy_until_ms - now_ms).max(0.0) + rep.cost_ms;
+                if predicted > d {
+                    st.shed += 1;
+                    shed_deadline += 1;
+                    if sink.enabled() {
+                        let ev = SpanEvent::instant(
+                            pick as u32,
+                            Cow::Borrowed("shed_deadline"),
+                            "slo",
+                            now_ms,
+                            seq as u64,
+                        );
+                        sink.record(ev);
+                    }
+                    continue;
+                }
+            }
+        }
+
+        let start = st.busy_until_ms.max(now_ms);
+        let completion = start + rep.sim_ms;
+        st.busy_until_ms = completion;
+        st.completions.push_back(completion);
+        span_ms = span_ms.max(completion);
+        let latency_ms = completion - now_ms;
+        if sink.enabled() {
+            if start > now_ms {
+                let ev = SpanEvent::span(
+                    pick as u32,
+                    Cow::Borrowed("queue"),
+                    "fleet",
+                    now_ms,
+                    start - now_ms,
+                    seq as u64,
+                );
+                sink.record(ev);
+            }
+            let ev = SpanEvent::span(
+                pick as u32,
+                Cow::Borrowed("exec"),
+                "fleet",
+                start,
+                rep.sim_ms,
+                seq as u64,
+            );
+            sink.record(ev);
+        }
+        if cfg.slo.deadline_ms.is_some_and(|d| latency_ms > d) {
+            st.violated += 1;
+            violated += 1;
+            if sink.enabled() {
+                let ev = SpanEvent::instant(
+                    pick as u32,
+                    Cow::Borrowed("violated"),
+                    "slo",
+                    completion,
+                    seq as u64,
+                );
+                sink.record(ev);
+            }
+        }
+        st.rec.record_ms(latency_ms);
+        agg.record_ms(latency_ms);
+        st.admitted += 1;
+
+        if let Some(engine) = &rep.engine {
+            let mut req = req;
+            loop {
+                match engine.try_submit(req)? {
+                    Submission::Queued => {
+                        st.pending += 1;
+                        break;
+                    }
+                    Submission::Saturated(returned) => {
+                        ensure!(
+                            st.pending > 0,
+                            "{}: saturated with nothing in flight",
+                            rep.label
+                        );
+                        let _ = engine.recv();
+                        st.pending -= 1;
+                        req = returned;
+                    }
+                }
+            }
+        }
+    }
+
+    for (st, rep) in states.iter_mut().zip(replicas) {
+        if let Some(engine) = &rep.engine {
+            while st.pending > 0 {
+                let _ = engine.recv();
+                st.pending -= 1;
+            }
+        }
+    }
+    let errors: u64 = replicas
+        .iter()
+        .zip(&errors_before)
+        .map(|(r, before)| {
+            r.engine
+                .as_ref()
+                .map_or(0, |e| e.stats.errors.load(std::sync::atomic::Ordering::Relaxed))
+                - before
+        })
+        .sum::<u64>()
+        + agg.dropped_nonfinite() as u64;
+
+    let span = Duration::from_secs_f64(span_ms.max(0.0) / 1e3);
+    let replica_reports: Vec<ReplicaReport> = states
+        .iter()
+        .zip(replicas)
+        .map(|(st, r)| ReplicaReport {
+            label: Arc::clone(&r.label),
+            device: Arc::clone(&r.device_name),
+            fingerprint: r.fingerprint,
+            sim_ms: r.sim_ms,
+            cost_ms: r.cost_ms,
+            admitted: st.admitted,
+            shed: st.shed,
+            violated: st.violated,
+            latency: st.rec.summary(span),
+        })
+        .collect();
+    let admitted: usize = states.iter().map(|s| s.admitted).sum();
+
+    metrics.add("fleet.requests_submitted", cfg.n as u64);
+    metrics.add("fleet.requests_admitted", admitted as u64);
+    metrics.add("fleet.requests_shed_deadline", shed_deadline as u64);
+    metrics.add("fleet.requests_shed_queue", shed_queue as u64);
+    metrics.add("fleet.requests_violated", violated as u64);
+    metrics.add("fleet.engine_errors", errors);
+    metrics.set_gauge("fleet.span_ms", span_ms);
+    metrics.put_histogram("fleet.latency_us", agg.histogram().clone());
+    for (st, r) in states.iter().zip(replicas) {
+        metrics.add(&format!("fleet.replica.{}.admitted", r.label), st.admitted as u64);
+        metrics.add(&format!("fleet.replica.{}.shed", r.label), st.shed as u64);
+        metrics.add(&format!("fleet.replica.{}.violated", r.label), st.violated as u64);
+        for p in r.plan.iter() {
+            let name = format!("fleet.algorithm.{}.convs_dispatched", p.algorithm.name());
+            metrics.add(&name, (st.admitted * p.convs) as u64);
+        }
+    }
+
+    Ok(FleetReport {
+        policy: cfg.policy,
+        network: pool.network().to_string(),
+        arrival: cfg.arrival,
+        seed: cfg.seed,
+        deadline_ms: cfg.slo.deadline_ms,
+        admission: cfg.slo.admission,
+        submitted: cfg.n,
+        admitted: (metrics.counter("fleet.requests_admitted") - base[0]) as usize,
+        shed_deadline: (metrics.counter("fleet.requests_shed_deadline") - base[1]) as usize,
+        shed_queue: (metrics.counter("fleet.requests_shed_queue") - base[2]) as usize,
+        violated: (metrics.counter("fleet.requests_violated") - base[3]) as usize,
+        errors,
+        span_ms,
+        aggregate: agg.summary(span),
+        replicas: replica_reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::serve::{run_open_loop_traced, SloConfig};
+    use super::super::spec::FleetSpec;
+    use super::*;
+    use crate::convgen::Algorithm;
+    use crate::coordinator::RoutingTable;
+    use crate::trace::{chrome_trace_json, TraceBuffer};
+    use crate::workload::{NetworkDef, TraceKind};
+
+    /// Pool from a spec string with uniform Direct tables (no tuner in
+    /// the loop, so the corpus is cheap and fully deterministic).
+    fn pool_for(spec: &str, net: &NetworkDef, queue_depth: usize, engines: bool) -> DevicePool {
+        let spec = FleetSpec::parse(spec).expect("spec");
+        let classes = net.classes();
+        let entries: Vec<_> = spec
+            .entries
+            .iter()
+            .map(|e| {
+                (
+                    e.device.clone(),
+                    e.replicas,
+                    RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap(),
+                )
+            })
+            .collect();
+        if engines {
+            DevicePool::start_with_tables(&entries, net, queue_depth).expect("pool")
+        } else {
+            DevicePool::start_virtual_with_tables(&entries, net, queue_depth).expect("pool")
+        }
+    }
+
+    /// Run both drivers on the same pool and assert the report JSON
+    /// and the Chrome trace export are byte-identical.
+    fn assert_drivers_agree(pool: &DevicePool, cfg: &OpenLoopConfig, ctx: &str) {
+        let mut old_buf = TraceBuffer::new();
+        let mut old_metrics = MetricsRegistry::new();
+        let old = run_open_loop_fifo_scan(pool, cfg, &mut old_buf, &mut old_metrics)
+            .unwrap_or_else(|e| panic!("{ctx}: fifo driver failed: {e}"));
+        let mut new_buf = TraceBuffer::new();
+        let mut new_metrics = MetricsRegistry::new();
+        let new = run_open_loop_traced(pool, cfg, &mut new_buf, &mut new_metrics)
+            .unwrap_or_else(|e| panic!("{ctx}: event driver failed: {e}"));
+        assert_eq!(
+            old.to_json().to_json_string(),
+            new.to_json().to_json_string(),
+            "{ctx}: reports diverged"
+        );
+        assert_eq!(
+            chrome_trace_json(&old_buf).to_json_string(),
+            chrome_trace_json(&new_buf).to_json_string(),
+            "{ctx}: chrome traces diverged"
+        );
+        assert_eq!(
+            old_metrics.to_json().to_json_string(),
+            new_metrics.to_json().to_json_string(),
+            "{ctx}: metrics registries diverged"
+        );
+    }
+
+    #[test]
+    fn event_driver_matches_fifo_oracle_across_the_corpus() {
+        // specs × policies × arrival processes × SLO settings × queue
+        // depths — every combination must agree byte for byte. Engine
+        // replicas are live thread pools, so the corpus keeps fleets
+        // small and reuses one pool per (spec, depth) cell.
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let specs = ["mali:1,vega8:1", "mali:2,vega8:1,radeonvii:1"];
+        let policies = [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::LeastOutstanding,
+            DispatchPolicy::CostAware,
+        ];
+        let slos = [
+            SloConfig::none(),
+            SloConfig { deadline_ms: Some(150.0), admission: true },
+            SloConfig { deadline_ms: Some(150.0), admission: false },
+        ];
+        for (si, spec) in specs.iter().enumerate() {
+            for &depth in &[2usize, 16] {
+                let pool = pool_for(spec, &net, depth, true);
+                let rate = 2.0 * pool.capacity_rps();
+                let arrivals = [
+                    TraceKind::Poisson { rate_hz: rate },
+                    TraceKind::Burst { rate_hz: rate, burst: 5 },
+                ];
+                for policy in policies {
+                    for arrival in arrivals {
+                        for (ki, slo) in slos.iter().enumerate() {
+                            let cfg = OpenLoopConfig {
+                                n: 64,
+                                arrival,
+                                policy,
+                                seed: 7 + si as u64 * 31 + ki as u64,
+                                slo: *slo,
+                            };
+                            let ctx = format!(
+                                "spec={spec} depth={depth} policy={} arrival={arrival:?} slo={slo:?}",
+                                policy.name()
+                            );
+                            assert_drivers_agree(&pool, &cfg, &ctx);
+                        }
+                    }
+                }
+                pool.shutdown();
+            }
+        }
+    }
+
+    #[test]
+    fn event_driver_matches_fifo_oracle_at_virtual_scale() {
+        // the scaling regime the event queue exists for: a fleet far
+        // past the engine cap, heavy burst overload, tight deadline.
+        // The FIFO oracle grinds through it O(n·replicas); they must
+        // still agree byte for byte.
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let pool = pool_for("mali:96,vega8:32", &net, 8, false);
+        let slow = pool.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max);
+        for policy in [DispatchPolicy::CostAware, DispatchPolicy::LeastOutstanding] {
+            let cfg = OpenLoopConfig {
+                n: 20_000,
+                arrival: TraceKind::Burst { rate_hz: 1.5 * pool.capacity_rps(), burst: 32 },
+                policy,
+                seed: 41,
+                slo: SloConfig { deadline_ms: Some(2.5 * slow), admission: true },
+            };
+            assert_drivers_agree(&pool, &cfg, &format!("virtual-scale policy={}", policy.name()));
+        }
+        pool.shutdown();
+    }
+}

@@ -3,7 +3,8 @@
 //! The paper tunes per-layer algorithm routes *per device* because
 //! mobile GPUs differ wildly; this module is the layer the ROADMAP's
 //! "serve heavy traffic" north star demands above that: many simulated
-//! devices ([`DevicePool`] — each replica its own
+//! devices ([`DevicePool`] — replicas priced once per device model,
+//! engine-backed replicas each owning their own
 //! [`crate::coordinator::InferenceEngine`] over a
 //! [`crate::coordinator::SimBackend`], routes resolved per device from
 //! the tunedb store in one warm-started pass), an open-loop traffic
@@ -15,19 +16,35 @@
 //! sheds predicted-late work, sheds and violations ledgered separately
 //! in the [`FleetReport`]).
 //!
+//! Serving is a discrete-event simulation: a binary-heap
+//! [`EventQueue`] (module [`events`]) drives arrivals and completions
+//! in deterministic order, replicas are passive dense state the
+//! dispatcher reads through a borrowed [`FleetView`], and the
+//! per-request hot path allocates nothing. Engine-backed pools are
+//! capped at [`MAX_ENGINE_REPLICAS`] (each replica is a live thread
+//! pool); *virtual* pools ([`DevicePool::start_virtual`]) drop the
+//! engines and scale to [`MAX_REPLICAS`] replicas — the `ilpm bench
+//! fleet-scale` path pushes 4096 replicas through a million requests
+//! in seconds, byte-identical from the seed.
+//!
 //! CLI front doors: `ilpm serve --fleet mali:2,vega8:1 --policy
-//! cost-aware …` and `ilpm bench fleet` (BENCH_fleet.json with the
-//! `cost_aware_beats_round_robin` verdict). See DESIGN.md "Fleet
-//! serving" for the dispatch-policy table and the admission-control
-//! formula.
+//! cost-aware …`, `ilpm bench fleet` (BENCH_fleet.json with the
+//! `cost_aware_beats_round_robin` verdict), and `ilpm bench
+//! fleet-scale` (BENCH_fleet_scale.json). See DESIGN.md "Fleet
+//! serving" for the event taxonomy, dispatch-policy table, and the
+//! admission-control formula.
 
 mod dispatch;
+mod events;
+#[cfg(test)]
+mod legacy;
 mod pool;
 mod serve;
 mod spec;
 
-pub use dispatch::{DispatchPolicy, ReplicaView};
-pub use pool::{resolve_routes, DevicePool, PoolReplica};
+pub use dispatch::{DispatchPolicy, FleetView};
+pub use events::{Event, EventKind, EventQueue};
+pub use pool::{resolve_routes, DevicePool, PoolReplica, MAX_ENGINE_REPLICAS};
 pub use serve::{
     run_open_loop, run_open_loop_traced, FleetReport, OpenLoopConfig, ReplicaReport, SloConfig,
 };

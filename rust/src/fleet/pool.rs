@@ -1,40 +1,67 @@
-//! The device pool: N heterogeneous simulated devices, each its own
-//! serving engine.
+//! The device pool: N heterogeneous simulated devices, engine-backed or
+//! virtual.
 //!
-//! Every replica wraps one [`SimBackend`] in one
-//! [`InferenceEngine`] with a single executor — one engine per modeled
-//! phone/GPU, not one engine with many threads — so per-replica queue
-//! depth and per-replica cost stay meaningful to the dispatcher. Route
-//! resolution is a single warm-started pass over the whole fleet:
+//! **Engine-backed** pools (the `serve --fleet` path) wrap one
+//! [`SimBackend`] in one [`InferenceEngine`] with a single executor per
+//! replica — one engine per modeled phone/GPU, not one engine with many
+//! threads — so per-replica queue depth and per-replica cost stay
+//! meaningful to the dispatcher. Each replica owns an executor thread,
+//! so engine-backed fleets cap at [`MAX_ENGINE_REPLICAS`].
+//!
+//! **Virtual** pools ([`DevicePool::start_virtual`], the
+//! `bench fleet-scale` path) carry the same labels, costs and plans but
+//! no engines: the discrete-event driver prices everything on the
+//! virtual clock, so thousands of replicas cost a few scalars each —
+//! the device model is priced *once per device model* and shared, which
+//! is what lets a 4096-replica pool start in milliseconds.
+//!
+//! Route resolution is a single warm-started pass over the whole fleet:
 //! devices the tunedb store covers load from disk, the rest cold-tune
 //! in one [`tune_layers_warm`] call, and the caller decides whether to
-//! merge the fresh entries back to disk.
+//! merge the fresh entries back to disk. Per-replica strings are
+//! interned once (`Arc<str>`) and shared by every report row — the old
+//! per-row `String::clone` fan-out is gone.
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use super::spec::FleetSpec;
 use crate::autotune::{tune_layers_warm, WarmStats};
-use crate::coordinator::{InferenceEngine, RoutingTable, SimBackend};
+use crate::coordinator::{InferenceEngine, PlannedLayer, RoutingTable, SimBackend};
 use crate::simulator::DeviceConfig;
 use crate::tunedb::TuneStore;
 use crate::workload::NetworkDef;
 
-/// One simulated device in the fleet, with its serving engine and the
-/// two costs the dispatcher needs.
+/// Hard cap on replicas in an *engine-backed* pool — each replica owns
+/// an executor thread, and a typo like `mali:20000` should fail pool
+/// start, not exhaust the host. Virtual pools (no threads) go far
+/// beyond this; their cap is [`super::spec::MAX_REPLICAS`].
+pub const MAX_ENGINE_REPLICAS: usize = 256;
+
+/// One simulated device in the fleet, with the costs the dispatcher
+/// needs and (for engine-backed pools) its serving engine.
 pub struct PoolReplica {
-    /// `device#idx`, unique within the pool.
-    pub label: String,
-    pub device_name: String,
+    /// `device#idx`, unique within the pool. Interned: report rows
+    /// share this allocation instead of cloning the string.
+    pub label: Arc<str>,
+    /// Device model name, shared by every replica of the model.
+    pub device_name: Arc<str>,
     /// Fingerprint of the device spec (ties BENCH rows to the tunedb).
     pub fingerprint: u64,
-    pub engine: InferenceEngine<SimBackend>,
+    /// The host-side serving engine; `None` in virtual pools.
+    pub engine: Option<InferenceEngine<SimBackend>>,
     /// Actual simulated time one request occupies this device (ms).
     pub sim_ms: f64,
     /// The dispatch cost signal: the routes' expected per-pass time
-    /// ([`RoutingTable::expected_network_ms_for`]); falls back to
+    /// (the dense route table's precomputed sum); falls back to
     /// `sim_ms` when the table carries no finite cost (uniform
     /// baselines).
     pub cost_ms: f64,
+    /// The priced per-layer plan, shared by every replica of the
+    /// device model — trace phase registration and algorithm-mix
+    /// metrics read this, engine or no engine.
+    pub plan: Arc<[PlannedLayer]>,
 }
 
 /// A started fleet: replicas in spec order, ready to serve.
@@ -49,23 +76,26 @@ pub struct DevicePool {
 /// warm keys load from `store`, misses cold-tune (one
 /// [`tune_layers_warm`] call over every fleet device) and are merged
 /// into `store` — the caller persists the store if it wants the
-/// cold-tune to stick.
+/// cold-tune to stick. Tables come back aligned with `spec.entries`
+/// (no device configs are cloned into the result).
 pub fn resolve_routes(
     spec: &FleetSpec,
     net: &NetworkDef,
     store: &mut TuneStore,
     threads: usize,
-) -> Result<(Vec<(DeviceConfig, RoutingTable)>, WarmStats)> {
-    let devices = spec.devices();
+) -> Result<(Vec<RoutingTable>, WarmStats)> {
+    // the tuner wants an owned slice; this is the one place the fleet
+    // copies device configs, once per device *model* per run
+    let devices: Vec<DeviceConfig> = spec.devices().into_iter().cloned().collect();
     let (_, warm) = tune_layers_warm(&devices, &net.classes(), threads, store);
     let mut tables = Vec::with_capacity(devices.len());
-    for dev in devices {
-        let table = RoutingTable::from_store(store, &dev)
+    for dev in &devices {
+        let table = RoutingTable::from_store(store, dev)
             .filter(|t| t.covers(net))
             .with_context(|| {
                 format!("no routes covering {} for {} after tuning", net.name, dev.name)
             })?;
-        tables.push((dev, table));
+        tables.push(table);
     }
     Ok((tables, warm))
 }
@@ -83,54 +113,122 @@ impl DevicePool {
         queue_depth: usize,
     ) -> Result<(DevicePool, WarmStats)> {
         let (tables, warm) = resolve_routes(spec, net, store, threads)?;
-        let with_replicas: Vec<(DeviceConfig, usize, RoutingTable)> = spec
+        let entries: Vec<(&DeviceConfig, usize, &RoutingTable)> = spec
             .entries
             .iter()
-            .zip(tables)
-            .map(|(e, (dev, table))| (dev, e.replicas, table))
+            .zip(&tables)
+            .map(|(e, table)| (&e.device, e.replicas, table))
             .collect();
-        Ok((Self::start_with_tables(&with_replicas, net, queue_depth)?, warm))
+        Ok((Self::build(&entries, net, queue_depth, true)?, warm))
     }
 
-    /// Start a fleet from explicit `(device, replicas, routes)` triples
-    /// — the injection point for tests and for callers that resolved
-    /// routes themselves.
+    /// [`DevicePool::start`] without engines: same routes, labels and
+    /// costs, no executor threads — the pool `bench fleet-scale` drives
+    /// at thousands of replicas.
+    pub fn start_virtual(
+        spec: &FleetSpec,
+        net: &NetworkDef,
+        store: &mut TuneStore,
+        threads: usize,
+        queue_depth: usize,
+    ) -> Result<(DevicePool, WarmStats)> {
+        let (tables, warm) = resolve_routes(spec, net, store, threads)?;
+        let entries: Vec<(&DeviceConfig, usize, &RoutingTable)> = spec
+            .entries
+            .iter()
+            .zip(&tables)
+            .map(|(e, table)| (&e.device, e.replicas, table))
+            .collect();
+        Ok((Self::build(&entries, net, queue_depth, false)?, warm))
+    }
+
+    /// Start an engine-backed fleet from explicit
+    /// `(device, replicas, routes)` triples — the injection point for
+    /// tests and for callers that resolved routes themselves.
     pub fn start_with_tables(
         entries: &[(DeviceConfig, usize, RoutingTable)],
         net: &NetworkDef,
         queue_depth: usize,
     ) -> Result<DevicePool> {
+        let refs: Vec<(&DeviceConfig, usize, &RoutingTable)> =
+            entries.iter().map(|(d, n, t)| (d, *n, t)).collect();
+        Self::build(&refs, net, queue_depth, true)
+    }
+
+    /// [`DevicePool::start_with_tables`] without engines.
+    pub fn start_virtual_with_tables(
+        entries: &[(DeviceConfig, usize, RoutingTable)],
+        net: &NetworkDef,
+        queue_depth: usize,
+    ) -> Result<DevicePool> {
+        let refs: Vec<(&DeviceConfig, usize, &RoutingTable)> =
+            entries.iter().map(|(d, n, t)| (d, *n, t)).collect();
+        Self::build(&refs, net, queue_depth, false)
+    }
+
+    fn build(
+        entries: &[(&DeviceConfig, usize, &RoutingTable)],
+        net: &NetworkDef,
+        queue_depth: usize,
+        engines: bool,
+    ) -> Result<DevicePool> {
         anyhow::ensure!(!entries.is_empty(), "fleet needs at least one device");
         anyhow::ensure!(queue_depth >= 1, "fleet queue depth must be at least 1");
-        let mut replicas = Vec::new();
+        let total: usize = entries.iter().map(|(_, count, _)| count).sum();
+        if engines {
+            anyhow::ensure!(
+                total <= MAX_ENGINE_REPLICAS,
+                "{total} replicas, but engine-backed fleets cap at {MAX_ENGINE_REPLICAS} \
+                 (one executor thread each) — larger fleets serve virtually \
+                 (`bench fleet-scale`)",
+            );
+        }
+        let mut replicas = Vec::with_capacity(total);
         let mut input_shape = Vec::new();
         for (dev, count, table) in entries {
+            // price the device model once; every replica of the model
+            // shares the plan, the costs and the interned name
+            let reference = SimBackend::new(dev, table, net, 0.0)
+                .with_context(|| format!("fleet device {}", dev.name))?;
+            let sim_ms = reference.network_ms();
+            anyhow::ensure!(sim_ms > 0.0, "{}: simulated pass priced at {sim_ms} ms", dev.name);
+            // the dense table's precomputed pass cost — same sum, no
+            // per-layer hashing at serve time
+            let dense = table.dense_for(net).expect("SimBackend::new verified coverage");
+            let route_ms = dense.expected_pass_ms();
+            let cost_ms = if route_ms.is_finite() && route_ms > 0.0 { route_ms } else { sim_ms };
+            input_shape = reference.input_shape();
+            let plan: Arc<[PlannedLayer]> = reference.plan().to_vec().into();
+            let device_name: Arc<str> = Arc::from(dev.name);
+            let fingerprint = dev.fingerprint();
+            // the pricing backend doubles as replica 0's engine backend
+            let mut spare = Some(reference);
             for idx in 0..*count {
-                // pacing (time_scale) stays 0: the fleet driver runs a
-                // virtual clock of its own, so wall-clock sleeps would
-                // only slow the host without changing any reported
-                // number
-                let backend = SimBackend::new(dev, table, net, 0.0)
-                    .with_context(|| format!("fleet replica {}#{idx}", dev.name))?;
-                let sim_ms = backend.network_ms();
-                anyhow::ensure!(
-                    sim_ms > 0.0,
-                    "{}: simulated pass priced at {sim_ms} ms",
-                    dev.name
-                );
-                let route_ms = table.expected_network_ms_for(net);
-                let cost_ms =
-                    if route_ms.is_finite() && route_ms > 0.0 { route_ms } else { sim_ms };
-                input_shape = backend.input_shape();
-                let engine = InferenceEngine::start(backend, 1, queue_depth)
-                    .with_context(|| format!("start engine for {}#{idx}", dev.name))?;
+                let engine = if engines {
+                    // pacing (time_scale) stays 0: the fleet driver
+                    // runs a virtual clock of its own, so wall-clock
+                    // sleeps would only slow the host without changing
+                    // any reported number
+                    let backend = match spare.take() {
+                        Some(b) => b,
+                        None => SimBackend::new(dev, table, net, 0.0)
+                            .with_context(|| format!("fleet replica {}#{idx}", dev.name))?,
+                    };
+                    Some(
+                        InferenceEngine::start(backend, 1, queue_depth)
+                            .with_context(|| format!("start engine for {}#{idx}", dev.name))?,
+                    )
+                } else {
+                    None
+                };
                 replicas.push(PoolReplica {
-                    label: format!("{}#{idx}", dev.name),
-                    device_name: dev.name.to_string(),
-                    fingerprint: dev.fingerprint(),
+                    label: format!("{}#{idx}", dev.name).into(),
+                    device_name: Arc::clone(&device_name),
+                    fingerprint,
                     engine,
                     sim_ms,
                     cost_ms,
+                    plan: Arc::clone(&plan),
                 });
             }
         }
@@ -155,6 +253,11 @@ impl DevicePool {
         &self.input_shape
     }
 
+    /// True when the pool carries no engines (virtual-clock only).
+    pub fn is_virtual(&self) -> bool {
+        self.replicas.iter().all(|r| r.engine.is_none())
+    }
+
     /// Aggregate service capacity: requests/second the fleet sustains
     /// with every device busy (`Σ 1000 / sim_ms`). The yardstick
     /// open-loop arrival rates are set against.
@@ -165,7 +268,9 @@ impl DevicePool {
     /// Drain and join every replica engine.
     pub fn shutdown(self) {
         for r in self.replicas {
-            r.engine.shutdown();
+            if let Some(engine) = r.engine {
+                engine.shutdown();
+            }
         }
     }
 }
@@ -175,28 +280,32 @@ mod tests {
     use super::*;
     use crate::convgen::Algorithm;
 
-    fn quick_pool() -> DevicePool {
-        let net = NetworkDef::by_name("resnet18").unwrap();
-        let classes = net.classes();
+    fn entries() -> Vec<(DeviceConfig, usize, RoutingTable)> {
+        let classes = NetworkDef::by_name("resnet18").unwrap().classes();
         let mali = DeviceConfig::mali_g76_mp10();
         let vega = DeviceConfig::vega8();
-        let entries = vec![
+        vec![
             (mali, 2, RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap()),
             (vega, 1, RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap()),
-        ];
-        DevicePool::start_with_tables(&entries, &net, 4).expect("pool")
+        ]
+    }
+
+    fn quick_pool() -> DevicePool {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        DevicePool::start_with_tables(&entries(), &net, 4).expect("pool")
     }
 
     #[test]
     fn pool_builds_one_replica_per_count_with_costs() {
         let pool = quick_pool();
-        let labels: Vec<&str> = pool.replicas().iter().map(|r| r.label.as_str()).collect();
+        let labels: Vec<&str> = pool.replicas().iter().map(|r| &*r.label).collect();
         assert_eq!(labels, vec!["Mali-G76 MP10#0", "Mali-G76 MP10#1", "Vega 8#0"]);
         for r in pool.replicas() {
             assert!(r.sim_ms > 0.0);
             // uniform tables carry no measured cost: the dispatch
             // signal falls back to the simulated pass time
             assert_eq!(r.cost_ms, r.sim_ms, "{}", r.label);
+            assert!(!r.plan.is_empty());
         }
         // identical replicas price identically; the integrated GPU is
         // faster than the mobile one
@@ -204,6 +313,54 @@ mod tests {
         assert!(pool.replicas()[2].sim_ms < pool.replicas()[0].sim_ms);
         assert!(pool.capacity_rps() > 0.0);
         assert_eq!(pool.network(), "resnet18");
+        assert!(!pool.is_virtual());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn replicas_of_one_model_share_interned_strings_and_plan() {
+        let pool = quick_pool();
+        let (a, b) = (&pool.replicas()[0], &pool.replicas()[1]);
+        assert!(Arc::ptr_eq(&a.device_name, &b.device_name), "device name must be interned");
+        assert!(Arc::ptr_eq(&a.plan, &b.plan), "plan must be shared, not re-priced");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn virtual_pool_matches_engine_pool_pricing_without_engines() {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let engine_pool = quick_pool();
+        let virt = DevicePool::start_virtual_with_tables(&entries(), &net, 4).expect("virtual");
+        assert!(virt.is_virtual());
+        assert_eq!(virt.replicas().len(), engine_pool.replicas().len());
+        for (v, e) in virt.replicas().iter().zip(engine_pool.replicas()) {
+            assert_eq!(v.label, e.label);
+            assert_eq!(v.sim_ms, e.sim_ms, "{}", v.label);
+            assert_eq!(v.cost_ms, e.cost_ms, "{}", v.label);
+            assert!(v.engine.is_none());
+        }
+        assert_eq!(virt.input_shape(), engine_pool.input_shape());
+        engine_pool.shutdown();
+        virt.shutdown();
+    }
+
+    #[test]
+    fn virtual_pools_scale_past_the_engine_cap() {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let classes = net.classes();
+        let big = vec![(
+            DeviceConfig::vega8(),
+            4 * MAX_ENGINE_REPLICAS,
+            RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap(),
+        )];
+        // engine-backed: rejected, with a pointer at the virtual path
+        let err = DevicePool::start_with_tables(&big, &net, 4).unwrap_err();
+        assert!(err.to_string().contains("fleet-scale"), "{err:#}");
+        // virtual: fine, and priced once per model
+        let pool = DevicePool::start_virtual_with_tables(&big, &net, 4).expect("virtual pool");
+        assert_eq!(pool.replicas().len(), 4 * MAX_ENGINE_REPLICAS);
+        let first = &pool.replicas()[0];
+        assert!(pool.replicas().iter().all(|r| r.sim_ms == first.sim_ms));
         pool.shutdown();
     }
 

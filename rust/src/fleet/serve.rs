@@ -1,4 +1,4 @@
-//! Open-loop fleet serving: a deterministic virtual-clock dispatcher
+//! Open-loop fleet serving: a deterministic discrete-event simulator
 //! over the device pool, with SLO admission control.
 //!
 //! Requests arrive on an open-loop process ([`TraceKind::Poisson`] /
@@ -6,19 +6,32 @@
 //! queues genuinely build when the fleet is offered more than its
 //! capacity. Two clocks, mirroring the engine's own convention:
 //!
-//! * **Latency runs on a virtual clock.** Each replica is a FIFO
+//! * **Latency runs on a virtual clock**, driven by a binary-heap
+//!   event queue ([`super::events`]). Each replica is a passive FIFO
 //!   single-server queue; an admitted request starts at
 //!   `max(arrival, busy_until)` and occupies the device for its
-//!   simulated pass time. Every reported number (wait, latency,
-//!   shed/violated counts, throughput over the virtual makespan) is a
-//!   pure function of the seed — identical seed, byte-identical
-//!   BENCH_fleet.json.
-//! * **Numerics run on the host.** Every admitted request is also
-//!   pushed through the replica's real
+//!   simulated pass time, scheduling one `ExecComplete` event. The
+//!   driver touches O(log outstanding) state per request instead of
+//!   scanning every replica's FIFO — this is what lets
+//!   `bench fleet-scale` push a 4096-replica / 1M-request run through
+//!   in seconds. Every reported number (wait, latency, shed/violated
+//!   counts, throughput over the virtual makespan) is a pure function
+//!   of the seed — identical seed, byte-identical BENCH JSON.
+//! * **Numerics run on the host.** In engine-backed pools every
+//!   admitted request is also pushed through the replica's real
 //!   [`crate::coordinator::InferenceEngine`] (via the non-blocking
 //!   `try_submit`, draining a result when the bounded queue pushes
 //!   back), so the whole stack — routing, lowering, proxy-net
 //!   execution, error accounting — is exercised, not just modeled.
+//!   Virtual pools skip this leg; their error ledger counts only
+//!   recorder drops.
+//!
+//! The per-request hot path is allocation-free: replica state lives in
+//! dense parallel arrays ([`FleetView`] borrows them), images
+//! materialise lazily only for engine submission
+//! ([`crate::workload::request_image`] is a pure function of the id),
+//! span names are `&'static`, and the event heap is pre-sized to its
+//! steady-state bound. The counting-allocator test pins this down.
 //!
 //! **Admission control** (per-request SLO): a request is shed at
 //! dispatch when `predicted queue wait + expected cost > deadline`,
@@ -28,21 +41,26 @@
 //! the cost signal equals the simulated pass time, so admission is
 //! exact and admitted requests never violate — violations appear
 //! exactly when the cost model and reality diverge (or admission is
-//! disabled), which is the distinction worth measuring.
+//! disabled), which is the distinction worth measuring. Service times
+//! are deterministic, so a request's deadline fate is known at
+//! admission and ledgered there — the driver never schedules
+//! [`super::events::EventKind::Deadline`] events (see the event-queue
+//! module docs for who does).
 
 use std::borrow::Cow;
-use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Result};
 
-use super::dispatch::{DispatchPolicy, ReplicaView};
+use super::dispatch::{DispatchPolicy, FleetView};
+use super::events::{Event, EventKind, EventQueue};
 use super::pool::DevicePool;
 use crate::coordinator::Submission;
 use crate::metrics::{LatencyRecorder, LatencySummary};
 use crate::trace::{MetricsRegistry, NoopSink, SpanEvent, TraceSink};
 use crate::util::json::Json;
-use crate::workload::{RequestGen, TraceKind};
+use crate::workload::{request_image, Request, RequestGen, TraceKind};
 
 /// Per-request SLO configuration.
 #[derive(Debug, Clone, Copy)]
@@ -74,11 +92,12 @@ pub struct OpenLoopConfig {
     pub slo: SloConfig,
 }
 
-/// Per-replica outcome of an open-loop run.
+/// Per-replica outcome of an open-loop run. Labels are shared with the
+/// pool's interned strings — a 4096-replica report clones no names.
 #[derive(Debug, Clone)]
 pub struct ReplicaReport {
-    pub label: String,
-    pub device: String,
+    pub label: Arc<str>,
+    pub device: Arc<str>,
     pub fingerprint: u64,
     pub sim_ms: f64,
     pub cost_ms: f64,
@@ -159,8 +178,8 @@ impl FleetReport {
             .iter()
             .map(|r| {
                 let mut m = BTreeMap::new();
-                m.insert("replica".into(), Json::Str(r.label.clone()));
-                m.insert("device".into(), Json::Str(r.device.clone()));
+                m.insert("replica".into(), Json::Str(r.label.to_string()));
+                m.insert("device".into(), Json::Str(r.device.to_string()));
                 m.insert("fingerprint".into(), Json::Str(format!("{:016x}", r.fingerprint)));
                 m.insert("sim_ms".into(), Json::Num(r.sim_ms));
                 m.insert("cost_ms".into(), Json::Num(r.cost_ms));
@@ -192,18 +211,47 @@ impl FleetReport {
     }
 }
 
-/// Virtual-queue state of one replica during a run.
-struct ReplicaState {
-    /// Virtual instant the device finishes its last admitted request.
-    busy_until_ms: f64,
-    /// Completion instants of requests still queued or in service.
-    completions: VecDeque<f64>,
+/// Dense per-replica run state: structure-of-arrays so the dispatch
+/// argmin walks flat memory and a [`FleetView`] borrows without
+/// assembling anything per arrival.
+struct RunState {
+    /// Requests admitted and not yet virtually finished, per replica.
+    outstanding: Vec<u32>,
+    /// Virtual instant each replica finishes its last admitted request.
+    busy_until_ms: Vec<f64>,
+    /// Per-replica dispatch cost signal (copied once from the pool).
+    cost_ms: Vec<f64>,
     /// Requests submitted to the real engine, results not yet drained.
-    pending: usize,
-    rec: LatencyRecorder,
-    admitted: usize,
-    shed: usize,
-    violated: usize,
+    pending: Vec<usize>,
+    rec: Vec<LatencyRecorder>,
+    admitted: Vec<usize>,
+    shed: Vec<usize>,
+    violated: Vec<usize>,
+}
+
+impl RunState {
+    fn new(pool: &DevicePool) -> RunState {
+        let n = pool.replicas().len();
+        RunState {
+            outstanding: vec![0; n],
+            busy_until_ms: vec![0.0; n],
+            cost_ms: pool.replicas().iter().map(|r| r.cost_ms).collect(),
+            pending: vec![0; n],
+            rec: (0..n).map(|_| LatencyRecorder::new()).collect(),
+            admitted: vec![0; n],
+            shed: vec![0; n],
+            violated: vec![0; n],
+        }
+    }
+
+    fn view(&self, now_ms: f64) -> FleetView<'_> {
+        FleetView {
+            outstanding: &self.outstanding,
+            busy_until_ms: &self.busy_until_ms,
+            cost_ms: &self.cost_ms,
+            now_ms,
+        }
+    }
 }
 
 /// Drive `cfg.n` open-loop requests through the pool. See the module
@@ -220,12 +268,15 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
 ///
 /// One sink track per replica: a `queue` span when an admitted request
 /// waits, an `exec` span for its service time, `shed_queue` /
-/// `shed_deadline` / `violated` instants for the SLO ledger. Span
-/// names are `&'static` literals and every site is guarded on
-/// [`TraceSink::enabled`], so with tracing off the per-request cost is
-/// one branch — no allocation. Per-layer detail is *not* recorded per
-/// request; exporters synthesise it from the per-track phase costs
-/// registered up front.
+/// `shed_deadline` / `violated` instants for the SLO ledger. All
+/// bookkeeping — trace emission included — happens at admission time
+/// (service is deterministic, so the completion instant is already
+/// known), which keeps the trace byte-identical to the retired
+/// FIFO-scan driver's. Span names are `&'static` literals and every
+/// site is guarded on [`TraceSink::enabled`], so with tracing off the
+/// per-request cost is one branch — no allocation. Per-layer detail is
+/// *not* recorded per request; exporters synthesise it from the
+/// per-track phase costs registered up front.
 ///
 /// The returned report's admitted/shed/violated counts are read back
 /// out of `metrics` (as deltas over its incoming values), so the
@@ -248,21 +299,14 @@ pub fn run_open_loop_traced(
 
     let replicas = pool.replicas();
     let mut gen = RequestGen::new(pool.input_shape(), cfg.arrival, cfg.seed);
-    let mut states: Vec<ReplicaState> = replicas
-        .iter()
-        .map(|_| ReplicaState {
-            busy_until_ms: 0.0,
-            completions: VecDeque::new(),
-            pending: 0,
-            rec: LatencyRecorder::new(),
-            admitted: 0,
-            shed: 0,
-            violated: 0,
-        })
-        .collect();
+    let mut st = RunState::new(pool);
     let errors_before: Vec<u64> = replicas
         .iter()
-        .map(|r| r.engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed))
+        .map(|r| {
+            r.engine
+                .as_ref()
+                .map_or(0, |e| e.stats.errors.load(std::sync::atomic::Ordering::Relaxed))
+        })
         .collect();
 
     // one trace track per replica; the fixed per-pass layer costs let
@@ -270,9 +314,7 @@ pub fn run_open_loop_traced(
     if sink.enabled() {
         for (i, r) in replicas.iter().enumerate() {
             let phases: Vec<(String, f64)> = r
-                .engine
-                .backend()
-                .plan()
+                .plan
                 .iter()
                 .map(|p| (format!("{}/{}", p.layer.name(), p.algorithm.name()), p.sim_ms_total()))
                 .collect();
@@ -290,172 +332,228 @@ pub fn run_open_loop_traced(
     let mut agg = LatencyRecorder::new();
     let (mut shed_deadline, mut shed_queue, mut violated) = (0usize, 0usize, 0usize);
     let mut span_ms = 0.0f64;
+    let queue_depth = pool.queue_depth() as u32;
 
-    for seq in 0..cfg.n {
-        let req = gen.next_request();
-        let now_ms = req.arrival.as_secs_f64() * 1e3;
-        span_ms = span_ms.max(now_ms);
-        // retire virtually-finished work before looking at queue depths
-        for st in &mut states {
-            while st.completions.front().is_some_and(|&c| c <= now_ms) {
-                st.completions.pop_front();
-            }
-        }
-        let views: Vec<ReplicaView> = states
-            .iter()
-            .zip(replicas)
-            .map(|(st, r)| ReplicaView {
-                outstanding: st.completions.len(),
-                queue_wait_ms: (st.busy_until_ms - now_ms).max(0.0),
-                cost_ms: r.cost_ms,
-            })
-            .collect();
-        let pick = cfg.policy.choose(seq as u64, &views);
-        let (rep, st) = (&replicas[pick], &mut states[pick]);
+    // live events are bounded by one completion per outstanding slot
+    // plus the single pending arrival, so this heap never grows past
+    // its initial capacity in steady state
+    let mut events = EventQueue::with_capacity(
+        replicas.len().saturating_mul(queue_depth as usize).min(cfg.n) + 2,
+    );
+    // exactly one future arrival lives in the heap at any instant; its
+    // exact Duration rides in this side slot (the event stores ms)
+    let (first_id, first_at) = gen.next_arrival();
+    let mut pending_arrival_at = first_at;
+    events.push(Event {
+        at_ms: first_at.as_secs_f64() * 1e3,
+        seq: first_id,
+        kind: EventKind::Arrival,
+    });
+    let mut generated = 1usize;
 
-        // bounded backpressure: the virtual queue cap mirrors the
-        // engine's bounded channel
-        if st.completions.len() >= pool.queue_depth() {
-            st.shed += 1;
-            shed_queue += 1;
-            if sink.enabled() {
-                let ev = SpanEvent::instant(
-                    pick as u32,
-                    Cow::Borrowed("shed_queue"),
-                    "slo",
-                    now_ms,
-                    seq as u64,
-                );
-                sink.record(ev);
+    while let Some(ev) = events.pop() {
+        let now_ms = ev.at_ms;
+        match ev.kind {
+            EventKind::ExecComplete { replica } => {
+                // the replica retires its oldest request; nothing else
+                // to do — latency and SLO fate were ledgered at
+                // admission (service is deterministic)
+                st.outstanding[replica as usize] -= 1;
             }
-            continue;
-        }
-        // SLO admission: shed what the cost model predicts will miss
-        if cfg.slo.admission {
-            if let Some(d) = cfg.slo.deadline_ms {
-                let predicted = (st.busy_until_ms - now_ms).max(0.0) + rep.cost_ms;
-                if predicted > d {
-                    st.shed += 1;
-                    shed_deadline += 1;
+            EventKind::Deadline { .. } => {
+                unreachable!("the open-loop driver never schedules deadline events");
+            }
+            EventKind::Arrival => {
+                let seq = ev.seq;
+                let arrival_at = pending_arrival_at;
+                // arrivals are generated lazily, one ahead: the clock
+                // is monotone, so the next arrival can never precede
+                // an event already in the heap
+                if generated < cfg.n {
+                    let (id, at) = gen.next_arrival();
+                    pending_arrival_at = at;
+                    events.push(Event {
+                        at_ms: at.as_secs_f64() * 1e3,
+                        seq: id,
+                        kind: EventKind::Arrival,
+                    });
+                    generated += 1;
+                }
+                span_ms = span_ms.max(now_ms);
+                let pick = cfg.policy.choose(seq, &st.view(now_ms));
+                let rep = &replicas[pick];
+
+                // bounded backpressure: the virtual queue cap mirrors
+                // the engine's bounded channel
+                if st.outstanding[pick] >= queue_depth {
+                    st.shed[pick] += 1;
+                    shed_queue += 1;
                     if sink.enabled() {
                         let ev = SpanEvent::instant(
                             pick as u32,
-                            Cow::Borrowed("shed_deadline"),
+                            Cow::Borrowed("shed_queue"),
                             "slo",
                             now_ms,
-                            seq as u64,
+                            seq,
                         );
                         sink.record(ev);
                     }
                     continue;
                 }
-            }
-        }
-
-        // admit on the virtual clock
-        let start = st.busy_until_ms.max(now_ms);
-        let completion = start + rep.sim_ms;
-        st.busy_until_ms = completion;
-        st.completions.push_back(completion);
-        span_ms = span_ms.max(completion);
-        let latency_ms = completion - now_ms;
-        if sink.enabled() {
-            if start > now_ms {
-                let ev = SpanEvent::span(
-                    pick as u32,
-                    Cow::Borrowed("queue"),
-                    "fleet",
-                    now_ms,
-                    start - now_ms,
-                    seq as u64,
-                );
-                sink.record(ev);
-            }
-            let ev = SpanEvent::span(
-                pick as u32,
-                Cow::Borrowed("exec"),
-                "fleet",
-                start,
-                rep.sim_ms,
-                seq as u64,
-            );
-            sink.record(ev);
-        }
-        if cfg.slo.deadline_ms.is_some_and(|d| latency_ms > d) {
-            st.violated += 1;
-            violated += 1;
-            if sink.enabled() {
-                let ev = SpanEvent::instant(
-                    pick as u32,
-                    Cow::Borrowed("violated"),
-                    "slo",
-                    completion,
-                    seq as u64,
-                );
-                sink.record(ev);
-            }
-        }
-        // record_ms cannot panic on a non-finite virtual latency (a
-        // poisoned cost signal); such samples are dropped, counted by
-        // the recorder, and folded into the error ledger below
-        st.rec.record_ms(latency_ms);
-        agg.record_ms(latency_ms);
-        st.admitted += 1;
-
-        // and through the real engine; a saturated queue drains one
-        // result first (the engine runs at host speed, so this always
-        // makes progress)
-        let mut req = req;
-        loop {
-            match rep.engine.try_submit(req)? {
-                Submission::Queued => {
-                    st.pending += 1;
-                    break;
+                // SLO admission: shed what the cost model predicts
+                // will miss
+                if cfg.slo.admission {
+                    if let Some(d) = cfg.slo.deadline_ms {
+                        let predicted = (st.busy_until_ms[pick] - now_ms).max(0.0) + rep.cost_ms;
+                        if predicted > d {
+                            st.shed[pick] += 1;
+                            shed_deadline += 1;
+                            if sink.enabled() {
+                                let ev = SpanEvent::instant(
+                                    pick as u32,
+                                    Cow::Borrowed("shed_deadline"),
+                                    "slo",
+                                    now_ms,
+                                    seq,
+                                );
+                                sink.record(ev);
+                            }
+                            continue;
+                        }
+                    }
                 }
-                Submission::Saturated(returned) => {
-                    ensure!(st.pending > 0, "{}: saturated with nothing in flight", rep.label);
-                    // per-request failures surface via stats.errors
-                    let _ = rep.engine.recv();
-                    st.pending -= 1;
-                    req = returned;
+
+                // admit on the virtual clock and schedule the
+                // completion event
+                let start = st.busy_until_ms[pick].max(now_ms);
+                let completion = start + rep.sim_ms;
+                st.busy_until_ms[pick] = completion;
+                st.outstanding[pick] += 1;
+                events.push(Event {
+                    at_ms: completion,
+                    seq,
+                    kind: EventKind::ExecComplete { replica: pick as u32 },
+                });
+                span_ms = span_ms.max(completion);
+                let latency_ms = completion - now_ms;
+                if sink.enabled() {
+                    if start > now_ms {
+                        let ev = SpanEvent::span(
+                            pick as u32,
+                            Cow::Borrowed("queue"),
+                            "fleet",
+                            now_ms,
+                            start - now_ms,
+                            seq,
+                        );
+                        sink.record(ev);
+                    }
+                    let ev = SpanEvent::span(
+                        pick as u32,
+                        Cow::Borrowed("exec"),
+                        "fleet",
+                        start,
+                        rep.sim_ms,
+                        seq,
+                    );
+                    sink.record(ev);
+                }
+                if cfg.slo.deadline_ms.is_some_and(|d| latency_ms > d) {
+                    st.violated[pick] += 1;
+                    violated += 1;
+                    if sink.enabled() {
+                        let ev = SpanEvent::instant(
+                            pick as u32,
+                            Cow::Borrowed("violated"),
+                            "slo",
+                            completion,
+                            seq,
+                        );
+                        sink.record(ev);
+                    }
+                }
+                // record_ms cannot panic on a non-finite virtual
+                // latency (a poisoned cost signal); such samples are
+                // dropped, counted by the recorder, and folded into
+                // the error ledger below
+                st.rec[pick].record_ms(latency_ms);
+                agg.record_ms(latency_ms);
+                st.admitted[pick] += 1;
+
+                // and through the real engine (engine-backed pools);
+                // the image materialises only here, so virtual pools
+                // never touch a tensor. A saturated queue drains one
+                // result first (the engine runs at host speed, so this
+                // always makes progress)
+                if let Some(engine) = &rep.engine {
+                    let mut req = Request {
+                        id: seq,
+                        image: request_image(pool.input_shape(), seq),
+                        arrival: arrival_at,
+                    };
+                    loop {
+                        match engine.try_submit(req)? {
+                            Submission::Queued => {
+                                st.pending[pick] += 1;
+                                break;
+                            }
+                            Submission::Saturated(returned) => {
+                                ensure!(
+                                    st.pending[pick] > 0,
+                                    "{}: saturated with nothing in flight",
+                                    rep.label
+                                );
+                                // per-request failures surface via
+                                // stats.errors
+                                let _ = engine.recv();
+                                st.pending[pick] -= 1;
+                                req = returned;
+                            }
+                        }
+                    }
                 }
             }
         }
     }
 
     // drain every engine so error counts are final
-    for (st, rep) in states.iter_mut().zip(replicas) {
-        while st.pending > 0 {
-            let _ = rep.engine.recv();
-            st.pending -= 1;
+    for (i, rep) in replicas.iter().enumerate() {
+        if let Some(engine) = &rep.engine {
+            while st.pending[i] > 0 {
+                let _ = engine.recv();
+                st.pending[i] -= 1;
+            }
         }
     }
     let errors: u64 = replicas
         .iter()
         .zip(&errors_before)
         .map(|(r, before)| {
-            r.engine.stats.errors.load(std::sync::atomic::Ordering::Relaxed) - before
+            r.engine
+                .as_ref()
+                .map_or(0, |e| e.stats.errors.load(std::sync::atomic::Ordering::Relaxed))
+                - before
         })
         .sum::<u64>()
         + agg.dropped_nonfinite() as u64;
 
     let span = Duration::from_secs_f64(span_ms.max(0.0) / 1e3);
-    let replica_reports: Vec<ReplicaReport> = states
+    let replica_reports: Vec<ReplicaReport> = replicas
         .iter()
-        .zip(replicas)
-        .map(|(st, r)| ReplicaReport {
-            label: r.label.clone(),
-            device: r.device_name.clone(),
+        .enumerate()
+        .map(|(i, r)| ReplicaReport {
+            label: Arc::clone(&r.label),
+            device: Arc::clone(&r.device_name),
             fingerprint: r.fingerprint,
             sim_ms: r.sim_ms,
             cost_ms: r.cost_ms,
-            admitted: st.admitted,
-            shed: st.shed,
-            violated: st.violated,
-            latency: st.rec.summary(span),
+            admitted: st.admitted[i],
+            shed: st.shed[i],
+            violated: st.violated[i],
+            latency: st.rec[i].summary(span),
         })
         .collect();
-    let admitted: usize = states.iter().map(|s| s.admitted).sum();
+    let admitted: usize = st.admitted.iter().sum();
 
     // register the run's tallies; the report below reads them back out
     metrics.add("fleet.requests_submitted", cfg.n as u64);
@@ -466,13 +564,13 @@ pub fn run_open_loop_traced(
     metrics.add("fleet.engine_errors", errors);
     metrics.set_gauge("fleet.span_ms", span_ms);
     metrics.put_histogram("fleet.latency_us", agg.histogram().clone());
-    for (st, r) in states.iter().zip(replicas) {
-        metrics.add(&format!("fleet.replica.{}.admitted", r.label), st.admitted as u64);
-        metrics.add(&format!("fleet.replica.{}.shed", r.label), st.shed as u64);
-        metrics.add(&format!("fleet.replica.{}.violated", r.label), st.violated as u64);
-        for p in r.engine.backend().plan() {
+    for (i, r) in replicas.iter().enumerate() {
+        metrics.add(&format!("fleet.replica.{}.admitted", r.label), st.admitted[i] as u64);
+        metrics.add(&format!("fleet.replica.{}.shed", r.label), st.shed[i] as u64);
+        metrics.add(&format!("fleet.replica.{}.violated", r.label), st.violated[i] as u64);
+        for p in r.plan.iter() {
             let name = format!("fleet.algorithm.{}.convs_dispatched", p.algorithm.name());
-            metrics.add(&name, (st.admitted * p.convs) as u64);
+            metrics.add(&name, (st.admitted[i] * p.convs) as u64);
         }
     }
 
@@ -503,10 +601,9 @@ mod tests {
     use crate::simulator::DeviceConfig;
     use crate::workload::NetworkDef;
 
-    fn pool(queue_depth: usize) -> DevicePool {
-        let net = NetworkDef::by_name("resnet18").unwrap();
-        let classes = net.classes();
-        let entries = vec![
+    fn entries() -> Vec<(DeviceConfig, usize, RoutingTable)> {
+        let classes = NetworkDef::by_name("resnet18").unwrap().classes();
+        vec![
             (
                 DeviceConfig::mali_g76_mp10(),
                 1,
@@ -517,8 +614,12 @@ mod tests {
                 1,
                 RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap(),
             ),
-        ];
-        DevicePool::start_with_tables(&entries, &net, queue_depth).expect("pool")
+        ]
+    }
+
+    fn pool(queue_depth: usize) -> DevicePool {
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        DevicePool::start_with_tables(&entries(), &net, queue_depth).expect("pool")
     }
 
     fn cfg(policy: DispatchPolicy, rate: f64, slo: SloConfig) -> OpenLoopConfig {
@@ -751,5 +852,75 @@ mod tests {
             rr.aggregate.p99_ms
         );
         p.shutdown();
+    }
+
+    #[test]
+    fn virtual_and_engine_pools_report_identically() {
+        // the virtual clock never consults the engine, so dropping the
+        // engines must not move a single byte of the report
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let run = |virtual_pool: bool| {
+            let p = if virtual_pool {
+                DevicePool::start_virtual_with_tables(&entries(), &net, 8).expect("virtual")
+            } else {
+                pool(8)
+            };
+            let c = cfg(
+                DispatchPolicy::CostAware,
+                1.5 * p.capacity_rps(),
+                SloConfig { deadline_ms: Some(500.0), admission: true },
+            );
+            let r = run_open_loop(&p, &c).expect("run");
+            p.shutdown();
+            r.to_json().to_json_string()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn des_scales_to_hundreds_of_replicas_deterministically() {
+        // a scaled-down fleet-scale scenario as a unit test: hundreds
+        // of engine-less replicas, tens of thousands of requests, twice
+        // — byte-identical and conservation-checked
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let classes = net.classes();
+        let big = vec![
+            (
+                DeviceConfig::mali_g76_mp10(),
+                192,
+                RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap(),
+            ),
+            (
+                DeviceConfig::vega8(),
+                64,
+                RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap(),
+            ),
+        ];
+        let run = || {
+            let p = DevicePool::start_virtual_with_tables(&big, &net, 16).expect("pool");
+            let slow = p.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max);
+            let c = OpenLoopConfig {
+                n: 20_000,
+                arrival: TraceKind::Burst { rate_hz: 1.2 * p.capacity_rps(), burst: 16 },
+                policy: DispatchPolicy::CostAware,
+                seed: 23,
+                slo: SloConfig { deadline_ms: Some(3.0 * slow), admission: true },
+            };
+            let r = run_open_loop(&p, &c).expect("run");
+            p.shutdown();
+            r
+        };
+        let a = run();
+        assert_eq!(a.submitted, 20_000);
+        assert_eq!(a.admitted + a.shed(), a.submitted);
+        assert_eq!(a.replicas.len(), 256);
+        assert!(a.admitted > 0);
+        assert_eq!(a.errors, 0);
+        let b = run();
+        assert_eq!(
+            a.to_json().to_json_string(),
+            b.to_json().to_json_string(),
+            "fleet-scale runs must replay byte-identically"
+        );
     }
 }

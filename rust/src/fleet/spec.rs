@@ -10,10 +10,15 @@ use anyhow::{bail, Result};
 
 use crate::simulator::DeviceConfig;
 
-/// Hard cap on total replicas in one fleet — each replica owns an
-/// executor thread, and a typo like `mali:20000` should fail parsing,
-/// not exhaust the host.
-pub const MAX_REPLICAS: usize = 64;
+/// Hard cap on total replicas in one fleet spec. The discrete-event
+/// driver serves virtual pools of thousands of replicas (the
+/// `bench fleet-scale` scenario), so parsing allows that scale; what a
+/// spec may *start* is a separate question — engine-backed pools, one
+/// executor thread per replica, enforce the much smaller
+/// [`crate::fleet::MAX_ENGINE_REPLICAS`] at pool start. This cap only
+/// exists so a typo like `mali:2000000` fails parsing instead of
+/// allocating per-replica state for a fleet nobody meant to ask for.
+pub const MAX_REPLICAS: usize = 16384;
 
 /// One line of a fleet spec: a device model and its replica count.
 #[derive(Debug, Clone)]
@@ -86,9 +91,11 @@ impl FleetSpec {
         self.entries.iter().map(|e| e.replicas).sum()
     }
 
-    /// The distinct device models, in spec order.
-    pub fn devices(&self) -> Vec<DeviceConfig> {
-        self.entries.iter().map(|e| e.device.clone()).collect()
+    /// The distinct device models, in spec order. Borrowed: callers
+    /// that need owned configs (the tuner boundary) copy explicitly,
+    /// once — the old per-call clone fan-out is gone.
+    pub fn devices(&self) -> Vec<&DeviceConfig> {
+        self.entries.iter().map(|e| &e.device).collect()
     }
 
     /// Canonical `alias:count,…` rendering, built from the `--device`
@@ -131,7 +138,18 @@ mod tests {
         assert!(FleetSpec::parse("mali:0").is_err(), "zero replicas");
         assert!(FleetSpec::parse("mali:x").is_err(), "non-numeric count");
         assert!(FleetSpec::parse("mali:2,mali-g76:1").is_err(), "duplicate via alias");
-        assert!(FleetSpec::parse("mali:999").is_err(), "over the replica cap");
+        assert!(FleetSpec::parse("mali:2000000").is_err(), "over the replica cap");
+    }
+
+    #[test]
+    fn parses_fleet_scale_replica_counts() {
+        // the discrete-event driver's scale target: thousands of
+        // replicas parse; the engine cap is enforced at pool start, not
+        // here
+        let s = FleetSpec::parse("mali:2048,vega8:1024,radeonvii:1024").expect("parse");
+        assert_eq!(s.total_replicas(), 4096);
+        assert!(FleetSpec::parse(&format!("mali:{MAX_REPLICAS}")).is_ok());
+        assert!(FleetSpec::parse(&format!("mali:{}", MAX_REPLICAS + 1)).is_err());
     }
 
     #[test]

@@ -5,4 +5,4 @@ mod layers;
 mod requests;
 
 pub use layers::{layer_classes, ConvShape, LayerClass, NetworkDef, ResNetDepth, RESNET_DEPTHS};
-pub use requests::{Request, RequestGen, TraceKind};
+pub use requests::{request_image, Request, RequestGen, TraceKind};

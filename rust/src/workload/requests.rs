@@ -67,8 +67,14 @@ impl RequestGen {
         }
     }
 
-    /// Generate the next request.
-    pub fn next_request(&mut self) -> Request {
+    /// Advance only the arrival process: the next request's id and
+    /// arrival instant, without materialising its image. The image is a
+    /// pure function of the id ([`request_image`]), independent of the
+    /// arrival PRNG, so callers that shed or only virtually serve a
+    /// request skip the tensor fill entirely — this is what keeps the
+    /// fleet's discrete-event loop allocation-free at millions of
+    /// requests.
+    pub fn next_arrival(&mut self) -> (u64, std::time::Duration) {
         let id = self.next_id;
         self.next_id += 1;
         match self.kind {
@@ -89,14 +95,26 @@ impl RequestGen {
                 self.burst_pos = (self.burst_pos + 1) % burst;
             }
         }
-        let image = Tensor::randn(&self.shape, 0xC0FFEE ^ id);
-        Request { id, image, arrival: std::time::Duration::from_secs_f64(self.clock) }
+        (id, std::time::Duration::from_secs_f64(self.clock))
+    }
+
+    /// Generate the next request, image included.
+    pub fn next_request(&mut self) -> Request {
+        let (id, arrival) = self.next_arrival();
+        Request { id, image: request_image(&self.shape, id), arrival }
     }
 
     /// Generate a batch of `n` requests.
     pub fn take(&mut self, n: usize) -> Vec<Request> {
         (0..n).map(|_| self.next_request()).collect()
     }
+}
+
+/// The deterministic synthetic image for request `id` — seeded by the
+/// id alone, so any generator (or none at all) produces the identical
+/// tensor for the identical request.
+pub fn request_image(shape: &[usize], id: u64) -> Tensor {
+    Tensor::randn(shape, 0xC0FFEE ^ id)
 }
 
 #[cfg(test)]
@@ -161,6 +179,22 @@ mod tests {
         }
         assert_eq!(TraceKind::Burst { rate_hz: 50.0, burst: 1 }.rate_hz(), Some(50.0));
         assert_eq!(TraceKind::ClosedLoop.rate_hz(), None);
+    }
+
+    #[test]
+    fn next_arrival_is_next_request_minus_the_image() {
+        // the lazy split must not perturb the arrival stream: ids and
+        // instants match the materialising path bit for bit
+        let kind = TraceKind::Burst { rate_hz: 120.0, burst: 3 };
+        let mut lazy = RequestGen::new(&[3, 4, 4], kind, 17);
+        let mut eager = RequestGen::new(&[3, 4, 4], kind, 17);
+        for _ in 0..64 {
+            let (id, arrival) = lazy.next_arrival();
+            let req = eager.next_request();
+            assert_eq!(id, req.id);
+            assert_eq!(arrival, req.arrival);
+            assert_eq!(request_image(&[3, 4, 4], id), req.image);
+        }
     }
 
     #[test]

@@ -62,7 +62,7 @@ fn bench_fleet_verdict_and_overload_shed_on_the_table1_mix() {
     .expect("bench fleet");
     let j = Json::parse(&std::fs::read_to_string(&out).expect("written")).expect("json");
     // the shared BENCH envelope: schema version + all three fingerprints
-    assert_eq!(j.get("schema_version").and_then(Json::as_u64), Some(1));
+    assert_eq!(j.get("schema_version").and_then(Json::as_u64), Some(2));
     assert_eq!(j.get("bench").and_then(Json::as_str), Some("fleet"));
     let devices = j.get("devices").and_then(Json::as_arr).expect("devices");
     assert_eq!(devices.len(), 3, "Table-1 mix lists three device models");
@@ -118,6 +118,59 @@ fn bench_fleet_is_byte_identical_for_an_identical_seed() {
     let first = run_once(&a);
     let second = run_once(&b);
     assert_eq!(first, second, "identical seed must give a byte-identical BENCH_fleet.json");
+    for p in [&routes, &a, &b] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn bench_fleet_scale_smoke_is_deterministic_past_the_engine_cap() {
+    // the CLI front door of the discrete-event scheduler: a virtual
+    // fleet well past MAX_ENGINE_REPLICAS, scaled-down request count,
+    // run twice — byte-identical file, sane rollups
+    let routes = tmp("scale_routes");
+    paper_store().save(&routes).expect("persist store");
+    let run_once = |out: &PathBuf| {
+        cli::run(&sv(&[
+            "bench",
+            "fleet-scale",
+            "--fleet",
+            "mali:256,vega8:128,radeonvii:128",
+            "--n",
+            "50000",
+            "--seed",
+            "29",
+            "--routes",
+            routes.to_str().unwrap(),
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .expect("bench fleet-scale");
+        std::fs::read(out).expect("read bench output")
+    };
+    let (a, b) = (tmp("scale_a"), tmp("scale_b"));
+    let first = run_once(&a);
+    assert_eq!(first, run_once(&b), "same seed must give a byte-identical BENCH_fleet_scale.json");
+    let j = Json::parse(std::str::from_utf8(&first).unwrap()).expect("json");
+    assert_eq!(j.get("schema_version").and_then(Json::as_u64), Some(2));
+    assert_eq!(j.get("bench").and_then(Json::as_str), Some("fleet-scale"));
+    assert_eq!(j.get("replicas").and_then(Json::as_usize), Some(512));
+    assert_eq!(j.get("errors").and_then(Json::as_u64), Some(0));
+    let rollup = j.get("devices_rollup").and_then(Json::as_arr).expect("rollup");
+    assert_eq!(rollup.len(), 3, "one rollup row per device model, not per replica");
+    let admitted: usize = rollup
+        .iter()
+        .map(|r| r.get("admitted").and_then(Json::as_usize).unwrap())
+        .sum();
+    assert_eq!(Some(admitted), j.get("admitted").and_then(Json::as_usize));
+    let shed: usize =
+        rollup.iter().map(|r| r.get("shed").and_then(Json::as_usize).unwrap()).sum();
+    let (sd, sq) = (
+        j.get("shed_deadline").and_then(Json::as_usize).unwrap(),
+        j.get("shed_queue").and_then(Json::as_usize).unwrap(),
+    );
+    assert_eq!(shed, sd + sq);
+    assert_eq!(admitted + shed, j.get("n").and_then(Json::as_usize).unwrap());
     for p in [&routes, &a, &b] {
         std::fs::remove_file(p).ok();
     }
