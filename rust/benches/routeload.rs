@@ -1,0 +1,89 @@
+//! Bench: serve-start route loading as the fleet store grows — the
+//! binary tunedb's reason to exist. JSON parses every device ever
+//! tuned; the sealed binary store seeks to one fingerprint's records
+//! via the index footer, so its cost stays flat while JSON's grows
+//! with the fleet.
+//!
+//! Run: `cargo bench --bench routeload`
+//! (The CI verdict artifact comes from `ilpm bench routeload`, which
+//! wraps the same comparison with a correctness gate and JSON output.)
+
+use ilpm::convgen::{Algorithm, TuneParams};
+use ilpm::coordinator::RoutingTable;
+use ilpm::simulator::DeviceConfig;
+use ilpm::tunedb::{binstore, StoredTuning, TuneStore};
+use ilpm::util::bench::{black_box, fmt_ns, Bench};
+use ilpm::util::prng::Rng;
+use ilpm::workload::LayerClass;
+
+fn main() {
+    let dev = DeviceConfig::mali_g76_mp10();
+    let b = Bench::quick();
+    println!("=== serve-start route load for {} ===", dev.name);
+    println!(
+        "{:<10} {:>14} {:>14} {:>14} {:>14} {:>10}",
+        "fleet", "json median", "binary median", "json read", "binary read", "speedup"
+    );
+
+    for &n_devices in &[16usize, 64, 256, 1024] {
+        let mut rng = Rng::new(7);
+        let mut store = TuneStore::new();
+        let mut fill = |store: &mut TuneStore, fp: u64, name: &str, rng: &mut Rng| {
+            for layer in LayerClass::ALL {
+                for alg in Algorithm::ALL {
+                    if !alg.supports(&layer.shape()) {
+                        continue;
+                    }
+                    store.insert(
+                        fp,
+                        name,
+                        StoredTuning {
+                            layer,
+                            algorithm: alg,
+                            params: TuneParams::for_shape(&layer.shape()),
+                            time_ms: (1 + rng.below(64_000)) as f64 / 64.0,
+                            evaluated: 3,
+                            pruned: 1,
+                        },
+                    );
+                }
+            }
+        };
+        fill(&mut store, dev.fingerprint(), dev.name, &mut rng);
+        for i in 1..n_devices {
+            fill(&mut store, rng.next_u64(), &format!("synthetic-{i}"), &mut rng);
+        }
+
+        let dir = std::env::temp_dir()
+            .join(format!("ilpm_bench_routeload_{}_{n_devices}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let json_path = dir.join("store.json");
+        let bin_path = dir.join("store.tdb");
+        store.save(&json_path).expect("save json");
+        binstore::write_sealed(&store, &bin_path).expect("write sealed");
+        let json_bytes = std::fs::metadata(&json_path).expect("stat").len();
+
+        let json = b.run(|| {
+            let s = TuneStore::load(&json_path).expect("json load");
+            black_box(RoutingTable::from_store(&s, &dev).expect("routes").len())
+        });
+        let (_, rep) =
+            binstore::load_device(&bin_path, dev.fingerprint()).expect("indexed load");
+        assert!(rep.indexed, "sealed store must serve the indexed path");
+        let bin = b.run(|| {
+            let (s, _) = binstore::load_device(&bin_path, dev.fingerprint()).expect("bin load");
+            black_box(RoutingTable::from_store(&s, &dev).expect("routes").len())
+        });
+
+        println!(
+            "{:<10} {:>14} {:>14} {:>13}B {:>13}B {:>9.1}x",
+            n_devices,
+            fmt_ns(json.median_ns),
+            fmt_ns(bin.median_ns),
+            json_bytes,
+            rep.bytes_read,
+            json.median_ns / bin.median_ns.max(1.0),
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

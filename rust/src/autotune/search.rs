@@ -92,12 +92,15 @@ impl TuningDatabase {
     }
 
     /// Fastest algorithm for a (device, layer) among tuned entries.
+    /// Total order with an algorithm-name tie-break (the routing rule):
+    /// a NaN `time_ms` — the legacy flat format stores none — picks a
+    /// deterministic winner instead of panicking in `partial_cmp`.
     pub fn best_algorithm(&self, dev: &str, layer: LayerClass) -> Option<&TunedEntry> {
-        self.entries
-            .get(dev)?
-            .values()
-            .filter(|e| e.layer == layer)
-            .min_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap())
+        self.entries.get(dev)?.values().filter(|e| e.layer == layer).min_by(|a, b| {
+            a.time_ms
+                .total_cmp(&b.time_ms)
+                .then_with(|| a.algorithm.name().cmp(b.algorithm.name()))
+        })
     }
 
     pub fn entries(&self) -> impl Iterator<Item = &TunedEntry> {
@@ -176,6 +179,10 @@ pub struct WarmStats {
     pub evaluated: usize,
     /// Candidates pruned (over-budget shared memory) for missed keys.
     pub pruned: usize,
+    /// The missed keys, post-tune — exactly what merge-back must
+    /// persist. The binary tunedb appends only these (append-only
+    /// merge), instead of rewriting every key the store already held.
+    pub fresh: Vec<(u64, LayerClass, Algorithm)>,
 }
 
 /// Tune every (algorithm, ResNet layer) pair on the given devices, in
@@ -243,6 +250,7 @@ pub fn tune_layers_warm(
             stats.pruned += e.stats.pruned;
             if let Some(dev) = by_name.get(e.device.as_str()) {
                 store.merge_entry(dev, &e);
+                stats.fresh.push((dev.fingerprint(), e.layer, e.algorithm));
             }
             db.insert(e);
         }
@@ -422,6 +430,58 @@ mod tests {
         assert_eq!(warm.evaluated, 0);
         assert_eq!(m2.counter("tuner.warm_hits") as usize, warm.hits);
         assert_eq!(trace_a, trace_b, "tuning traces must not depend on scheduling");
+    }
+
+    #[test]
+    fn best_algorithm_tolerates_legacy_nan_times() {
+        // regression: `TuningDatabase::load` fills missing time_ms with
+        // NaN (the legacy flat format has none) and best_algorithm
+        // used to panic comparing them
+        let mk = |alg: Algorithm, t: f64| TunedEntry {
+            device: "mali".to_string(),
+            layer: LayerClass::Conv2x,
+            algorithm: alg,
+            params: TuneParams::default(),
+            time_ms: t,
+            reports: Vec::new(),
+            stats: SearchStats::default(),
+        };
+        let mut db = TuningDatabase::default();
+        db.insert(mk(Algorithm::Ilpm, f64::NAN));
+        db.insert(mk(Algorithm::Direct, 2.0));
+        let best = db.best_algorithm("mali", LayerClass::Conv2x).unwrap();
+        assert_eq!(best.algorithm, Algorithm::Direct);
+        // all-NaN still yields a deterministic (name-ordered) winner
+        let mut db = TuningDatabase::default();
+        db.insert(mk(Algorithm::Winograd, f64::NAN));
+        db.insert(mk(Algorithm::Im2col, f64::NAN));
+        let best = db.best_algorithm("mali", LayerClass::Conv2x).unwrap();
+        assert_eq!(best.algorithm, Algorithm::Im2col);
+    }
+
+    #[test]
+    fn warm_stats_fresh_lists_exactly_the_missed_keys() {
+        let dev = DeviceConfig::vega8();
+        let mut store = TuneStore::new();
+        let (_, cold) = tune_layers_warm(
+            std::slice::from_ref(&dev),
+            &[LayerClass::Conv2x],
+            2,
+            &mut store,
+        );
+        assert_eq!(cold.fresh.len(), cold.misses);
+        assert!(cold.fresh.iter().all(|&(fp, l, _)| {
+            fp == dev.fingerprint() && l == LayerClass::Conv2x
+        }));
+        // a fully warm rerun tunes nothing, so merge-back has nothing
+        let (_, warm) = tune_layers_warm(
+            std::slice::from_ref(&dev),
+            &[LayerClass::Conv2x],
+            2,
+            &mut store,
+        );
+        assert_eq!(warm.misses, 0);
+        assert!(warm.fresh.is_empty());
     }
 
     #[test]

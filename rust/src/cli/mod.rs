@@ -70,7 +70,7 @@ COMMANDS:
             --trace PATH  (sim and fleet modes) write a Chrome
                   trace_event JSON of the run — queue/exec spans per
                   replica on the virtual clock, loadable in Perfetto
-  bench     <fig5|table3|table4|serve|mobilenet|fleet|fleet-scale>
+  bench     <fig5|table3|table4|serve|mobilenet|fleet|fleet-scale|routeload>
             [--device mali|vega8|radeonvii|all]
             regenerate a paper table/figure from tuned simulations;
             `serve` sweeps device x routing policy through the sim
@@ -87,7 +87,11 @@ COMMANDS:
             requests, done in seconds — and writes the seed-exact
             BENCH_fleet_scale.json ([--fleet SPEC] [--n N] [--seed S]
             [--queue N] [--policy P] [--rate HZ] [--burst N]
-            [--deadline-ms X [--admission on|off]])
+            [--deadline-ms X [--admission on|off]]);
+            `routeload` races serve-start route loading for one device
+            out of a fleet-sized store — full-JSON-parse vs the binary
+            store's indexed seek — and writes the seed-exact
+            BENCH_routeload.json ([--device D] [--devices N] [--seed S])
   tune      [--device mali|vega8|radeonvii|all] [--threads N] [--out PATH]
             [--network resnet|mobilenetV1|mobilenetV1-0.5|all]
             [--trace PATH]
@@ -104,6 +108,17 @@ COMMANDS:
             cold-tuned in process; --out writes the same rows as JSON
   routes    [--store PATH] [--device ...|all]
             print the stored per-layer winners for a device fleet
+  tunedb    <migrate|export|compact|verify>
+            binary route-store lifecycle. Everywhere a store path is
+            accepted (--routes/--store/--out), both formats work: files
+            are sniffed by magic, and a fresh `.tdb` path selects the
+            binary format.
+            migrate --in STORE --out PATH.tdb   JSON v1 -> binary
+            export  --in PATH.tdb --out STORE   binary -> JSON v1
+            compact --db PATH.tdb   drop superseded records + stale
+                    footers, rebuild the fingerprint index
+            verify  --db PATH.tdb   walk every checksum and audit the
+                    index; exits nonzero on damage
   simulate  --alg <name> --layer <conv4.x|dw512s1@14|pw512-512@14> [--device ...]
             simulate one algorithm and print its profile counters
   verify    [--device mali|vega8|radeonvii|all] [--seed S] [--fuzz N]
@@ -183,8 +198,15 @@ fn load_routes_from_store(
     dev: &DeviceConfig,
     alias: &str,
 ) -> Result<RoutingTable, String> {
-    let store = TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?;
-    RoutingTable::from_store(&store, dev).ok_or_else(|| {
+    // binary stores take the indexed fast path: header + footer + this
+    // fingerprint's records, never the rest of the fleet's entries
+    let table = if crate::tunedb::binstore::is_binstore(Path::new(path)) {
+        RoutingTable::from_binstore(Path::new(path), dev).map_err(|e| format!("{e:#}"))?
+    } else {
+        let store = TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?;
+        RoutingTable::from_store(&store, dev)
+    };
+    table.ok_or_else(|| {
         format!(
             "device '{}' (fingerprint {:016x}) has no entries in {path} — \
              untuned device or stale fingerprint after a spec edit; \
@@ -286,6 +308,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "tune" => cmd_tune(rest),
         "profile" => cmd_profile(rest),
         "routes" => cmd_routes(rest),
+        "tunedb" => cmd_tunedb(rest),
         "simulate" => cmd_simulate(rest),
         "verify" => cmd_verify(rest),
         "layers" => cmd_layers(rest),
@@ -388,7 +411,7 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
     let slo = slo_flags(a)?;
 
     let mut store = match a.get("routes") {
-        Some(p) => TuneStore::load_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
+        Some(p) => crate::tunedb::load_any_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
         None => TuneStore::new(),
     };
     let (pool, warm) = DevicePool::start(&spec, &net, &mut store, threads, queue)
@@ -401,7 +424,8 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
     );
     if let Some(p) = a.get("routes") {
         if warm.misses > 0 {
-            store.save(Path::new(p)).map_err(|e| format!("save {p}: {e:#}"))?;
+            crate::tunedb::binstore::merge_back(&store, &warm.fresh, Path::new(p))
+                .map_err(|e| format!("save {p}: {e:#}"))?;
             log_info!("merged {} freshly-tuned entries back into {p}", warm.misses);
         }
     }
@@ -678,10 +702,24 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
         &[
             "device", "layer", "n", "workers", "routes", "out", "network", "time-scale",
             "threads", "fleet", "seed", "queue", "rate", "policy", "deadline-ms", "admission",
-            "burst",
+            "burst", "devices",
         ],
     )?;
     let which = a.positional.first().map(String::as_str).unwrap_or("fig5");
+    if which == "routeload" {
+        for f in [
+            "layer", "n", "workers", "routes", "network", "time-scale", "threads", "fleet",
+            "queue", "rate", "policy", "deadline-ms", "admission", "burst",
+        ] {
+            if a.get(f).is_some() {
+                return Err(format!("--{f} has no effect with `bench routeload`"));
+            }
+        }
+        return bench_routeload(&a);
+    }
+    if a.get("devices").is_some() {
+        return Err("--devices only applies to `bench routeload`".to_string());
+    }
     if which == "fleet" {
         // `bench fleet` pins its two phases so the file stays a pure
         // function of the seed; traffic shaping is fleet-scale's knob
@@ -751,7 +789,9 @@ fn bench_mobilenet(a: &Args) -> Result<(), String> {
         vec![device(a)?]
     };
     let mut store = match a.get("routes") {
-        Some(path) => TuneStore::load_or_empty(Path::new(path)).map_err(|e| format!("{e:#}"))?,
+        Some(path) => {
+            crate::tunedb::load_any_or_empty(Path::new(path)).map_err(|e| format!("{e:#}"))?
+        }
         None => TuneStore::new(),
     };
     let classes = net.classes();
@@ -760,7 +800,8 @@ fn bench_mobilenet(a: &Args) -> Result<(), String> {
     // `tune --out`): say so when the sweep actually added entries
     if let Some(path) = a.get("routes") {
         if warm.misses > 0 {
-            store.save(Path::new(path)).map_err(|e| format!("save {path}: {e:#}"))?;
+            crate::tunedb::binstore::merge_back(&store, &warm.fresh, Path::new(path))
+                .map_err(|e| format!("save {path}: {e:#}"))?;
             log_info!("merged {} freshly-tuned entries back into {path}", warm.misses);
         } else {
             log_info!("fully warm from {path}: store unchanged");
@@ -878,7 +919,9 @@ fn bench_serve(a: &Args) -> Result<(), String> {
         vec![device(a)?]
     };
     let store = match a.get("routes") {
-        Some(path) => Some(TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?),
+        Some(path) => {
+            Some(crate::tunedb::load_any(Path::new(path)).map_err(|e| format!("{e:#}"))?)
+        }
         None => None,
     };
 
@@ -1029,14 +1072,15 @@ fn bench_fleet(a: &Args) -> Result<(), String> {
     let out = a.get_or("out", "BENCH_fleet.json").to_string();
     let net = network(a)?;
     let mut store = match a.get("routes") {
-        Some(p) => TuneStore::load_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
+        Some(p) => crate::tunedb::load_any_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
         None => TuneStore::new(),
     };
     let (pool, warm) = DevicePool::start(&spec, &net, &mut store, threads, queue)
         .map_err(|e| format!("fleet start: {e:#}"))?;
     if let Some(p) = a.get("routes") {
         if warm.misses > 0 {
-            store.save(Path::new(p)).map_err(|e| format!("save {p}: {e:#}"))?;
+            crate::tunedb::binstore::merge_back(&store, &warm.fresh, Path::new(p))
+                .map_err(|e| format!("save {p}: {e:#}"))?;
             log_info!("merged {} freshly-tuned entries back into {p}", warm.misses);
         } else {
             log_info!("fully warm from {p}: store unchanged");
@@ -1166,14 +1210,15 @@ fn bench_fleet_scale(a: &Args) -> Result<(), String> {
     })?;
     let slo = slo_flags(a)?;
     let mut store = match a.get("routes") {
-        Some(p) => TuneStore::load_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
+        Some(p) => crate::tunedb::load_any_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
         None => TuneStore::new(),
     };
     let (pool, warm) = DevicePool::start_virtual(&spec, &net, &mut store, threads, queue)
         .map_err(|e| format!("fleet start: {e:#}"))?;
     if let Some(p) = a.get("routes") {
         if warm.misses > 0 {
-            store.save(Path::new(p)).map_err(|e| format!("save {p}: {e:#}"))?;
+            crate::tunedb::binstore::merge_back(&store, &warm.fresh, Path::new(p))
+                .map_err(|e| format!("save {p}: {e:#}"))?;
             log_info!("merged {} freshly-tuned entries back into {p}", warm.misses);
         }
     }
@@ -1293,6 +1338,176 @@ fn bench_fleet_scale(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `bench routeload` — serve-start route loading for one device out of
+/// a fleet-sized store: full-JSON-parse vs the binary store's indexed
+/// seek, written to BENCH_routeload.json.
+///
+/// The store is synthesised deterministically from `--seed`: the target
+/// device's keys plus `--devices`-1 synthetic fingerprints, each with
+/// the paper's four classes times every dense algorithm. Both formats
+/// are written to a temp dir; both loaders must agree on the resulting
+/// routes before anything is timed.
+///
+/// The JSON file carries only seed-deterministic fields (byte counts
+/// and the verdicts), so identical seeds write byte-identical files —
+/// the CI determinism gate diffs two runs. Wall-clock medians print to
+/// stdout only.
+fn bench_routeload(a: &Args) -> Result<(), String> {
+    use crate::tunedb::{binstore, StoredTuning};
+    use crate::util::bench::{black_box, fmt_ns, Bench};
+    use crate::util::prng::Rng;
+
+    let dev = device(a)?;
+    let n_devices = positive(a.get_usize("devices", 64)?, "devices")?;
+    let seed = a.get_usize("seed", 7)? as u64;
+    let out = a.get_or("out", "BENCH_routeload.json").to_string();
+
+    let mut rng = Rng::new(seed);
+    let mut store = TuneStore::new();
+    let algs: Vec<Algorithm> = Algorithm::ALL
+        .into_iter()
+        .filter(|alg| LayerClass::ALL.iter().all(|l| alg.supports(&l.shape())))
+        .collect();
+    let mut fill = |store: &mut TuneStore, fp: u64, name: &str, rng: &mut Rng| {
+        for layer in LayerClass::ALL {
+            for &alg in &algs {
+                store.insert(
+                    fp,
+                    name,
+                    StoredTuning {
+                        layer,
+                        algorithm: alg,
+                        params: crate::convgen::TuneParams::for_shape(&layer.shape()),
+                        // dyadic times survive both wire formats exactly
+                        time_ms: (1 + rng.below(1_000_000)) as f64 / 64.0,
+                        evaluated: rng.below(100) as usize,
+                        pruned: rng.below(10) as usize,
+                    },
+                );
+            }
+        }
+    };
+    fill(&mut store, dev.fingerprint(), dev.name, &mut rng);
+    for i in 1..n_devices {
+        let fp = rng.next_u64();
+        if fp == dev.fingerprint() {
+            continue;
+        }
+        fill(&mut store, fp, &format!("synthetic-{i}"), &mut rng);
+    }
+
+    let dir = std::env::temp_dir()
+        .join(format!("ilpm_routeload_{}_{seed}_{n_devices}", std::process::id()));
+    std::fs::create_dir_all(&dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+    let json_path = dir.join("store.json");
+    let bin_path = dir.join("store.tdb");
+    store.save(&json_path).map_err(|e| format!("{e:#}"))?;
+    binstore::write_sealed(&store, &bin_path).map_err(|e| format!("{e:#}"))?;
+    let json_bytes =
+        std::fs::metadata(&json_path).map_err(|e| e.to_string())?.len();
+    let bin_bytes = std::fs::metadata(&bin_path).map_err(|e| e.to_string())?.len();
+
+    // correctness before speed: both loaders must resolve identical
+    // routes for the target device, and the sealed store must actually
+    // serve the indexed path (not a silent full-scan fallback)
+    let via_json = {
+        let s = TuneStore::load(&json_path).map_err(|e| format!("{e:#}"))?;
+        RoutingTable::from_store(&s, &dev)
+            .ok_or("json loader lost the target device")?
+    };
+    let (bin_view, rep) = binstore::load_device(&bin_path, dev.fingerprint())
+        .map_err(|e| format!("{e:#}"))?;
+    let via_bin = RoutingTable::from_store(&bin_view, &dev)
+        .ok_or("binary loader lost the target device")?;
+    if !rep.indexed {
+        return Err("sealed store did not serve an indexed read".to_string());
+    }
+    for layer in LayerClass::ALL {
+        if via_json.route(layer) != via_bin.route(layer) {
+            return Err(format!("loaders disagree on {}", layer.name()));
+        }
+    }
+
+    let b = Bench::quick();
+    let json_stats = b.run(|| {
+        let s = TuneStore::load(&json_path).unwrap();
+        black_box(RoutingTable::from_store(&s, &dev).unwrap().len())
+    });
+    let bin_stats = b.run(|| {
+        let (s, _) = binstore::load_device(&bin_path, dev.fingerprint()).unwrap();
+        black_box(RoutingTable::from_store(&s, &dev).unwrap().len())
+    });
+    let beats = bin_stats.median_ns < json_stats.median_ns;
+    let fewer = rep.bytes_read < json_bytes;
+
+    println!(
+        "BENCH routeload — routes for {} out of a {}-device store ({} entries), seed={seed}",
+        dev.name,
+        n_devices,
+        store.len()
+    );
+    println!(
+        "{:<14} {:>12} {:>12} {:>14} {:>14}",
+        "loader", "file(B)", "read(B)", "median", "p95"
+    );
+    println!(
+        "{:<14} {:>12} {:>12} {:>14} {:>14}",
+        "json-parse",
+        json_bytes,
+        json_bytes,
+        fmt_ns(json_stats.median_ns),
+        fmt_ns(json_stats.p95_ns)
+    );
+    println!(
+        "{:<14} {:>12} {:>12} {:>14} {:>14}",
+        "binary-seek",
+        bin_bytes,
+        rep.bytes_read,
+        fmt_ns(bin_stats.median_ns),
+        fmt_ns(bin_stats.p95_ns)
+    );
+    println!(
+        "binary-seek beats json-parse: {} ({:.1}x on median, {:.0}x fewer bytes)",
+        if beats { "yes" } else { "NO" },
+        json_stats.median_ns / bin_stats.median_ns.max(1.0),
+        json_bytes as f64 / (rep.bytes_read.max(1)) as f64
+    );
+
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let row = |name: &str, file_b: u64, read_b: u64| {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(name.into()));
+        m.insert("file_bytes".into(), Json::Num(file_b as f64));
+        m.insert("bytes_read".into(), Json::Num(read_b as f64));
+        m.insert("entries_loaded".into(), Json::Num(via_bin.len() as f64));
+        Json::Obj(m)
+    };
+    let mut root = bench_envelope("routeload", &[&dev], seed);
+    root.insert("devices_in_store".into(), Json::Num(n_devices as f64));
+    root.insert("entries_in_store".into(), Json::Num(store.len() as f64));
+    root.insert("indexed".into(), Json::Bool(rep.indexed));
+    root.insert("binary_beats_json".into(), Json::Bool(beats));
+    root.insert("binary_reads_fewer_bytes".into(), Json::Bool(fewer));
+    root.insert(
+        "rows".into(),
+        Json::Arr(vec![
+            row("json-parse", json_bytes, json_bytes),
+            row("binary-seek", bin_bytes, rep.bytes_read),
+        ]),
+    );
+    root.insert("calibrated".into(), Json::Bool(true));
+    std::fs::write(&out, Json::Obj(root).to_json_string())
+        .map_err(|e| format!("write {out}: {e}"))?;
+    println!("wrote {out}");
+    std::fs::remove_dir_all(&dir).ok();
+    if beats {
+        Ok(())
+    } else {
+        Err("binary-seek did not beat json-parse".to_string())
+    }
+}
+
 fn cmd_tune(argv: &[String]) -> Result<(), String> {
     let a = Args::parse(argv, &["device", "threads", "out", "network", "trace"])?;
     let devices = device_fleet(&a)?;
@@ -1302,7 +1517,9 @@ fn cmd_tune(argv: &[String]) -> Result<(), String> {
     // the misses pay the exhaustive simulator sweep. Without --out the
     // store is an in-memory throwaway (cold, full sweep).
     let mut store = match a.get("out") {
-        Some(out) => TuneStore::load_or_empty(Path::new(out)).map_err(|e| format!("{e:#}"))?,
+        Some(out) => {
+            crate::tunedb::load_any_or_empty(Path::new(out)).map_err(|e| format!("{e:#}"))?
+        }
         None => TuneStore::new(),
     };
     let mut metrics = MetricsRegistry::new();
@@ -1336,7 +1553,10 @@ fn cmd_tune(argv: &[String]) -> Result<(), String> {
         warm.pruned
     );
     if let Some(out) = a.get("out") {
-        store.save(Path::new(out)).map_err(|e| format!("save {out}: {e:#}"))?;
+        // JSON rewrites the whole store; a binary `.tdb` path appends
+        // only the freshly-tuned keys and re-seals (append-only merge)
+        crate::tunedb::binstore::merge_back(&store, &warm.fresh, Path::new(out))
+            .map_err(|e| format!("save {out}: {e:#}"))?;
         log_info!(
             "tunedb: {} device(s), {} entries -> {out}",
             store.device_count(),
@@ -1492,7 +1712,7 @@ fn print_network_estimates(table: &RoutingTable, dev: &DeviceConfig) {
 fn cmd_routes(argv: &[String]) -> Result<(), String> {
     let a = Args::parse(argv, &["store", "device"])?;
     let path = a.get_or("store", "tune.json");
-    let store = TuneStore::load(Path::new(path)).map_err(|e| format!("{e:#}"))?;
+    let store = crate::tunedb::load_any(Path::new(path)).map_err(|e| format!("{e:#}"))?;
     let devices = if a.get_or("device", "all") == "all" {
         DeviceConfig::paper_devices()
     } else {
@@ -1526,6 +1746,115 @@ fn cmd_routes(argv: &[String]) -> Result<(), String> {
         println!("stale/unknown fingerprints in {path}: {}", stale.join(", "));
     }
     Ok(())
+}
+
+/// `ilpm tunedb` — binary route-store lifecycle: `migrate` (JSON v1 →
+/// binary), `export` (binary → JSON v1 interop), `compact` (drop
+/// superseded records and stale footers, rebuild the fingerprint
+/// index), `verify` (walk every checksum, audit the index, exit
+/// nonzero on damage).
+fn cmd_tunedb(argv: &[String]) -> Result<(), String> {
+    use crate::tunedb::binstore;
+    let a = Args::parse(argv, &["in", "out", "db"])?;
+    let sub = a.positional.first().map(String::as_str).unwrap_or("");
+    // per-subcommand flag discipline, same pattern as serve's modes
+    let reject = |flags: &[&str], mode: &str| -> Result<(), String> {
+        for &f in flags {
+            if a.get(f).is_some() {
+                return Err(format!("--{f} has no effect with `tunedb {mode}`"));
+            }
+        }
+        Ok(())
+    };
+    match sub {
+        "migrate" | "export" => {
+            reject(&["db"], sub)?;
+            let input = a
+                .get("in")
+                .ok_or_else(|| format!("tunedb {sub} needs --in <store>"))?;
+            let out = a
+                .get("out")
+                .ok_or_else(|| format!("tunedb {sub} needs --out <store>"))?;
+            let store =
+                crate::tunedb::load_any(Path::new(input)).map_err(|e| format!("{e:#}"))?;
+            let empties = store.devices().filter(|(_, d)| d.is_empty()).count();
+            if sub == "migrate" {
+                if empties > 0 {
+                    log_warn!(
+                        "{empties} device(s) with zero entries dropped: the binary \
+                         format stores records, and an empty device has none"
+                    );
+                }
+                binstore::write_sealed(&store, Path::new(out))
+                    .map_err(|e| format!("{e:#}"))?;
+            } else {
+                store.save(Path::new(out)).map_err(|e| format!("save {out}: {e:#}"))?;
+            }
+            println!(
+                "tunedb {sub}: {} device(s), {} entries, {input} -> {out}",
+                store.devices().filter(|(_, d)| !d.is_empty()).count(),
+                store.len()
+            );
+            Ok(())
+        }
+        "compact" => {
+            reject(&["in", "out"], sub)?;
+            let db = a.get("db").ok_or("tunedb compact needs --db <store.tdb>")?;
+            let rep = binstore::compact(Path::new(db)).map_err(|e| format!("{e:#}"))?;
+            for w in &rep.warnings {
+                log_warn!("tunedb {db}: {w}");
+            }
+            println!(
+                "tunedb compact: {db}: {} -> {} cells ({} dropped), {} entries, {} device(s)",
+                rep.before_cells, rep.after_cells, rep.dropped, rep.entries, rep.devices
+            );
+            Ok(())
+        }
+        "verify" => {
+            reject(&["in", "out"], sub)?;
+            let db = a.get("db").ok_or("tunedb verify needs --db <store.tdb>")?;
+            let rep = binstore::verify(Path::new(db)).map_err(|e| format!("{e:#}"))?;
+            for w in &rep.warnings {
+                log_warn!("tunedb {db}: {w}");
+            }
+            println!(
+                "tunedb verify: {db}: {} cells ({} data, {} footer), {} entries, \
+                 {} device(s), sealed: {}{}",
+                rep.cells,
+                rep.data_cells,
+                rep.footer_cells,
+                rep.entries,
+                rep.devices,
+                if rep.sealed { "yes" } else { "no" },
+                if rep.sealed {
+                    format!(
+                        ", index consistent: {}",
+                        if rep.index_consistent { "yes" } else { "NO" }
+                    )
+                } else {
+                    String::new()
+                },
+            );
+            if rep.is_clean() {
+                println!("tunedb verify: clean");
+                Ok(())
+            } else {
+                Err(format!(
+                    "tunedb verify: {} damaged cell(s), {} torn-tail byte(s){}",
+                    rep.damaged,
+                    rep.torn_tail_bytes,
+                    if rep.sealed && !rep.index_consistent {
+                        " , inconsistent index"
+                    } else {
+                        ""
+                    },
+                ))
+            }
+        }
+        other => Err(format!(
+            "unknown tunedb subcommand '{other}' (migrate|export|compact|verify)"
+        )),
+    }
 }
 
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
@@ -2048,6 +2377,128 @@ mod tests {
         run(&sv(&["tune", "--device", "mali", "--trace", &o])).expect("traced tune");
         let text = std::fs::read_to_string(&out).expect("trace written");
         assert!(text.contains("\"cat\":\"tune\""), "tuner spans present in {o}");
+        std::fs::remove_file(&out).ok();
+    }
+
+    /// A store with every ResNet class tuned for the given devices.
+    fn filled_store(devices: &[&DeviceConfig]) -> crate::tunedb::TuneStore {
+        use crate::convgen::TuneParams;
+        use crate::tunedb::{StoredTuning, TuneStore};
+        let mut store = TuneStore::new();
+        for d in devices {
+            for layer in LayerClass::ALL {
+                store.insert(
+                    d.fingerprint(),
+                    d.name,
+                    StoredTuning {
+                        layer,
+                        algorithm: Algorithm::Ilpm,
+                        params: TuneParams::for_shape(&layer.shape()),
+                        time_ms: 1.25,
+                        evaluated: 3,
+                        pruned: 1,
+                    },
+                );
+            }
+        }
+        store
+    }
+
+    #[test]
+    fn tunedb_lifecycle_migrate_verify_compact_export_round_trips() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let other = DeviceConfig::vega8();
+        let store = filled_store(&[&dev, &other]);
+        let base =
+            std::env::temp_dir().join(format!("ilpm_cli_tdb_{}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        let json = base.join("store.json");
+        let tdb = base.join("store.tdb");
+        let back = base.join("back.json");
+        store.save(&json).unwrap();
+        let (j, t, b) = (
+            json.to_str().unwrap().to_string(),
+            tdb.to_str().unwrap().to_string(),
+            back.to_str().unwrap().to_string(),
+        );
+        run(&sv(&["tunedb", "migrate", "--in", &j, "--out", &t])).expect("migrate");
+        run(&sv(&["tunedb", "verify", "--db", &t])).expect("verify after migrate");
+        // every store-consuming entry point sniffs and accepts the
+        // binary format
+        run(&sv(&["routes", "--store", &t, "--device", "mali"])).expect("routes from .tdb");
+        run(&sv(&[
+            "serve", "--backend", "sim", "--routes", &t, "--device", "mali", "--n", "4",
+            "--time-scale", "0",
+        ]))
+        .expect("serve from .tdb");
+        run(&sv(&["tunedb", "compact", "--db", &t])).expect("compact");
+        run(&sv(&["tunedb", "verify", "--db", &t])).expect("verify after compact");
+        run(&sv(&["tunedb", "export", "--in", &t, "--out", &b])).expect("export");
+        assert_eq!(
+            std::fs::read(&json).unwrap(),
+            std::fs::read(&back).unwrap(),
+            "JSON -> binary -> JSON must be byte-identical"
+        );
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn tunedb_verify_flags_corruption_and_compact_repairs() {
+        use crate::tunedb::binstore;
+        let dev = DeviceConfig::mali_g76_mp10();
+        let store = filled_store(&[&dev]);
+        let path = std::env::temp_dir()
+            .join(format!("ilpm_cli_tdb_corrupt_{}.tdb", std::process::id()));
+        binstore::write_sealed(&store, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[binstore::CELL + 100] ^= 0x40; // first data cell's payload
+        std::fs::write(&path, &bytes).unwrap();
+        let p = path.to_str().unwrap().to_string();
+        let e = run(&sv(&["tunedb", "verify", "--db", &p])).unwrap_err();
+        assert!(e.contains("damaged"), "{e}");
+        // compact drops the damaged cell and rewrites a clean store
+        run(&sv(&["tunedb", "compact", "--db", &p])).expect("compact repairs");
+        run(&sv(&["tunedb", "verify", "--db", &p])).expect("clean after compact");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tunedb_subcommands_enforce_their_flags() {
+        let e = run(&sv(&["tunedb", "frobnicate"])).unwrap_err();
+        assert!(e.contains("unknown tunedb subcommand"), "{e}");
+        let e = run(&sv(&["tunedb", "migrate", "--db", "x.tdb"])).unwrap_err();
+        assert!(e.contains("--db"), "{e}");
+        let e = run(&sv(&["tunedb", "compact", "--in", "x.json"])).unwrap_err();
+        assert!(e.contains("--in"), "{e}");
+        let e = run(&sv(&["tunedb", "verify"])).unwrap_err();
+        assert!(e.contains("--db"), "{e}");
+        let e = run(&sv(&["tunedb", "migrate", "--in", "x.json"])).unwrap_err();
+        assert!(e.contains("--out"), "{e}");
+        // routeload-only flags stay routeload-only, and vice versa
+        let e = run(&sv(&["bench", "fleet", "--devices", "8"])).unwrap_err();
+        assert!(e.contains("--devices"), "{e}");
+        let e = run(&sv(&["bench", "routeload", "--workers", "2"])).unwrap_err();
+        assert!(e.contains("--workers"), "{e}");
+    }
+
+    #[test]
+    fn bench_routeload_writes_verdicts_and_binary_wins() {
+        use crate::util::json::Json;
+        let out = std::env::temp_dir()
+            .join(format!("ilpm_bench_routeload_{}.json", std::process::id()));
+        let o = out.to_str().unwrap().to_string();
+        run(&sv(&[
+            "bench", "routeload", "--device", "mali", "--devices", "32", "--seed", "11",
+            "--out", &o,
+        ]))
+        .expect("bench routeload");
+        let j = Json::parse(&std::fs::read_to_string(&out).expect("written")).expect("json");
+        assert_bench_envelope(&j, "routeload", &["Mali-G76 MP10"]);
+        assert_eq!(j.get("indexed").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("binary_beats_json").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("binary_reads_fewer_bytes").and_then(Json::as_bool), Some(true));
+        let rows = j.get("rows").and_then(Json::as_arr).expect("rows");
+        assert_eq!(rows.len(), 2, "json-parse and binary-seek");
         std::fs::remove_file(&out).ok();
     }
 }

@@ -155,6 +155,23 @@ impl RoutingTable {
         }
     }
 
+    /// [`Self::from_store`] straight from a binary tunedb segment file:
+    /// the serve-start fast path. A sealed store's footer lets this
+    /// read only the header, the footer, and this fingerprint's
+    /// records — O(µs) regardless of how many other devices the fleet
+    /// has tuned into the same file. Same staleness contract as
+    /// `from_store`: an edited spec misses and returns `Ok(None)`.
+    pub fn from_binstore(
+        path: &std::path::Path,
+        dev: &crate::simulator::DeviceConfig,
+    ) -> anyhow::Result<Option<RoutingTable>> {
+        let (store, rep) = crate::tunedb::binstore::load_device(path, dev.fingerprint())?;
+        for w in &rep.warnings {
+            crate::log_warn!("tunedb {}: {w}", path.display());
+        }
+        Ok(Self::from_store(&store, dev))
+    }
+
     pub fn route(&self, layer: LayerClass) -> Option<&Route> {
         self.routes.get(&layer)
     }
@@ -440,6 +457,44 @@ mod tests {
         assert!(table.covers(&net));
         // 26 convs per pass at 2 ms each
         assert!((table.expected_network_ms_for(&net) - 52.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_binstore_routes_match_from_store_and_respect_fingerprint() {
+        use crate::convgen::TuneParams;
+        use crate::tunedb::{binstore, StoredTuning, TuneStore};
+        let dev = DeviceConfig::mali_g76_mp10();
+        let mut store = TuneStore::new();
+        for layer in LayerClass::ALL {
+            for (alg, t) in [(Algorithm::Ilpm, 1.0), (Algorithm::Direct, 2.0)] {
+                store.insert(
+                    dev.fingerprint(),
+                    dev.name,
+                    StoredTuning {
+                        layer,
+                        algorithm: alg,
+                        params: TuneParams::for_shape(&layer.shape()),
+                        time_ms: t,
+                        evaluated: 1,
+                        pruned: 0,
+                    },
+                );
+            }
+        }
+        let path = std::env::temp_dir()
+            .join(format!("ilpm_router_binstore_{}.tdb", std::process::id()));
+        binstore::write_sealed(&store, &path).unwrap();
+        let table = RoutingTable::from_binstore(&path, &dev).unwrap().expect("routes");
+        let via_store = RoutingTable::from_store(&store, &dev).unwrap();
+        assert_eq!(table.len(), via_store.len());
+        for layer in LayerClass::ALL {
+            assert_eq!(table.route(layer).unwrap(), via_store.route(layer).unwrap());
+        }
+        // an edited spec misses by fingerprint, exactly like from_store
+        let mut edited = dev.clone();
+        edited.shared_mem_per_cu *= 2;
+        assert!(RoutingTable::from_binstore(&path, &edited).unwrap().is_none());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,722 @@
+//! Append-only binary tunedb segment file.
+//!
+//! Layout: one [`record::CELL`]-byte header block, then uniformly-sized
+//! cells — tuning records, and (after sealing) a footer of index cells
+//! plus one trailer cell. Block 0 is the header; cell *k* is block *k*.
+//!
+//! * **Appends are raw `O_APPEND` record writes** — a tuner merging
+//!   results back never reads, rewrites, or locks anything another
+//!   writer appended, which is why concurrent merge-back cannot lose
+//!   entries the way the JSON store's read-modify-write can.
+//! * **Later records supersede earlier ones at load** (same
+//!   `(fingerprint, layer, algorithm)` key), so appending is also how
+//!   entries are updated. [`compact`] drops the superseded bodies.
+//! * **The footer is advisory.** A file whose *last complete cell* is a
+//!   valid trailer is *sealed*: [`load_device`] seeks straight to one
+//!   fingerprint's records (header + footer + that device's cells, and
+//!   nothing else). Appending after a seal simply un-seals the file —
+//!   the trailer is no longer last, readers notice and fall back to a
+//!   full scan, and the stale footer cells are skipped by tag.
+//!   [`seal`] appends a fresh footer; it never rewrites data.
+//! * **Corruption is contained.** A torn tail (partial final cell) is
+//!   skipped with a warning; a cell with a bad checksum is skipped with
+//!   a warning; wrong magic/version/endianness is a clean error. A load
+//!   therefore never panics and never yields a record that did not pass
+//!   its checksum.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::record::{self, Cell};
+use super::store::{StoredTuning, TuneStore};
+use crate::workload::LayerClass;
+
+pub use super::record::{BIN_SCHEMA_VERSION, CELL, ENDIAN_PROBE, INDEX_FANOUT, MAGIC};
+
+/// What a load saw: cell accounting, repair warnings, and the bytes the
+/// reader actually touched (the routeload bench's read-amplification
+/// metric; the counting-reader test cross-checks it).
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Checksum-clean tuning records decoded (before supersede-merge).
+    pub data_cells: usize,
+    /// Index and trailer cells seen.
+    pub footer_cells: usize,
+    /// Damaged or unknown cells skipped.
+    pub skipped: usize,
+    /// Trailing bytes of a truncated final record, skipped.
+    pub torn_tail_bytes: usize,
+    /// True when the footer served the read (no full scan).
+    pub indexed: bool,
+    /// Bytes read from the underlying file.
+    pub bytes_read: u64,
+    pub warnings: Vec<String>,
+}
+
+/// Is the file at `path` a binary tunedb store? (Sniffs the magic;
+/// missing or unreadable files are "no".)
+pub fn is_binstore(path: &Path) -> bool {
+    let mut buf = [0u8; 8];
+    match File::open(path) {
+        Ok(mut f) => f.read_exact(&mut buf).is_ok() && buf == MAGIC,
+        Err(_) => false,
+    }
+}
+
+/// Create an empty (header-only) store. Existing non-empty files are
+/// left untouched.
+pub fn create(path: &Path) -> Result<()> {
+    append_cells(path, &[])
+}
+
+/// Append one tuning record. Creates the file (with its header) on
+/// first use. The record lands in a single `O_APPEND` write, so
+/// concurrent appenders to one pre-created store interleave whole
+/// cells and never clobber each other.
+pub fn append(path: &Path, fp: u64, device: &str, t: &StoredTuning) -> Result<()> {
+    append_cells(path, &[record::encode_data(fp, device, t)?])
+}
+
+/// Append entries from an in-memory store for an explicit key list —
+/// the tuner's merge-back: only the freshly tuned keys are written
+/// (sorted, so identical runs append identical bytes), then the file is
+/// re-sealed. Keys the store does not hold are ignored.
+pub fn append_from_store(
+    path: &Path,
+    store: &TuneStore,
+    keys: &[(u64, LayerClass, crate::convgen::Algorithm)],
+) -> Result<usize> {
+    let mut keys: Vec<_> = keys.to_vec();
+    keys.sort_by(|a, b| (a.0, a.1.name(), a.2.name()).cmp(&(b.0, b.1.name(), b.2.name())));
+    keys.dedup();
+    let mut cells = Vec::new();
+    for (fp, layer, alg) in keys {
+        let Some(t) = store.get(fp, layer, alg) else { continue };
+        let device = store.device(fp).map(|d| d.device.as_str()).unwrap_or("");
+        cells.push(record::encode_data(fp, device, t)?);
+    }
+    let appended = cells.len();
+    append_cells(path, &cells)?;
+    seal(path)?;
+    Ok(appended)
+}
+
+/// Persist a store to `path` in the format `path` uses (an existing
+/// file is sniffed; a fresh `.tdb` path is binary, anything else JSON).
+/// Binary merge-back is append-only: only `fresh` keys are written.
+/// With no fresh keys an existing file is left byte-identical.
+pub fn merge_back(
+    store: &TuneStore,
+    fresh: &[(u64, LayerClass, crate::convgen::Algorithm)],
+    path: &Path,
+) -> Result<()> {
+    if !is_binary_path(path) {
+        return store.save(path);
+    }
+    if !path.exists() {
+        return write_sealed(store, path);
+    }
+    if !fresh.is_empty() {
+        append_from_store(path, store, fresh)?;
+    }
+    Ok(())
+}
+
+/// Does `path` name a binary store? Existing files are sniffed by
+/// magic; fresh paths choose by the `.tdb` extension.
+pub fn is_binary_path(path: &Path) -> bool {
+    if path.exists() {
+        is_binstore(path)
+    } else {
+        path.extension().and_then(|e| e.to_str()) == Some("tdb")
+    }
+}
+
+fn append_cells(path: &Path, cells: &[[u8; CELL]]) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir).with_context(|| format!("create dir {}", dir.display()))?;
+    }
+    let len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    let mut buf = Vec::with_capacity(CELL * (cells.len() + 1));
+    if len == 0 {
+        buf.extend_from_slice(&record::header_block());
+    } else if (len as usize) < CELL || (len as usize - CELL) % CELL != 0 {
+        // torn tail from a crashed writer: appending after it would
+        // shift every later cell off the 192-byte grid, so repair by
+        // truncating the partial record before appending
+        let aligned = if (len as usize) < CELL {
+            0
+        } else {
+            len - ((len as usize - CELL) % CELL) as u64
+        };
+        let f = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open {} to repair torn tail", path.display()))?;
+        f.set_len(aligned)
+            .with_context(|| format!("truncate torn tail of {}", path.display()))?;
+        if aligned == 0 {
+            buf.extend_from_slice(&record::header_block());
+        }
+    }
+    for c in cells {
+        buf.extend_from_slice(c);
+    }
+    if buf.is_empty() {
+        return Ok(());
+    }
+    let mut f = OpenOptions::new()
+        .append(true)
+        .create(true)
+        .open(path)
+        .with_context(|| format!("open {} for append", path.display()))?;
+    f.write_all(&buf).with_context(|| format!("append to {}", path.display()))?;
+    Ok(())
+}
+
+/// Load every record in the file (full scan; supersede-on-load).
+pub fn load(path: &Path) -> Result<(TuneStore, LoadReport)> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read tunedb {}", path.display()))?;
+    load_bytes(&bytes).with_context(|| format!("parse tunedb {}", path.display()))
+}
+
+/// [`load`] over an in-memory image (the corruption fuzzer's entry
+/// point — must return cleanly, never panic, on arbitrary bytes).
+pub fn load_bytes(bytes: &[u8]) -> Result<(TuneStore, LoadReport)> {
+    record::check_header(bytes)?;
+    let mut rep = LoadReport { bytes_read: bytes.len() as u64, ..Default::default() };
+    let body = &bytes[CELL..];
+    rep.torn_tail_bytes = body.len() % CELL;
+    if rep.torn_tail_bytes > 0 {
+        rep.warnings.push(format!(
+            "torn tail: {} trailing byte(s) of a truncated record skipped",
+            rep.torn_tail_bytes
+        ));
+    }
+    let mut store = TuneStore::new();
+    for (i, cell) in body.chunks_exact(CELL).enumerate() {
+        match record::decode(cell) {
+            Ok(Cell::Data { fp, device, tuning }) => {
+                store.insert(fp, &device, tuning);
+                rep.data_cells += 1;
+            }
+            Ok(Cell::Index { .. }) | Ok(Cell::Trailer { .. }) => rep.footer_cells += 1,
+            Err(e) => {
+                rep.skipped += 1;
+                rep.warnings.push(format!("cell {} (block {}): {e:#} — skipped", i, i + 1));
+            }
+        }
+    }
+    Ok((store, rep))
+}
+
+/// Load just one fingerprint's records. Sealed files are read via the
+/// footer: header block, trailer, index cells, then exactly that
+/// device's data cells — nothing else. Unsealed (or damaged-footer)
+/// files fall back to a full scan.
+pub fn load_device(path: &Path, fp: u64) -> Result<(TuneStore, LoadReport)> {
+    let mut f =
+        File::open(path).with_context(|| format!("open tunedb {}", path.display()))?;
+    load_device_from(&mut f, fp).with_context(|| format!("read tunedb {}", path.display()))
+}
+
+/// [`load_device`] over any seekable reader (tests wrap a counting
+/// reader around the file to assert exactly which bytes a serve-start
+/// route load touches).
+pub fn load_device_from<R: Read + Seek>(r: &mut R, fp: u64) -> Result<(TuneStore, LoadReport)> {
+    let mut rep = LoadReport::default();
+    let len = r.seek(SeekFrom::End(0))?;
+    let mut cell = [0u8; CELL];
+    r.seek(SeekFrom::Start(0))?;
+    if len < CELL as u64 {
+        let mut short = vec![0u8; len as usize];
+        r.read_exact(&mut short)?;
+        record::check_header(&short)?; // always errs usefully
+        unreachable!("check_header accepts only full headers");
+    }
+    r.read_exact(&mut cell)?;
+    rep.bytes_read += CELL as u64;
+    record::check_header(&cell)?;
+
+    let body = len - CELL as u64;
+    rep.torn_tail_bytes = (body % CELL as u64) as usize;
+    if rep.torn_tail_bytes > 0 {
+        rep.warnings.push(format!(
+            "torn tail: {} trailing byte(s) of a truncated record skipped",
+            rep.torn_tail_bytes
+        ));
+    }
+    let blocks = body / CELL as u64; // complete cells; block index of the last one
+    if blocks == 0 {
+        return Ok((TuneStore::new(), rep));
+    }
+    read_block(r, blocks, &mut cell)?;
+    rep.bytes_read += CELL as u64;
+    let footer = match record::decode(&cell) {
+        Ok(Cell::Trailer { index_start, index_cells, .. })
+            if index_start >= 1 && index_start + index_cells == blocks =>
+        {
+            Some((index_start, index_cells))
+        }
+        _ => None,
+    };
+    let Some((index_start, index_cells)) = footer else {
+        rep.warnings
+            .push("no valid footer at the tail (unsealed store) — full scan".to_string());
+        return scan_for_device(r, fp, rep);
+    };
+    rep.indexed = true;
+    rep.footer_cells = 1 + index_cells as usize;
+
+    let mut offsets: Vec<u64> = Vec::new();
+    r.seek(SeekFrom::Start(index_start * CELL as u64))?;
+    for b in 0..index_cells {
+        r.read_exact(&mut cell)?;
+        rep.bytes_read += CELL as u64;
+        match record::decode(&cell) {
+            Ok(Cell::Index { fp: cell_fp, blocks: offs }) => {
+                if cell_fp == fp {
+                    offsets.extend(offs);
+                }
+            }
+            _ => {
+                // a footer that lies about its own cells cannot be
+                // trusted about anyone's offsets
+                rep.indexed = false;
+                rep.warnings.push(format!(
+                    "footer block {} is not a valid index cell — full scan",
+                    index_start + b
+                ));
+                return scan_for_device(r, fp, rep);
+            }
+        }
+    }
+    offsets.sort_unstable();
+    offsets.dedup();
+
+    let mut store = TuneStore::new();
+    for &b in &offsets {
+        if b < 1 || b >= index_start {
+            rep.skipped += 1;
+            rep.warnings.push(format!("index points outside the data region (block {b})"));
+            continue;
+        }
+        read_block(r, b, &mut cell)?;
+        rep.bytes_read += CELL as u64;
+        match record::decode(&cell) {
+            Ok(Cell::Data { fp: cell_fp, device, tuning }) if cell_fp == fp => {
+                store.insert(fp, &device, tuning);
+                rep.data_cells += 1;
+            }
+            Ok(_) => {
+                rep.skipped += 1;
+                rep.warnings
+                    .push(format!("block {b}: indexed cell is not this device's record"));
+            }
+            Err(e) => {
+                rep.skipped += 1;
+                rep.warnings.push(format!("block {b}: {e:#} — skipped"));
+            }
+        }
+    }
+    Ok((store, rep))
+}
+
+fn read_block<R: Read + Seek>(r: &mut R, block: u64, cell: &mut [u8; CELL]) -> Result<()> {
+    r.seek(SeekFrom::Start(block * CELL as u64))?;
+    r.read_exact(cell)?;
+    Ok(())
+}
+
+fn scan_for_device<R: Read + Seek>(
+    r: &mut R,
+    fp: u64,
+    mut rep: LoadReport,
+) -> Result<(TuneStore, LoadReport)> {
+    r.seek(SeekFrom::Start(0))?;
+    let mut bytes = Vec::new();
+    r.read_to_end(&mut bytes)?;
+    let (full, scan_rep) = load_bytes(&bytes)?;
+    rep.bytes_read += bytes.len() as u64;
+    rep.data_cells = scan_rep.data_cells;
+    rep.footer_cells = scan_rep.footer_cells;
+    rep.skipped = scan_rep.skipped;
+    rep.warnings.extend(scan_rep.warnings);
+    let mut out = TuneStore::new();
+    if let Some(d) = full.device(fp) {
+        for t in d.entries() {
+            out.insert(fp, &d.device, t.clone());
+        }
+    }
+    Ok((out, rep))
+}
+
+/// The deterministic sealed image of a store: header, data cells sorted
+/// by `(fingerprint, layer, algorithm)`, footer. Identical stores yield
+/// identical bytes (same contract as `TuneStore::to_json`). Devices
+/// with zero entries are not representable as records and are dropped.
+pub fn sealed_bytes(store: &TuneStore) -> Result<Vec<u8>> {
+    let mut devices: Vec<_> = store.devices().collect();
+    devices.sort_by_key(|(fp, _)| *fp);
+    let mut out = Vec::with_capacity(CELL * (store.len() + devices.len() + 2));
+    out.extend_from_slice(&record::header_block());
+    let mut index: Vec<(u64, Vec<u64>)> = Vec::new();
+    let mut block = 1u64;
+    for (fp, d) in devices {
+        if d.is_empty() {
+            continue;
+        }
+        let mut entries: Vec<&StoredTuning> = d.entries().collect();
+        entries.sort_by_key(|t| (t.layer.name(), t.algorithm.name()));
+        let mut blocks_for = Vec::with_capacity(entries.len());
+        for t in entries {
+            out.extend_from_slice(&record::encode_data(fp, &d.device, t)?);
+            blocks_for.push(block);
+            block += 1;
+        }
+        index.push((fp, blocks_for));
+    }
+    let index_start = block;
+    let mut index_cells = 0u64;
+    for (fp, blocks_for) in &index {
+        for chunk in blocks_for.chunks(INDEX_FANOUT) {
+            out.extend_from_slice(&record::encode_index(*fp, chunk));
+            index_cells += 1;
+        }
+    }
+    out.extend_from_slice(&record::encode_trailer(
+        index_start,
+        index_cells,
+        index.len() as u64,
+        index_start - 1,
+    ));
+    Ok(out)
+}
+
+/// Write a store as a fresh sealed file, atomically (temp + rename,
+/// like the JSON store's save).
+pub fn write_sealed(store: &TuneStore, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir).with_context(|| format!("create dir {}", dir.display()))?;
+    }
+    let bytes = sealed_bytes(store)?;
+    let stem = path.file_name().and_then(|s| s.to_str()).unwrap_or("tunedb.tdb");
+    let tmp = path.with_file_name(format!(".{stem}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &bytes).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("rename {} -> {}", tmp.display(), path.display())
+    })?;
+    Ok(())
+}
+
+/// Append a footer (index cells + trailer) indexing every live data
+/// cell currently in the file. Append-only: a previous footer's cells
+/// stay in place as dead weight (skipped by tag on scan, dropped by
+/// [`compact`]); only the new trailer, now last, is authoritative.
+pub fn seal(path: &Path) -> Result<()> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read tunedb {}", path.display()))?;
+    record::check_header(&bytes)?;
+    let body = &bytes[CELL..];
+    let mut per_fp: Vec<(u64, Vec<u64>)> = Vec::new();
+    for (i, cell) in body.chunks_exact(CELL).enumerate() {
+        if let Ok(Cell::Data { fp, .. }) = record::decode(cell) {
+            let block = (i + 1) as u64;
+            match per_fp.iter_mut().find(|(f, _)| *f == fp) {
+                Some((_, v)) => v.push(block),
+                None => per_fp.push((fp, vec![block])),
+            }
+        }
+    }
+    per_fp.sort_by_key(|(fp, _)| *fp);
+    let covered = (body.len() / CELL) as u64;
+    let index_start = covered + 1;
+    let mut cells: Vec<[u8; CELL]> = Vec::new();
+    for (fp, blocks) in &per_fp {
+        for chunk in blocks.chunks(INDEX_FANOUT) {
+            cells.push(record::encode_index(*fp, chunk));
+        }
+    }
+    cells.push(record::encode_trailer(
+        index_start,
+        cells.len() as u64,
+        per_fp.len() as u64,
+        covered,
+    ));
+    append_cells(path, &cells)
+}
+
+/// What [`compact`] did.
+#[derive(Debug, Clone, Default)]
+pub struct CompactReport {
+    /// Cells (excluding the header) before and after.
+    pub before_cells: u64,
+    pub after_cells: u64,
+    /// Superseded, damaged, and stale-footer cells dropped.
+    pub dropped: u64,
+    pub entries: usize,
+    pub devices: usize,
+    pub warnings: Vec<String>,
+}
+
+/// Rewrite the file as the minimal sealed image of its live entries:
+/// superseded records, damaged cells, and stale footers are dropped,
+/// and the footer is rebuilt. Load-equivalent to the input and
+/// idempotent (a second compact is a byte-identical no-op).
+pub fn compact(path: &Path) -> Result<CompactReport> {
+    let before = std::fs::metadata(path)
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    let (store, load_rep) = load(path)?;
+    write_sealed(&store, path)?;
+    let after = std::fs::metadata(path)?.len();
+    let before_cells = before.saturating_sub(CELL as u64) / CELL as u64;
+    let after_cells = after.saturating_sub(CELL as u64) / CELL as u64;
+    Ok(CompactReport {
+        before_cells,
+        after_cells,
+        dropped: before_cells.saturating_sub(after_cells),
+        entries: store.len(),
+        devices: store.devices().filter(|(_, d)| !d.is_empty()).count(),
+        warnings: load_rep.warnings,
+    })
+}
+
+/// What [`verify`] saw.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    pub cells: usize,
+    pub data_cells: usize,
+    pub footer_cells: usize,
+    pub damaged: usize,
+    pub torn_tail_bytes: usize,
+    /// Live (post-supersede) entries and devices.
+    pub entries: usize,
+    pub devices: usize,
+    /// A valid trailer closes the file.
+    pub sealed: bool,
+    /// Sealed, and every index offset points at a matching data cell.
+    pub index_consistent: bool,
+    pub warnings: Vec<String>,
+}
+
+impl VerifyReport {
+    /// Nothing damaged, nothing torn, and any footer tells the truth.
+    pub fn is_clean(&self) -> bool {
+        self.damaged == 0
+            && self.torn_tail_bytes == 0
+            && (!self.sealed || self.index_consistent)
+    }
+}
+
+/// Walk every checksum and, when sealed, audit the footer against the
+/// data cells it claims to index. Errors only on an unreadable or
+/// invalid header; damage is reported, not thrown.
+pub fn verify(path: &Path) -> Result<VerifyReport> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read tunedb {}", path.display()))?;
+    record::check_header(&bytes)?;
+    let body = &bytes[CELL..];
+    let mut rep = VerifyReport {
+        torn_tail_bytes: body.len() % CELL,
+        ..Default::default()
+    };
+    if rep.torn_tail_bytes > 0 {
+        rep.warnings.push(format!("torn tail: {} trailing byte(s)", rep.torn_tail_bytes));
+    }
+    let decoded: Vec<Result<Cell>> = body.chunks_exact(CELL).map(record::decode).collect();
+    rep.cells = decoded.len();
+    let mut store = TuneStore::new();
+    for (i, d) in decoded.iter().enumerate() {
+        match d {
+            Ok(Cell::Data { fp, device, tuning }) => {
+                store.insert(*fp, device, tuning.clone());
+                rep.data_cells += 1;
+            }
+            Ok(_) => rep.footer_cells += 1,
+            Err(e) => {
+                rep.damaged += 1;
+                rep.warnings.push(format!("block {}: {e:#}", i + 1));
+            }
+        }
+    }
+    rep.entries = store.len();
+    rep.devices = store.devices().filter(|(_, d)| !d.is_empty()).count();
+    if let Some(Ok(Cell::Trailer { index_start, index_cells, .. })) = decoded.last() {
+        let last_block = decoded.len() as u64;
+        if *index_start >= 1 && index_start + index_cells == last_block {
+            rep.sealed = true;
+            rep.index_consistent = true;
+            for b in *index_start..last_block {
+                match &decoded[(b - 1) as usize] {
+                    Ok(Cell::Index { fp, blocks }) => {
+                        for &db in blocks {
+                            let target = (db >= 1 && db < *index_start)
+                                .then(|| decoded.get((db - 1) as usize))
+                                .flatten();
+                            match target {
+                                Some(Ok(Cell::Data { fp: dfp, .. })) if dfp == fp => {}
+                                _ => {
+                                    rep.index_consistent = false;
+                                    rep.warnings.push(format!(
+                                        "index block {b}: offset {db} does not point at a \
+                                         record for fingerprint {fp:016x}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        rep.index_consistent = false;
+                        rep.warnings
+                            .push(format!("footer block {b} is not a valid index cell"));
+                    }
+                }
+            }
+        }
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convgen::{Algorithm, TuneParams};
+    use crate::workload::LayerClass;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ilpm_binstore_{name}_{}.tdb", std::process::id()))
+    }
+
+    fn entry(layer: LayerClass, alg: Algorithm, t: f64) -> StoredTuning {
+        StoredTuning {
+            layer,
+            algorithm: alg,
+            params: TuneParams::default(),
+            time_ms: t,
+            evaluated: 10,
+            pruned: 1,
+        }
+    }
+
+    #[test]
+    fn append_load_round_trip_and_supersede() {
+        let path = tmp("roundtrip");
+        std::fs::remove_file(&path).ok();
+        append(&path, 7, "mali", &entry(LayerClass::Conv2x, Algorithm::Ilpm, 2.0)).unwrap();
+        append(&path, 7, "mali", &entry(LayerClass::Conv3x, Algorithm::Direct, 3.0)).unwrap();
+        // same key appended again: the later record must win at load
+        append(&path, 7, "mali", &entry(LayerClass::Conv2x, Algorithm::Ilpm, 1.0)).unwrap();
+        let (store, rep) = load(&path).unwrap();
+        assert_eq!(rep.data_cells, 3);
+        assert_eq!(rep.skipped, 0);
+        assert_eq!(store.len(), 2, "supersede-on-load merges duplicate keys");
+        assert_eq!(store.get(7, LayerClass::Conv2x, Algorithm::Ilpm).unwrap().time_ms, 1.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn seal_then_append_then_reseal_stays_loadable() {
+        let path = tmp("reseal");
+        std::fs::remove_file(&path).ok();
+        append(&path, 1, "mali", &entry(LayerClass::Conv2x, Algorithm::Ilpm, 1.0)).unwrap();
+        seal(&path).unwrap();
+        let (_, rep) = load_device(&path, 1).unwrap();
+        assert!(rep.indexed, "sealed file must serve an indexed read");
+        // appending after the seal un-seals: the reader falls back to a
+        // scan and still sees everything
+        append(&path, 2, "vega8", &entry(LayerClass::Conv4x, Algorithm::Direct, 4.0)).unwrap();
+        let (store, rep) = load_device(&path, 2).unwrap();
+        assert!(!rep.indexed);
+        assert_eq!(store.len(), 1);
+        // resealing indexes both, with the stale footer left as dead
+        // weight that a scan skips and verify counts as footer cells
+        seal(&path).unwrap();
+        let (store, rep) = load_device(&path, 2).unwrap();
+        assert!(rep.indexed);
+        assert_eq!(store.get(2, LayerClass::Conv4x, Algorithm::Direct).unwrap().time_ms, 4.0);
+        assert_eq!(store.device(2).unwrap().device, "vega8");
+        let v = verify(&path).unwrap();
+        assert!(v.is_clean(), "{v:?}");
+        assert!(v.sealed && v.index_consistent);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_skipped_on_load_and_repaired_on_append() {
+        let path = tmp("torn");
+        std::fs::remove_file(&path).ok();
+        append(&path, 1, "mali", &entry(LayerClass::Conv2x, Algorithm::Ilpm, 1.0)).unwrap();
+        // simulate a crash mid-append: half a record at the tail
+        let mut bytes = std::fs::read(&path).unwrap();
+        let half: Vec<u8> = bytes[CELL..CELL + CELL / 2].to_vec();
+        bytes.extend_from_slice(&half);
+        std::fs::write(&path, &bytes).unwrap();
+        let (store, rep) = load(&path).unwrap();
+        assert_eq!(store.len(), 1, "the complete record survives");
+        assert_eq!(rep.torn_tail_bytes, CELL / 2);
+        assert!(rep.warnings.iter().any(|w| w.contains("torn")), "{:?}", rep.warnings);
+        // the next append truncates the torn tail and lands cleanly
+        append(&path, 1, "mali", &entry(LayerClass::Conv5x, Algorithm::Direct, 5.0)).unwrap();
+        let (store, rep) = load(&path).unwrap();
+        assert_eq!(rep.torn_tail_bytes, 0);
+        assert_eq!(rep.skipped, 0);
+        assert_eq!(store.len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_and_wrong_version_are_clean_errors() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"{\"schema\":1}").unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("magic") || err.contains("truncated"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sealed_bytes_are_deterministic_and_compact_is_idempotent() {
+        let path = tmp("compact");
+        std::fs::remove_file(&path).ok();
+        // build with superseded duplicates and a stale footer
+        append(&path, 9, "mali", &entry(LayerClass::Conv2x, Algorithm::Ilpm, 2.0)).unwrap();
+        seal(&path).unwrap();
+        append(&path, 9, "mali", &entry(LayerClass::Conv2x, Algorithm::Ilpm, 1.0)).unwrap();
+        append(&path, 3, "vega8", &entry(LayerClass::Conv3x, Algorithm::Direct, 3.0)).unwrap();
+        seal(&path).unwrap();
+        let (before, _) = load(&path).unwrap();
+        let r1 = compact(&path).unwrap();
+        assert!(r1.dropped > 0, "superseded + stale footer cells must go");
+        let bytes1 = std::fs::read(&path).unwrap();
+        let r2 = compact(&path).unwrap();
+        assert_eq!(r2.dropped, 0);
+        assert_eq!(bytes1, std::fs::read(&path).unwrap(), "compact must be idempotent");
+        let (after, rep) = load(&path).unwrap();
+        assert!(rep.indexed || rep.warnings.is_empty());
+        assert_eq!(before.to_json().to_json_string(), after.to_json().to_json_string());
+        // and deterministic: an equal in-memory store seals to the bytes
+        assert_eq!(sealed_bytes(&after).unwrap(), bytes1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn is_binary_path_sniffs_and_falls_back_to_extension() {
+        let bin = tmp("sniff");
+        std::fs::remove_file(&bin).ok();
+        append(&bin, 1, "mali", &entry(LayerClass::Conv2x, Algorithm::Ilpm, 1.0)).unwrap();
+        assert!(is_binary_path(&bin));
+        let json = std::env::temp_dir().join("ilpm_binstore_sniff.json");
+        std::fs::write(&json, b"{}").unwrap();
+        assert!(!is_binary_path(&json));
+        assert!(is_binary_path(Path::new("/nonexistent/fresh.tdb")));
+        assert!(!is_binary_path(Path::new("/nonexistent/fresh.json")));
+        std::fs::remove_file(&bin).ok();
+        std::fs::remove_file(&json).ok();
+    }
+}

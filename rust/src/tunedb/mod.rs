@@ -29,7 +29,52 @@
 //!   evaluations on the serving path.
 //!
 //! File format and invalidation rules are documented in DESIGN.md.
+//!
+//! Two wire formats share one data model:
+//!
+//! * **JSON (schema v1)** — [`TuneStore`]'s own format: human-diffable,
+//!   whole-store read-modify-write. The interop/export format.
+//! * **Binary (`.tdb`, [`binstore`])** — an append-only segment file of
+//!   fixed-layout checksummed records with a per-fingerprint index
+//!   footer: a serve replica loads *its* routes by seeking, not by
+//!   parsing every device ever tuned, and concurrent tuners merge back
+//!   by appending instead of the JSON store's lossy rewrite. The fleet
+//!   format.
+//!
+//! [`load_any`] / [`load_any_or_empty`] sniff which format a path holds
+//! so every CLI entry point accepts either; `ilpm tunedb
+//! migrate|export|compact|verify` manages the binary lifecycle.
 
+pub mod binstore;
+mod record;
 mod store;
 
 pub use store::{DeviceTunings, StoredTuning, TuneStore, SCHEMA_VERSION};
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Load a store from either wire format, sniffing the file's magic.
+/// Binary repair warnings (torn tail, damaged cells) are logged.
+pub fn load_any(path: &Path) -> Result<TuneStore> {
+    if binstore::is_binstore(path) {
+        let (store, rep) = binstore::load(path)?;
+        for w in &rep.warnings {
+            crate::log_warn!("tunedb {}: {w}", path.display());
+        }
+        Ok(store)
+    } else {
+        TuneStore::load(path)
+    }
+}
+
+/// [`load_any`], treating a missing file as an empty store (cold
+/// start). A file that exists but fails to load is still an error.
+pub fn load_any_or_empty(path: &Path) -> Result<TuneStore> {
+    if path.exists() {
+        load_any(path)
+    } else {
+        Ok(TuneStore::new())
+    }
+}

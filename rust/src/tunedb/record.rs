@@ -1,0 +1,419 @@
+//! Fixed-layout binary cells for the tunedb segment file.
+//!
+//! Every block in a segment file — header, data record, index cell,
+//! trailer — is exactly [`CELL`] bytes, so the file is uniformly framed
+//! and a scan can never lose alignment: a damaged or unknown block
+//! skips one cell and the stream recovers at the next boundary. All
+//! integers are little-endian; the header carries an endianness probe
+//! so a file written on a big-endian host (which would serialise the
+//! probe reversed) is rejected with a clean error instead of silently
+//! misread. Each cell's last 8 bytes are an FNV-1a 64 checksum over the
+//! first 184, the same hash the device fingerprint uses
+//! ([`crate::util::hash::fnv1a`]).
+//!
+//! The full layout is diagrammed in DESIGN.md ("tunedb binary segment
+//! format").
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::convgen::{Algorithm, TuneParams};
+use crate::tunedb::StoredTuning;
+use crate::util::hash::fnv1a;
+use crate::workload::LayerClass;
+
+/// Size of every block in the file, header included.
+pub const CELL: usize = 192;
+/// First 8 bytes of a binary store; sniffing this distinguishes the
+/// segment format from the JSON store.
+pub const MAGIC: [u8; 8] = *b"ILPMTDB\0";
+/// Bump on any incompatible layout change; readers reject other
+/// versions outright (same contract as the JSON `SCHEMA_VERSION`).
+pub const BIN_SCHEMA_VERSION: u64 = 1;
+/// Written little-endian at a fixed offset; reads back reversed on a
+/// big-endian writer.
+pub const ENDIAN_PROBE: u64 = 0x0102_0304_0506_0708;
+/// Data-cell block indices one index cell can hold.
+pub const INDEX_FANOUT: usize = 20;
+
+const TAG_DATA: u64 = 1;
+const TAG_INDEX: u64 = 2;
+const TAG_TRAILER: u64 = 3;
+const CHECKSUM_AT: usize = CELL - 8;
+
+// Data-cell field offsets. The three name fields are zero-padded; a
+// name that does not fit is rejected at append time, never truncated.
+const DATA_FP: usize = 8;
+const DATA_LAYER: usize = 16;
+const DATA_LAYER_LEN: usize = 40;
+const DATA_ALG: usize = 56;
+const DATA_ALG_LEN: usize = 16;
+const DATA_DEVICE: usize = 72;
+const DATA_DEVICE_LEN: usize = 32;
+const DATA_PARAMS: usize = 104; // 6 × u64 knobs
+const DATA_FLAGS: usize = 152; // bit 0 cache_filters, bit 1 transpose_output
+const DATA_TIME: usize = 160; // f64 bits
+const DATA_EVALUATED: usize = 168;
+const DATA_PRUNED: usize = 176;
+
+const INDEX_FP: usize = 8;
+const INDEX_COUNT: usize = 16;
+const INDEX_OFFSETS: usize = 24;
+
+const TRAILER_INDEX_START: usize = 8;
+const TRAILER_INDEX_CELLS: usize = 16;
+const TRAILER_DEVICES: usize = 24;
+const TRAILER_COVERED: usize = 32;
+
+/// A decoded, checksum-verified cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Data { fp: u64, device: String, tuning: StoredTuning },
+    /// Block indices (header = block 0) of data cells for one
+    /// fingerprint; a device with more than [`INDEX_FANOUT`] records
+    /// spans several index cells with the same `fp`.
+    Index { fp: u64, blocks: Vec<u64> },
+    /// Footer locator: the index spans blocks
+    /// `[index_start, index_start + index_cells)` and covers the
+    /// `covered` blocks before it; valid only as the file's last cell.
+    Trailer { index_start: u64, index_cells: u64, devices: u64, covered: u64 },
+}
+
+fn put_u64(buf: &mut [u8; CELL], at: usize, v: u64) {
+    buf[at..at + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(buf: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(buf[at..at + 8].try_into().expect("8-byte field"))
+}
+
+fn put_name(buf: &mut [u8; CELL], at: usize, width: usize, s: &str, what: &str) -> Result<()> {
+    if s.len() > width {
+        bail!("{what} {s:?} is {} bytes, max {width} in the binary record", s.len());
+    }
+    buf[at..at + s.len()].copy_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn get_name<'a>(buf: &'a [u8], at: usize, width: usize, what: &str) -> Result<&'a str> {
+    let field = &buf[at..at + width];
+    let end = field.iter().position(|&b| b == 0).unwrap_or(width);
+    std::str::from_utf8(&field[..end]).map_err(|_| anyhow!("{what} field is not UTF-8"))
+}
+
+fn seal(mut buf: [u8; CELL]) -> [u8; CELL] {
+    let sum = fnv1a(&buf[..CHECKSUM_AT]);
+    put_u64(&mut buf, CHECKSUM_AT, sum);
+    buf
+}
+
+/// Does the stored checksum match the cell's bytes?
+pub fn checksum_ok(cell: &[u8]) -> bool {
+    cell.len() == CELL && get_u64(cell, CHECKSUM_AT) == fnv1a(&cell[..CHECKSUM_AT])
+}
+
+/// The 192-byte file header: magic, schema version, endianness probe,
+/// zero padding, checksum.
+pub fn header_block() -> [u8; CELL] {
+    let mut buf = [0u8; CELL];
+    buf[..8].copy_from_slice(&MAGIC);
+    put_u64(&mut buf, 8, BIN_SCHEMA_VERSION);
+    put_u64(&mut buf, 16, ENDIAN_PROBE);
+    seal(buf)
+}
+
+/// Validate a file header. Wrong magic, wrong version, a foreign-endian
+/// writer, and a corrupted header are each a distinct clean error.
+pub fn check_header(block: &[u8]) -> Result<()> {
+    if block.len() < CELL {
+        bail!("truncated header: {} bytes, need {CELL}", block.len());
+    }
+    let block = &block[..CELL];
+    if block[..8] != MAGIC {
+        bail!("not a binary tunedb store (bad magic); JSON stores load via TuneStore::load");
+    }
+    if !checksum_ok(block) {
+        bail!("header checksum mismatch — corrupted store header");
+    }
+    let version = get_u64(block, 8);
+    if version != BIN_SCHEMA_VERSION {
+        bail!(
+            "unsupported binary tunedb schema v{version} (this build reads \
+             v{BIN_SCHEMA_VERSION}); re-migrate with `ilpm tunedb migrate`"
+        );
+    }
+    let probe = get_u64(block, 16);
+    if probe != ENDIAN_PROBE {
+        bail!("endianness probe mismatch ({probe:#018x}) — store written on a foreign-endian host");
+    }
+    Ok(())
+}
+
+/// Encode one tuning record. Rejects non-finite `time_ms` (the binary
+/// append-time guard, mirroring the JSON parse-time guard) and names
+/// that do not fit their fixed field.
+pub fn encode_data(fp: u64, device: &str, t: &StoredTuning) -> Result<[u8; CELL]> {
+    if !t.time_ms.is_finite() {
+        bail!(
+            "non-finite time_ms {} for ({}, {}) — rejected at append time",
+            t.time_ms,
+            t.layer.name(),
+            t.algorithm.name()
+        );
+    }
+    let mut buf = [0u8; CELL];
+    put_u64(&mut buf, 0, TAG_DATA);
+    put_u64(&mut buf, DATA_FP, fp);
+    put_name(&mut buf, DATA_LAYER, DATA_LAYER_LEN, &t.layer.name(), "layer name")?;
+    put_name(&mut buf, DATA_ALG, DATA_ALG_LEN, t.algorithm.name(), "algorithm name")?;
+    put_name(&mut buf, DATA_DEVICE, DATA_DEVICE_LEN, device, "device name")?;
+    let p = &t.params;
+    for (i, v) in [p.wg_size, p.tile_m, p.tile_n, p.tile_k, p.tile_px, p.k_per_thread]
+        .into_iter()
+        .enumerate()
+    {
+        put_u64(&mut buf, DATA_PARAMS + i * 8, v);
+    }
+    let flags = (p.cache_filters as u64) | ((p.transpose_output as u64) << 1);
+    put_u64(&mut buf, DATA_FLAGS, flags);
+    put_u64(&mut buf, DATA_TIME, t.time_ms.to_bits());
+    put_u64(&mut buf, DATA_EVALUATED, t.evaluated as u64);
+    put_u64(&mut buf, DATA_PRUNED, t.pruned as u64);
+    Ok(seal(buf))
+}
+
+/// Encode one index cell: up to [`INDEX_FANOUT`] data-cell block
+/// indices for one fingerprint.
+pub fn encode_index(fp: u64, blocks: &[u64]) -> [u8; CELL] {
+    assert!(
+        !blocks.is_empty() && blocks.len() <= INDEX_FANOUT,
+        "index cell holds 1..={INDEX_FANOUT} offsets, got {}",
+        blocks.len()
+    );
+    let mut buf = [0u8; CELL];
+    put_u64(&mut buf, 0, TAG_INDEX);
+    put_u64(&mut buf, INDEX_FP, fp);
+    put_u64(&mut buf, INDEX_COUNT, blocks.len() as u64);
+    for (i, &b) in blocks.iter().enumerate() {
+        put_u64(&mut buf, INDEX_OFFSETS + i * 8, b);
+    }
+    seal(buf)
+}
+
+/// Encode the trailer cell closing a footer.
+pub fn encode_trailer(index_start: u64, index_cells: u64, devices: u64, covered: u64) -> [u8; CELL] {
+    let mut buf = [0u8; CELL];
+    put_u64(&mut buf, 0, TAG_TRAILER);
+    put_u64(&mut buf, TRAILER_INDEX_START, index_start);
+    put_u64(&mut buf, TRAILER_INDEX_CELLS, index_cells);
+    put_u64(&mut buf, TRAILER_DEVICES, devices);
+    put_u64(&mut buf, TRAILER_COVERED, covered);
+    seal(buf)
+}
+
+/// Decode and fully validate one cell. Any failure — bad checksum,
+/// unknown tag, unknown layer/algorithm name, non-finite time — is an
+/// error the caller treats as "damaged cell: skip and warn"; decode
+/// never panics on arbitrary bytes.
+pub fn decode(cell: &[u8]) -> Result<Cell> {
+    if cell.len() != CELL {
+        bail!("cell is {} bytes, expected {CELL}", cell.len());
+    }
+    if !checksum_ok(cell) {
+        bail!("checksum mismatch");
+    }
+    match get_u64(cell, 0) {
+        TAG_DATA => {
+            let layer_name = get_name(cell, DATA_LAYER, DATA_LAYER_LEN, "layer")?;
+            let layer = LayerClass::from_name(layer_name)
+                .ok_or_else(|| anyhow!("unknown layer {layer_name:?}"))?;
+            let alg_name = get_name(cell, DATA_ALG, DATA_ALG_LEN, "algorithm")?;
+            let algorithm = Algorithm::from_name(alg_name)
+                .ok_or_else(|| anyhow!("unknown algorithm {alg_name:?}"))?;
+            let device = get_name(cell, DATA_DEVICE, DATA_DEVICE_LEN, "device")?.to_string();
+            let flags = get_u64(cell, DATA_FLAGS);
+            if flags & !0b11 != 0 {
+                bail!("unknown flag bits {flags:#x}");
+            }
+            let time_ms = f64::from_bits(get_u64(cell, DATA_TIME));
+            if !time_ms.is_finite() {
+                bail!("non-finite time_ms {time_ms}");
+            }
+            let params = TuneParams {
+                wg_size: get_u64(cell, DATA_PARAMS),
+                tile_m: get_u64(cell, DATA_PARAMS + 8),
+                tile_n: get_u64(cell, DATA_PARAMS + 16),
+                tile_k: get_u64(cell, DATA_PARAMS + 24),
+                tile_px: get_u64(cell, DATA_PARAMS + 32),
+                k_per_thread: get_u64(cell, DATA_PARAMS + 40),
+                cache_filters: flags & 1 != 0,
+                transpose_output: flags & 2 != 0,
+            };
+            Ok(Cell::Data {
+                fp: get_u64(cell, DATA_FP),
+                device,
+                tuning: StoredTuning {
+                    layer,
+                    algorithm,
+                    params,
+                    time_ms,
+                    evaluated: get_u64(cell, DATA_EVALUATED) as usize,
+                    pruned: get_u64(cell, DATA_PRUNED) as usize,
+                },
+            })
+        }
+        TAG_INDEX => {
+            let count = get_u64(cell, INDEX_COUNT);
+            if count == 0 || count > INDEX_FANOUT as u64 {
+                bail!("index cell claims {count} offsets, max {INDEX_FANOUT}");
+            }
+            let blocks = (0..count as usize)
+                .map(|i| get_u64(cell, INDEX_OFFSETS + i * 8))
+                .collect();
+            Ok(Cell::Index { fp: get_u64(cell, INDEX_FP), blocks })
+        }
+        TAG_TRAILER => Ok(Cell::Trailer {
+            index_start: get_u64(cell, TRAILER_INDEX_START),
+            index_cells: get_u64(cell, TRAILER_INDEX_CELLS),
+            devices: get_u64(cell, TRAILER_DEVICES),
+            covered: get_u64(cell, TRAILER_COVERED),
+        }),
+        other => bail!("unknown cell tag {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StoredTuning {
+        StoredTuning {
+            layer: LayerClass::Pw { in_channels: 512, out_channels: 512, hw: 14 },
+            algorithm: Algorithm::Dwconv,
+            params: TuneParams {
+                wg_size: 128,
+                tile_m: 8,
+                tile_n: 32,
+                tile_k: 16,
+                tile_px: 4,
+                k_per_thread: 2,
+                cache_filters: true,
+                transpose_output: false,
+            },
+            time_ms: 1.5,
+            evaluated: 77,
+            pruned: 3,
+        }
+    }
+
+    #[test]
+    fn data_cell_round_trips_every_field() {
+        let t = sample();
+        let cell = encode_data(0xdead_beef, "mali-g76", &t).unwrap();
+        match decode(&cell).unwrap() {
+            Cell::Data { fp, device, tuning } => {
+                assert_eq!(fp, 0xdead_beef);
+                assert_eq!(device, "mali-g76");
+                assert_eq!(tuning, t);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_validates_and_rejects_tampering() {
+        let h = header_block();
+        check_header(&h).unwrap();
+        // wrong magic
+        let mut bad = h;
+        bad[0] ^= 0xff;
+        assert!(format!("{:#}", check_header(&bad).unwrap_err()).contains("magic"));
+        // future version (checksum re-sealed so the version check fires)
+        let mut future = [0u8; CELL];
+        future[..8].copy_from_slice(&MAGIC);
+        put_u64(&mut future, 8, BIN_SCHEMA_VERSION + 1);
+        put_u64(&mut future, 16, ENDIAN_PROBE);
+        let future = seal(future);
+        assert!(format!("{:#}", check_header(&future).unwrap_err()).contains("schema"));
+        // flipped endianness probe
+        let mut foreign = [0u8; CELL];
+        foreign[..8].copy_from_slice(&MAGIC);
+        put_u64(&mut foreign, 8, BIN_SCHEMA_VERSION);
+        put_u64(&mut foreign, 16, ENDIAN_PROBE.swap_bytes());
+        let foreign = seal(foreign);
+        assert!(format!("{:#}", check_header(&foreign).unwrap_err()).contains("endian"));
+        // corrupted padding breaks the checksum
+        let mut torn = h;
+        torn[100] = 9;
+        assert!(format!("{:#}", check_header(&torn).unwrap_err()).contains("checksum"));
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_caught_by_the_checksum() {
+        let cell = encode_data(7, "vega8", &sample()).unwrap();
+        for byte in 0..CELL {
+            for bit in 0..8 {
+                let mut flipped = cell;
+                flipped[byte] ^= 1 << bit;
+                assert!(
+                    decode(&flipped).is_err(),
+                    "flip of byte {byte} bit {bit} decoded successfully"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_time_rejected_on_encode_and_decode() {
+        let mut t = sample();
+        t.time_ms = f64::NAN;
+        assert!(encode_data(1, "mali", &t).is_err());
+        t.time_ms = f64::INFINITY;
+        assert!(encode_data(1, "mali", &t).is_err());
+        // a hand-crafted cell with NaN bits and a *valid* checksum must
+        // still be rejected: accepted loads are finite by construction
+        t.time_ms = 1.0;
+        let mut cell = encode_data(1, "mali", &t).unwrap();
+        put_u64(&mut cell, DATA_TIME, f64::NAN.to_bits());
+        let cell = seal(cell);
+        assert!(format!("{:#}", decode(&cell).unwrap_err()).contains("non-finite"));
+    }
+
+    #[test]
+    fn oversized_device_name_is_a_clean_append_error() {
+        let long = "x".repeat(DATA_DEVICE_LEN + 1);
+        let err = encode_data(1, &long, &sample()).unwrap_err();
+        assert!(format!("{err:#}").contains("device name"));
+    }
+
+    #[test]
+    fn index_and_trailer_round_trip() {
+        let blocks: Vec<u64> = (1..=INDEX_FANOUT as u64).collect();
+        match decode(&encode_index(42, &blocks)).unwrap() {
+            Cell::Index { fp, blocks: b } => {
+                assert_eq!(fp, 42);
+                assert_eq!(b, blocks);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+        match decode(&encode_trailer(10, 2, 3, 9)).unwrap() {
+            Cell::Trailer { index_start, index_cells, devices, covered } => {
+                assert_eq!((index_start, index_cells, devices, covered), (10, 2, 3, 9));
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worst_case_layer_name_fits_the_fixed_field() {
+        // the widest printable key: pw{u32}-{u32}@{u32}
+        let layer = LayerClass::Pw {
+            in_channels: u32::MAX,
+            out_channels: u32::MAX,
+            hw: u32::MAX,
+        };
+        assert!(layer.name().len() <= DATA_LAYER_LEN, "{}", layer.name());
+        for alg in Algorithm::ALL {
+            assert!(alg.name().len() <= DATA_ALG_LEN);
+        }
+    }
+}

@@ -84,12 +84,16 @@ impl DeviceTunings {
         self.entries.is_empty()
     }
 
-    /// Fastest stored algorithm for a layer, if any.
+    /// Fastest stored algorithm for a layer, if any. Ties break by
+    /// algorithm name (the routing tie-break), and the ordering is
+    /// total: a NaN smuggled in through `insert` yields a deterministic
+    /// winner instead of a panic mid-comparison.
     pub fn best_algorithm(&self, layer: LayerClass) -> Option<&StoredTuning> {
-        self.entries
-            .values()
-            .filter(|t| t.layer == layer)
-            .min_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap())
+        self.entries.values().filter(|t| t.layer == layer).min_by(|a, b| {
+            a.time_ms
+                .total_cmp(&b.time_ms)
+                .then_with(|| a.algorithm.name().cmp(b.algorithm.name()))
+        })
     }
 }
 
@@ -327,14 +331,21 @@ fn parse_entry(e: &Json) -> Result<StoredTuning> {
     let params = TuneParams::from_json(
         e.get("params").ok_or_else(|| anyhow!("missing params"))?,
     )?;
+    let time_ms = e
+        .get("time_ms")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing time_ms"))?;
+    // the JSON parser happily yields inf from overflow literals like
+    // 1e999; a non-finite "best time" poisons every later comparison,
+    // so refuse it here, at the trust boundary
+    if !time_ms.is_finite() {
+        bail!("non-finite time_ms ({time_ms})");
+    }
     Ok(StoredTuning {
         layer,
         algorithm,
         params,
-        time_ms: e
-            .get("time_ms")
-            .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow!("missing time_ms"))?,
+        time_ms,
         evaluated: e.get("evaluated").and_then(Json::as_usize).unwrap_or(0),
         pruned: e.get("pruned").and_then(Json::as_usize).unwrap_or(0),
     })
@@ -420,6 +431,45 @@ mod tests {
         let back = TuneStore::load(&path).unwrap();
         assert_eq!(back.len(), 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_finite_time_ms_is_rejected_at_parse() {
+        // regression: the JSON parser turns the overflow literal 1e999
+        // into inf, and parse() used to accept it — after which
+        // best_algorithm's partial_cmp().unwrap() could panic
+        let mut s = TuneStore::new();
+        let dev = DeviceConfig::mali_g76_mp10();
+        s.insert(dev.fingerprint(), dev.name, sample(LayerClass::Conv2x, Algorithm::Ilpm, 1.0));
+        let good = s.to_json().to_json_string();
+        for bad_literal in ["1e999", "-1e999"] {
+            let text = good.replace("\"time_ms\":1", &format!("\"time_ms\":{bad_literal}"));
+            assert_ne!(text, good, "replacement must hit the time_ms field");
+            let err = format!("{:#}", TuneStore::parse(&text).unwrap_err());
+            assert!(err.contains("non-finite"), "{bad_literal}: {err}");
+        }
+    }
+
+    #[test]
+    fn best_algorithm_survives_nan_and_breaks_ties_by_name() {
+        let dev = DeviceConfig::mali_g76_mp10();
+        let fp = dev.fingerprint();
+        // regression: a NaN inserted in-memory used to panic the
+        // min_by(partial_cmp().unwrap()) comparison
+        let mut s = TuneStore::new();
+        s.insert(fp, dev.name, sample(LayerClass::Conv4x, Algorithm::Ilpm, f64::NAN));
+        s.insert(fp, dev.name, sample(LayerClass::Conv4x, Algorithm::Direct, 2.0));
+        s.insert(fp, dev.name, sample(LayerClass::Conv4x, Algorithm::Im2col, f64::NAN));
+        let best = s.device(fp).unwrap().best_algorithm(LayerClass::Conv4x).unwrap();
+        assert_eq!(best.algorithm, Algorithm::Direct, "finite entry beats NaN entries");
+        // exact tie: the alphabetically-first algorithm name wins, the
+        // same rule the router uses, so store and router agree
+        let mut s = TuneStore::new();
+        s.insert(fp, dev.name, sample(LayerClass::Conv3x, Algorithm::Winograd, 1.5));
+        s.insert(fp, dev.name, sample(LayerClass::Conv3x, Algorithm::Direct, 1.5));
+        s.insert(fp, dev.name, sample(LayerClass::Conv3x, Algorithm::Ilpm, 1.5));
+        let best = s.device(fp).unwrap().best_algorithm(LayerClass::Conv3x).unwrap();
+        assert_eq!(best.algorithm, Algorithm::Direct);
     }
 
     #[test]

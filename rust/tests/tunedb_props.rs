@@ -10,7 +10,7 @@ use ilpm::autotune::tune_all_warm;
 use ilpm::convgen::{Algorithm, TuneParams};
 use ilpm::coordinator::RoutingTable;
 use ilpm::simulator::DeviceConfig;
-use ilpm::tunedb::{StoredTuning, TuneStore, SCHEMA_VERSION};
+use ilpm::tunedb::{binstore, StoredTuning, TuneStore, SCHEMA_VERSION};
 use ilpm::util::prng::Rng;
 use ilpm::util::prop::forall;
 use ilpm::workload::LayerClass;
@@ -287,6 +287,200 @@ fn multi_device_route_resolution_never_leaks_across_fingerprints() {
                             ));
                         }
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Every (fp, device, entry) triple of a store, in store order.
+fn all_entries(store: &TuneStore) -> Vec<(u64, String, StoredTuning)> {
+    store
+        .devices()
+        .flat_map(|(fp, d)| {
+            d.entries().map(move |e| (fp, d.device.clone(), e.clone())).collect::<Vec<_>>()
+        })
+        .collect()
+}
+
+/// Two stores hold exactly the same entries (order-independent).
+fn same_entries(a: &TuneStore, b: &TuneStore) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("len {} != {}", a.len(), b.len()));
+    }
+    for (fp, _dev, e) in all_entries(a) {
+        if b.get(fp, e.layer, e.algorithm) != Some(&e) {
+            return Err(format!(
+                "{fp:016x}/{}/{} diverged",
+                e.layer.name(),
+                e.algorithm.name()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn json_to_binary_to_json_is_byte_identical() {
+    // The interop contract of `tunedb migrate` + `tunedb export`: the
+    // binary format is lossless against the JSON store, down to the
+    // serialised bytes (random_store never creates an empty device —
+    // the one JSON construct the record format cannot represent).
+    forall(
+        25,
+        0x0b17_51de,
+        |r| r.next_u64(),
+        |&seed| {
+            let store = random_store(seed);
+            let json_before = store.to_json().to_json_string();
+            let image = binstore::sealed_bytes(&store).map_err(|e| format!("seal: {e:#}"))?;
+            let (back, rep) = binstore::load_bytes(&image).map_err(|e| format!("{e:#}"))?;
+            if rep.skipped != 0 || rep.torn_tail_bytes != 0 {
+                return Err(format!("clean image reported damage: {:?}", rep.warnings));
+            }
+            let json_after = back.to_json().to_json_string();
+            if json_before != json_after {
+                return Err("JSON -> binary -> JSON changed the serialised store".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn appending_in_any_order_loads_the_same_store_as_sealing() {
+    // append == insert: one record at a time, in a random order, with
+    // no footer, must load entry-for-entry identical to the one-shot
+    // sealed image of the same store
+    let path = tmp("tunedb_append_order");
+    forall(
+        15,
+        0xadd_0e5,
+        |r| r.next_u64(),
+        |&seed| {
+            let store = random_store(seed);
+            let mut entries = all_entries(&store);
+            if entries.is_empty() {
+                return Ok(()); // nothing to append: no file to compare
+            }
+            Rng::new(seed ^ 0xff).shuffle(&mut entries);
+            std::fs::remove_file(&path).ok();
+            for (fp, dev, e) in &entries {
+                binstore::append(&path, *fp, dev, e).map_err(|x| format!("append: {x:#}"))?;
+            }
+            let (appended, _) = binstore::load(&path).map_err(|x| format!("load: {x:#}"))?;
+            same_entries(&store, &appended)?;
+            // and the indexed path agrees once sealed
+            binstore::seal(&path).map_err(|x| format!("seal: {x:#}"))?;
+            for dev in DeviceConfig::paper_devices() {
+                let (view, _) = binstore::load_device(&path, dev.fingerprint())
+                    .map_err(|x| format!("load_device: {x:#}"))?;
+                let want = store.device(dev.fingerprint()).map(|d| d.len()).unwrap_or(0);
+                if view.len() != want {
+                    return Err(format!("{}: {} != {want}", dev.name, view.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn compact_is_idempotent_and_load_equivalent() {
+    let path = tmp("tunedb_compact_prop");
+    forall(
+        15,
+        0xc0_4ac7,
+        |r| r.next_u64(),
+        |&seed| {
+            // build a file with real garbage to collect: shuffled
+            // appends, superseding re-appends, and a stale footer
+            let store = random_store(seed);
+            let mut entries = all_entries(&store);
+            if entries.is_empty() {
+                return Ok(()); // nothing to append, nothing to collect
+            }
+            Rng::new(seed ^ 0xa5).shuffle(&mut entries);
+            std::fs::remove_file(&path).ok();
+            for (fp, dev, e) in &entries {
+                let mut stale = e.clone();
+                stale.time_ms += 1.0; // superseded by the re-append below
+                binstore::append(&path, *fp, dev, &stale).map_err(|x| format!("{x:#}"))?;
+            }
+            binstore::seal(&path).map_err(|x| format!("{x:#}"))?; // becomes stale
+            for (fp, dev, e) in &entries {
+                binstore::append(&path, *fp, dev, e).map_err(|x| format!("{x:#}"))?;
+            }
+            let (before, _) = binstore::load(&path).map_err(|x| format!("{x:#}"))?;
+            same_entries(&store, &before).map_err(|e| format!("pre-compact: {e}"))?;
+
+            let rep = binstore::compact(&path).map_err(|x| format!("compact: {x:#}"))?;
+            if rep.dropped == 0 {
+                return Err("compact dropped nothing despite supersedes + stale footer".into());
+            }
+            let first = std::fs::read(&path).map_err(|x| x.to_string())?;
+            let (after, load_rep) = binstore::load(&path).map_err(|x| format!("{x:#}"))?;
+            same_entries(&store, &after).map_err(|e| format!("post-compact: {e}"))?;
+            if load_rep.skipped != 0 {
+                return Err(format!("compacted file has damage: {:?}", load_rep.warnings));
+            }
+            binstore::compact(&path).map_err(|x| format!("recompact: {x:#}"))?;
+            let second = std::fs::read(&path).map_err(|x| x.to_string())?;
+            if first != second {
+                return Err("second compact changed bytes — not idempotent".into());
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fingerprint_isolation_survives_migrate_and_compact() {
+    // the JSON store's isolation property (edited spec -> clean miss,
+    // other devices unaffected) must hold through the binary lifecycle
+    let path = tmp("tunedb_bin_isolation");
+    forall(
+        10,
+        0x150_1a7e,
+        |r| r.next_u64(),
+        |&seed| {
+            let store = random_store(seed);
+            binstore::write_sealed(&store, &path).map_err(|e| format!("{e:#}"))?;
+            binstore::compact(&path).map_err(|e| format!("{e:#}"))?;
+            for dev in DeviceConfig::paper_devices() {
+                let mut edited = dev.clone();
+                edited.l2_bytes *= 2;
+                let (hit, _) = binstore::load_device(&path, dev.fingerprint())
+                    .map_err(|e| format!("{e:#}"))?;
+                let (miss, _) = binstore::load_device(&path, edited.fingerprint())
+                    .map_err(|e| format!("{e:#}"))?;
+                if !miss.is_empty() {
+                    return Err(format!("{}: edited spec still loaded entries", dev.name));
+                }
+                let want = store.device(dev.fingerprint()).map(|d| d.len()).unwrap_or(0);
+                if hit.len() != want {
+                    return Err(format!("{}: {} entries != {want}", dev.name, hit.len()));
+                }
+                // route parity with the JSON path
+                let via_bin = RoutingTable::from_binstore(&path, &dev)
+                    .map_err(|e| format!("{e:#}"))?;
+                let via_json = RoutingTable::from_store(&store, &dev);
+                match (via_bin, via_json) {
+                    (None, None) => {}
+                    (Some(b), Some(j)) => {
+                        for layer in LayerClass::ALL {
+                            if b.route(layer).map(|r| r.algorithm)
+                                != j.route(layer).map(|r| r.algorithm)
+                            {
+                                return Err(format!("{}: route diverged", dev.name));
+                            }
+                        }
+                    }
+                    _ => return Err(format!("{}: routability diverged", dev.name)),
                 }
             }
             Ok(())
