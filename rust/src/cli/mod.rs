@@ -27,13 +27,14 @@ use crate::autotune::{tune, tune_layers_warm, tune_layers_warm_traced};
 use crate::convgen::Algorithm;
 use crate::coordinator::{InferenceEngine, RoutingTable, SimBackend};
 use crate::fleet::{
-    run_open_loop, run_open_loop_traced, DevicePool, DispatchPolicy, FleetReport, FleetSpec,
-    OpenLoopConfig, SloConfig,
+    run_open_loop, run_open_loop_recorded, run_open_loop_traced, DevicePool, DispatchPolicy,
+    FleetReport, FleetSpec, FlightRecorder, OpenLoopConfig, SloConfig,
 };
 use crate::metrics::{bench_envelope, fig5_table, render_fig5, table3, table4, LatencySummary};
 use crate::simulator::DeviceConfig;
 use crate::trace::{
-    chrome_trace_json, MetricsRegistry, NoopSink, ProfileReport, SpanEvent, TraceBuffer, TraceSink,
+    chrome_trace_json, AlertRecord, AlertState, MetricsRegistry, NoopSink, ProfileReport,
+    SpanEvent, TraceBuffer, TraceSink, DEFAULT_SAMPLE_MS, TIMELINE_SCHEMA_VERSION,
 };
 use crate::tunedb::TuneStore;
 use crate::workload::{LayerClass, NetworkDef, RequestGen, TraceKind};
@@ -70,7 +71,12 @@ COMMANDS:
             --trace PATH  (sim and fleet modes) write a Chrome
                   trace_event JSON of the run — queue/exec spans per
                   replica on the virtual clock, loadable in Perfetto
-  bench     <fig5|table3|table4|serve|mobilenet|fleet|fleet-scale|routeload>
+            --timeline PATH  (fleet mode) flight recorder: write the
+                  telemetry timeline JSON — per-replica utilization /
+                  queue-depth windows plus SLO burn-rate alerts —
+                  sampled every --sample-ms of virtual time (default
+                  100); render it with `ilpm monitor`
+  bench     <fig5|table3|table4|serve|mobilenet|fleet|fleet-scale|routeload|monitor>
             [--device mali|vega8|radeonvii|all]
             regenerate a paper table/figure from tuned simulations;
             `serve` sweeps device x routing policy through the sim
@@ -91,7 +97,19 @@ COMMANDS:
             `routeload` races serve-start route loading for one device
             out of a fleet-sized store — full-JSON-parse vs the binary
             store's indexed seek — and writes the seed-exact
-            BENCH_routeload.json ([--device D] [--devices N] [--seed S])
+            BENCH_routeload.json ([--device D] [--devices N] [--seed S]);
+            `monitor` flies the flight recorder over a virtual fleet —
+            a healthy 0.7x-capacity phase that must stay alert-silent,
+            a 3x burst overload that must page, and a recorded-vs-bare
+            same-seed report diff — and writes the seed-exact
+            BENCH_monitor.json with sampling_is_free /
+            silent_at_subcapacity / alerts_fire_under_overload verdicts
+            ([--fleet SPEC] [--n N] [--seed S] [--queue N])
+  monitor   --timeline PATH [--replicas N]
+            render a recorded timeline (see `serve --timeline`) as a
+            text dashboard: per-replica utilization and queue-depth
+            sparklines, alert markers, and the worst windows by bad
+            rate; --replicas caps the rows shown (default 16)
   tune      [--device mali|vega8|radeonvii|all] [--threads N] [--out PATH]
             [--network resnet|mobilenetV1|mobilenetV1-0.5|all]
             [--trace PATH]
@@ -227,6 +245,50 @@ fn write_trace_file(path: &str, buf: &TraceBuffer) -> Result<(), String> {
     Ok(())
 }
 
+/// Write a flight recorder's timeline as schema-versioned JSON: the
+/// sampler's windows and per-replica series, the alert ledger, the
+/// monitor configuration, and enough run metadata (`fleet`, `policy`,
+/// `seed`, …) for `ilpm monitor` to caption the dashboard. Everything
+/// in the file runs on the virtual clock — same seed, same bytes.
+fn write_timeline_file(
+    path: &str,
+    pool: &DevicePool,
+    spec: &FleetSpec,
+    cfg: &OpenLoopConfig,
+    rec: &FlightRecorder,
+) -> Result<(), String> {
+    use crate::util::json::Json;
+    let labels: Vec<&str> = pool.replicas().iter().map(|r| r.label.as_ref()).collect();
+    let mut j = rec.sampler.to_json(&labels);
+    if let Json::Obj(m) = &mut j {
+        m.insert("network".into(), Json::Str(pool.network().to_string()));
+        m.insert("fleet".into(), Json::Str(spec.render()));
+        m.insert("policy".into(), Json::Str(cfg.policy.name().into()));
+        m.insert("seed".into(), Json::Num(cfg.seed as f64));
+        m.insert("tool_version".into(), Json::Str(env!("CARGO_PKG_VERSION").into()));
+        m.insert(
+            "alerts".into(),
+            Json::Arr(rec.alerts().iter().map(AlertRecord::to_json).collect()),
+        );
+        if let Some(mon) = rec.monitor.as_ref() {
+            let c = mon.config();
+            let mut mc = std::collections::BTreeMap::new();
+            mc.insert("error_budget".into(), Json::Num(c.error_budget));
+            mc.insert("fast_ms".into(), Json::Num(c.fast_ms));
+            mc.insert("slow_ms".into(), Json::Num(c.slow_ms));
+            mc.insert("threshold".into(), Json::Num(c.threshold));
+            m.insert("monitor".into(), Json::Obj(mc));
+        }
+    }
+    std::fs::write(path, j.to_json_string()).map_err(|e| format!("write {path}: {e}"))?;
+    log_info!(
+        "wrote {} timeline window(s) to {path} ({} alert transition(s))",
+        rec.sampler.windows(),
+        rec.alerts().len()
+    );
+    Ok(())
+}
+
 fn device(a: &Args) -> Result<DeviceConfig, String> {
     let name = a.get_or("device", "mali");
     DeviceConfig::by_name(name).ok_or_else(|| format!("unknown device '{name}'"))
@@ -305,6 +367,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         }
         "serve" => cmd_serve(rest),
         "bench" => cmd_bench(rest),
+        "monitor" => cmd_monitor(rest),
         "tune" => cmd_tune(rest),
         "profile" => cmd_profile(rest),
         "routes" => cmd_routes(rest),
@@ -322,7 +385,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         &[
             "model", "n", "workers", "artifacts", "queue", "rate", "routes", "device",
             "backend", "network", "uniform", "time-scale", "fleet", "policy", "deadline-ms",
-            "admission", "burst", "seed", "threads", "trace",
+            "admission", "burst", "seed", "threads", "trace", "timeline", "sample-ms",
         ],
     )?;
     // flags that only one serve mode reads are rejected under the
@@ -335,8 +398,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         }
         Ok(())
     };
-    const FLEET_ONLY: [&str; 7] =
-        ["policy", "deadline-ms", "admission", "burst", "seed", "rate", "threads"];
+    const FLEET_ONLY: [&str; 9] = [
+        "policy", "deadline-ms", "admission", "burst", "seed", "rate", "threads", "timeline",
+        "sample-ms",
+    ];
     if a.get("fleet").is_some() {
         if a.get_or("backend", "sim") != "sim" {
             return Err("--fleet serves over simulated devices; drop --backend".to_string());
@@ -409,6 +474,15 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
         format!("unknown --policy '{policy_name}' (round-robin|least-outstanding|cost-aware)")
     })?;
     let slo = slo_flags(a)?;
+    // flight-recorder flags, validated before the (expensive) cold-tune
+    // below for the same fail-fast reason as --rate
+    if a.get("sample-ms").is_some() && a.get("timeline").is_none() {
+        return Err("--sample-ms without --timeline has nothing to sample".to_string());
+    }
+    let sample_ms = match a.get("sample-ms") {
+        Some(_) => positive_f64(a, "sample-ms")?,
+        None => DEFAULT_SAMPLE_MS,
+    };
 
     let mut store = match a.get("routes") {
         Some(p) => crate::tunedb::load_any_or_empty(Path::new(p)).map_err(|e| format!("{e:#}"))?,
@@ -452,22 +526,47 @@ fn cmd_serve_fleet(a: &Args) -> Result<(), String> {
     }
     let cfg = OpenLoopConfig { n, arrival, policy, seed, slo };
     let mut metrics = MetricsRegistry::new();
+    let mut recorder =
+        a.get("timeline").map(|_| FlightRecorder::new(pool.replicas().len(), sample_ms));
     let report = match a.get("trace") {
         Some(path) => {
             let mut buf = TraceBuffer::new();
-            let r = run_open_loop_traced(&pool, &cfg, &mut buf, &mut metrics)
-                .map_err(|e| format!("fleet serving: {e:#}"))?;
+            let r = match recorder.as_mut() {
+                Some(rec) => run_open_loop_recorded(&pool, &cfg, &mut buf, &mut metrics, rec),
+                None => run_open_loop_traced(&pool, &cfg, &mut buf, &mut metrics),
+            }
+            .map_err(|e| format!("fleet serving: {e:#}"))?;
+            // ring overflow is part of the run's metrics, not just a
+            // log line — the Chrome export carries the same count
+            metrics.add("trace.events_dropped", buf.dropped());
             write_trace_file(path, &buf)?;
             r
         }
-        None => run_open_loop_traced(&pool, &cfg, &mut NoopSink, &mut metrics)
-            .map_err(|e| format!("fleet serving: {e:#}"))?,
+        None => match recorder.as_mut() {
+            Some(rec) => run_open_loop_recorded(&pool, &cfg, &mut NoopSink, &mut metrics, rec),
+            None => run_open_loop_traced(&pool, &cfg, &mut NoopSink, &mut metrics),
+        }
+        .map_err(|e| format!("fleet serving: {e:#}"))?,
     };
+    if let (Some(path), Some(rec)) = (a.get("timeline"), recorder.as_ref()) {
+        write_timeline_file(path, &pool, &spec, &cfg, rec)?;
+    }
     pool.shutdown();
     if crate::trace::log_enabled(crate::trace::LogLevel::Debug) {
         eprint!("{}", metrics.render());
     }
     print_fleet_report(&report);
+    if let Some(rec) = recorder.as_ref() {
+        let firing =
+            rec.alerts().iter().filter(|al| al.state == AlertState::Firing).count();
+        println!(
+            "timeline: {} window(s) x {:.1}ms, {} alert transition(s) ({} firing)",
+            rec.sampler.windows(),
+            rec.sampler.window_ms(),
+            rec.alerts().len(),
+            firing
+        );
+    }
     if report.errors > 0 {
         // errors ledger = engine execution failures + non-finite
         // latency samples the recorder dropped (poisoned cost signal)
@@ -515,6 +614,230 @@ fn print_fleet_report(r: &FleetReport) {
         r.violated,
         r.errors,
     );
+}
+
+/// Terminal width of the dashboard's sparkline column.
+const DASHBOARD_WIDTH: usize = 64;
+
+/// Eight-level unicode sparkline, scaled to the series' own maximum
+/// (an all-zero series renders as a flat floor).
+fn sparkline(values: &[f64]) -> String {
+    const RAMP: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().copied().fold(0.0, f64::max);
+    values
+        .iter()
+        .map(|&v| {
+            if max <= 0.0 || !v.is_finite() {
+                RAMP[0]
+            } else {
+                RAMP[(((v / max) * 7.0).round() as usize).min(7)]
+            }
+        })
+        .collect()
+}
+
+/// Max-pool `values` into at most `width` buckets so a long timeline
+/// still fits one terminal row. Max (not mean) on purpose: a one-window
+/// overload spike must survive pooling.
+fn pool_max(values: &[f64], width: usize) -> Vec<f64> {
+    if values.len() <= width {
+        return values.to_vec();
+    }
+    (0..width)
+        .map(|b| {
+            let lo = b * values.len() / width;
+            let hi = ((b + 1) * values.len() / width).max(lo + 1);
+            values[lo..hi].iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        })
+        .collect()
+}
+
+/// `ilpm monitor` — render a timeline file written by `serve --fleet
+/// --timeline` as a text dashboard. A pure function of the file: no
+/// engines, no clocks, nothing written.
+fn cmd_monitor(argv: &[String]) -> Result<(), String> {
+    use crate::util::json::Json;
+    let a = Args::parse(argv, &["timeline", "replicas"])?;
+    let path = a
+        .get("timeline")
+        .ok_or("monitor needs --timeline <path> (written by `serve --fleet --timeline`)")?;
+    let max_rows = positive(a.get_usize("replicas", 16)?, "replicas")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    render_timeline_dashboard(&j, max_rows)
+}
+
+/// The dashboard body behind [`cmd_monitor`]: caption, fleet-level
+/// bad-rate and arrival sparklines with alert markers, per-replica
+/// utilization / queue-depth rows, the worst windows by bad rate, and
+/// the alert ledger.
+fn render_timeline_dashboard(j: &crate::util::json::Json, max_rows: usize) -> Result<(), String> {
+    use crate::util::json::Json;
+    if j.get("kind").and_then(Json::as_str) != Some("timeline") {
+        return Err(
+            "not a timeline file (want kind:\"timeline\"; see `serve --fleet --timeline`)"
+                .to_string(),
+        );
+    }
+    let schema = j.get("schema_version").and_then(Json::as_u64).unwrap_or(0);
+    if schema != TIMELINE_SCHEMA_VERSION as u64 {
+        return Err(format!(
+            "timeline schema v{schema} unsupported (this build reads v{TIMELINE_SCHEMA_VERSION})"
+        ));
+    }
+    let rows = j.get("rows").and_then(Json::as_arr).ok_or("timeline missing rows")?;
+    let series = j.get("series").and_then(Json::as_arr).ok_or("timeline missing series")?;
+    let top_f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let top_s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or("?");
+    let row_f = |r: &Json, k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let windows = rows.len();
+    let start = rows.first().map_or(0.0, |r| row_f(r, "start_ms"));
+    let end = rows.last().map_or(0.0, |r| row_f(r, "end_ms"));
+    println!(
+        "timeline — {} over {} ({} replicas), {} policy, seed {}",
+        top_s("network"),
+        top_s("fleet"),
+        top_f("replicas") as u64,
+        top_s("policy"),
+        top_f("seed") as u64,
+    );
+    println!(
+        "{windows} window(s) x {:.1}ms covering {start:.1}..{end:.1}ms, {} compaction(s)",
+        top_f("window_ms"),
+        top_f("compactions") as u64,
+    );
+    if let Some(t) = j.get("totals") {
+        let tf = |k: &str| t.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        println!(
+            "totals: {} arrivals, {} admitted, {} shed ({} queue + {} deadline), {} violated",
+            tf("arrivals"),
+            tf("admitted"),
+            tf("shed_queue") + tf("shed_deadline"),
+            tf("shed_queue"),
+            tf("shed_deadline"),
+            tf("violated"),
+        );
+    }
+
+    let bad_rate: Vec<f64> = rows
+        .iter()
+        .map(|r| {
+            let arr = row_f(r, "arrivals");
+            if arr > 0.0 {
+                (row_f(r, "shed_queue") + row_f(r, "shed_deadline") + row_f(r, "violated")) / arr
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let arrivals: Vec<f64> = rows.iter().map(|r| row_f(r, "arrivals")).collect();
+    let spark_w = windows.min(DASHBOARD_WIDTH).max(1);
+    println!();
+    println!("{:<20} {}", "fleet arrivals", sparkline(&pool_max(&arrivals, DASHBOARD_WIDTH)));
+    println!("{:<20} {}", "fleet bad-rate", sparkline(&pool_max(&bad_rate, DASHBOARD_WIDTH)));
+    let empty: Vec<Json> = Vec::new();
+    let alerts = j.get("alerts").and_then(Json::as_arr).unwrap_or(&empty);
+    if !alerts.is_empty() && windows > 0 {
+        // marker row aligned under the sparklines: ! opens an episode,
+        // + closes one (later marks win a shared pooled bucket)
+        let mut marks = vec![' '; spark_w];
+        for al in alerts {
+            let w = al.get("window").and_then(Json::as_f64).unwrap_or(-1.0);
+            if w >= 0.0 && (w as usize) < windows {
+                let b = (w as usize) * spark_w / windows;
+                marks[b.min(spark_w - 1)] =
+                    if al.get("state").and_then(Json::as_str) == Some("firing") { '!' } else { '+' };
+            }
+        }
+        println!("{:<20} {}", "alerts", marks.iter().collect::<String>());
+    }
+
+    let spans: Vec<f64> =
+        rows.iter().map(|r| (row_f(r, "end_ms") - row_f(r, "start_ms")).max(1e-9)).collect();
+    println!();
+    println!(
+        "{:<20} {:<w$}   {:<w$} {:>6}",
+        "replica",
+        "utilization",
+        "queue depth",
+        "peak",
+        w = DASHBOARD_WIDTH
+    );
+    for (i, sr) in series.iter().enumerate() {
+        if i == max_rows {
+            println!(
+                "… {} more replica(s) not shown (pass --replicas N to widen)",
+                series.len() - max_rows
+            );
+            break;
+        }
+        let label = sr.get("replica").and_then(Json::as_str).unwrap_or("?");
+        let busy = sr.get("busy_ms").and_then(Json::as_arr).ok_or("series missing busy_ms")?;
+        let outst =
+            sr.get("outstanding").and_then(Json::as_arr).ok_or("series missing outstanding")?;
+        let util: Vec<f64> = busy
+            .iter()
+            .zip(&spans)
+            .map(|(b, s)| b.as_f64().unwrap_or(0.0) / s)
+            .collect();
+        let depth: Vec<f64> = outst.iter().map(|v| v.as_f64().unwrap_or(0.0)).collect();
+        let peak = depth.iter().copied().fold(0.0, f64::max);
+        println!(
+            "{:<20} {:<w$}   {:<w$} {:>6}",
+            label,
+            sparkline(&pool_max(&util, DASHBOARD_WIDTH)),
+            sparkline(&pool_max(&depth, DASHBOARD_WIDTH)),
+            peak as u64,
+            w = DASHBOARD_WIDTH
+        );
+    }
+
+    if windows > 0 {
+        let mut order: Vec<usize> = (0..windows).collect();
+        order.sort_by(|&x, &y| {
+            bad_rate[y]
+                .partial_cmp(&bad_rate[x])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(x.cmp(&y))
+        });
+        println!();
+        println!("worst windows by bad rate:");
+        println!(
+            "{:>6} {:>10} {:>10} {:>9} {:>6} {:>9} {:>7}",
+            "window", "start(ms)", "end(ms)", "arrivals", "shed", "violated", "bad%"
+        );
+        for &w in order.iter().take(5) {
+            let r = &rows[w];
+            println!(
+                "{:>6} {:>10.1} {:>10.1} {:>9} {:>6} {:>9} {:>6.1}%",
+                w,
+                row_f(r, "start_ms"),
+                row_f(r, "end_ms"),
+                row_f(r, "arrivals") as u64,
+                (row_f(r, "shed_queue") + row_f(r, "shed_deadline")) as u64,
+                row_f(r, "violated") as u64,
+                100.0 * bad_rate[w],
+            );
+        }
+    }
+
+    println!();
+    if alerts.is_empty() {
+        println!("alerts: none — burn stayed under threshold for the whole run");
+    } else {
+        println!("alerts ({} transition(s)):", alerts.len());
+        for al in alerts {
+            println!(
+                "  {:<8} window {:>5} @ {:>10.1}ms  fast {:>6.2}x  slow {:>6.2}x",
+                al.get("state").and_then(Json::as_str).unwrap_or("?"),
+                al.get("window").and_then(Json::as_f64).unwrap_or(-1.0) as i64,
+                al.get("at_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                al.get("fast_burn").and_then(Json::as_f64).unwrap_or(0.0),
+                al.get("slow_burn").and_then(Json::as_f64).unwrap_or(0.0),
+            );
+        }
+    }
+    Ok(())
 }
 
 /// `serve --backend sim` — route-aware simulated serving: per-layer
@@ -733,11 +1056,27 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
     if which == "fleet-scale" {
         return bench_fleet_scale(&a);
     }
+    if which == "monitor" {
+        // `bench monitor` pins both phases for the same pure-function-
+        // of-the-seed reason as `bench fleet`, and never touches
+        // engines or stores
+        for f in [
+            "rate", "policy", "deadline-ms", "admission", "burst", "routes", "device", "layer",
+            "workers", "time-scale",
+        ] {
+            if a.get(f).is_some() {
+                return Err(format!("--{f} has no effect with `bench monitor`"));
+            }
+        }
+        return bench_monitor(&a);
+    }
     // flags only the fleet benches read are rejected elsewhere, not
     // silently ignored
     for f in ["fleet", "seed", "queue", "rate", "policy", "deadline-ms", "admission", "burst"] {
         if a.get(f).is_some() {
-            return Err(format!("--{f} only applies to `bench fleet` / `bench fleet-scale`"));
+            return Err(format!(
+                "--{f} only applies to `bench fleet` / `bench fleet-scale` / `bench monitor`"
+            ));
         }
     }
     if which == "serve" {
@@ -1336,6 +1675,147 @@ fn bench_fleet_scale(a: &Args) -> Result<(), String> {
         .map_err(|e| format!("write {out}: {e}"))?;
     println!("wrote {out} ({} device rollups)", spec.entries.len());
     Ok(())
+}
+
+/// `bench monitor` — the flight recorder's verdict file,
+/// BENCH_monitor.json. Two recorded phases over a *virtual* fleet plus
+/// one bare control run, all on the virtual clock (the file is a pure
+/// function of the seed), backing three verdicts:
+///
+/// 1. `sampling_is_free` — the recorded healthy run's `FleetReport`
+///    JSON is byte-identical to the bare run's and the sampler never
+///    reallocated its fixed window storage (the strict per-allocation
+///    proof lives in tests/alloc_free.rs, which drives dispatch under
+///    a counting global allocator with the sampler live);
+/// 2. `silent_at_subcapacity` — at 0.7x fleet capacity against a slack
+///    deadline, the burn-rate monitor ledgers no alert transition;
+/// 3. `alerts_fire_under_overload` — a 3x-capacity burst phase against
+///    a deadline of twice the slowest pass opens an alert episode.
+fn bench_monitor(a: &Args) -> Result<(), String> {
+    let spec = FleetSpec::parse(a.get_or("fleet", "mali:8,vega8:4,radeonvii:4"))
+        .map_err(|e| format!("{e:#}"))?;
+    let n = positive(a.get_usize("n", 4096)?, "n")?;
+    let seed = a.get_usize("seed", 7)? as u64;
+    let threads = a.get_usize("threads", 8)?;
+    let queue = positive(a.get_usize("queue", 16)?, "queue")?;
+    let out = a.get_or("out", "BENCH_monitor.json").to_string();
+    let net = network(a)?;
+    let mut store = TuneStore::new();
+    let (pool, _warm) = DevicePool::start_virtual(&spec, &net, &mut store, threads, queue)
+        .map_err(|e| format!("fleet start: {e:#}"))?;
+    let cap = pool.capacity_rps();
+    let slowest_ms = pool.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max);
+    println!(
+        "BENCH monitor — {} on {} ({} virtual replicas, capacity {:.1} req/s), n={n} seed={seed}",
+        net.name,
+        spec.render(),
+        pool.replicas().len(),
+        cap
+    );
+
+    // healthy phase: Poisson at 70% capacity against a deadline of six
+    // slowest passes — slack a loaded-but-not-drowning fleet does not
+    // consume, so the monitor must stay quiet. The bare control run
+    // pins the report bytes the recorded run must reproduce.
+    let healthy_cfg = OpenLoopConfig {
+        n,
+        arrival: TraceKind::Poisson { rate_hz: 0.7 * cap },
+        policy: DispatchPolicy::CostAware,
+        seed,
+        slo: SloConfig { deadline_ms: Some(6.0 * slowest_ms), admission: true },
+    };
+    let bare = run_open_loop(&pool, &healthy_cfg).map_err(|e| format!("healthy bare: {e:#}"))?;
+    let mut healthy_rec = FlightRecorder::new(pool.replicas().len(), DEFAULT_SAMPLE_MS);
+    let healthy = run_open_loop_recorded(
+        &pool,
+        &healthy_cfg,
+        &mut NoopSink,
+        &mut MetricsRegistry::new(),
+        &mut healthy_rec,
+    )
+    .map_err(|e| format!("healthy recorded: {e:#}"))?;
+    let sampling_is_free = bare.to_json().to_json_string() == healthy.to_json().to_json_string()
+        && !healthy_rec.sampler.reallocated();
+    let silent = healthy_rec.alerts().is_empty();
+
+    // overload phase: 3x capacity in bursts of 8 against a deadline of
+    // twice the slowest pass — admission sheds most arrivals and the
+    // budget burns within a few windows
+    let overload_cfg = OpenLoopConfig {
+        n,
+        arrival: TraceKind::Burst { rate_hz: 3.0 * cap, burst: 8 },
+        policy: DispatchPolicy::CostAware,
+        seed,
+        slo: SloConfig { deadline_ms: Some(2.0 * slowest_ms), admission: true },
+    };
+    let mut overload_rec = FlightRecorder::new(pool.replicas().len(), DEFAULT_SAMPLE_MS);
+    let overload = run_open_loop_recorded(
+        &pool,
+        &overload_cfg,
+        &mut NoopSink,
+        &mut MetricsRegistry::new(),
+        &mut overload_rec,
+    )
+    .map_err(|e| format!("overload recorded: {e:#}"))?;
+    pool.shutdown();
+    let pages =
+        overload_rec.alerts().first().is_some_and(|al| al.state == AlertState::Firing);
+
+    println!(
+        "healthy:  {} window(s), {} alert(s) | shed {} of {} ({:.2}%)",
+        healthy_rec.sampler.windows(),
+        healthy_rec.alerts().len(),
+        healthy.shed(),
+        healthy.submitted,
+        100.0 * healthy.shed_rate()
+    );
+    println!(
+        "overload: {} window(s), {} alert(s) | shed {} of {} ({:.1}%)",
+        overload_rec.sampler.windows(),
+        overload_rec.alerts().len(),
+        overload.shed(),
+        overload.submitted,
+        100.0 * overload.shed_rate()
+    );
+    println!(
+        "sampling is free (report bytes + fixed storage): {}",
+        if sampling_is_free { "yes" } else { "NO" }
+    );
+    println!("silent at 0.7x capacity: {}", if silent { "yes" } else { "NO" });
+    println!("alerts fire under overload: {}", if pages { "yes" } else { "NO" });
+
+    use crate::util::json::Json;
+    let mut root = bench_envelope("monitor", &spec.devices(), seed);
+    root.insert("network".into(), Json::Str(net.name.clone()));
+    root.insert("fleet".into(), Json::Str(spec.render()));
+    root.insert("n".into(), Json::Num(n as f64));
+    root.insert("capacity_rps".into(), Json::Num(cap));
+    root.insert("sample_ms".into(), Json::Num(DEFAULT_SAMPLE_MS));
+    root.insert("sampling_is_free".into(), Json::Bool(sampling_is_free));
+    root.insert("silent_at_subcapacity".into(), Json::Bool(silent));
+    root.insert("alerts_fire_under_overload".into(), Json::Bool(pages));
+    root.insert("healthy_windows".into(), Json::Num(healthy_rec.sampler.windows() as f64));
+    root.insert("overload_windows".into(), Json::Num(overload_rec.sampler.windows() as f64));
+    root.insert(
+        "overload_alerts".into(),
+        Json::Arr(overload_rec.alerts().iter().map(AlertRecord::to_json).collect()),
+    );
+    root.insert(
+        "rows".into(),
+        Json::Arr(vec![healthy.to_json(), overload.to_json()]),
+    );
+    root.insert("calibrated".into(), Json::Bool(true));
+    std::fs::write(&out, Json::Obj(root).to_json_string())
+        .map_err(|e| format!("write {out}: {e}"))?;
+    println!("wrote {out}");
+    if sampling_is_free && silent && pages {
+        Ok(())
+    } else {
+        Err(format!(
+            "monitor verdicts failed: sampling_is_free={sampling_is_free} \
+             silent_at_subcapacity={silent} alerts_fire_under_overload={pages}"
+        ))
+    }
 }
 
 /// `bench routeload` — serve-start route loading for one device out of
@@ -2343,6 +2823,116 @@ mod tests {
             .filter(|e| e.get("name").and_then(Json::as_str) == Some("exec"))
             .count();
         assert!(execs >= 1, "at least one exec span");
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn serve_fleet_writes_a_timeline_and_monitor_renders_it() {
+        use crate::util::json::Json;
+        let out = std::env::temp_dir()
+            .join(format!("ilpm_cli_fleet_timeline_{}.json", std::process::id()));
+        let o = out.to_str().unwrap().to_string();
+        run(&sv(&[
+            "serve", "--fleet", "vega8:1", "--n", "8", "--seed", "3", "--timeline", &o,
+            "--sample-ms", "50",
+        ]))
+        .expect("recorded fleet serve");
+        let j = Json::parse(&std::fs::read_to_string(&out).expect("written")).expect("json");
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("timeline"));
+        assert_eq!(
+            j.get("schema_version").and_then(Json::as_u64),
+            Some(TIMELINE_SCHEMA_VERSION as u64)
+        );
+        let windows = j.get("windows").and_then(Json::as_u64).expect("windows") as usize;
+        assert!(windows >= 1);
+        assert_eq!(j.get("rows").and_then(Json::as_arr).expect("rows").len(), windows);
+        let series = j.get("series").and_then(Json::as_arr).expect("series");
+        assert_eq!(series.len(), 1, "one replica, one series");
+        assert_eq!(
+            series[0].get("outstanding").and_then(Json::as_arr).expect("outstanding").len(),
+            windows,
+            "one gauge sample per window per replica"
+        );
+        assert!(j.get("alerts").and_then(Json::as_arr).is_some(), "alert ledger present");
+        assert!(j.get("monitor").is_some(), "monitor config embedded");
+        // the dashboard renders from the same file, and refuses junk
+        run(&sv(&["monitor", "--timeline", &o])).expect("monitor renders");
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn serve_fleet_timelines_are_seed_deterministic() {
+        let base = std::env::temp_dir().join(format!("ilpm_cli_tl_{}", std::process::id()));
+        let p1 = format!("{}_a.json", base.display());
+        let p2 = format!("{}_b.json", base.display());
+        for p in [&p1, &p2] {
+            run(&sv(&["serve", "--fleet", "vega8:1", "--n", "8", "--seed", "3", "--timeline", p]))
+                .expect("recorded fleet serve");
+        }
+        let a = std::fs::read(&p1).expect("first timeline");
+        let b = std::fs::read(&p2).expect("second timeline");
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed must write byte-identical timelines");
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn timeline_flags_are_validated() {
+        // fleet-only: rejected under plain sim serving
+        let e = run(&sv(&[
+            "serve", "--backend", "sim", "--uniform", "direct", "--timeline", "t.json",
+        ]))
+        .unwrap_err();
+        assert!(e.contains("--timeline"), "{e}");
+        // --sample-ms without --timeline has nothing to sample
+        let e = run(&sv(&["serve", "--fleet", "mali:1", "--sample-ms", "50"])).unwrap_err();
+        assert!(e.contains("--sample-ms"), "{e}");
+        // degenerate sampling windows fail before the cold-tune
+        for bad in ["0", "-5", "nan"] {
+            let e = run(&sv(&[
+                "serve", "--fleet", "mali:1", "--timeline", "t.json", "--sample-ms", bad,
+            ]))
+            .unwrap_err();
+            assert!(e.contains("--sample-ms"), "sample-ms {bad}: {e}");
+        }
+        // the dashboard needs a path, and refuses a non-timeline file
+        let e = run(&sv(&["monitor"])).unwrap_err();
+        assert!(e.contains("--timeline"), "{e}");
+        let junk =
+            std::env::temp_dir().join(format!("ilpm_cli_not_timeline_{}.json", std::process::id()));
+        std::fs::write(&junk, "{\"kind\":\"other\"}").unwrap();
+        let e = run(&sv(&["monitor", "--timeline", junk.to_str().unwrap()])).unwrap_err();
+        assert!(e.contains("timeline"), "{e}");
+        std::fs::remove_file(&junk).ok();
+    }
+
+    #[test]
+    fn bench_monitor_writes_verdicts_and_pages_only_under_overload() {
+        use crate::util::json::Json;
+        let out =
+            std::env::temp_dir().join(format!("ilpm_bench_monitor_{}.json", std::process::id()));
+        let o = out.to_str().unwrap().to_string();
+        run(&sv(&[
+            "bench", "monitor", "--fleet", "mali:4,vega8:2", "--n", "1024", "--seed", "7",
+            "--out", &o,
+        ]))
+        .expect("bench monitor");
+        let j = Json::parse(&std::fs::read_to_string(&out).expect("written")).expect("json");
+        assert_bench_envelope(&j, "monitor", &["Mali-G76 MP10", "Vega 8"]);
+        for verdict in
+            ["sampling_is_free", "silent_at_subcapacity", "alerts_fire_under_overload"]
+        {
+            assert_eq!(j.get(verdict).and_then(Json::as_bool), Some(true), "{verdict}");
+        }
+        assert_eq!(j.get("calibrated").and_then(Json::as_bool), Some(true));
+        assert!(
+            !j.get("overload_alerts").and_then(Json::as_arr).expect("ledger").is_empty(),
+            "overload alert ledger must be non-empty"
+        );
+        // pinned-phase flags are rejected, pointing at the right bench
+        let e = run(&sv(&["bench", "monitor", "--rate", "10"])).unwrap_err();
+        assert!(e.contains("bench monitor"), "{e}");
         std::fs::remove_file(&out).ok();
     }
 

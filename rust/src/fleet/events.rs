@@ -14,6 +14,7 @@
 //! | `ExecComplete` | a replica finishes its oldest admitted request  |
 //! | `Deadline`     | a queued request's SLO deadline expires         |
 //! | `Arrival`      | the open-loop process delivers the next request |
+//! | `Sample`       | the flight recorder closes a telemetry window   |
 //!
 //! `Deadline` is part of the public taxonomy (its ordering is defined
 //! and tested) but the current open-loop driver never schedules one:
@@ -31,14 +32,19 @@
 //! 1. **time** via [`f64::total_cmp`] — virtual milliseconds; total
 //!    even in the presence of poisoned (NaN) clocks, so the heap can
 //!    never lose its invariant.
-//! 2. **kind**: `ExecComplete < Deadline < Arrival`. Completions at
-//!    instant `t` retire *before* an arrival at the same `t` — exactly
-//!    the legacy scan's `completion <= now` semantics, so a dispatcher
-//!    at `t` sees the queue depth *after* same-instant completions.
-//!    Deadlines sit between: an expiring request is gone before the
-//!    next arrival counts queue depths, but a completion at the same
-//!    instant beats its own deadline (served exactly on time is not a
-//!    violation).
+//! 2. **kind**: `ExecComplete < Deadline < Arrival < Sample`.
+//!    Completions at instant `t` retire *before* an arrival at the same
+//!    `t` — exactly the legacy scan's `completion <= now` semantics, so
+//!    a dispatcher at `t` sees the queue depth *after* same-instant
+//!    completions. Deadlines sit between: an expiring request is gone
+//!    before the next arrival counts queue depths, but a completion at
+//!    the same instant beats its own deadline (served exactly on time
+//!    is not a violation). `Sample` sorts last on purpose: a telemetry
+//!    window closing at `t` is a pure *observation* of the state every
+//!    same-instant decision already produced — were it ever processed
+//!    before an arrival at `t`, turning sampling on could reorder
+//!    dispatch and break the "observability never perturbs the run"
+//!    bit-identity contract.
 //! 3. **seq**: the per-run monotone sequence number breaks remaining
 //!    ties (burst arrivals share one instant; FIFO by generation
 //!    order).
@@ -61,15 +67,20 @@ pub enum EventKind {
     Deadline { replica: u32 },
     /// The next open-loop request arrives.
     Arrival,
+    /// The flight recorder closes the current telemetry window. Always
+    /// last at an instant: sampling observes state, never shapes it.
+    Sample,
 }
 
 impl EventKind {
-    /// Same-instant rank: completions, then deadlines, then arrivals.
+    /// Same-instant rank: completions, then deadlines, then arrivals,
+    /// then telemetry samples.
     fn rank(self) -> u8 {
         match self {
             EventKind::ExecComplete { .. } => 0,
             EventKind::Deadline { .. } => 1,
             EventKind::Arrival => 2,
+            EventKind::Sample => 3,
         }
     }
 }
@@ -174,17 +185,20 @@ mod tests {
     }
 
     #[test]
-    fn same_instant_completions_beat_deadlines_beat_arrivals() {
+    fn same_instant_completions_beat_deadlines_beat_arrivals_beat_samples() {
         // push in the *wrong* order on purpose: the heap must sort by
-        // kind rank at an equal instant
+        // kind rank at an equal instant. Sample popping last is what
+        // keeps window boundaries from perturbing dispatch.
         let mut q = EventQueue::with_capacity(4);
+        q.push(ev(7.0, 0, EventKind::Sample));
         q.push(ev(7.0, 3, EventKind::Arrival));
         q.push(ev(7.0, 2, EventKind::Deadline { replica: 1 }));
         q.push(ev(7.0, 1, EventKind::ExecComplete { replica: 0 }));
-        assert_eq!(q.len(), 3);
+        assert_eq!(q.len(), 4);
         assert_eq!(q.pop().unwrap().kind, EventKind::ExecComplete { replica: 0 });
         assert_eq!(q.pop().unwrap().kind, EventKind::Deadline { replica: 1 });
         assert_eq!(q.pop().unwrap().kind, EventKind::Arrival);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Sample);
     }
 
     #[test]

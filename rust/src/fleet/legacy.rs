@@ -297,6 +297,7 @@ pub fn run_open_loop_fifo_scan(
         span_ms,
         aggregate: agg.summary(span),
         replicas: replica_reports,
+        alerts: Vec::new(),
     })
 }
 

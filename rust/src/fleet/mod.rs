@@ -27,12 +27,23 @@
 //! fleet-scale` path pushes 4096 replicas through a million requests
 //! in seconds, byte-identical from the seed.
 //!
+//! Time-resolved visibility comes from the [`FlightRecorder`]
+//! ([`run_open_loop_recorded`]): a fixed-capacity
+//! [`crate::trace::TimelineSampler`] closes telemetry windows on
+//! `Sample` events (ranked after every same-instant event, so sampling
+//! never perturbs dispatch) and a [`crate::trace::BurnRateMonitor`]
+//! raises deterministic SLO burn-rate alerts, ledgered in
+//! [`FleetReport::alerts`].
+//!
 //! CLI front doors: `ilpm serve --fleet mali:2,vega8:1 --policy
-//! cost-aware …`, `ilpm bench fleet` (BENCH_fleet.json with the
-//! `cost_aware_beats_round_robin` verdict), and `ilpm bench
-//! fleet-scale` (BENCH_fleet_scale.json). See DESIGN.md "Fleet
-//! serving" for the event taxonomy, dispatch-policy table, and the
-//! admission-control formula.
+//! cost-aware …` (`--timeline PATH --sample-ms N` for the flight
+//! recorder), `ilpm monitor --timeline PATH` (text dashboard), `ilpm
+//! bench fleet` (BENCH_fleet.json with the
+//! `cost_aware_beats_round_robin` verdict), `ilpm bench fleet-scale`
+//! (BENCH_fleet_scale.json), and `ilpm bench monitor`
+//! (BENCH_monitor.json). See DESIGN.md "Fleet serving" for the event
+//! taxonomy, dispatch-policy table, and the admission-control formula,
+//! and the Observability section for window/burn-rate semantics.
 
 mod dispatch;
 mod events;
@@ -46,6 +57,7 @@ pub use dispatch::{DispatchPolicy, FleetView};
 pub use events::{Event, EventKind, EventQueue};
 pub use pool::{resolve_routes, DevicePool, PoolReplica, MAX_ENGINE_REPLICAS};
 pub use serve::{
-    run_open_loop, run_open_loop_traced, FleetReport, OpenLoopConfig, ReplicaReport, SloConfig,
+    run_open_loop, run_open_loop_recorded, run_open_loop_traced, FleetReport, FlightRecorder,
+    OpenLoopConfig, ReplicaReport, SloConfig,
 };
 pub use spec::{FleetEntry, FleetSpec, MAX_REPLICAS};

@@ -58,7 +58,10 @@ use super::events::{Event, EventKind, EventQueue};
 use super::pool::DevicePool;
 use crate::coordinator::Submission;
 use crate::metrics::{LatencyRecorder, LatencySummary};
-use crate::trace::{MetricsRegistry, NoopSink, SpanEvent, TraceSink};
+use crate::trace::{
+    AlertRecord, BurnRateConfig, BurnRateMonitor, MetricsRegistry, NoopSink, SpanEvent,
+    TimelineSampler, TraceSink,
+};
 use crate::util::json::Json;
 use crate::workload::{request_image, Request, RequestGen, TraceKind};
 
@@ -90,6 +93,85 @@ pub struct OpenLoopConfig {
     pub policy: DispatchPolicy,
     pub seed: u64,
     pub slo: SloConfig,
+}
+
+/// The fleet flight recorder: a [`TimelineSampler`] snapshotting the
+/// run at fixed virtual-time windows, plus an optional
+/// [`BurnRateMonitor`] watching the windows for SLO budget burn.
+///
+/// Passed separately to [`run_open_loop_recorded`] (not folded into
+/// [`OpenLoopConfig`], which is `Copy` and shared by every untouched
+/// call site). The driver ticks its O(1) counters on the per-request
+/// path and hands it the dense replica state at each `Sample` event —
+/// the recorder only ever *reads* the run, so a recorded run's report,
+/// trace, and metrics stay byte-identical to an unrecorded one.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    pub sampler: TimelineSampler,
+    pub monitor: Option<BurnRateMonitor>,
+    /// Track the monitor's alert instants land on: one past the last
+    /// replica track. Deliberately unlabeled — registering a label
+    /// would add a metadata row to every recorded trace and break the
+    /// enabled-vs-disabled trace bit-identity when no alert fires.
+    alert_track: u32,
+}
+
+impl FlightRecorder {
+    /// A recorder for `n_replicas` replicas sampling every `sample_ms`
+    /// virtual ms, with the default burn-rate monitor attached.
+    pub fn new(n_replicas: usize, sample_ms: f64) -> FlightRecorder {
+        FlightRecorder::with_monitor_config(n_replicas, sample_ms, BurnRateConfig::default())
+    }
+
+    /// As [`Self::new`] with an explicit monitor configuration.
+    pub fn with_monitor_config(
+        n_replicas: usize,
+        sample_ms: f64,
+        cfg: BurnRateConfig,
+    ) -> FlightRecorder {
+        FlightRecorder {
+            sampler: TimelineSampler::new(n_replicas, sample_ms),
+            monitor: Some(BurnRateMonitor::new(cfg, sample_ms)),
+            alert_track: n_replicas as u32,
+        }
+    }
+
+    /// Timeline only, no burn-rate monitoring.
+    pub fn sampler_only(n_replicas: usize, sample_ms: f64) -> FlightRecorder {
+        FlightRecorder {
+            sampler: TimelineSampler::new(n_replicas, sample_ms),
+            monitor: None,
+            alert_track: n_replicas as u32,
+        }
+    }
+
+    /// Alert transitions ledgered so far (empty without a monitor).
+    pub fn alerts(&self) -> &[AlertRecord] {
+        self.monitor.as_ref().map_or(&[], |m| m.alerts())
+    }
+
+    /// Close the current telemetry window against the driver's state
+    /// and feed the burn-rate monitor.
+    fn on_sample(
+        &mut self,
+        now_ms: f64,
+        outstanding: &[u32],
+        busy_until_ms: &[f64],
+        sink: &mut dyn TraceSink,
+    ) {
+        let stats = self.sampler.close_window(now_ms, outstanding, busy_until_ms);
+        if let Some(mon) = &mut self.monitor {
+            mon.observe(
+                stats.end_ms,
+                stats.window,
+                stats.bad,
+                stats.arrivals,
+                self.sampler.window_ms(),
+                self.alert_track,
+                sink,
+            );
+        }
+    }
 }
 
 /// Per-replica outcome of an open-loop run. Labels are shared with the
@@ -137,6 +219,12 @@ pub struct FleetReport {
     pub span_ms: f64,
     pub aggregate: LatencySummary,
     pub replicas: Vec<ReplicaReport>,
+    /// Burn-rate alert transitions from the flight recorder (empty
+    /// when the run carried none). Deliberately **not** serialized by
+    /// [`Self::to_json`]: the report's bytes must stay identical with
+    /// recording on or off, so alerts surface through the timeline
+    /// artifact, the trace, and the `monitor` dashboard instead.
+    pub alerts: Vec<AlertRecord>,
 }
 
 impl FleetReport {
@@ -262,6 +350,30 @@ pub fn run_open_loop(pool: &DevicePool, cfg: &OpenLoopConfig) -> Result<FleetRep
     run_open_loop_traced(pool, cfg, &mut NoopSink, &mut MetricsRegistry::new())
 }
 
+/// [`run_open_loop_traced`] with a [`FlightRecorder`] attached: the
+/// driver schedules `Sample` events every `recorder.sampler.window_ms()`
+/// virtual ms, closing one telemetry window per tick. Sample events
+/// sort after every same-instant arrival/completion (see the event
+/// module's rank order), and the recorder only reads driver state, so
+/// the report, trace, and metrics are byte-identical to an unrecorded
+/// same-seed run — the recorder adds the timeline, the alert ledger
+/// ([`FleetReport::alerts`]), and any `cat:"slo"` burn-rate instants.
+pub fn run_open_loop_recorded(
+    pool: &DevicePool,
+    cfg: &OpenLoopConfig,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+    recorder: &mut FlightRecorder,
+) -> Result<FleetReport> {
+    ensure!(
+        recorder.sampler.replicas() == pool.replicas().len(),
+        "flight recorder sized for {} replicas, pool has {}",
+        recorder.sampler.replicas(),
+        pool.replicas().len()
+    );
+    run_open_loop_inner(pool, cfg, sink, metrics, Some(recorder))
+}
+
 /// [`run_open_loop`] with observability: spans/instants into `sink` on
 /// the **virtual clock** (same seed, byte-identical trace) and run
 /// tallies into `metrics` under `fleet.*` names.
@@ -286,6 +398,16 @@ pub fn run_open_loop_traced(
     cfg: &OpenLoopConfig,
     sink: &mut dyn TraceSink,
     metrics: &mut MetricsRegistry,
+) -> Result<FleetReport> {
+    run_open_loop_inner(pool, cfg, sink, metrics, None)
+}
+
+fn run_open_loop_inner(
+    pool: &DevicePool,
+    cfg: &OpenLoopConfig,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+    mut recorder: Option<&mut FlightRecorder>,
 ) -> Result<FleetReport> {
     ensure!(cfg.n >= 1, "open loop needs at least one request");
     match cfg.arrival.rate_hz() {
@@ -335,10 +457,12 @@ pub fn run_open_loop_traced(
     let queue_depth = pool.queue_depth() as u32;
 
     // live events are bounded by one completion per outstanding slot
-    // plus the single pending arrival, so this heap never grows past
-    // its initial capacity in steady state
+    // plus the single pending arrival (and, when recording, the single
+    // pending sample), so this heap never grows past its initial
+    // capacity in steady state
+    let slack = if recorder.is_some() { 3 } else { 2 };
     let mut events = EventQueue::with_capacity(
-        replicas.len().saturating_mul(queue_depth as usize).min(cfg.n) + 2,
+        replicas.len().saturating_mul(queue_depth as usize).min(cfg.n) + slack,
     );
     // exactly one future arrival lives in the heap at any instant; its
     // exact Duration rides in this side slot (the event stores ms)
@@ -350,6 +474,16 @@ pub fn run_open_loop_traced(
         kind: EventKind::Arrival,
     });
     let mut generated = 1usize;
+    // exactly one future sample lives in the heap while recording; it
+    // re-arms itself until the rest of the queue drains, so the last
+    // window always closes after the last real event
+    if let Some(rec) = recorder.as_deref() {
+        events.push(Event {
+            at_ms: rec.sampler.window_ms(),
+            seq: 0,
+            kind: EventKind::Sample,
+        });
+    }
 
     while let Some(ev) = events.pop() {
         let now_ms = ev.at_ms;
@@ -362,6 +496,21 @@ pub fn run_open_loop_traced(
             }
             EventKind::Deadline { .. } => {
                 unreachable!("the open-loop driver never schedules deadline events");
+            }
+            EventKind::Sample => {
+                // ranked after every same-instant event, so the window
+                // closes over fully settled state and can never reorder
+                // dispatch; re-armed only while real work remains
+                if let Some(rec) = recorder.as_deref_mut() {
+                    rec.on_sample(now_ms, &st.outstanding, &st.busy_until_ms, sink);
+                    if !events.is_empty() {
+                        events.push(Event {
+                            at_ms: now_ms + rec.sampler.window_ms(),
+                            seq: ev.seq + 1,
+                            kind: EventKind::Sample,
+                        });
+                    }
+                }
             }
             EventKind::Arrival => {
                 let seq = ev.seq;
@@ -380,6 +529,9 @@ pub fn run_open_loop_traced(
                     generated += 1;
                 }
                 span_ms = span_ms.max(now_ms);
+                if let Some(rec) = recorder.as_deref_mut() {
+                    rec.sampler.on_arrival();
+                }
                 let pick = cfg.policy.choose(seq, &st.view(now_ms));
                 let rep = &replicas[pick];
 
@@ -388,6 +540,9 @@ pub fn run_open_loop_traced(
                 if st.outstanding[pick] >= queue_depth {
                     st.shed[pick] += 1;
                     shed_queue += 1;
+                    if let Some(rec) = recorder.as_deref_mut() {
+                        rec.sampler.on_shed_queue();
+                    }
                     if sink.enabled() {
                         let ev = SpanEvent::instant(
                             pick as u32,
@@ -408,6 +563,9 @@ pub fn run_open_loop_traced(
                         if predicted > d {
                             st.shed[pick] += 1;
                             shed_deadline += 1;
+                            if let Some(rec) = recorder.as_deref_mut() {
+                                rec.sampler.on_shed_deadline();
+                            }
                             if sink.enabled() {
                                 let ev = SpanEvent::instant(
                                     pick as u32,
@@ -429,6 +587,9 @@ pub fn run_open_loop_traced(
                 let completion = start + rep.sim_ms;
                 st.busy_until_ms[pick] = completion;
                 st.outstanding[pick] += 1;
+                if let Some(rec) = recorder.as_deref_mut() {
+                    rec.sampler.on_admit(pick, rep.sim_ms);
+                }
                 events.push(Event {
                     at_ms: completion,
                     seq,
@@ -461,6 +622,13 @@ pub fn run_open_loop_traced(
                 if cfg.slo.deadline_ms.is_some_and(|d| latency_ms > d) {
                     st.violated[pick] += 1;
                     violated += 1;
+                    // attributed to the admission window: the fate is
+                    // ledgered here, where the deterministic driver
+                    // knows it (the trace instant still lands at the
+                    // completion, like the ledger above)
+                    if let Some(rec) = recorder.as_deref_mut() {
+                        rec.sampler.on_violated();
+                    }
                     if sink.enabled() {
                         let ev = SpanEvent::instant(
                             pick as u32,
@@ -590,6 +758,7 @@ pub fn run_open_loop_traced(
         span_ms,
         aggregate: agg.summary(span),
         replicas: replica_reports,
+        alerts: recorder.map_or_else(Vec::new, |r| r.alerts().to_vec()),
     })
 }
 
@@ -875,6 +1044,200 @@ mod tests {
             r.to_json().to_json_string()
         };
         assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn recording_leaves_report_trace_and_metrics_byte_identical() {
+        // the acceptance bar: with the sampler and the burn-rate
+        // monitor both live, every observable artifact of a same-seed
+        // healthy run matches the unrecorded run byte for byte (a
+        // paging run legitimately adds alert instants to the trace —
+        // report identity under paging is covered separately below)
+        let c = |p: &DevicePool| {
+            cfg(DispatchPolicy::CostAware, 0.8 * p.capacity_rps(), SloConfig::none())
+        };
+        let run = |record: bool| {
+            let p = pool(64);
+            let mut buf = crate::trace::TraceBuffer::new();
+            let mut m = crate::trace::MetricsRegistry::new();
+            let r = if record {
+                let mut rec = FlightRecorder::new(p.replicas().len(), 50.0);
+                run_open_loop_recorded(&p, &c(&p), &mut buf, &mut m, &mut rec).expect("recorded")
+            } else {
+                run_open_loop_traced(&p, &c(&p), &mut buf, &mut m).expect("traced")
+            };
+            p.shutdown();
+            (
+                r.to_json().to_json_string(),
+                crate::trace::chrome_trace_json(&buf).to_json_string(),
+                m.render(),
+            )
+        };
+        let (report0, trace0, metrics0) = run(false);
+        let (report1, trace1, metrics1) = run(true);
+        assert_eq!(report0, report1, "recording must not perturb the report");
+        assert_eq!(trace0, trace1, "recording must not perturb the trace");
+        assert_eq!(metrics0, metrics1, "recording must not perturb the metrics");
+    }
+
+    #[test]
+    fn recorded_overload_keeps_report_identity_while_alerts_fire() {
+        // alerts live outside to_json, so even a paging run's report
+        // matches the unrecorded bytes; the ledger itself is non-empty
+        let c = |p: &DevicePool| OpenLoopConfig {
+            n: 512,
+            arrival: TraceKind::Burst { rate_hz: 3.0 * p.capacity_rps(), burst: 8 },
+            policy: DispatchPolicy::CostAware,
+            seed: 11,
+            slo: SloConfig {
+                deadline_ms: Some(
+                    2.0 * p.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max),
+                ),
+                admission: true,
+            },
+        };
+        let p1 = pool(8);
+        let plain = run_open_loop(&p1, &c(&p1)).expect("plain").to_json().to_json_string();
+        p1.shutdown();
+        let p2 = pool(8);
+        let mut rec = FlightRecorder::new(p2.replicas().len(), 100.0);
+        let r = run_open_loop_recorded(
+            &p2,
+            &c(&p2),
+            &mut NoopSink,
+            &mut MetricsRegistry::new(),
+            &mut rec,
+        )
+        .expect("recorded");
+        p2.shutdown();
+        assert_eq!(plain, r.to_json().to_json_string());
+        assert!(!r.alerts.is_empty(), "3x burst overload must burn the budget: {r:?}");
+        assert_eq!(r.alerts[0].state, crate::trace::AlertState::Firing);
+        assert!(r.shed() > 0, "the alert must reflect real shedding");
+    }
+
+    #[test]
+    fn monitor_stays_silent_at_subcapacity_and_pages_under_overload() {
+        // one SLO, two loads: a deadline of six service times is slack
+        // a 0.7-utilized fleet essentially never consumes (queueing
+        // tails decay geometrically in service times), yet a 3x burst
+        // blows through it within a few windows
+        let run = |rate_factor: f64, burst: Option<u32>| {
+            let p = pool(8);
+            let slow = p.replicas().iter().map(|r| r.sim_ms).fold(0.0, f64::max);
+            let rate = rate_factor * p.capacity_rps();
+            let c = OpenLoopConfig {
+                n: 512,
+                arrival: match burst {
+                    Some(b) => TraceKind::Burst { rate_hz: rate, burst: b },
+                    None => TraceKind::Poisson { rate_hz: rate },
+                },
+                policy: DispatchPolicy::CostAware,
+                seed: 11,
+                slo: SloConfig { deadline_ms: Some(6.0 * slow), admission: true },
+            };
+            let mut rec = FlightRecorder::new(p.replicas().len(), 100.0);
+            let r = run_open_loop_recorded(
+                &p,
+                &c,
+                &mut NoopSink,
+                &mut MetricsRegistry::new(),
+                &mut rec,
+            )
+            .expect("run");
+            p.shutdown();
+            r.alerts
+        };
+        assert!(run(0.7, None).is_empty(), "healthy load must not page");
+        let paged = run(3.0, Some(8));
+        assert!(!paged.is_empty(), "burst overload must page");
+    }
+
+    #[test]
+    fn same_seed_timelines_are_byte_identical() {
+        let run = || {
+            let p = pool(8);
+            let c = cfg(
+                DispatchPolicy::CostAware,
+                2.0 * p.capacity_rps(),
+                SloConfig { deadline_ms: Some(200.0), admission: true },
+            );
+            let mut rec = FlightRecorder::new(p.replicas().len(), 50.0);
+            run_open_loop_recorded(&p, &c, &mut NoopSink, &mut MetricsRegistry::new(), &mut rec)
+                .expect("run");
+            let labels: Vec<&str> = p.replicas().iter().map(|r| r.label.as_ref()).collect();
+            let s = rec.sampler.to_json(&labels).to_json_string();
+            p.shutdown();
+            s
+        };
+        let a = run();
+        assert_eq!(a, run(), "same seed must replay the same timeline bytes");
+        assert!(a.contains("\"schema_version\""));
+    }
+
+    #[test]
+    fn one_short_run_still_closes_exactly_one_window() {
+        // the whole run fits inside a single sample window: the
+        // self-re-arming Sample event still closes one trailing window
+        // covering everything
+        let p = pool(64);
+        let c = cfg(DispatchPolicy::CostAware, 0.5 * p.capacity_rps(), SloConfig::none());
+        let mut rec = FlightRecorder::new(p.replicas().len(), 1e9);
+        let r = run_open_loop_recorded(&p, &c, &mut NoopSink, &mut MetricsRegistry::new(), &mut rec)
+            .expect("run");
+        p.shutdown();
+        assert_eq!(rec.sampler.windows(), 1, "one partial window covers the whole run");
+        assert_eq!(rec.sampler.total_arrivals(), 96, "every arrival lands in it");
+        assert_eq!(r.submitted, 96);
+        assert!(r.alerts.is_empty(), "an unloaded run must not page");
+    }
+
+    #[test]
+    fn recorder_sized_for_the_wrong_pool_is_rejected() {
+        let p = pool(8);
+        let c = cfg(DispatchPolicy::CostAware, 0.5 * p.capacity_rps(), SloConfig::none());
+        let mut rec = FlightRecorder::new(p.replicas().len() + 1, 100.0);
+        let err = run_open_loop_recorded(
+            &p,
+            &c,
+            &mut NoopSink,
+            &mut MetricsRegistry::new(),
+            &mut rec,
+        )
+        .unwrap_err();
+        p.shutdown();
+        assert!(err.to_string().contains("flight recorder sized for"), "{err}");
+    }
+
+    #[test]
+    fn sixteen_k_replica_pool_records_without_reallocating() {
+        // satellite edge case: the sampler's cell budget holds at
+        // MAX_REPLICAS — few, wide windows, and no growth
+        let net = NetworkDef::by_name("resnet18").unwrap();
+        let classes = net.classes();
+        let big = vec![(
+            DeviceConfig::mali_g76_mp10(),
+            super::super::spec::MAX_REPLICAS,
+            RoutingTable::uniform_for(Algorithm::Direct, &classes).unwrap(),
+        )];
+        let p = DevicePool::start_virtual_with_tables(&big, &net, 4).expect("pool");
+        assert_eq!(p.replicas().len(), 16_384);
+        let c = OpenLoopConfig {
+            n: 4096,
+            arrival: TraceKind::Poisson { rate_hz: 0.8 * p.capacity_rps() },
+            policy: DispatchPolicy::CostAware,
+            seed: 7,
+            slo: SloConfig::none(),
+        };
+        let mut rec = FlightRecorder::new(p.replicas().len(), 10.0);
+        assert_eq!(rec.sampler.capacity(), 64, "1<<20 cells / 16384 replicas");
+        let r = run_open_loop_recorded(&p, &c, &mut NoopSink, &mut MetricsRegistry::new(), &mut rec)
+            .expect("run");
+        p.shutdown();
+        assert_eq!(r.admitted, 4096);
+        assert!(rec.sampler.windows() >= 1);
+        assert!(!rec.sampler.reallocated(), "recording at fleet scale must not grow storage");
+        assert_eq!(rec.sampler.total_arrivals(), 4096);
     }
 
     #[test]

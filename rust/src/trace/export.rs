@@ -34,6 +34,21 @@ pub fn chrome_trace_json(buf: &TraceBuffer) -> Json {
         m.insert("args".into(), Json::Obj(args));
         events.push(Json::Obj(m));
     }
+    // surface ring overflow in the artifact itself: a viewer looking at
+    // a truncated trace should not have to guess. Emitted only when
+    // events were actually dropped, so a lossless export's bytes are
+    // unchanged.
+    if buf.dropped() > 0 {
+        let mut args = BTreeMap::new();
+        args.insert("events_dropped".into(), Json::Num(buf.dropped() as f64));
+        let mut m = BTreeMap::new();
+        m.insert("ph".into(), Json::Str("M".into()));
+        m.insert("pid".into(), Json::Num(1.0));
+        m.insert("tid".into(), Json::Num(0.0));
+        m.insert("name".into(), Json::Str("trace_buffer_overflow".into()));
+        m.insert("args".into(), Json::Obj(args));
+        events.push(Json::Obj(m));
+    }
     for ev in buf.events() {
         events.push(event_json(ev));
         if ev.name == "exec" && ev.dur_ms > 0.0 {
@@ -180,6 +195,30 @@ mod tests {
         let first = &layers[0];
         assert_eq!(first.get("ts").and_then(Json::as_f64), Some(2.0 * 1e3));
         assert!((first.get("dur").and_then(Json::as_f64).unwrap() - 2.0 * 1e3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chrome_export_reports_drops_only_when_they_happened() {
+        // lossless buffer: no overflow row (asserted exactly above via
+        // meta.len() == 1); overflowing ring: one row carrying the count
+        let mut b = TraceBuffer::with_capacity(2);
+        b.set_track(0, "mali#0", &[]);
+        for seq in 0..5u64 {
+            b.record(SpanEvent::instant(0, Cow::Borrowed("violated"), "slo", seq as f64, seq));
+        }
+        assert_eq!(b.dropped(), 3);
+        let j = chrome_trace_json(&b);
+        let evs = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        let overflow: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("trace_buffer_overflow"))
+            .collect();
+        assert_eq!(overflow.len(), 1);
+        assert_eq!(
+            overflow[0].get("args").unwrap().get("events_dropped").and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert_eq!(overflow[0].get("ph").and_then(Json::as_str), Some("M"));
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! Exact `count`/`sum`/`min`/`max` are tracked alongside the buckets,
 //! and percentile estimates are clamped into `[min, max]`, so the
 //! extremes of a summary are always exact.
+//!
+//! Histograms compose: [`LogHistogram::merge`] folds shards together
+//! bucket-wise with exact scalar composition, equivalent to observing
+//! the concatenated stream — per-replica recorders can aggregate
+//! without a shared-mutable histogram on any hot path.
 
 /// Buckets per octave (factor-of-two range); ratio `2^(1/8)`.
 const BUCKETS_PER_OCTAVE: f64 = 8.0;
@@ -115,6 +120,22 @@ impl LogHistogram {
         }
     }
 
+    /// Fold another histogram into this one: bucket-wise addition plus
+    /// exact scalar composition (`count`/`sum` add, `min`/`max` take
+    /// the extremes — the `±inf` empty sentinels make an empty operand
+    /// a no-op). Merging shard histograms is exactly equivalent to
+    /// observing the concatenated sample stream, in any merge order.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (slot, n) in self.buckets.iter_mut().zip(&other.buckets) {
+            *slot += n;
+        }
+        self.nonpositive += other.nonpositive;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Estimate the `p`-quantile (`p` in `[0, 1]`): walk the cumulative
     /// counts to the bucket holding the rank, return that bucket's
     /// geometric centre clamped into `[min, max]`. The estimate is
@@ -217,6 +238,60 @@ mod tests {
         let p50 = h.percentile(0.5);
         assert!((1e-12..=1e15).contains(&p50), "p50 {p50}");
         assert_eq!(h.max(), 1e15);
+    }
+
+    #[test]
+    fn merging_shards_equals_observing_the_concatenated_stream() {
+        // property: for any split of a stream into shards, merging the
+        // shard histograms reproduces the whole-stream histogram — all
+        // buckets, the underflow count, and the exact scalars. Samples
+        // are quarter-integers so f64 summation is exact and the
+        // equality can be full structural equality, in any merge order.
+        let mut x = 0x2545_f491_4f6c_dd1du64;
+        let mut next = || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        for shards in [1usize, 2, 7] {
+            let samples: Vec<f64> =
+                (0..3_000).map(|_| (next() % 4_000) as f64 * 0.25 - 10.0).collect();
+            let mut whole = LogHistogram::new();
+            let mut parts = vec![LogHistogram::new(); shards];
+            for (i, &v) in samples.iter().enumerate() {
+                whole.observe(v);
+                parts[i % shards].observe(v);
+            }
+            let mut forward = LogHistogram::new();
+            for p in &parts {
+                forward.merge(p);
+            }
+            assert_eq!(forward, whole, "{shards} shards, in order");
+            let mut backward = LogHistogram::new();
+            for p in parts.iter().rev() {
+                backward.merge(p);
+            }
+            assert_eq!(backward, whole, "{shards} shards, reversed");
+        }
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_is_a_no_op() {
+        let mut h = LogHistogram::new();
+        h.observe(3.0);
+        h.observe(-1.0);
+        let snapshot = h.clone();
+        h.merge(&LogHistogram::new());
+        assert_eq!(h, snapshot, "empty operand must not move min/max or counts");
+        let mut e = LogHistogram::new();
+        e.merge(&snapshot);
+        assert_eq!(e, snapshot, "merging into empty reproduces the operand");
+        let mut both = LogHistogram::new();
+        both.merge(&LogHistogram::new());
+        assert!(both.is_empty());
+        assert_eq!(both.min(), 0.0);
+        assert_eq!(both.max(), 0.0);
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //! variable (`error|warn|info|debug`, default `info`). Piping stdout
 //! therefore always yields clean, parseable output.
 //!
-//! The level is read once per process (first log call) and cached.
+//! The level is read once per process (first log call) and cached; an
+//! unrecognized value falls back to `info` with a one-time stderr
+//! warning naming the bad value and the accepted set.
 
 use std::fmt;
 use std::sync::OnceLock;
@@ -49,14 +51,27 @@ impl LogLevel {
     }
 }
 
+/// Resolve the process log level from the raw environment value. A set
+/// but unrecognized value used to silently become `info`, hiding the
+/// debug lines the user asked for; now it warns once on stderr — this
+/// runs only inside the [`OnceLock`] initializer — naming the bad value
+/// and the accepted set.
+fn resolve_level(var: Option<&str>) -> LogLevel {
+    match var {
+        None => LogLevel::Info,
+        Some(s) => LogLevel::from_env_str(s).unwrap_or_else(|| {
+            eprintln!(
+                "[warn] unrecognized {LOG_ENV_VAR}={s:?}; expected one of \
+                 error|warn|info|debug, using info"
+            );
+            LogLevel::Info
+        }),
+    }
+}
+
 fn max_level() -> LogLevel {
     static LEVEL: OnceLock<LogLevel> = OnceLock::new();
-    *LEVEL.get_or_init(|| {
-        std::env::var(LOG_ENV_VAR)
-            .ok()
-            .and_then(|s| LogLevel::from_env_str(&s))
-            .unwrap_or(LogLevel::Info)
-    })
+    *LEVEL.get_or_init(|| resolve_level(std::env::var(LOG_ENV_VAR).ok().as_deref()))
 }
 
 /// Whether a line at `level` would be emitted. Callers with expensive
@@ -118,6 +133,18 @@ mod tests {
         assert_eq!(LogLevel::from_env_str("error"), Some(LogLevel::Error));
         assert_eq!(LogLevel::from_env_str("verbose"), None);
         assert_eq!(LogLevel::from_env_str(""), None);
+    }
+
+    #[test]
+    fn unrecognized_env_values_fall_back_to_info_with_a_warning() {
+        // the warning itself goes to stderr (visible in `--nocapture`);
+        // what we can pin down is the resolved level for every shape of
+        // input: unset → quiet default, garbage → warned default
+        assert_eq!(resolve_level(None), LogLevel::Info);
+        assert_eq!(resolve_level(Some("verbose")), LogLevel::Info);
+        assert_eq!(resolve_level(Some("")), LogLevel::Info);
+        assert_eq!(resolve_level(Some("debug")), LogLevel::Debug);
+        assert_eq!(resolve_level(Some(" WARN ")), LogLevel::Warn);
     }
 
     #[test]

@@ -23,6 +23,15 @@
 //! * [`log`] — the `RUST_PALLAS_LOG`-leveled stderr facade behind the
 //!   crate-root `log_error!`/`log_warn!`/`log_info!`/`log_debug!`
 //!   macros; keeps diagnostics off stdout.
+//! * [`timeseries`] — [`TimelineSampler`]: the fleet flight recorder's
+//!   storage — fixed-capacity virtual-time telemetry windows (counter
+//!   deltas + per-replica gauges and busy integrals), compacting in
+//!   place instead of growing, exported as the schema-versioned
+//!   timeline JSON behind `serve --fleet … --timeline`.
+//! * [`monitor`] — [`BurnRateMonitor`]: deterministic multi-window SLO
+//!   burn-rate alerting (fast 1 s / slow 10 s virtual windows against
+//!   an error budget) over the sampler's windows, ledgering
+//!   [`AlertRecord`]s and emitting `cat:"slo"` alert instants.
 //! * [`profile`] — [`ProfileReport`]: the paper-style per-layer table
 //!   (simulated ms, FLOPs, stream bytes, routed algorithm, % of total)
 //!   the `profile` CLI subcommand prints.
@@ -31,12 +40,16 @@ pub mod export;
 pub mod hist;
 pub mod log;
 pub mod metrics;
+pub mod monitor;
 pub mod profile;
 pub mod sink;
+pub mod timeseries;
 
 pub use export::{chrome_trace_json, render_tree};
 pub use hist::{LogHistogram, BUCKET_RELATIVE_ERROR};
 pub use log::{log_enabled, LogLevel, LOG_ENV_VAR};
 pub use metrics::MetricsRegistry;
+pub use monitor::{AlertRecord, AlertState, BurnRateConfig, BurnRateMonitor};
 pub use profile::{ProfileReport, ProfileRow};
 pub use sink::{NoopSink, SpanEvent, TraceBuffer, TraceSink, TrackMeta};
+pub use timeseries::{TimelineSampler, WindowStats, DEFAULT_SAMPLE_MS, TIMELINE_SCHEMA_VERSION};

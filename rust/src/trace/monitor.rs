@@ -1,0 +1,373 @@
+//! Deterministic multi-window SLO burn-rate monitors over the flight
+//! recorder's telemetry windows.
+//!
+//! The classic production-alerting problem: a raw "bad-request rate
+//! over the last window" pages on every blip, and a long-window average
+//! pages an hour late. The standard fix (multi-window burn rates) works
+//! unchanged on the virtual clock: express the SLO as an **error
+//! budget** (acceptable bad fraction, e.g. 5 %), measure the bad rate
+//! over a **fast** window (default 1 s virtual) *and* a **slow** window
+//! (default 10 s virtual), and alert only while **both** burn the
+//! budget faster than a threshold:
+//!
+//! ```text
+//! burn(w) = (bad(w) / arrivals(w)) / error_budget
+//! firing  = burn(fast) >= threshold  &&  burn(slow) >= threshold
+//! ```
+//!
+//! The fast window makes the alert prompt, the slow window makes it
+//! *sustained* — a single bursty telemetry window cannot page. Because
+//! every input is a per-window delta from [`super::timeseries`], the
+//! monitor is a pure function of the seed: alerts fire at the same
+//! virtual instants on every run, which makes "the alert fired" a
+//! testable, benchable verdict rather than an ops anecdote.
+//!
+//! Alert taxonomy (all `cat:"slo"` instants on the fleet-level track,
+//! mirrored as [`AlertRecord`]s in the run's ledger):
+//!
+//! | name                | meaning                                      |
+//! |---------------------|----------------------------------------------|
+//! | `slo_burn_firing`   | both windows crossed the burn threshold      |
+//! | `slo_burn_resolved` | a previously firing alert dropped below it   |
+
+use std::collections::BTreeMap;
+
+use super::sink::{SpanEvent, TraceSink};
+use crate::util::json::Json;
+
+/// Default error budget: 5 % of requests may be shed or violated.
+pub const DEFAULT_ERROR_BUDGET: f64 = 0.05;
+
+/// Default fast burn window, virtual ms.
+pub const DEFAULT_FAST_WINDOW_MS: f64 = 1_000.0;
+
+/// Default slow burn window, virtual ms.
+pub const DEFAULT_SLOW_WINDOW_MS: f64 = 10_000.0;
+
+/// Upper bound on ring slots (telemetry windows per slow window).
+const MAX_RING_SLOTS: usize = 1024;
+
+/// Burn-rate monitor configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BurnRateConfig {
+    /// Acceptable bad fraction (shed + violated over arrivals).
+    pub error_budget: f64,
+    /// Fast averaging window, virtual ms.
+    pub fast_ms: f64,
+    /// Slow averaging window, virtual ms.
+    pub slow_ms: f64,
+    /// Burn multiple at which the alert fires (1.0 = consuming budget
+    /// exactly as fast as the SLO allows).
+    pub threshold: f64,
+}
+
+impl Default for BurnRateConfig {
+    fn default() -> BurnRateConfig {
+        BurnRateConfig {
+            error_budget: DEFAULT_ERROR_BUDGET,
+            fast_ms: DEFAULT_FAST_WINDOW_MS,
+            slow_ms: DEFAULT_SLOW_WINDOW_MS,
+            threshold: 1.0,
+        }
+    }
+}
+
+/// Whether an [`AlertRecord`] opens or closes an alert episode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Firing,
+    Resolved,
+}
+
+impl AlertState {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertState::Firing => "firing",
+            AlertState::Resolved => "resolved",
+        }
+    }
+}
+
+/// One alert transition, ledgered into the run report and the timeline
+/// artifact (virtual instants only — deterministic per seed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlertRecord {
+    /// Virtual instant of the telemetry-window close that transitioned.
+    pub at_ms: f64,
+    /// Index of that telemetry window.
+    pub window: u32,
+    pub state: AlertState,
+    /// Fast-window burn multiple at the transition.
+    pub fast_burn: f64,
+    /// Slow-window burn multiple at the transition.
+    pub slow_burn: f64,
+}
+
+impl AlertRecord {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("at_ms".into(), Json::Num(self.at_ms));
+        m.insert("window".into(), Json::Num(self.window as f64));
+        m.insert("state".into(), Json::Str(self.state.name().into()));
+        m.insert("fast_burn".into(), Json::Num(self.fast_burn));
+        m.insert("slow_burn".into(), Json::Num(self.slow_burn));
+        Json::Obj(m)
+    }
+}
+
+/// Multi-window burn-rate monitor. Feed it every closed telemetry
+/// window in order; it keeps fixed rings of per-window (bad, arrivals)
+/// counts sized for the slow window at construction, so observing is
+/// allocation-free (alert transitions push into a pre-reserved ledger).
+#[derive(Debug, Clone)]
+pub struct BurnRateMonitor {
+    cfg: BurnRateConfig,
+    /// Telemetry window width the rings were sized for.
+    sized_for_ms: f64,
+    ring_bad: Vec<u64>,
+    ring_total: Vec<u64>,
+    /// Windows currently held (≤ ring capacity).
+    held: usize,
+    /// Next slot to overwrite.
+    cursor: usize,
+    firing: bool,
+    alerts: Vec<AlertRecord>,
+}
+
+impl BurnRateMonitor {
+    /// A monitor fed from telemetry windows of width `sample_ms`.
+    pub fn new(cfg: BurnRateConfig, sample_ms: f64) -> BurnRateMonitor {
+        assert!(
+            cfg.error_budget.is_finite() && cfg.error_budget > 0.0,
+            "error budget must be finite and positive, got {}",
+            cfg.error_budget
+        );
+        assert!(
+            cfg.fast_ms > 0.0 && cfg.slow_ms >= cfg.fast_ms,
+            "burn windows must satisfy 0 < fast <= slow"
+        );
+        assert!(sample_ms.is_finite() && sample_ms > 0.0, "sample window must be positive");
+        let slots =
+            ((cfg.slow_ms / sample_ms).ceil() as usize).clamp(1, MAX_RING_SLOTS);
+        BurnRateMonitor {
+            cfg,
+            sized_for_ms: sample_ms,
+            ring_bad: vec![0; slots],
+            ring_total: vec![0; slots],
+            held: 0,
+            cursor: 0,
+            firing: false,
+            alerts: Vec::with_capacity(64),
+        }
+    }
+
+    pub fn config(&self) -> BurnRateConfig {
+        self.cfg
+    }
+
+    /// Alert transitions so far, in virtual-time order.
+    pub fn alerts(&self) -> &[AlertRecord] {
+        &self.alerts
+    }
+
+    /// True while the most recent observation kept the alert firing.
+    pub fn firing(&self) -> bool {
+        self.firing
+    }
+
+    /// Burn multiple over the trailing `span_ms` of held windows at
+    /// telemetry width `window_ms`; 0.0 while the span saw no traffic.
+    fn burn_over(&self, span_ms: f64, window_ms: f64) -> f64 {
+        let k = ((span_ms / window_ms).ceil() as usize).clamp(1, self.held.max(1)).min(self.held);
+        let (mut bad, mut total) = (0u64, 0u64);
+        let slots = self.ring_bad.len();
+        for i in 0..k {
+            let idx = (self.cursor + slots - 1 - i) % slots;
+            bad += self.ring_bad[idx];
+            total += self.ring_total[idx];
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        (bad as f64 / total as f64) / self.cfg.error_budget
+    }
+
+    /// Observe one closed telemetry window: `bad` shed+violated and
+    /// `total` arrivals over it, closing at `at_ms` with current width
+    /// `window_ms` (doubles when the sampler compacts — the monitor
+    /// then simply spans fewer ring slots per burn window). Emits a
+    /// `cat:"slo"` instant on `track` at each firing/resolved
+    /// transition and returns the record, if any.
+    pub fn observe(
+        &mut self,
+        at_ms: f64,
+        window: u32,
+        bad: u64,
+        total: u64,
+        window_ms: f64,
+        track: u32,
+        sink: &mut dyn TraceSink,
+    ) -> Option<AlertRecord> {
+        let slots = self.ring_bad.len();
+        self.ring_bad[self.cursor] = bad;
+        self.ring_total[self.cursor] = total;
+        self.cursor = (self.cursor + 1) % slots;
+        self.held = (self.held + 1).min(slots);
+
+        let width = window_ms.max(self.sized_for_ms);
+        let fast = self.burn_over(self.cfg.fast_ms, width);
+        let slow = self.burn_over(self.cfg.slow_ms, width);
+        let now_firing = fast >= self.cfg.threshold && slow >= self.cfg.threshold;
+        if now_firing == self.firing {
+            return None;
+        }
+        self.firing = now_firing;
+        let state = if now_firing { AlertState::Firing } else { AlertState::Resolved };
+        let rec = AlertRecord { at_ms, window, state, fast_burn: fast, slow_burn: slow };
+        self.alerts.push(rec);
+        if sink.enabled() {
+            let name = match state {
+                AlertState::Firing => "slo_burn_firing",
+                AlertState::Resolved => "slo_burn_resolved",
+            };
+            sink.record(SpanEvent::instant(
+                track,
+                std::borrow::Cow::Borrowed(name),
+                "slo",
+                at_ms,
+                window as u64,
+            ));
+        }
+        Some(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::sink::{NoopSink, TraceBuffer};
+
+    fn cfg(budget: f64) -> BurnRateConfig {
+        BurnRateConfig { error_budget: budget, fast_ms: 1_000.0, slow_ms: 10_000.0, threshold: 1.0 }
+    }
+
+    /// Feed `n` windows of (bad, total) at 100 ms width.
+    fn feed(
+        mon: &mut BurnRateMonitor,
+        sink: &mut dyn TraceSink,
+        from: u32,
+        n: u32,
+        bad: u64,
+        total: u64,
+    ) {
+        for w in from..from + n {
+            mon.observe((w + 1) as f64 * 100.0, w, bad, total, 100.0, 9, sink);
+        }
+    }
+
+    #[test]
+    fn healthy_traffic_never_fires() {
+        // 1 bad in 100 per window against a 5 % budget: burn 0.2
+        let mut mon = BurnRateMonitor::new(cfg(0.05), 100.0);
+        feed(&mut mon, &mut NoopSink, 0, 200, 1, 100);
+        assert!(mon.alerts().is_empty());
+        assert!(!mon.firing());
+    }
+
+    #[test]
+    fn idle_windows_never_fire() {
+        let mut mon = BurnRateMonitor::new(cfg(0.05), 100.0);
+        feed(&mut mon, &mut NoopSink, 0, 50, 0, 0);
+        assert!(mon.alerts().is_empty(), "0/0 is not an SLO violation");
+    }
+
+    #[test]
+    fn sustained_overload_fires_once_then_resolves_once() {
+        let mut mon = BurnRateMonitor::new(cfg(0.05), 100.0);
+        let mut buf = TraceBuffer::new();
+        // healthy lead-in, then sustained 30 % bad (burn 6), then quiet
+        feed(&mut mon, &mut buf, 0, 20, 0, 100);
+        feed(&mut mon, &mut buf, 20, 40, 30, 100);
+        feed(&mut mon, &mut buf, 60, 120, 0, 100);
+        let states: Vec<AlertState> = mon.alerts().iter().map(|a| a.state).collect();
+        assert_eq!(states, vec![AlertState::Firing, AlertState::Resolved]);
+        let firing = &mon.alerts()[0];
+        assert!(firing.fast_burn >= 1.0 && firing.slow_burn >= 1.0);
+        // both transitions landed in the trace as cat:slo instants
+        let names: Vec<&str> =
+            buf.events().filter(|e| e.cat == "slo").map(|e| e.name.as_ref()).collect();
+        assert_eq!(names, vec!["slo_burn_firing", "slo_burn_resolved"]);
+        assert!(buf.events().all(|e| e.track == 9));
+    }
+
+    #[test]
+    fn a_single_bad_window_cannot_page() {
+        // one 100 %-bad window in healthy traffic: the fast burn spikes
+        // but the 10 s window holds 1/100 of budget-rate traffic, so
+        // the slow condition blocks the page — the whole point of the
+        // multi-window form
+        let mut mon = BurnRateMonitor::new(cfg(0.05), 100.0);
+        feed(&mut mon, &mut NoopSink, 0, 99, 0, 100);
+        mon.observe(10_000.0, 99, 100, 100, 100.0, 0, &mut NoopSink);
+        assert!(
+            mon.alerts().is_empty(),
+            "a one-window blip must not fire: {:?}",
+            mon.alerts()
+        );
+    }
+
+    #[test]
+    fn short_runs_fire_on_what_they_have() {
+        // fewer windows than the slow span: burn is computed over the
+        // held prefix, so a run that is *entirely* overloaded still
+        // alerts
+        let mut mon = BurnRateMonitor::new(cfg(0.05), 100.0);
+        feed(&mut mon, &mut NoopSink, 0, 5, 50, 100);
+        assert_eq!(mon.alerts().len(), 1);
+        assert_eq!(mon.alerts()[0].state, AlertState::Firing);
+    }
+
+    #[test]
+    fn compacted_windows_keep_working() {
+        // after a sampler compaction the per-window width doubles; the
+        // monitor just spans fewer slots and must neither panic nor
+        // divide by the stale width
+        let mut mon = BurnRateMonitor::new(cfg(0.05), 100.0);
+        feed(&mut mon, &mut NoopSink, 0, 10, 0, 100);
+        for w in 10..40u32 {
+            mon.observe((w + 1) as f64 * 200.0, w, 60, 200, 200.0, 0, &mut NoopSink);
+        }
+        assert_eq!(mon.alerts().len(), 1);
+        assert_eq!(mon.alerts()[0].state, AlertState::Firing);
+    }
+
+    #[test]
+    fn observe_is_deterministic() {
+        let run = || {
+            let mut mon = BurnRateMonitor::new(cfg(0.02), 50.0);
+            for w in 0..400u32 {
+                let bad = if w % 7 == 0 { 9 } else { 0 };
+                mon.observe((w + 1) as f64 * 50.0, w, bad, 10, 50.0, 3, &mut NoopSink);
+            }
+            let parts: Vec<String> =
+                mon.alerts().iter().map(|a| a.to_json().to_json_string()).collect();
+            parts.join(",")
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn alert_record_json_shape() {
+        let rec = AlertRecord {
+            at_ms: 1_500.0,
+            window: 14,
+            state: AlertState::Firing,
+            fast_burn: 6.0,
+            slow_burn: 2.5,
+        };
+        let j = rec.to_json();
+        assert_eq!(j.get("state").and_then(Json::as_str), Some("firing"));
+        assert_eq!(j.get("window").and_then(Json::as_f64), Some(14.0));
+        assert_eq!(j.get("at_ms").and_then(Json::as_f64), Some(1_500.0));
+    }
+}

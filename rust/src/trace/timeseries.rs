@@ -1,0 +1,562 @@
+//! The flight recorder's storage: fixed-capacity virtual-time telemetry
+//! windows over a fleet run.
+//!
+//! [`TimelineSampler`] turns the fleet driver's event stream into a
+//! time-resolved timeline: the driver ticks O(1) counters on every
+//! arrival/admission/shed/violation, and at each window boundary (a
+//! `Sample` event on the virtual clock, see `fleet/events.rs`) the
+//! sampler closes one window — counter *deltas* for the fleet (arrival,
+//! admission, shed and violation rates) plus per-replica *gauges*
+//! (outstanding queue depth at the close) and the per-replica **busy
+//! integral** over the window (exact utilization, see
+//! [`TimelineSampler::close_window`]).
+//!
+//! Three contracts, mirroring the rest of the observability layer:
+//!
+//! * **Virtual clock only.** Every boundary and every value is a pure
+//!   function of the seed, so a same-seed timeline is byte-identical.
+//! * **Fixed capacity, allocation-free in steady state.** All storage
+//!   is reserved at construction. The window budget scales *down* with
+//!   replica count (a bounded cell budget, [`MAX_TIMELINE_CELLS`]), so
+//!   a 16384-replica fleet gets coarser retention instead of more
+//!   memory. When a long run exhausts the window budget the sampler
+//!   **compacts in place**: adjacent windows merge pairwise (counters
+//!   add, gauges keep the later sample) and the window width doubles —
+//!   the HdrHistogram-style trade of resolution for span, with zero
+//!   reallocation.
+//! * **Observation, never perturbation.** The sampler only ever reads
+//!   driver state; the `Sample` event sorts after every same-instant
+//!   event, so a window boundary can never reorder dispatch.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Schema version of the timeline JSON artifact (`--timeline PATH`).
+pub const TIMELINE_SCHEMA_VERSION: u64 = 1;
+
+/// Default telemetry window width (virtual ms); the `--sample-ms` flag.
+pub const DEFAULT_SAMPLE_MS: f64 = 100.0;
+
+/// Cell budget for per-replica series: `windows x replicas` is capped
+/// here, so the retained window count shrinks as the fleet grows.
+pub const MAX_TIMELINE_CELLS: usize = 1 << 20;
+
+/// Fewest windows a sampler will retain, however large the fleet.
+const MIN_WINDOWS: usize = 4;
+
+/// Most windows a sampler will retain, however small the fleet.
+const MAX_WINDOWS: usize = 4096;
+
+/// One closed window's fleet-level numbers (deltas over the window,
+/// gauges at its close). Returned by [`TimelineSampler::close_window`]
+/// for the burn-rate monitor to consume.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowStats {
+    /// Index of the closed window (post-compaction numbering).
+    pub window: u32,
+    /// Close instant, virtual ms.
+    pub end_ms: f64,
+    /// Requests that arrived in the window.
+    pub arrivals: u64,
+    /// Requests shed or violated in the window (the SLO "bad" count).
+    pub bad: u64,
+}
+
+/// Fixed-capacity sampler of fleet telemetry windows.
+///
+/// Counter ticks ([`Self::on_arrival`] …) are O(1) field increments;
+/// [`Self::close_window`] is O(replicas) and runs once per window, off
+/// the per-request path. Nothing here allocates after construction.
+#[derive(Debug, Clone)]
+pub struct TimelineSampler {
+    window_ms: f64,
+    n_replicas: usize,
+    capacity: usize,
+    compactions: u32,
+    /// Start of the currently accumulating window.
+    cursor_ms: f64,
+    // cumulative fleet counters, ticked by the driver
+    arrivals: u64,
+    admitted: u64,
+    shed_queue: u64,
+    shed_deadline: u64,
+    violated: u64,
+    /// Counter values at the last window close (delta baseline):
+    /// arrivals, admitted, shed_queue, shed_deadline, violated.
+    prev: [u64; 5],
+    /// Per-replica total service time committed by admissions (ms).
+    committed_ms: Vec<f64>,
+    /// Per-replica busy integral up to the last window close (ms).
+    prev_busy_ms: Vec<f64>,
+    // closed windows, structure-of-arrays, reserved to `capacity`
+    win_start_ms: Vec<f64>,
+    win_end_ms: Vec<f64>,
+    win_arrivals: Vec<u64>,
+    win_admitted: Vec<u64>,
+    win_shed_queue: Vec<u64>,
+    win_shed_deadline: Vec<u64>,
+    win_violated: Vec<u64>,
+    // per-replica series, flat `[window * n_replicas + replica]`,
+    // reserved to `capacity * n_replicas`
+    rep_outstanding: Vec<u32>,
+    rep_busy_ms: Vec<f64>,
+}
+
+impl TimelineSampler {
+    /// A sampler for `n_replicas` replicas at `window_ms` resolution.
+    /// `window_ms` must be finite and positive.
+    pub fn new(n_replicas: usize, window_ms: f64) -> TimelineSampler {
+        assert!(
+            window_ms.is_finite() && window_ms > 0.0,
+            "sample window must be finite and positive, got {window_ms}"
+        );
+        let capacity =
+            (MAX_TIMELINE_CELLS / n_replicas.max(1)).clamp(MIN_WINDOWS, MAX_WINDOWS);
+        TimelineSampler {
+            window_ms,
+            n_replicas,
+            capacity,
+            compactions: 0,
+            cursor_ms: 0.0,
+            arrivals: 0,
+            admitted: 0,
+            shed_queue: 0,
+            shed_deadline: 0,
+            violated: 0,
+            prev: [0; 5],
+            committed_ms: vec![0.0; n_replicas],
+            prev_busy_ms: vec![0.0; n_replicas],
+            win_start_ms: Vec::with_capacity(capacity),
+            win_end_ms: Vec::with_capacity(capacity),
+            win_arrivals: Vec::with_capacity(capacity),
+            win_admitted: Vec::with_capacity(capacity),
+            win_shed_queue: Vec::with_capacity(capacity),
+            win_shed_deadline: Vec::with_capacity(capacity),
+            win_violated: Vec::with_capacity(capacity),
+            rep_outstanding: Vec::with_capacity(capacity * n_replicas),
+            rep_busy_ms: Vec::with_capacity(capacity * n_replicas),
+        }
+    }
+
+    /// Current window width (ms). Doubles on each compaction; the
+    /// driver schedules the next `Sample` event this far ahead.
+    pub fn window_ms(&self) -> f64 {
+        self.window_ms
+    }
+
+    /// Closed windows retained.
+    pub fn windows(&self) -> usize {
+        self.win_end_ms.len()
+    }
+
+    /// Maximum windows retained before in-place compaction.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Replica count the sampler was sized for.
+    pub fn replicas(&self) -> usize {
+        self.n_replicas
+    }
+
+    /// How many times the timeline has pairwise-merged and doubled its
+    /// window width to stay inside its fixed storage.
+    pub fn compactions(&self) -> u32 {
+        self.compactions
+    }
+
+    /// True if any backing vector outgrew its construction-time
+    /// reservation — the invariant the allocation-free contract rides
+    /// on, exposed so benches and tests can assert it directly.
+    pub fn reallocated(&self) -> bool {
+        self.win_end_ms.capacity() != self.capacity
+            || self.rep_outstanding.capacity() != self.capacity * self.n_replicas
+            || self.rep_busy_ms.capacity() != self.capacity * self.n_replicas
+    }
+
+    /// Total requests that arrived while recording.
+    pub fn total_arrivals(&self) -> u64 {
+        self.arrivals
+    }
+
+    // --- O(1) driver ticks -------------------------------------------
+
+    pub fn on_arrival(&mut self) {
+        self.arrivals += 1;
+    }
+
+    /// An admission: `sim_ms` of service committed to `replica`.
+    pub fn on_admit(&mut self, replica: usize, sim_ms: f64) {
+        self.admitted += 1;
+        self.committed_ms[replica] += sim_ms;
+    }
+
+    pub fn on_shed_queue(&mut self) {
+        self.shed_queue += 1;
+    }
+
+    pub fn on_shed_deadline(&mut self) {
+        self.shed_deadline += 1;
+    }
+
+    pub fn on_violated(&mut self) {
+        self.violated += 1;
+    }
+
+    // --- window close ------------------------------------------------
+
+    /// Close the accumulating window at `now_ms` against the driver's
+    /// dense replica state. A window covers `(prev boundary, now_ms]`:
+    /// events landing exactly on a boundary belong to the closing
+    /// window because the `Sample` event sorts after them.
+    ///
+    /// The per-replica busy integral is exact, not sampled: admitted
+    /// service intervals on one replica are disjoint and the only one
+    /// that can extend past `now_ms` is the last (queued work runs
+    /// back-to-back), so busy-time-up-to-now is
+    /// `committed - max(busy_until - now, 0)` — O(1) per replica with
+    /// no interval bookkeeping.
+    pub fn close_window(
+        &mut self,
+        now_ms: f64,
+        outstanding: &[u32],
+        busy_until_ms: &[f64],
+    ) -> WindowStats {
+        debug_assert_eq!(outstanding.len(), self.n_replicas);
+        debug_assert_eq!(busy_until_ms.len(), self.n_replicas);
+        if self.win_end_ms.len() == self.capacity {
+            self.compact();
+        }
+        let cur = [self.arrivals, self.admitted, self.shed_queue, self.shed_deadline, self.violated];
+        let delta = |i: usize| cur[i] - self.prev[i];
+        let stats = WindowStats {
+            window: self.win_end_ms.len() as u32,
+            end_ms: now_ms,
+            arrivals: delta(0),
+            bad: delta(2) + delta(3) + delta(4),
+        };
+        self.win_start_ms.push(self.cursor_ms);
+        self.win_end_ms.push(now_ms);
+        self.win_arrivals.push(delta(0));
+        self.win_admitted.push(delta(1));
+        self.win_shed_queue.push(delta(2));
+        self.win_shed_deadline.push(delta(3));
+        self.win_violated.push(delta(4));
+        for r in 0..self.n_replicas {
+            let busy_to_now = self.committed_ms[r] - (busy_until_ms[r] - now_ms).max(0.0);
+            let in_window = (busy_to_now - self.prev_busy_ms[r]).max(0.0);
+            self.prev_busy_ms[r] = busy_to_now;
+            self.rep_outstanding.push(outstanding[r]);
+            self.rep_busy_ms.push(in_window);
+        }
+        self.prev = cur;
+        self.cursor_ms = now_ms;
+        stats
+    }
+
+    /// Pairwise-merge retained windows in place and double the window
+    /// width: counters add, `start` keeps the pair's first, `end` and
+    /// the outstanding gauge keep the pair's second (state at the later
+    /// close), busy integrals add. An odd trailing window is kept as
+    /// is. Touches no allocator.
+    fn compact(&mut self) {
+        let k = self.win_end_ms.len();
+        let merged = k.div_ceil(2);
+        for j in 0..merged {
+            let (a, b) = (2 * j, 2 * j + 1);
+            if b < k {
+                self.win_start_ms[j] = self.win_start_ms[a];
+                self.win_end_ms[j] = self.win_end_ms[b];
+                self.win_arrivals[j] = self.win_arrivals[a] + self.win_arrivals[b];
+                self.win_admitted[j] = self.win_admitted[a] + self.win_admitted[b];
+                self.win_shed_queue[j] = self.win_shed_queue[a] + self.win_shed_queue[b];
+                self.win_shed_deadline[j] =
+                    self.win_shed_deadline[a] + self.win_shed_deadline[b];
+                self.win_violated[j] = self.win_violated[a] + self.win_violated[b];
+                for r in 0..self.n_replicas {
+                    let (ai, bi) = (a * self.n_replicas + r, b * self.n_replicas + r);
+                    self.rep_outstanding[j * self.n_replicas + r] = self.rep_outstanding[bi];
+                    self.rep_busy_ms[j * self.n_replicas + r] =
+                        self.rep_busy_ms[ai] + self.rep_busy_ms[bi];
+                }
+            } else {
+                self.win_start_ms[j] = self.win_start_ms[a];
+                self.win_end_ms[j] = self.win_end_ms[a];
+                self.win_arrivals[j] = self.win_arrivals[a];
+                self.win_admitted[j] = self.win_admitted[a];
+                self.win_shed_queue[j] = self.win_shed_queue[a];
+                self.win_shed_deadline[j] = self.win_shed_deadline[a];
+                self.win_violated[j] = self.win_violated[a];
+                for r in 0..self.n_replicas {
+                    self.rep_outstanding[j * self.n_replicas + r] =
+                        self.rep_outstanding[a * self.n_replicas + r];
+                    self.rep_busy_ms[j * self.n_replicas + r] =
+                        self.rep_busy_ms[a * self.n_replicas + r];
+                }
+            }
+        }
+        self.win_start_ms.truncate(merged);
+        self.win_end_ms.truncate(merged);
+        self.win_arrivals.truncate(merged);
+        self.win_admitted.truncate(merged);
+        self.win_shed_queue.truncate(merged);
+        self.win_shed_deadline.truncate(merged);
+        self.win_violated.truncate(merged);
+        self.rep_outstanding.truncate(merged * self.n_replicas);
+        self.rep_busy_ms.truncate(merged * self.n_replicas);
+        self.window_ms *= 2.0;
+        self.compactions += 1;
+    }
+
+    // --- export ------------------------------------------------------
+
+    /// The timeline as schema-versioned JSON. `labels` are the replica
+    /// display names, indexed like the driver's dense state (length
+    /// checked). Fleet rows carry counter deltas, the total queue depth
+    /// at the close, the summed busy integral, and the fleet
+    /// utilization (`busy / (replicas x window span)`); the per-replica
+    /// `series` carry one outstanding gauge and one busy integral per
+    /// window. Deterministic: same ops in, same bytes out.
+    pub fn to_json<S: AsRef<str>>(&self, labels: &[S]) -> Json {
+        assert_eq!(labels.len(), self.n_replicas, "one label per replica");
+        let n = self.windows();
+        let rows: Vec<Json> = (0..n)
+            .map(|w| {
+                let span_ms = self.win_end_ms[w] - self.win_start_ms[w];
+                let slice = w * self.n_replicas..(w + 1) * self.n_replicas;
+                let depth: u64 =
+                    self.rep_outstanding[slice.clone()].iter().map(|&o| o as u64).sum();
+                let busy: f64 = self.rep_busy_ms[slice].iter().sum();
+                let util = if span_ms > 0.0 && self.n_replicas > 0 {
+                    busy / (span_ms * self.n_replicas as f64)
+                } else {
+                    0.0
+                };
+                let mut m = BTreeMap::new();
+                m.insert("window".into(), Json::Num(w as f64));
+                m.insert("start_ms".into(), Json::Num(self.win_start_ms[w]));
+                m.insert("end_ms".into(), Json::Num(self.win_end_ms[w]));
+                m.insert("arrivals".into(), Json::Num(self.win_arrivals[w] as f64));
+                m.insert("admitted".into(), Json::Num(self.win_admitted[w] as f64));
+                m.insert("shed_queue".into(), Json::Num(self.win_shed_queue[w] as f64));
+                m.insert(
+                    "shed_deadline".into(),
+                    Json::Num(self.win_shed_deadline[w] as f64),
+                );
+                m.insert("violated".into(), Json::Num(self.win_violated[w] as f64));
+                m.insert("queue_depth".into(), Json::Num(depth as f64));
+                m.insert("busy_ms".into(), Json::Num(busy));
+                m.insert("utilization".into(), Json::Num(util));
+                Json::Obj(m)
+            })
+            .collect();
+        let series: Vec<Json> = (0..self.n_replicas)
+            .map(|r| {
+                let outstanding: Vec<Json> = (0..n)
+                    .map(|w| Json::Num(self.rep_outstanding[w * self.n_replicas + r] as f64))
+                    .collect();
+                let busy: Vec<Json> = (0..n)
+                    .map(|w| Json::Num(self.rep_busy_ms[w * self.n_replicas + r]))
+                    .collect();
+                let mut m = BTreeMap::new();
+                m.insert("replica".into(), Json::Str(labels[r].as_ref().to_string()));
+                m.insert("outstanding".into(), Json::Arr(outstanding));
+                m.insert("busy_ms".into(), Json::Arr(busy));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut totals = BTreeMap::new();
+        totals.insert("arrivals".into(), Json::Num(self.arrivals as f64));
+        totals.insert("admitted".into(), Json::Num(self.admitted as f64));
+        totals.insert("shed_queue".into(), Json::Num(self.shed_queue as f64));
+        totals.insert("shed_deadline".into(), Json::Num(self.shed_deadline as f64));
+        totals.insert("violated".into(), Json::Num(self.violated as f64));
+        let mut m = BTreeMap::new();
+        m.insert("schema_version".into(), Json::Num(TIMELINE_SCHEMA_VERSION as f64));
+        m.insert("kind".into(), Json::Str("timeline".into()));
+        m.insert("window_ms".into(), Json::Num(self.window_ms));
+        m.insert("windows".into(), Json::Num(n as f64));
+        m.insert("replicas".into(), Json::Num(self.n_replicas as f64));
+        m.insert("compactions".into(), Json::Num(self.compactions as f64));
+        m.insert("totals".into(), Json::Obj(totals));
+        m.insert("rows".into(), Json::Arr(rows));
+        m.insert("series".into(), Json::Arr(series));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_math_trades_windows_for_replicas() {
+        // small fleets hit the window ceiling, huge fleets the cell
+        // budget; both ends are clamped
+        assert_eq!(TimelineSampler::new(1, 100.0).capacity(), MAX_WINDOWS);
+        assert_eq!(TimelineSampler::new(16384, 100.0).capacity(), 64);
+        assert_eq!(
+            TimelineSampler::new(MAX_TIMELINE_CELLS * 2, 100.0).capacity(),
+            MIN_WINDOWS
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn zero_window_is_rejected() {
+        TimelineSampler::new(1, 0.0);
+    }
+
+    #[test]
+    fn zero_activity_window_is_all_zeroes() {
+        // a run can close a window before anything arrives; the row
+        // must exist and read as idle
+        let mut s = TimelineSampler::new(2, 100.0);
+        let stats = s.close_window(100.0, &[0, 0], &[0.0, 0.0]);
+        assert_eq!(stats.arrivals, 0);
+        assert_eq!(stats.bad, 0);
+        let j = s.to_json(&["a", "b"]);
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("arrivals").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(rows[0].get("utilization").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(rows[0].get("queue_depth").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn single_partial_window_captures_a_short_run() {
+        // a run shorter than the window: one close, partial span, exact
+        // busy integral
+        let mut s = TimelineSampler::new(1, 100.0);
+        s.on_arrival();
+        s.on_admit(0, 30.0);
+        // service [0, 30] finished well before the close at 40
+        let stats = s.close_window(40.0, &[0], &[30.0]);
+        assert_eq!(stats.arrivals, 1);
+        let j = s.to_json(&["only"]);
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("start_ms").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(rows[0].get("end_ms").and_then(Json::as_f64), Some(40.0));
+        assert_eq!(rows[0].get("busy_ms").and_then(Json::as_f64), Some(30.0));
+        let util = rows[0].get("utilization").and_then(Json::as_f64).unwrap();
+        assert!((util - 0.75).abs() < 1e-12, "30 busy ms over a 40 ms window: {util}");
+    }
+
+    #[test]
+    fn busy_integral_splits_service_across_boundaries_exactly() {
+        let mut s = TimelineSampler::new(1, 100.0);
+        // one 150 ms request admitted at t=0: 100 busy ms in window 1,
+        // 50 in window 2, none in window 3
+        s.on_arrival();
+        s.on_admit(0, 150.0);
+        s.close_window(100.0, &[1], &[150.0]);
+        s.close_window(200.0, &[0], &[150.0]);
+        s.close_window(300.0, &[0], &[150.0]);
+        let j = s.to_json(&["r"]);
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        let busy: Vec<f64> =
+            rows.iter().map(|r| r.get("busy_ms").and_then(Json::as_f64).unwrap()).collect();
+        assert_eq!(busy, vec![100.0, 50.0, 0.0]);
+        let depth: Vec<f64> = rows
+            .iter()
+            .map(|r| r.get("queue_depth").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(depth, vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn deltas_reset_per_window() {
+        let mut s = TimelineSampler::new(1, 10.0);
+        for _ in 0..5 {
+            s.on_arrival();
+        }
+        s.on_shed_queue();
+        s.close_window(10.0, &[0], &[0.0]);
+        for _ in 0..3 {
+            s.on_arrival();
+        }
+        s.on_shed_deadline();
+        s.on_violated();
+        let w2 = s.close_window(20.0, &[0], &[0.0]);
+        assert_eq!(w2.arrivals, 3);
+        assert_eq!(w2.bad, 2);
+        let j = s.to_json(&["r"]);
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows[0].get("arrivals").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(rows[0].get("shed_queue").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(rows[1].get("arrivals").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(rows[1].get("shed_deadline").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(rows[1].get("violated").and_then(Json::as_f64), Some(1.0));
+        // totals are cumulative, not per-window
+        let t = j.get("totals").unwrap();
+        assert_eq!(t.get("arrivals").and_then(Json::as_f64), Some(8.0));
+    }
+
+    #[test]
+    fn compaction_halves_rows_doubles_width_and_never_reallocates() {
+        let mut s = TimelineSampler::new(MAX_TIMELINE_CELLS / 8, 10.0);
+        assert_eq!(s.capacity(), 8);
+        let n = s.replicas();
+        let outstanding = vec![0u32; n];
+        let busy = vec![0.0f64; n];
+        // 8 closes fill capacity; the 9th forces one pairwise merge
+        for w in 1..=9u32 {
+            s.on_arrival();
+            s.close_window(w as f64 * 10.0, &outstanding, &busy);
+        }
+        assert_eq!(s.compactions(), 1);
+        assert_eq!(s.window_ms(), 20.0);
+        assert_eq!(s.windows(), 5, "4 merged pairs + the forcing close");
+        assert!(!s.reallocated(), "compaction must reuse the reserved storage");
+        // merged rows keep monotone, gap-free boundaries and all counts
+        let labels: Vec<String> = (0..n).map(|i| format!("r{i}")).collect();
+        let j = s.to_json(&labels);
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        let mut cursor = 0.0;
+        let mut arrivals = 0.0;
+        for row in rows {
+            assert_eq!(row.get("start_ms").and_then(Json::as_f64), Some(cursor));
+            cursor = row.get("end_ms").and_then(Json::as_f64).unwrap();
+            arrivals += row.get("arrivals").and_then(Json::as_f64).unwrap();
+        }
+        assert_eq!(cursor, 90.0);
+        assert_eq!(arrivals, 9.0, "compaction must not lose counts");
+    }
+
+    #[test]
+    fn sixteen_k_replicas_hold_the_cell_budget_without_reallocating() {
+        let n = 16384usize;
+        let mut s = TimelineSampler::new(n, 100.0);
+        assert_eq!(s.capacity() * n, MAX_TIMELINE_CELLS);
+        let outstanding = vec![1u32; n];
+        let busy = vec![0.0f64; n];
+        // push far past capacity: 3 full compactions' worth of closes
+        for w in 1..=(s.capacity() * 5) {
+            s.close_window(w as f64 * 100.0, &outstanding, &busy);
+        }
+        assert!(s.compactions() >= 2);
+        assert!(s.windows() <= s.capacity());
+        assert!(!s.reallocated(), "16384-replica sampler must stay in its reservation");
+    }
+
+    #[test]
+    fn same_ops_same_bytes() {
+        let run = || {
+            let mut s = TimelineSampler::new(3, 50.0);
+            for i in 0..7u64 {
+                s.on_arrival();
+                s.on_admit((i % 3) as usize, 12.5);
+                if i % 3 == 0 {
+                    s.on_shed_deadline();
+                }
+                if i % 2 == 0 {
+                    s.close_window((i + 1) as f64 * 50.0, &[1, 0, 2], &[10.0, 0.0, 40.0]);
+                }
+            }
+            s.to_json(&["a", "b", "c"]).to_json_string()
+        };
+        assert_eq!(run(), run(), "timeline JSON must be a pure function of the ops");
+    }
+}

@@ -6,7 +6,9 @@
 //!
 //! * **strictly zero** allocations in steady state for each hot-path
 //!   component in isolation: a dispatch decision under every policy
-//!   over a 4096-replica fleet, event-queue push/pop within its
+//!   over a 4096-replica fleet — with the flight recorder's
+//!   `TimelineSampler` live, ticking per decision and closing windows
+//!   into a burn-rate monitor — event-queue push/pop within its
 //!   pre-sized capacity, latency recording past the exact-window cap,
 //!   trace-ring writes at capacity with borrowed span names, and the
 //!   `NoopSink` (tracing off);
@@ -31,7 +33,9 @@ use ilpm::fleet::{
 };
 use ilpm::metrics::LatencyRecorder;
 use ilpm::simulator::DeviceConfig;
-use ilpm::trace::{NoopSink, SpanEvent, TraceBuffer, TraceSink};
+use ilpm::trace::{
+    BurnRateConfig, BurnRateMonitor, NoopSink, SpanEvent, TimelineSampler, TraceBuffer, TraceSink,
+};
 use ilpm::workload::{NetworkDef, TraceKind};
 
 struct CountingAlloc;
@@ -95,6 +99,52 @@ fn fleet_hot_path_allocates_nothing_in_steady_state() {
         });
         assert_eq!(count, 0, "{}: dispatch decisions must not allocate", policy.name());
     }
+
+    // --- dispatch decisions with the flight recorder live: the
+    // sampler ticks its counters on every pick and closes a telemetry
+    // window (busy integral over all 4096 replicas, burn-rate check)
+    // every 500th — still strictly zero
+    let mut sampler = TimelineSampler::new(n, 100.0);
+    let mut monitor = BurnRateMonitor::new(BurnRateConfig::default(), 100.0);
+    let mut sink = NoopSink;
+    let (count, _) = allocs_during(|| {
+        let mut acc = 0usize;
+        for seq in 0..10_000u64 {
+            let now_ms = seq as f64 * 0.5;
+            let view = FleetView {
+                outstanding: &outstanding,
+                busy_until_ms: &busy_until_ms,
+                cost_ms: &cost_ms,
+                now_ms,
+            };
+            let pick = DispatchPolicy::CostAware.choose(seq, &view);
+            sampler.on_arrival();
+            if seq % 97 == 0 {
+                sampler.on_shed_queue();
+            } else {
+                sampler.on_admit(pick, cost_ms[pick]);
+                busy_until_ms[pick] += cost_ms[pick];
+            }
+            if seq % 500 == 499 {
+                let stats = sampler.close_window(now_ms, &outstanding, &busy_until_ms);
+                monitor.observe(
+                    stats.end_ms,
+                    stats.window,
+                    stats.bad,
+                    stats.arrivals,
+                    sampler.window_ms(),
+                    n as u32,
+                    &mut sink,
+                );
+            }
+            acc += pick;
+        }
+        black_box(acc)
+    });
+    assert_eq!(count, 0, "dispatch with the sampler live must not allocate");
+    assert_eq!(sampler.windows(), 20, "every 500th decision closed a window");
+    assert!(!sampler.reallocated(), "sampler storage must not grow");
+    assert_eq!(sampler.total_arrivals(), 10_000);
 
     // --- event queue: push/pop churn inside a pre-sized heap
     let mut q = EventQueue::with_capacity(1024);
