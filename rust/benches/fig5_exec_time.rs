@@ -26,7 +26,7 @@ fn main() {
             let best = rows
                 .iter()
                 .filter(|r| r.layer == layer)
-                .min_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap())
+                .min_by(|a, b| a.time_ms.total_cmp(&b.time_ms))
                 .unwrap();
             println!("  {}: fastest = {}", layer.name(), best.algorithm.name());
         }

@@ -1,0 +1,685 @@
+//! Lexical scanner for pallas-lint.
+//!
+//! Hand-written and dependency-free (vendored-shim policy): masks
+//! comments, string/char literals and attributes out of the token
+//! stream so rules only ever match real code, and recovers the
+//! structure the rule engine needs — identifier/punct tokens with line
+//! numbers, function spans, `#[cfg(test)]` regions, and `pallas-lint`
+//! pragma comments.
+//!
+//! Scope notes, deliberate and documented:
+//! - String *contents* are kept as [`TokenKind::Str`] tokens (rule R5
+//!   inspects emitted file names) but never reach identifier matching.
+//! - Attribute *contents* are kept as [`TokenKind::Attr`] tokens so the
+//!   span builder can recognise `#[cfg(test)]` / `#[test]`.
+//! - Pragmas are recognised only in plain `//` line comments. Doc
+//!   comments (`///`, `//!`) can therefore quote pragma syntax freely,
+//!   as this paragraph does, without being parsed as pragmas.
+//! - Numbers and lifetimes produce no tokens; no rule needs them.
+
+/// One lexical token with the 1-based source line it starts on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub line: u32,
+    pub kind: TokenKind,
+    pub text: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`fn`, `Instant`, `partial_cmp`, ...).
+    Ident,
+    /// Punctuation. `::` is joined into one token; everything else is
+    /// a single character.
+    Punct,
+    /// String-literal contents, escapes left verbatim.
+    Str,
+    /// Attribute contents (`cfg(test)` for `#[cfg(test)]`).
+    Attr,
+}
+
+/// A `// pallas-lint ...` comment, unparsed. The rule engine owns the
+/// pragma grammar so it can validate rule ids against the rule table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PragmaComment {
+    pub line: u32,
+    /// Text after the `pallas-lint` marker (leading colon included),
+    /// trimmed.
+    pub body: String,
+    /// True when code tokens precede the comment on its line: the
+    /// pragma then applies to its own line, not the next one.
+    pub trailing: bool,
+}
+
+/// A function body located by the span builder: from the `fn` keyword
+/// through the matching closing brace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FnSpan {
+    pub name: String,
+    pub start_line: u32,
+    pub end_line: u32,
+    /// Declared under `#[test]`/`#[cfg(test)]`, inside a `#[cfg(test)]`
+    /// module, or nested in another test function.
+    pub is_test: bool,
+    /// Index of the `fn` keyword in [`Scan::tokens`].
+    pub first_tok: usize,
+    /// Index of the closing-brace punct in [`Scan::tokens`].
+    pub last_tok: usize,
+}
+
+/// The full scan of one source file.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub tokens: Vec<Token>,
+    pub pragmas: Vec<PragmaComment>,
+    pub fn_spans: Vec<FnSpan>,
+    /// Closed line ranges `(start, end)` covered by `#[cfg(test)]`
+    /// modules or `#[test]` functions.
+    pub test_ranges: Vec<(u32, u32)>,
+}
+
+impl Scan {
+    pub fn of(text: &str) -> Scan {
+        let (tokens, pragmas) = tokenize(text);
+        let (fn_spans, test_ranges) = build_spans(&tokens);
+        Scan { tokens, pragmas, fn_spans, test_ranges }
+    }
+
+    /// Is this line inside a `#[cfg(test)]` module or `#[test]` fn?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| (s..=e).contains(&line))
+    }
+
+    /// First line bearing any token strictly after `line` (pragma
+    /// targeting: a pragma on its own line covers the next code line).
+    pub fn next_code_line(&self, line: u32) -> Option<u32> {
+        self.tokens.iter().map(|t| t.line).filter(|&l| l > line).min()
+    }
+}
+
+// ---- tokenizer -------------------------------------------------------
+
+fn tokenize(text: &str) -> (Vec<Token>, Vec<PragmaComment>) {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut pragmas: Vec<PragmaComment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    // Line of the most recent token, for trailing-pragma detection.
+    let mut last_tok_line = 0u32;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment — possibly a pragma. Doc comments never match:
+        // their text starts with `/` or `!` after the `//`.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let body: String = chars[start..j].iter().collect();
+            if let Some(rest) = body.trim().strip_prefix("pallas-lint") {
+                pragmas.push(PragmaComment {
+                    line,
+                    body: rest.trim().to_string(),
+                    trailing: last_tok_line == line,
+                });
+            }
+            i = j;
+            continue;
+        }
+        // Block comment, nested per Rust grammar.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Attribute: `#[...]` or `#![...]`, captured as one token.
+        if c == '#' {
+            let mut j = i + 1;
+            if j < n && chars[j] == '!' {
+                j += 1;
+            }
+            if j < n && chars[j] == '[' {
+                let start_line = line;
+                let (content, ni, nl) = scan_attr(&chars, j + 1, line);
+                tokens.push(Token { line: start_line, kind: TokenKind::Attr, text: content });
+                last_tok_line = start_line;
+                i = ni;
+                line = nl;
+                continue;
+            }
+            tokens.push(Token { line, kind: TokenKind::Punct, text: "#".into() });
+            last_tok_line = line;
+            i += 1;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: skip the escaped character
+                // itself (it may be `'`), then find the closing quote.
+                let mut j = (i + 3).min(n);
+                while j < n && chars[j] != '\'' {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                i = (j + 1).min(n);
+            } else if i + 2 < n && chars[i + 2] == '\'' {
+                // Plain char literal, e.g. 'x' (any single char).
+                i += 3;
+            } else {
+                // Lifetime: consume the label, no token emitted.
+                let mut j = i + 1;
+                while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                    j += 1;
+                }
+                i = j.max(i + 1);
+            }
+            continue;
+        }
+        // Raw strings, byte strings, byte chars, raw identifiers.
+        if c == 'r' || c == 'b' {
+            if let Some((hashes, start)) = raw_string_open(&chars, i) {
+                let start_line = line;
+                let (content, ni, nl) = scan_raw_string(&chars, start, hashes, line);
+                tokens.push(Token { line: start_line, kind: TokenKind::Str, text: content });
+                last_tok_line = start_line;
+                i = ni;
+                line = nl;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                let start_line = line;
+                let (content, ni, nl) = scan_dquote(&chars, i + 2, line);
+                tokens.push(Token { line: start_line, kind: TokenKind::Str, text: content });
+                last_tok_line = start_line;
+                i = ni;
+                line = nl;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+                // Byte char b'x' / b'\n': skip to the closing quote.
+                let mut j = i + 2;
+                if j < n && chars[j] == '\\' {
+                    j += 1;
+                }
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                i = (j + 1).min(n);
+                continue;
+            }
+            if c == 'r' && i + 1 < n && chars[i + 1] == '#' {
+                let after = i + 2;
+                if after < n && (chars[after].is_alphabetic() || chars[after] == '_') {
+                    // Raw identifier r#ident: emit the bare name.
+                    let mut j = after;
+                    while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                        j += 1;
+                    }
+                    let text: String = chars[after..j].iter().collect();
+                    tokens.push(Token { line, kind: TokenKind::Ident, text });
+                    last_tok_line = line;
+                    i = j;
+                    continue;
+                }
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        // String literal.
+        if c == '"' {
+            let start_line = line;
+            let (content, ni, nl) = scan_dquote(&chars, i + 1, line);
+            tokens.push(Token { line: start_line, kind: TokenKind::Str, text: content });
+            last_tok_line = start_line;
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Identifier or keyword.
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i + 1;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            tokens.push(Token { line, kind: TokenKind::Ident, text });
+            last_tok_line = line;
+            i = j;
+            continue;
+        }
+        // Number: consumed, no token. A `.` joins only when a digit
+        // follows, so `1..n` and `1.max(2)` stay intact.
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                let d = chars[j];
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.' && j + 1 < n && chars[j + 1].is_ascii_digit() {
+                    j += 2;
+                } else {
+                    break;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Punctuation; join `::`.
+        if c == ':' && i + 1 < n && chars[i + 1] == ':' {
+            tokens.push(Token { line, kind: TokenKind::Punct, text: "::".into() });
+            last_tok_line = line;
+            i += 2;
+            continue;
+        }
+        tokens.push(Token { line, kind: TokenKind::Punct, text: c.to_string() });
+        last_tok_line = line;
+        i += 1;
+    }
+    (tokens, pragmas)
+}
+
+/// `r"`, `r#"`, `br##"` ... → `Some((hash_count, index_after_quote))`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let n = chars.len();
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if j >= n || chars[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && chars[j] == '"' {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Scan a raw string body from `start` until `"` followed by `hashes`
+/// `#`s. Returns (content, next index, next line).
+fn scan_raw_string(
+    chars: &[char],
+    start: usize,
+    hashes: usize,
+    mut line: u32,
+) -> (String, usize, u32) {
+    let n = chars.len();
+    let mut j = start;
+    while j < n {
+        if chars[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && seen < hashes && chars[k] == '#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                let content: String = chars[start..j].iter().collect();
+                return (content, k, line);
+            }
+        }
+        if chars[j] == '\n' {
+            line += 1;
+        }
+        j += 1;
+    }
+    (chars[start..].iter().collect(), n, line)
+}
+
+/// Scan a normal `"`-delimited string body from `start` (first content
+/// char). Escapes are copied verbatim. Returns (content, next index,
+/// next line).
+fn scan_dquote(chars: &[char], start: usize, mut line: u32) -> (String, usize, u32) {
+    let n = chars.len();
+    let mut j = start;
+    let mut content = String::new();
+    while j < n {
+        let d = chars[j];
+        if d == '\\' && j + 1 < n {
+            content.push(d);
+            content.push(chars[j + 1]);
+            if chars[j + 1] == '\n' {
+                line += 1;
+            }
+            j += 2;
+            continue;
+        }
+        if d == '"' {
+            return (content, j + 1, line);
+        }
+        if d == '\n' {
+            line += 1;
+        }
+        content.push(d);
+        j += 1;
+    }
+    (content, n, line)
+}
+
+/// Capture `#[...]` contents from just after the `[`, tracking nested
+/// brackets and skipping over embedded string literals. Returns
+/// (content, index after `]`, next line).
+fn scan_attr(chars: &[char], start: usize, mut line: u32) -> (String, usize, u32) {
+    let n = chars.len();
+    let mut j = start;
+    let mut depth = 1u32;
+    let mut content = String::new();
+    while j < n {
+        let d = chars[j];
+        if d == '"' {
+            let (s, nj, nl) = scan_dquote(chars, j + 1, line);
+            content.push('"');
+            content.push_str(&s);
+            content.push('"');
+            j = nj;
+            line = nl;
+            continue;
+        }
+        if d == '[' {
+            depth += 1;
+        } else if d == ']' {
+            depth -= 1;
+            if depth == 0 {
+                return (content, j + 1, line);
+            }
+        } else if d == '\n' {
+            line += 1;
+        }
+        content.push(d);
+        j += 1;
+    }
+    (content, n, line)
+}
+
+// ---- span builder ----------------------------------------------------
+
+/// Identifiers that may sit between an attribute and the `fn`/`mod` it
+/// decorates (`#[cfg(test)] pub(crate) mod ...`) without detaching it.
+fn attr_passthrough(ident: &str) -> bool {
+    matches!(ident, "pub" | "crate" | "super" | "self" | "in" | "unsafe" | "const" | "async" | "extern")
+}
+
+fn attr_is_test(attr: &str) -> bool {
+    let squeezed: String = attr.chars().filter(|c| !c.is_whitespace()).collect();
+    squeezed == "test" || squeezed == "cfg(test)"
+}
+
+fn build_spans(tokens: &[Token]) -> (Vec<FnSpan>, Vec<(u32, u32)>) {
+    struct OpenFn {
+        name: String,
+        start_line: u32,
+        first_tok: usize,
+        open_depth: i32,
+        is_test: bool,
+    }
+
+    let mut fns: Vec<FnSpan> = Vec::new();
+    let mut ranges: Vec<(u32, u32)> = Vec::new();
+    let mut open_fns: Vec<OpenFn> = Vec::new();
+    // Brace depths at which a `#[cfg(test)]` mod opened, with its line.
+    let mut open_mods: Vec<(i32, u32)> = Vec::new();
+    let mut depth = 0i32;
+    // Paren/bracket depth: a `;` only cancels a pending item at zero
+    // (so `fn f(x: [u8; 4])` survives its own signature).
+    let mut pdepth = 0i32;
+    let mut attrs_test = false;
+    let mut pending_fn: Option<(String, u32, usize, bool)> = None;
+    let mut pending_mod: Option<u32> = None;
+
+    let mut k = 0usize;
+    while k < tokens.len() {
+        let t = &tokens[k];
+        match t.kind {
+            TokenKind::Attr => {
+                if attr_is_test(&t.text) {
+                    attrs_test = true;
+                }
+            }
+            TokenKind::Str => attrs_test = false,
+            TokenKind::Ident => match t.text.as_str() {
+                "fn" => {
+                    if let Some(name_tok) = tokens.get(k + 1) {
+                        if name_tok.kind == TokenKind::Ident {
+                            pending_fn = Some((name_tok.text.clone(), t.line, k, attrs_test));
+                        }
+                    }
+                    attrs_test = false;
+                }
+                "mod" => {
+                    if attrs_test {
+                        pending_mod = Some(t.line);
+                    }
+                    attrs_test = false;
+                }
+                id => {
+                    if !attr_passthrough(id) && pending_fn.is_none() && pending_mod.is_none() {
+                        attrs_test = false;
+                    }
+                }
+            },
+            TokenKind::Punct => match t.text.as_str() {
+                "{" => {
+                    depth += 1;
+                    if let Some((name, start_line, first_tok, attr_test)) = pending_fn.take() {
+                        let in_mod = !open_mods.is_empty();
+                        let in_test_ctx = in_mod || open_fns.iter().any(|f| f.is_test);
+                        open_fns.push(OpenFn {
+                            name,
+                            start_line,
+                            first_tok,
+                            open_depth: depth,
+                            is_test: attr_test || in_test_ctx,
+                        });
+                    } else if let Some(start_line) = pending_mod.take() {
+                        open_mods.push((depth, start_line));
+                    }
+                }
+                "}" => {
+                    if open_fns.last().is_some_and(|f| f.open_depth == depth) {
+                        if let Some(f) = open_fns.pop() {
+                            fns.push(FnSpan {
+                                name: f.name,
+                                start_line: f.start_line,
+                                end_line: t.line,
+                                is_test: f.is_test,
+                                first_tok: f.first_tok,
+                                last_tok: k,
+                            });
+                        }
+                    }
+                    if open_mods.last().is_some_and(|&(d, _)| d == depth) {
+                        if let Some((_, start_line)) = open_mods.pop() {
+                            ranges.push((start_line, t.line));
+                        }
+                    }
+                    depth -= 1;
+                }
+                "(" | "[" => pdepth += 1,
+                ")" | "]" => pdepth = (pdepth - 1).max(0),
+                ";" => {
+                    if pdepth == 0 {
+                        pending_fn = None;
+                        pending_mod = None;
+                        attrs_test = false;
+                    }
+                }
+                _ => {}
+            },
+        }
+        k += 1;
+    }
+
+    for f in &fns {
+        if f.is_test {
+            ranges.push((f.start_line, f.end_line));
+        }
+    }
+    ranges.sort_unstable();
+    fns.sort_by_key(|f| (f.start_line, f.end_line));
+    (fns, ranges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(scan: &Scan) -> Vec<&str> {
+        scan.tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn masks_line_and_block_comments() {
+        let s = Scan::of("let a = 1; // Instant::now()\n/* SystemTime */ let b = 2;");
+        assert!(!idents(&s).contains(&"Instant"));
+        assert!(!idents(&s).contains(&"SystemTime"));
+        assert!(idents(&s).contains(&"b"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let s = Scan::of("/* outer /* inner Instant::now */ still comment */ let live = 1;");
+        assert!(!idents(&s).contains(&"Instant"));
+        assert!(idents(&s).contains(&"live"));
+    }
+
+    #[test]
+    fn strings_become_str_tokens_not_idents() {
+        let s = Scan::of(r#"let x = "Instant::now() inside a string";"#);
+        assert!(!idents(&s).contains(&"Instant"));
+        let strs: Vec<&str> = s
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, ["Instant::now() inside a string"]);
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let src = "let x = r#\"partial_cmp \"quoted\" inside\"#; let y = 1;";
+        let s = Scan::of(src);
+        assert!(!idents(&s).contains(&"partial_cmp"));
+        assert!(idents(&s).contains(&"y"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let s = Scan::of("fn f<'a>(x: &'a str) -> char { let q = '\\''; let b = '{'; q }");
+        // The brace inside the char literal must not unbalance spans.
+        assert_eq!(s.fn_spans.len(), 1);
+        assert_eq!(s.fn_spans[0].name, "f");
+    }
+
+    #[test]
+    fn line_numbers_advance_through_multiline_strings() {
+        let s = Scan::of("let a = \"one\ntwo\";\nlet later = 3;");
+        let later = s.tokens.iter().find(|t| t.text == "later").map(|t| t.line);
+        assert_eq!(later, Some(3));
+    }
+
+    #[test]
+    fn pragma_detected_with_trailing_flag() {
+        let src = "// pallas-lint: hot-path\nlet x = 1; // pallas-lint: end-hot-path\n";
+        let s = Scan::of(src);
+        assert_eq!(s.pragmas.len(), 2);
+        assert!(!s.pragmas[0].trailing);
+        assert_eq!(s.pragmas[0].body, ": hot-path");
+        assert!(s.pragmas[1].trailing);
+    }
+
+    #[test]
+    fn doc_comments_never_parse_as_pragmas() {
+        let src = "/// pallas-lint: allow(wall-clock, quoted in docs)\n\
+                   //! pallas-lint: hot-path\nlet x = 1;";
+        let s = Scan::of(src);
+        assert!(s.pragmas.is_empty());
+    }
+
+    #[test]
+    fn fn_spans_and_cfg_test_mod() {
+        let src = "\
+pub fn live() -> u32 {
+    41
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn checked() {
+        assert_eq!(super::live(), 41);
+    }
+}
+";
+        let s = Scan::of(src);
+        let live = s.fn_spans.iter().find(|f| f.name == "live").expect("live span");
+        assert!(!live.is_test);
+        assert_eq!((live.start_line, live.end_line), (1, 3));
+        let checked = s.fn_spans.iter().find(|f| f.name == "checked").expect("checked span");
+        assert!(checked.is_test);
+        assert!(s.in_test(9));
+        assert!(!s.in_test(2));
+    }
+
+    #[test]
+    fn trait_method_declarations_do_not_open_spans() {
+        let src = "trait T { fn decl(&self) -> u32; }\nfn real() { let _ = 1; }";
+        let s = Scan::of(src);
+        let names: Vec<&str> = s.fn_spans.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["real"]);
+    }
+
+    #[test]
+    fn array_type_semicolon_in_signature_keeps_the_span() {
+        let src = "fn takes(x: [u8; 4]) -> u32 {\n    x.len() as u32\n}";
+        let s = Scan::of(src);
+        assert_eq!(s.fn_spans.len(), 1);
+        assert_eq!(s.fn_spans[0].name, "takes");
+    }
+
+    #[test]
+    fn next_code_line_skips_comment_only_lines() {
+        let src = "// pallas-lint: allow(wall-clock, two-line pragma)\n// plain comment\nlet x = 1;";
+        let s = Scan::of(src);
+        assert_eq!(s.next_code_line(1), Some(3));
+    }
+}

@@ -1,0 +1,155 @@
+//! pallas-lint — the repo-specific static-analysis pass.
+//!
+//! Every verdict this crate ships (paper tables, `bench fleet-scale`,
+//! the flight-recorder byte-identity guarantees) rests on invariants
+//! that were previously enforced only by convention: virtual-clock
+//! timestamps, `total_cmp` instead of `partial_cmp().unwrap()`,
+//! sorted serialization, and an allocation-free dispatch loop. This
+//! module turns those conventions into machine-checked rules.
+//!
+//! Three layers, all dependency-free:
+//! - [`lexer`]: a hand-written scanner that masks comments, string and
+//!   char literals and attributes, and recovers function spans,
+//!   `#[cfg(test)]` regions, and `pallas-lint` pragma comments.
+//! - [`rules`]: the rule engine (R1..R6 plus pragma hygiene) over the
+//!   masked token stream, with reasoned inline suppressions.
+//! - [`run_lint`]: a deterministic walker over `src/`, `tests/` and
+//!   `benches/` that aggregates per-file findings into a
+//!   [`LintReport`] — the `ilpm lint` subcommand and the tier-1
+//!   `tests/lint_clean.rs` gate are thin wrappers around it.
+//!
+//! See DESIGN.md "Static analysis" for the rule table, the pragma
+//! grammar, and how to add a rule.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use rules::{lint_source, Finding, RuleInfo, Severity, RULES};
+
+/// Aggregated result of linting one crate tree.
+#[derive(Debug)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// Clean means no error-severity findings (warnings don't gate).
+    pub fn is_clean(&self) -> bool {
+        !self.findings.iter().any(|f| f.severity == Severity::Error)
+    }
+
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// One diagnostic per line, then a one-line summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "pallas-lint: {} file(s) scanned, {} finding(s), {} error(s)\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.errors()
+        ));
+        out
+    }
+}
+
+/// Lint the crate rooted at `crate_root` (the directory holding
+/// `src/`): walks `src/`, `tests/` and `benches/` in sorted order so
+/// the report is byte-stable across filesystems.
+pub fn run_lint(crate_root: &Path) -> Result<LintReport> {
+    let src = crate_root.join("src");
+    if !src.is_dir() {
+        anyhow::bail!("{} has no src/ directory — not a crate root", crate_root.display());
+    }
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = crate_root.join(sub);
+        if dir.is_dir() {
+            collect_rs_files(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut findings: Vec<Finding> = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let rel = path.strip_prefix(crate_root).unwrap_or(path.as_path());
+        let label = rel.to_string_lossy().replace('\\', "/");
+        findings.extend(rules::lint_source(&label, &text));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(LintReport { files_scanned: files.len(), findings })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("read dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Human-readable rule table for `ilpm lint --rules`.
+pub fn rule_table() -> String {
+    let mut out = String::from("pallas-lint rules\n");
+    for r in RULES {
+        out.push_str(&format!("  {:<15} {:<7} {}\n", r.id, r.severity.name(), r.invariant));
+        out.push_str(&format!("  {:<15} {:<7} allowed: {}\n", "", "", r.allowlist));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_lint_rejects_non_crate_roots() {
+        let err = run_lint(Path::new("/definitely/not/a/crate")).map(|_| ());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rule_table_names_every_rule() {
+        let table = rule_table();
+        for r in RULES {
+            assert!(table.contains(r.id), "missing {}", r.id);
+        }
+    }
+
+    #[test]
+    fn report_rendering_counts_errors() {
+        let rep = LintReport {
+            files_scanned: 2,
+            findings: vec![Finding {
+                file: "src/x.rs".into(),
+                line: 3,
+                rule: rules::R_WALL,
+                severity: Severity::Error,
+                message: "demo".into(),
+            }],
+        };
+        assert!(!rep.is_clean());
+        assert!(rep.render().contains("src/x.rs:3"));
+        assert!(rep.render().contains("1 error(s)"));
+    }
+}

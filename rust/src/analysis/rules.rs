@@ -1,0 +1,536 @@
+//! Rule engine for pallas-lint: the six repo invariants, the pragma
+//! grammar, and suppression handling.
+//!
+//! Each rule is lexical — it matches the masked token stream from
+//! [`super::lexer`], never raw text — and is scoped by module path
+//! and function span, not by type information. That keeps the pass
+//! dependency-free and fast, at the documented cost that a rule sees
+//! names, not types (e.g. R3 catches `HashMap` *named* in an emitter;
+//! the sorted-collect idiom reviews cover aliased maps).
+//!
+//! Pragma grammar (plain `//` comments only, doc comments exempt):
+//! - `pallas-lint: allow(<rule-id>, <reason>)` — suppress `<rule-id>`
+//!   on this line (trailing comment) or the next code line. The
+//!   reason is mandatory; an empty one is a `pragma` finding.
+//! - `pallas-lint: hot-path` / `pallas-lint: end-hot-path` — bracket
+//!   a region in which rule `hot-path` bans allocating calls.
+//! Anything else after `pallas-lint` is a malformed-pragma finding,
+//! and those are never suppressible.
+
+use super::lexer::{Scan, Token, TokenKind};
+
+pub const R_WALL: &str = "wall-clock";
+pub const R_FLOAT: &str = "float-ord";
+pub const R_ORDER: &str = "ordered-output";
+pub const R_HOT: &str = "hot-path";
+pub const R_BENCH: &str = "bench-envelope";
+pub const R_PANIC: &str = "panic-ban";
+pub const R_PRAGMA: &str = "pragma";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Static description of one rule, for `lint --rules` and DESIGN.md.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub invariant: &'static str,
+    pub allowlist: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: R_WALL,
+        severity: Severity::Error,
+        invariant: "no Instant::now / SystemTime: verdicts replay on the virtual clock",
+        allowlist: "src/coordinator/engine.rs, src/util/bench.rs, benches/; else pragma",
+    },
+    RuleInfo {
+        id: R_FLOAT,
+        severity: Severity::Error,
+        invariant: "no partial_cmp on floats: total_cmp + explicit tie-break, NaN-safe",
+        allowlist: "`fn partial_cmp` trait impls; else pragma",
+    },
+    RuleInfo {
+        id: R_ORDER,
+        severity: Severity::Error,
+        invariant: "no HashMap named inside to_json/render/write_/emit/export/save emitters",
+        allowlist: "test code; else pragma",
+    },
+    RuleInfo {
+        id: R_HOT,
+        severity: Severity::Error,
+        invariant: "no format!/vec!/clone/to_string/to_owned/collect/Vec::new/Box::new/\
+                    String::new-from-with_capacity inside hot-path pragma regions",
+        allowlist: "code outside `pallas-lint: hot-path` regions; else pragma",
+    },
+    RuleInfo {
+        id: R_BENCH,
+        severity: Severity::Error,
+        invariant: "every BENCH_*.json emitter calls bench_envelope and holds no wall clock",
+        allowlist: "test code; else pragma",
+    },
+    RuleInfo {
+        id: R_PANIC,
+        severity: Severity::Error,
+        invariant: "no unwrap/expect/panic! on the fleet request path (serve.rs, events.rs)",
+        allowlist: "test code; unreachable! with a proof message; else pragma",
+    },
+    RuleInfo {
+        id: R_PRAGMA,
+        severity: Severity::Error,
+        invariant: "pragmas parse, carry a reason, and hot-path markers pair up",
+        allowlist: "none — never suppressible",
+    },
+];
+
+fn severity_of(rule: &str) -> Severity {
+    RULES
+        .iter()
+        .find(|r| r.id == rule)
+        .map(|r| r.severity)
+        .unwrap_or(Severity::Error)
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        let Finding { file, line, rule, message, .. } = self;
+        format!("{file}:{line}: {} [{rule}] {message}", self.severity.name())
+    }
+}
+
+/// Lint one source file. `label` is the crate-relative path with
+/// forward slashes (`src/fleet/serve.rs`, `tests/lint_clean.rs`): the
+/// path-scoped rules and allowlists key on it.
+pub fn lint_source(label: &str, text: &str) -> Vec<Finding> {
+    let scan = Scan::of(text);
+    let mut out: Vec<Finding> = Vec::new();
+    let pragmas = parse_pragmas(label, &scan, &mut out);
+    check_wall_clock(label, &scan, &mut out);
+    check_float_ord(label, &scan, &mut out);
+    check_ordered_output(label, &scan, &mut out);
+    check_hot_path(label, &scan, &pragmas.regions, &mut out);
+    check_bench_envelope(label, &scan, &mut out);
+    check_panic_ban(label, &scan, &mut out);
+    let mut kept: Vec<Finding> = out.into_iter().filter(|f| !pragmas.suppresses(f)).collect();
+    kept.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    kept
+}
+
+fn finding(label: &str, line: u32, rule: &'static str, message: String) -> Finding {
+    Finding { file: label.to_string(), line, rule, severity: severity_of(rule), message }
+}
+
+// ---- pragmas ---------------------------------------------------------
+
+struct Suppressions {
+    /// (rule id, lines covered) per well-formed allow pragma.
+    allows: Vec<(String, [u32; 2])>,
+    /// `(start_line, end_line)` per matched hot-path region; rule
+    /// `hot-path` applies strictly between the marker lines.
+    regions: Vec<(u32, u32)>,
+}
+
+impl Suppressions {
+    fn suppresses(&self, f: &Finding) -> bool {
+        f.rule != R_PRAGMA
+            && self.allows.iter().any(|(rule, lines)| rule == f.rule && lines.contains(&f.line))
+    }
+}
+
+fn suppressible(rule: &str) -> bool {
+    rule != R_PRAGMA && RULES.iter().any(|r| r.id == rule)
+}
+
+fn parse_pragmas(label: &str, scan: &Scan, out: &mut Vec<Finding>) -> Suppressions {
+    const GRAMMAR: &str = "expected `allow(<rule>, <reason>)`, `hot-path` or `end-hot-path`";
+    let mut allows: Vec<(String, [u32; 2])> = Vec::new();
+    let mut regions: Vec<(u32, u32)> = Vec::new();
+    let mut open_regions: Vec<u32> = Vec::new();
+    for p in &scan.pragmas {
+        let Some(rest) = p.body.strip_prefix(':') else {
+            out.push(finding(label, p.line, R_PRAGMA, format!("missing `:` — {GRAMMAR}")));
+            continue;
+        };
+        let rest = rest.trim();
+        if rest == "hot-path" {
+            open_regions.push(p.line);
+            continue;
+        }
+        if rest == "end-hot-path" {
+            match open_regions.pop() {
+                Some(start) => regions.push((start, p.line)),
+                None => out.push(finding(
+                    label,
+                    p.line,
+                    R_PRAGMA,
+                    "end-hot-path without a matching hot-path marker".to_string(),
+                )),
+            }
+            continue;
+        }
+        let inner = rest.strip_prefix("allow(").and_then(|r| r.strip_suffix(')'));
+        let Some(inner) = inner else {
+            out.push(finding(label, p.line, R_PRAGMA, format!("`{rest}` — {GRAMMAR}")));
+            continue;
+        };
+        let Some((rule, reason)) = inner.split_once(',') else {
+            out.push(finding(
+                label,
+                p.line,
+                R_PRAGMA,
+                format!("allow(`{inner}`) has no reason — a justification is mandatory"),
+            ));
+            continue;
+        };
+        let (rule, reason) = (rule.trim(), reason.trim());
+        if !suppressible(rule) {
+            out.push(finding(
+                label,
+                p.line,
+                R_PRAGMA,
+                format!("unknown rule `{rule}` in allow pragma"),
+            ));
+            continue;
+        }
+        if reason.is_empty() {
+            out.push(finding(
+                label,
+                p.line,
+                R_PRAGMA,
+                format!("allow({rule}) has an empty reason — a justification is mandatory"),
+            ));
+            continue;
+        }
+        let target = if p.trailing {
+            p.line
+        } else {
+            scan.next_code_line(p.line).unwrap_or(p.line)
+        };
+        allows.push((rule.to_string(), [p.line, target]));
+    }
+    for start in open_regions {
+        out.push(finding(
+            label,
+            start,
+            R_PRAGMA,
+            "hot-path region is never closed (missing end-hot-path)".to_string(),
+        ));
+    }
+    Suppressions { allows, regions }
+}
+
+// ---- token helpers ---------------------------------------------------
+
+fn tok_is(t: Option<&Token>, kind: TokenKind, text: &str) -> bool {
+    t.is_some_and(|t| t.kind == kind && t.text == text)
+}
+
+/// `Instant :: now` starting at token `k` (matches both `Instant::now`
+/// and the tail of `std::time::Instant::now`).
+fn wall_call_at(tokens: &[Token], k: usize) -> bool {
+    tok_is(tokens.get(k), TokenKind::Ident, "Instant")
+        && tok_is(tokens.get(k + 1), TokenKind::Punct, "::")
+        && tok_is(tokens.get(k + 2), TokenKind::Ident, "now")
+}
+
+fn file_is_test(label: &str) -> bool {
+    label.starts_with("tests/")
+}
+
+// ---- R1: wall-clock ban ----------------------------------------------
+
+/// Whole files where wall clocks are legitimate: the coordinator's
+/// submit path (real queue-wait timing for PJRT backends), the
+/// `util::bench` timing harness, and the Criterion-style bench
+/// binaries, which exist to measure wall time.
+fn wall_clock_allowed(label: &str) -> bool {
+    label == "src/coordinator/engine.rs"
+        || label == "src/util/bench.rs"
+        || label.starts_with("benches/")
+}
+
+fn check_wall_clock(label: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    if wall_clock_allowed(label) {
+        return;
+    }
+    for (k, t) in scan.tokens.iter().enumerate() {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        if t.text == "SystemTime" {
+            out.push(finding(
+                label,
+                t.line,
+                R_WALL,
+                "`SystemTime` is wall clock — simulated results must use the virtual clock".into(),
+            ));
+        } else if wall_call_at(&scan.tokens, k) {
+            out.push(finding(
+                label,
+                t.line,
+                R_WALL,
+                "`Instant::now` is wall clock — simulated results must use the virtual clock"
+                    .into(),
+            ));
+        }
+    }
+}
+
+// ---- R2: float-ordering ban ------------------------------------------
+
+fn check_float_ord(label: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    for (k, t) in scan.tokens.iter().enumerate() {
+        if t.kind != TokenKind::Ident || t.text != "partial_cmp" {
+            continue;
+        }
+        // `fn partial_cmp` — a PartialOrd impl defining the method is
+        // the one place the name is the contract.
+        if k > 0 && tok_is(scan.tokens.get(k - 1), TokenKind::Ident, "fn") {
+            continue;
+        }
+        out.push(finding(
+            label,
+            t.line,
+            R_FLOAT,
+            "`partial_cmp` on floats panics or lies on NaN — use `total_cmp` with a \
+             deterministic tie-break"
+                .into(),
+        ));
+    }
+}
+
+// ---- R3: ordered output ----------------------------------------------
+
+fn emitter_name(name: &str) -> bool {
+    name == "to_json"
+        || name == "to_json_string"
+        || name.ends_with("_json")
+        || name == "save"
+        || name.starts_with("render")
+        || name.starts_with("write_")
+        || name.starts_with("emit")
+        || name.starts_with("export")
+}
+
+fn check_ordered_output(label: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    if file_is_test(label) {
+        return;
+    }
+    for span in &scan.fn_spans {
+        if span.is_test || !emitter_name(&span.name) {
+            continue;
+        }
+        for t in &scan.tokens[span.first_tok..=span.last_tok] {
+            if t.kind == TokenKind::Ident && t.text == "HashMap" {
+                out.push(finding(
+                    label,
+                    t.line,
+                    R_ORDER,
+                    format!(
+                        "`HashMap` inside emitter `{}` — iteration order is nondeterministic; \
+                         use BTreeMap or an explicit sort",
+                        span.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---- R4: hot-path hygiene --------------------------------------------
+
+fn check_hot_path(label: &str, scan: &Scan, regions: &[(u32, u32)], out: &mut Vec<Finding>) {
+    for &(start, end) in regions {
+        for (k, t) in scan.tokens.iter().enumerate() {
+            if t.line <= start || t.line >= end || t.kind != TokenKind::Ident {
+                continue;
+            }
+            let next_is = |text| tok_is(scan.tokens.get(k + 1), TokenKind::Punct, text);
+            let hit = match t.text.as_str() {
+                "clone" | "to_string" | "to_owned" | "collect" => true,
+                "format" | "vec" => next_is("!"),
+                "Vec" | "Box" | "String" => {
+                    next_is("::")
+                        && scan.tokens.get(k + 2).is_some_and(|n| {
+                            n.kind == TokenKind::Ident
+                                && matches!(n.text.as_str(), "new" | "from" | "with_capacity")
+                        })
+                }
+                _ => false,
+            };
+            if hit {
+                out.push(finding(
+                    label,
+                    t.line,
+                    R_HOT,
+                    format!("`{}` allocates inside a hot-path region", t.text),
+                ));
+            }
+        }
+    }
+}
+
+// ---- R5: bench-envelope conformance ----------------------------------
+
+fn check_bench_envelope(label: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    if file_is_test(label) {
+        return;
+    }
+    for span in &scan.fn_spans {
+        if span.is_test {
+            continue;
+        }
+        let toks = &scan.tokens[span.first_tok..=span.last_tok];
+        let emits_bench = toks
+            .iter()
+            .any(|t| t.kind == TokenKind::Str && t.text.contains("BENCH_"));
+        if !emits_bench {
+            continue;
+        }
+        let writes = toks.iter().any(|t| {
+            t.kind == TokenKind::Ident && (t.text == "write" || t.text == "write_all")
+        });
+        if !writes {
+            continue;
+        }
+        if !toks.iter().any(|t| t.kind == TokenKind::Ident && t.text == "bench_envelope") {
+            out.push(finding(
+                label,
+                span.start_line,
+                R_BENCH,
+                format!(
+                    "`{}` writes a BENCH_*.json file without going through `bench_envelope`",
+                    span.name
+                ),
+            ));
+        }
+        for (k, t) in toks.iter().enumerate() {
+            if t.kind != TokenKind::Ident {
+                continue;
+            }
+            if t.text == "SystemTime" || (t.text == "Instant" && wall_call_at(toks, k)) {
+                out.push(finding(
+                    label,
+                    t.line,
+                    R_BENCH,
+                    format!(
+                        "wall-clock value inside BENCH emitter `{}` — envelope fields must \
+                         replay byte-identically",
+                        span.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---- R6: panic ban ---------------------------------------------------
+
+fn check_panic_ban(label: &str, scan: &Scan, out: &mut Vec<Finding>) {
+    if label != "src/fleet/serve.rs" && label != "src/fleet/events.rs" {
+        return;
+    }
+    for (k, t) in scan.tokens.iter().enumerate() {
+        if t.kind != TokenKind::Ident || scan.in_test(t.line) {
+            continue;
+        }
+        let banned = match t.text.as_str() {
+            "unwrap" | "expect" => true,
+            "panic" => tok_is(scan.tokens.get(k + 1), TokenKind::Punct, "!"),
+            _ => false,
+        };
+        if banned {
+            out.push(finding(
+                label,
+                t.line,
+                R_PANIC,
+                format!("`{}` on the fleet request path — return an error instead", t.text),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malformed_pragma_is_a_finding_and_unsuppressible() {
+        let src = "// pallas-lint: allow(wall-clock)\nlet x = 1;\n";
+        let fs = lint_source("src/example.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, R_PRAGMA);
+        assert_eq!(fs[0].line, 1);
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_rejected() {
+        let src = "// pallas-lint: allow(made-up, because)\nlet x = 1;\n";
+        let fs = lint_source("src/example.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, R_PRAGMA);
+    }
+
+    #[test]
+    fn unclosed_hot_path_region_is_reported() {
+        let src = "// pallas-lint: hot-path\nlet x = 1;\n";
+        let fs = lint_source("src/example.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, R_PRAGMA);
+    }
+
+    #[test]
+    fn trailing_allow_covers_its_own_line_only() {
+        let src = "let t = now(); // pallas-lint: allow(float-ord, demo)\nlet u = \
+                   v.partial_cmp(&w);\n";
+        let fs = lint_source("src/example.rs", src);
+        // The trailing pragma sits on line 1; the violation is line 2.
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, R_FLOAT);
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn stacked_pragmas_share_the_next_code_line() {
+        let src = "\
+fn emit_numbers() {
+    // pallas-lint: allow(wall-clock, stacked pragma demo)
+    // pallas-lint: allow(float-ord, stacked pragma demo)
+    let t = (Instant::now(), a.partial_cmp(&b));
+    let _ = t;
+}
+";
+        let fs = lint_source("src/example.rs", src);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fn_partial_cmp_definitions_are_exempt() {
+        let src = "impl PartialOrd for X { fn partial_cmp(&self, o: &X) -> Option<Ordering> \
+                   { None } }";
+        let fs = lint_source("src/example.rs", src);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

@@ -65,6 +65,10 @@ pub fn tune(alg: Algorithm, layer: LayerClass, dev: &DeviceConfig) -> TunedEntry
 /// [`Self::get`] probes the outer map with the borrowed `&str` it was
 /// handed instead of building an owned `(String, _, _)` tuple key per
 /// call, and [`Self::best_algorithm`] scans only one device's entries.
+///
+/// R3 (ordered-output) audit: iteration order never escapes —
+/// [`Self::save`] collects and sorts before serialising, and
+/// [`Self::best_algorithm`] carries a name tie-break.
 #[derive(Default)]
 pub struct TuningDatabase {
     entries: HashMap<String, HashMap<(LayerClass, Algorithm), TunedEntry>>,

@@ -148,6 +148,14 @@ COMMANDS:
             nonzero on any violation (default: all devices, seed 7)
   layers    [--artifacts DIR] [--device-check]
             execute each conv-layer artifact once via PJRT and verify
+  lint      [--root DIR] [--rules]
+            run pallas-lint, the repo's own static-analysis pass, over
+            src/, tests/ and benches/: the virtual-clock, total_cmp,
+            sorted-output, hot-path and bench-envelope invariants,
+            machine-checked (DESIGN.md 'Static analysis'); prints
+            file:line diagnostics and exits nonzero on any error;
+            --rules prints the rule table; --root names the crate root
+            (default: ./rust if it holds src/, else .)
   help      print this message
 
 ENVIRONMENT:
@@ -375,6 +383,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "simulate" => cmd_simulate(rest),
         "verify" => cmd_verify(rest),
         "layers" => cmd_layers(rest),
+        "lint" => cmd_lint(rest),
         other => Err(format!("unknown command '{other}' (try `ilpm help`)")),
     }
 }
@@ -794,12 +803,10 @@ fn render_timeline_dashboard(j: &crate::util::json::Json, max_rows: usize) -> Re
 
     if windows > 0 {
         let mut order: Vec<usize> = (0..windows).collect();
-        order.sort_by(|&x, &y| {
-            bad_rate[y]
-                .partial_cmp(&bad_rate[x])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(x.cmp(&y))
-        });
+        // total_cmp, not partial_cmp: a NaN bad-rate window (R2) must
+        // still produce one deterministic dashboard, and the window
+        // index breaks exact ties.
+        order.sort_by(|&x, &y| bad_rate[y].total_cmp(&bad_rate[x]).then(x.cmp(&y)));
         println!();
         println!("worst windows by bad rate:");
         println!(
@@ -1578,6 +1585,8 @@ fn bench_fleet_scale(a: &Args) -> Result<(), String> {
         rate
     );
     let cfg = OpenLoopConfig { n, arrival, policy, seed, slo };
+    // pallas-lint: allow(wall-clock, events/s progress line below goes to stdout only)
+    // pallas-lint: allow(bench-envelope, wall seconds never reach the JSON envelope)
     let started = std::time::Instant::now();
     let report = run_open_loop(&pool, &cfg).map_err(|e| format!("fleet serving: {e:#}"))?;
     let wall = started.elapsed().as_secs_f64();
@@ -2409,6 +2418,30 @@ fn cmd_verify(argv: &[String]) -> Result<(), String> {
     }
 }
 
+/// `ilpm lint`: run pallas-lint over the crate tree and exit nonzero
+/// on any error-severity finding. See DESIGN.md "Static analysis".
+fn cmd_lint(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(argv, &["root", "rules"])?;
+    if a.get_bool("rules") {
+        print!("{}", crate::analysis::rule_table());
+        return Ok(());
+    }
+    let root = match a.get("root") {
+        Some(r) => PathBuf::from(r),
+        // Work from both the repo root (rust/src/...) and the crate
+        // root (src/...) without ceremony.
+        None if Path::new("rust/src").is_dir() => PathBuf::from("rust"),
+        None => PathBuf::from("."),
+    };
+    let report = crate::analysis::run_lint(&root).map_err(|e| format!("lint: {e:#}"))?;
+    print!("{}", report.render());
+    if report.is_clean() {
+        Ok(())
+    } else {
+        Err(format!("pallas-lint: {} error(s) — see diagnostics above", report.errors()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2453,6 +2486,15 @@ mod tests {
     #[test]
     fn bench_rejects_unknown_table() {
         assert!(run(&sv(&["bench", "table9"])).is_err());
+    }
+
+    #[test]
+    fn lint_rules_flag_and_bad_root() {
+        run(&sv(&["lint", "--rules"])).expect("rule table prints");
+        // a root without src/ is a usage error, not a silent clean pass
+        let err = run(&sv(&["lint", "--root", "/definitely/not/a/crate"])).unwrap_err();
+        assert!(err.contains("src"), "{err}");
+        assert!(run(&sv(&["lint", "--nope"])).is_err());
     }
 
     #[test]
@@ -3114,6 +3156,7 @@ fn cmd_layers(argv: &[String]) -> Result<(), String> {
             .and_then(|m| m.run(&[x.clone(), w.clone()]))
             .map_err(|e| format!("{}/ref: {e:#}", layer.name()))?;
         for alg in ["im2col", "libdnn", "winograd", "direct", "ilpm"] {
+            // pallas-lint: allow(wall-clock, real PJRT execution — wall ms print only)
             let t0 = std::time::Instant::now();
             let out = engine
                 .load_layer(&layer.name(), alg)

@@ -30,6 +30,11 @@ pub struct Route {
 }
 
 /// Device-specific layer→algorithm map.
+///
+/// R3 (ordered-output) audit: the `HashMap` backs point lookups only.
+/// Construction is iteration-order independent ([`beats_incumbent`]
+/// tie-breaks by algorithm name) and every print/emission path
+/// (`layers`, the CLI `routes` table) sorts before writing.
 #[derive(Debug, Clone, Default)]
 pub struct RoutingTable {
     routes: HashMap<LayerClass, Route>,

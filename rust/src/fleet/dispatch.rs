@@ -84,6 +84,7 @@ impl DispatchPolicy {
     ///
     /// # Panics
     /// On an empty fleet — a pool always has at least one replica.
+    // pallas-lint: hot-path
     pub fn choose(self, seq: u64, fleet: &FleetView<'_>) -> usize {
         assert!(!fleet.is_empty(), "dispatch over an empty fleet");
         match self {
@@ -112,6 +113,7 @@ impl DispatchPolicy {
             }
         }
     }
+    // pallas-lint: end-hot-path
 }
 
 impl std::fmt::Display for DispatchPolicy {

@@ -54,6 +54,11 @@
 //! pushed set — push order never matters, and a seeded run replays
 //! byte-identically.
 
+// Clippy's view of pallas-lint rule R6 (panic-ban): the event core is
+// on the fleet request path and never unwraps. Test code is exempt,
+// same as the linter's scoping.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 
@@ -139,6 +144,7 @@ impl EventQueue {
         EventQueue { heap: BinaryHeap::with_capacity(cap) }
     }
 
+    // pallas-lint: hot-path
     pub fn push(&mut self, ev: Event) {
         self.heap.push(Reverse(ev));
     }
@@ -151,6 +157,7 @@ impl EventQueue {
     pub fn peek(&self) -> Option<&Event> {
         self.heap.peek().map(|Reverse(ev)| ev)
     }
+    // pallas-lint: end-hot-path
 
     pub fn len(&self) -> usize {
         self.heap.len()

@@ -47,6 +47,11 @@
 //! [`super::events::EventKind::Deadline`] events (see the event-queue
 //! module docs for who does).
 
+// Clippy's view of pallas-lint rule R6 (panic-ban): the request path
+// returns errors, it never unwraps. Test code is exempt, same as the
+// linter's scoping.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+
 use std::borrow::Cow;
 use std::sync::Arc;
 use std::time::Duration;

@@ -25,13 +25,17 @@
 //!   observability layer — deterministic virtual-clock span recording
 //!   with Chrome-trace/tree exporters, a metrics registry, the
 //!   `RUST_PALLAS_LOG` log facade, and the paper-style per-layer
-//!   profile behind `ilpm profile`.
+//!   profile behind `ilpm profile`. The [`analysis`] module
+//!   ("pallas-lint", `ilpm lint`) machine-checks the conventions all
+//!   of the above rely on: virtual-clock-only time, `total_cmp`
+//!   float ordering, sorted serialization, allocation-free hot paths.
 //!
 //! See README.md for the CLI front door, and DESIGN.md for the
 //! paper→module map, the workload tables, the grouped-convolution
 //! lowering rules, and the tunedb on-disk format and invalidation
 //! rules.
 
+pub mod analysis;
 pub mod autotune;
 pub mod cli;
 pub mod conformance;

@@ -156,6 +156,7 @@ impl Engine {
             .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
             .clone();
         let hlo_path = self.manifest.hlo_path(&artifact);
+        // pallas-lint: allow(wall-clock, real PJRT compile time — progress log only)
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,

@@ -228,11 +228,7 @@ pub fn simulate(spec: &KernelSpec, dev: &DeviceConfig) -> SimReport {
         ("lsu", t_lsu),
         ("l2bw", t_l2bw),
     ];
-    let (mut bound, core_cycles) = bounds
-        .iter()
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .copied()
-        .unwrap();
+    let (mut bound, core_cycles) = dominant_bound(&bounds);
     let mut cycles = core_cycles + LAUNCH_CYCLES * spec.launches as f64;
     if t_dram > cycles {
         cycles = t_dram;
@@ -279,6 +275,21 @@ pub fn simulate(spec: &KernelSpec, dev: &DeviceConfig) -> SimReport {
 /// Simulate a sequence of kernels (one algorithm's full pipeline).
 pub fn simulate_pipeline(specs: &[KernelSpec], dev: &DeviceConfig) -> Vec<SimReport> {
     specs.iter().map(|s| simulate(s, dev)).collect()
+}
+
+/// Pick the binding resource bound: largest cycle count wins, the
+/// *later* entry wins exact ties (the fixed order of the `bounds`
+/// array is part of the contract, matching `Iterator::max_by`), and a
+/// NaN — which `partial_cmp().unwrap()` used to panic on —
+/// deterministically dominates every finite bound instead.
+fn dominant_bound(bounds: &[(&'static str, f64)]) -> (&'static str, f64) {
+    let mut best = ("none", f64::NEG_INFINITY);
+    for &(name, cycles) in bounds {
+        if cycles.total_cmp(&best.1).is_ge() {
+            best = (name, cycles);
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -363,5 +374,17 @@ mod tests {
         let r = simulate(&spec_with(4.0, 2.0, true, 64.0), &dev);
         assert!(r.valu_busy_pct >= 0.0 && r.valu_busy_pct <= 100.0);
         assert!(r.mem_unit_busy_pct >= 0.0 && r.mem_unit_busy_pct <= 100.0);
+    }
+
+    #[test]
+    fn dominant_bound_is_nan_safe_with_pinned_tie_break() {
+        // regression: the bound pick used max_by(partial_cmp().unwrap())
+        assert_eq!(dominant_bound(&[("a", 1.0), ("b", 3.0), ("c", 2.0)]), ("b", 3.0));
+        // exact ties resolve to the later entry, as max_by always did
+        assert_eq!(dominant_bound(&[("a", 2.0), ("b", 2.0)]).0, "b");
+        // a NaN bound wins deterministically instead of panicking
+        let (name, cycles) = dominant_bound(&[("a", 1.0), ("nan", f64::NAN), ("c", 2.0)]);
+        assert_eq!(name, "nan");
+        assert!(cycles.is_nan());
     }
 }

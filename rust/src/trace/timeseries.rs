@@ -182,6 +182,7 @@ impl TimelineSampler {
 
     // --- O(1) driver ticks -------------------------------------------
 
+    // pallas-lint: hot-path
     pub fn on_arrival(&mut self) {
         self.arrivals += 1;
     }
@@ -203,6 +204,7 @@ impl TimelineSampler {
     pub fn on_violated(&mut self) {
         self.violated += 1;
     }
+    // pallas-lint: end-hot-path
 
     // --- window close ------------------------------------------------
 

@@ -98,6 +98,11 @@ impl DeviceTunings {
 }
 
 /// The persistent tuning store: a fleet of devices in one file.
+///
+/// R3 (ordered-output) audit: both `HashMap` levels (devices here,
+/// entries in [`DeviceTunings`]) are lookup-only; [`Self::to_json`]
+/// sorts devices by fingerprint and entries by `(layer, algorithm)`
+/// before emission, so identical stores serialise byte-identically.
 #[derive(Debug, Clone, Default)]
 pub struct TuneStore {
     devices: HashMap<u64, DeviceTunings>,

@@ -21,7 +21,10 @@ pub struct Stats {
 impl Stats {
     pub fn from_samples(mut ns: Vec<f64>) -> Stats {
         assert!(!ns.is_empty());
-        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a NaN sample (e.g. a
+        // poisoned timer diff) sorts deterministically after every
+        // finite value instead of panicking mid-bench.
+        ns.sort_by(|a, b| a.total_cmp(b));
         let n = ns.len();
         let mean = ns.iter().sum::<f64>() / n as f64;
         let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -152,6 +155,17 @@ mod tests {
         };
         let s = b.run(|| std::thread::sleep(Duration::from_micros(50)));
         assert!(s.samples >= 3);
+    }
+
+    #[test]
+    fn nan_samples_sort_last_instead_of_panicking() {
+        // regression: from_samples used partial_cmp().unwrap(), which
+        // panics on any NaN sample
+        let s = Stats::from_samples(vec![3.0, f64::NAN, 1.0]);
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.min_ns, 1.0);
+        assert!(s.max_ns.is_nan(), "NaN must order after every finite sample");
+        assert_eq!(s.median_ns, 3.0);
     }
 
     #[test]

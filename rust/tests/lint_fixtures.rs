@@ -1,0 +1,311 @@
+//! Fixture self-tests for pallas-lint: every rule trips on a
+//! known-bad snippet, every rule is silenced by a reasoned allow
+//! pragma, and trigger text hiding inside strings, char literals, raw
+//! strings or nested block comments never trips anything.
+//!
+//! All fixtures live in string literals, which doubles as a live test
+//! of the lexer's masking: the real-tree gate (`lint_clean.rs`) scans
+//! this very file, and none of the trigger text below may leak out.
+
+use ilpm::analysis::rules::{
+    lint_source, R_BENCH, R_FLOAT, R_HOT, R_ORDER, R_PANIC, R_PRAGMA, R_WALL,
+};
+
+/// Rule ids hit by linting `src` under `label`, in report order.
+fn rules_hit(label: &str, src: &str) -> Vec<&'static str> {
+    lint_source(label, src).into_iter().map(|f| f.rule).collect()
+}
+
+// ---- R1: wall-clock ban ----------------------------------------------
+
+#[test]
+fn r1_wall_clock_trips() {
+    let src = "pub fn tick() -> u64 {\n    let t = std::time::Instant::now();\n    0\n}\n";
+    assert_eq!(rules_hit("src/workload/gen.rs", src), [R_WALL]);
+    let sys = "pub fn stamp() -> u64 {\n    let _ = std::time::SystemTime::now();\n    0\n}\n";
+    assert_eq!(rules_hit("src/workload/gen.rs", sys), [R_WALL]);
+}
+
+#[test]
+fn r1_reported_with_the_offending_line() {
+    let src = "pub fn tick() -> u64 {\n    let t = std::time::Instant::now();\n    0\n}\n";
+    let fs = lint_source("src/workload/gen.rs", src);
+    assert_eq!(fs.len(), 1);
+    assert_eq!(fs[0].line, 2);
+    assert!(fs[0].render().starts_with("src/workload/gen.rs:2:"), "{}", fs[0].render());
+}
+
+#[test]
+fn r1_suppressed_by_reasoned_pragma() {
+    let src = "pub fn tick() -> u64 {\n    \
+               // pallas-lint: allow(wall-clock, fixture: wall print only)\n    \
+               let t = std::time::Instant::now();\n    0\n}\n";
+    assert_eq!(rules_hit("src/workload/gen.rs", src), [] as [&str; 0]);
+}
+
+#[test]
+fn r1_allowlisted_files_are_exempt() {
+    let src = "pub fn tick() -> u64 {\n    let t = std::time::Instant::now();\n    0\n}\n";
+    assert_eq!(rules_hit("src/util/bench.rs", src), [] as [&str; 0]);
+    assert_eq!(rules_hit("src/coordinator/engine.rs", src), [] as [&str; 0]);
+    assert_eq!(rules_hit("benches/fig9_demo.rs", src), [] as [&str; 0]);
+}
+
+// ---- R2: float-ordering ban ------------------------------------------
+
+#[test]
+fn r2_partial_cmp_trips() {
+    let src = "fn rank(xs: &mut [f64]) {\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    assert_eq!(rules_hit("src/metrics/demo.rs", src), [R_FLOAT]);
+}
+
+#[test]
+fn r2_fn_definition_is_exempt_but_calls_are_not() {
+    let src = "impl PartialOrd for X {\n    \
+               fn partial_cmp(&self, o: &X) -> Option<Ordering> {\n        \
+               self.k.partial_cmp(&o.k)\n    }\n}\n";
+    // the definition on line 2 is exempt; the call on line 3 trips
+    let fs = lint_source("src/metrics/demo.rs", src);
+    assert_eq!(fs.len(), 1);
+    assert_eq!((fs[0].rule, fs[0].line), (R_FLOAT, 3));
+}
+
+#[test]
+fn r2_suppressed_by_reasoned_pragma() {
+    let src = "fn rank(xs: &mut [f64]) {\n    \
+               // pallas-lint: allow(float-ord, fixture: ints not floats here)\n    \
+               xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    assert_eq!(rules_hit("src/metrics/demo.rs", src), [] as [&str; 0]);
+}
+
+// ---- R3: ordered output ----------------------------------------------
+
+#[test]
+fn r3_hashmap_in_emitter_trips() {
+    let src = "pub fn to_json(rows: &HashMap<String, u32>) -> String {\n    \
+               String::new()\n}\n";
+    assert_eq!(rules_hit("src/trace/demo.rs", src), [R_ORDER]);
+    // emitter-name prefixes count too
+    let render = "pub fn render_table(rows: &HashMap<String, u32>) -> String {\n    \
+                  String::new()\n}\n";
+    assert_eq!(rules_hit("src/trace/demo.rs", render), [R_ORDER]);
+}
+
+#[test]
+fn r3_non_emitters_and_test_code_are_exempt() {
+    let lookup = "pub fn lookup(rows: &HashMap<String, u32>) -> u32 {\n    0\n}\n";
+    assert_eq!(rules_hit("src/trace/demo.rs", lookup), [] as [&str; 0]);
+    let test_mod = "#[cfg(test)]\nmod tests {\n    \
+                    fn to_json(rows: &HashMap<String, u32>) -> String {\n        \
+                    String::new()\n    }\n}\n";
+    assert_eq!(rules_hit("src/trace/demo.rs", test_mod), [] as [&str; 0]);
+}
+
+#[test]
+fn r3_suppressed_by_reasoned_pragma() {
+    let src = "// pallas-lint: allow(ordered-output, fixture: sorted before emission)\n\
+               pub fn to_json(rows: &HashMap<String, u32>) -> String {\n    \
+               String::new()\n}\n";
+    assert_eq!(rules_hit("src/trace/demo.rs", src), [] as [&str; 0]);
+}
+
+// ---- R4: hot-path hygiene --------------------------------------------
+
+#[test]
+fn r4_allocation_in_hot_region_trips() {
+    let src = "// pallas-lint: hot-path\nfn argmin() {\n    \
+               let s = format!(\"x\");\n    let v = Vec::new();\n    \
+               let c = s.clone();\n}\n// pallas-lint: end-hot-path\n";
+    assert_eq!(rules_hit("src/fleet/demo.rs", src), [R_HOT, R_HOT, R_HOT]);
+}
+
+#[test]
+fn r4_outside_the_region_is_free() {
+    let src = "fn cold() {\n    let s = format!(\"x\");\n    let _ = s.clone();\n}\n";
+    assert_eq!(rules_hit("src/fleet/demo.rs", src), [] as [&str; 0]);
+}
+
+#[test]
+fn r4_suppressed_by_trailing_pragma() {
+    let src = "// pallas-lint: hot-path\nfn argmin() {\n    \
+               let s = format!(\"x\"); // pallas-lint: allow(hot-path, fixture: cold error arm)\n\
+               }\n// pallas-lint: end-hot-path\n";
+    assert_eq!(rules_hit("src/fleet/demo.rs", src), [] as [&str; 0]);
+}
+
+// ---- R5: bench-envelope conformance ----------------------------------
+
+#[test]
+fn r5_bench_writer_without_envelope_trips() {
+    let src = "fn bench_demo() {\n    let body = \"{}\";\n    \
+               std::fs::write(\"BENCH_demo.json\", body).ok();\n}\n";
+    assert_eq!(rules_hit("src/cli/demo.rs", src), [R_BENCH]);
+}
+
+#[test]
+fn r5_wall_clock_inside_an_envelope_emitter_trips() {
+    // label is R1-allowlisted, so the only finding is R5's
+    let src = "fn bench_demo() {\n    let mut root = bench_envelope();\n    \
+               let t = Instant::now();\n    \
+               std::fs::write(\"BENCH_demo.json\", \"x\").ok();\n}\n";
+    let fs = lint_source("src/coordinator/engine.rs", src);
+    assert_eq!(fs.len(), 1);
+    assert_eq!((fs[0].rule, fs[0].line), (R_BENCH, 3));
+}
+
+#[test]
+fn r5_envelope_users_pass_and_pragma_suppresses() {
+    let good = "fn bench_demo() {\n    let mut root = bench_envelope();\n    \
+                std::fs::write(\"BENCH_demo.json\", \"x\").ok();\n}\n";
+    assert_eq!(rules_hit("src/cli/demo.rs", good), [] as [&str; 0]);
+    let suppressed = "// pallas-lint: allow(bench-envelope, fixture: envelope built by caller)\n\
+                      fn bench_demo() {\n    \
+                      std::fs::write(\"BENCH_demo.json\", \"x\").ok();\n}\n";
+    assert_eq!(rules_hit("src/cli/demo.rs", suppressed), [] as [&str; 0]);
+}
+
+// ---- R6: panic ban ---------------------------------------------------
+
+#[test]
+fn r6_unwrap_on_the_request_path_trips() {
+    let src = "fn admit(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    assert_eq!(rules_hit("src/fleet/serve.rs", src), [R_PANIC]);
+    assert_eq!(rules_hit("src/fleet/events.rs", src), [R_PANIC]);
+    // the same code is fine outside the fleet request path
+    assert_eq!(rules_hit("src/fleet/pool.rs", src), [] as [&str; 0]);
+    let expl = "fn admit(x: Option<u32>) -> u32 {\n    x.expect(\"queue slot\")\n}\n";
+    assert_eq!(rules_hit("src/fleet/serve.rs", expl), [R_PANIC]);
+    let pan = "fn admit() {\n    panic!(\"boom\");\n}\n";
+    assert_eq!(rules_hit("src/fleet/serve.rs", pan), [R_PANIC]);
+}
+
+#[test]
+fn r6_unreachable_and_test_code_are_exempt() {
+    let unreach = "fn admit(k: u8) {\n    match k {\n        0 => {}\n        _ => \
+                   unreachable!(\"proof: k is masked to one bit\"),\n    }\n}\n";
+    assert_eq!(rules_hit("src/fleet/serve.rs", unreach), [] as [&str; 0]);
+    let test_mod = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                    Some(1).unwrap();\n    }\n}\n";
+    assert_eq!(rules_hit("src/fleet/serve.rs", test_mod), [] as [&str; 0]);
+}
+
+#[test]
+fn r6_suppressed_by_reasoned_pragma() {
+    let src = "fn admit(x: Option<u32>) -> u32 {\n    \
+               // pallas-lint: allow(panic-ban, fixture: invariant proven two lines up)\n    \
+               x.unwrap()\n}\n";
+    assert_eq!(rules_hit("src/fleet/serve.rs", src), [] as [&str; 0]);
+}
+
+// ---- pragma hygiene --------------------------------------------------
+
+#[test]
+fn pragma_grammar_violations_are_findings() {
+    let bad = [
+        "// pallas-lint: allow(wall-clock)",   // no reason
+        "// pallas-lint: allow(wall-clock, )", // empty reason
+        "// pallas-lint: allow(made-up, why)", // unknown rule
+        "// pallas-lint hot-path",             // missing colon
+        "// pallas-lint: hot-path",            // unclosed region
+        "// pallas-lint: end-hot-path",        // unmatched end
+    ];
+    for pragma in bad {
+        let src = format!("{pragma}\nlet a = 1;\n");
+        assert_eq!(rules_hit("src/x.rs", &src), [R_PRAGMA], "{pragma}");
+    }
+}
+
+#[test]
+fn a_pragma_cannot_suppress_pragma_findings() {
+    let src = "// pallas-lint: allow(pragma, trying to silence the meta rule)\nlet a = 1;\n";
+    // `pragma` is not a suppressible rule id, so this IS the violation
+    assert_eq!(rules_hit("src/x.rs", src), [R_PRAGMA]);
+}
+
+// ---- lexer masking sweep ---------------------------------------------
+
+/// Trigger text for every rule, none of which may fire from inside a
+/// masked context. Labeled `src/fleet/serve.rs` so R6 is armed too.
+const TRIGGERS: &[&str] = &[
+    "std::time::Instant::now()",
+    "SystemTime::now()",
+    "a.partial_cmp(&b).unwrap()",
+    "HashMap::new()",
+    "opt.unwrap()",
+    "panic!(oops)",
+];
+
+#[test]
+fn masked_contexts_never_trip_rules() {
+    for t in TRIGGERS {
+        let contexts = [
+            format!("// {t}"),
+            format!("/* {t} */"),
+            format!("/* outer /* nested {t} */ still masked */"),
+            format!("const S: &str = \"{t}\";"),
+            format!("const R: &str = r#\"{t}\"#;"),
+        ];
+        for ctx in &contexts {
+            let src = format!("{ctx}\nfn ok() {{ let live = 1; let _ = live; }}\n");
+            let hits = rules_hit("src/fleet/serve.rs", &src);
+            assert_eq!(hits, [] as [&str; 0], "trigger {t:?} leaked from context {ctx:?}");
+        }
+    }
+}
+
+#[test]
+fn bare_triggers_do_trip_as_a_positive_control() {
+    for t in TRIGGERS {
+        let src = format!("fn emit_thing() {{ let x = {t}; }}\n");
+        let hits = rules_hit("src/fleet/serve.rs", &src);
+        assert!(!hits.is_empty(), "trigger {t:?} should fire when unmasked");
+    }
+}
+
+#[test]
+fn quote_heavy_code_keeps_the_lexer_aligned() {
+    // char literals (escaped quote, brace), a lifetime, and a string
+    // full of trigger text — all on one line, none may fire, and the
+    // function span must survive for rules that need it.
+    let src = "fn ok<'a>(s: &'a str) -> char {\n    let q = '\\'';\n    let b = '{';\n    \
+               let t = \"Instant::now() unwrap() partial_cmp\";\n    let _ = (s, t, b);\n    q\n}\n";
+    assert_eq!(rules_hit("src/fleet/serve.rs", src), [] as [&str; 0]);
+}
+
+// ---- walker + CLI integration ----------------------------------------
+
+#[test]
+fn injected_violation_fails_the_walk_with_file_line_diagnostics() {
+    let dir = std::env::temp_dir().join(format!("pallas_lint_fixture_{}", std::process::id()));
+    let src_dir = dir.join("src");
+    std::fs::create_dir_all(&src_dir).expect("mkdir fixture crate");
+    std::fs::write(
+        src_dir.join("lib.rs"),
+        "pub fn t() -> u64 {\n    let _ = std::time::SystemTime::now();\n    0\n}\n",
+    )
+    .expect("write fixture source");
+
+    let report = ilpm::analysis::run_lint(&dir).expect("walk fixture crate");
+    assert!(!report.is_clean());
+    assert_eq!(report.findings.len(), 1);
+    let diag = report.findings[0].render();
+    assert!(diag.starts_with("src/lib.rs:2:"), "{diag}");
+    assert!(diag.contains(R_WALL), "{diag}");
+
+    // the CLI subcommand fails loudly on the same tree...
+    let argv: Vec<String> =
+        ["lint", "--root", dir.to_str().expect("utf8 tmp path")].map(String::from).to_vec();
+    let err = ilpm::cli::run(&argv).expect_err("lint must exit nonzero");
+    assert!(err.contains("1 error"), "{err}");
+
+    // ...and goes quiet once the violation carries a reasoned pragma
+    std::fs::write(
+        src_dir.join("lib.rs"),
+        "pub fn t() -> u64 {\n    \
+         // pallas-lint: allow(wall-clock, fixture: demo print only)\n    \
+         let _ = std::time::SystemTime::now();\n    0\n}\n",
+    )
+    .expect("rewrite fixture source");
+    ilpm::cli::run(&argv).expect("lint exits 0 once suppressed");
+    std::fs::remove_dir_all(&dir).ok();
+}
